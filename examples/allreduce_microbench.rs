@@ -1,0 +1,54 @@
+//! All-reduce microbenchmark (Figure 6 / 14): NVRAR vs NCCL across message
+//! sizes and GPU counts on the simulated interconnects, plus the **real**
+//! shared-memory implementations raced on this host for correctness-path
+//! wall-clock.
+//!
+//! Usage: cargo run --release --example allreduce_microbench --
+//!        [--machine perlmutter|vista] [--real]
+
+use yalis::collectives::real::{serial_sum, Algo, Harness};
+use yalis::coordinator::experiments;
+use yalis::util::cli::Cli;
+use yalis::util::rng::Rng;
+use yalis::util::stats::fmt_time;
+
+fn main() {
+    let mut cli = Cli::new("allreduce_microbench", "Fig 6/14 microbenchmark");
+    cli.opt("machine", "perlmutter", "machine preset");
+    cli.flag("real", "also run the real shmem implementations on this host");
+    let args = cli.parse();
+
+    for t in experiments::fig6_microbench(args.get("machine")) {
+        t.print();
+    }
+
+    if args.get_flag("real") {
+        println!("== real shmem all-reduce (this host, 8 PEs, 64K f32) ==");
+        let n = 65_536;
+        let mut rng = Rng::new(3);
+        let inputs: Vec<Vec<f32>> =
+            (0..8).map(|_| (0..n).map(|_| rng.f32() - 0.5).collect()).collect();
+        let want = serial_sum(&inputs);
+        for algo in [Algo::Nvrar, Algo::Ring, Algo::RdFlat, Algo::Central] {
+            let h = Harness {
+                nodes: 4,
+                gpus_per_node: 2,
+                n_elems: n,
+                chunk_words: 4096,
+                algo,
+            };
+            let h = if algo == Algo::RdFlat {
+                Harness { nodes: 8, gpus_per_node: 1, ..h }
+            } else {
+                h
+            };
+            let t0 = std::time::Instant::now();
+            let out = h.run_once(|pe| inputs[pe].clone());
+            let dt = t0.elapsed().as_secs_f64();
+            let ok = out.iter().all(|v| {
+                v.iter().zip(&want).all(|(a, b)| (a - b).abs() <= 1e-3 * (1.0 + b.abs()))
+            });
+            println!("  {:<8} {}  correct={}", algo.name(), fmt_time(dt), ok);
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! Quickstart: load the AOT artifacts and greedily decode a few tokens
+//! with the full (unsharded) model — the smallest possible end-to-end use
+//! of the library. Build artifacts first: `make artifacts`.
+//!
+//! Usage: cargo run --release --example quickstart -- [--steps 32]
+
+use yalis::runtime::tensor::argmax_rows;
+use yalis::runtime::tp::TpRuntime;
+use yalis::util::cli::Cli;
+use yalis::util::rng::Rng;
+use yalis::util::stats::fmt_time;
+
+fn main() -> anyhow::Result<()> {
+    let mut cli = Cli::new("quickstart", "load artifacts, prefill, decode greedily");
+    cli.opt("artifacts", "artifacts", "artifacts directory");
+    cli.opt("steps", "32", "decode steps");
+    let args = cli.parse();
+
+    let mut rt = TpRuntime::load(args.get("artifacts"))?;
+    println!(
+        "{}: {} layers, d_model {}, vocab {} (~{:.0}M params)",
+        "tiny-llama",
+        rt.dims.n_layers,
+        rt.dims.d_model,
+        rt.dims.vocab,
+        85.8,
+    );
+
+    // A deterministic synthetic prompt (vocabulary is synthetic ids).
+    let mut rng = Rng::new(7);
+    let prompt: Vec<i32> = (0..rt.dims.batch * rt.dims.prompt)
+        .map(|_| rng.usize(0, rt.dims.vocab - 1) as i32)
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let mut logits = rt.prefill(&prompt)?;
+    println!("prefill: {}", fmt_time(t0.elapsed().as_secs_f64()));
+
+    let steps = args.get_usize("steps");
+    let b = rt.dims.batch;
+    let t1 = std::time::Instant::now();
+    let mut tokens_out: Vec<Vec<i32>> = vec![Vec::new(); b];
+    for _ in 0..steps {
+        if rt.pos + 1 >= rt.dims.max_seq {
+            break;
+        }
+        let toks = argmax_rows(&logits, b);
+        for (seq, t) in toks.iter().enumerate() {
+            tokens_out[seq].push(*t);
+        }
+        logits = rt.decode_step_full(&toks)?;
+        // decode_step_full is the oracle path; advance pos manually.
+        rt.pos += 1;
+    }
+    let dt = t1.elapsed().as_secs_f64();
+    for (seq, toks) in tokens_out.iter().enumerate() {
+        let head: Vec<String> = toks.iter().take(12).map(|t| t.to_string()).collect();
+        println!("seq{}: {} ...", seq, head.join(" "));
+    }
+    let n: usize = tokens_out.iter().map(|t| t.len()).sum();
+    println!("decoded {} tokens in {} ({:.2} tok/s)", n, fmt_time(dt), n as f64 / dt);
+    Ok(())
+}

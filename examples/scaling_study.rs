@@ -1,0 +1,26 @@
+//! Strong-scaling study (Figures 1/2/11 from the CLI): sweep engines ×
+//! parallelism schemes × GPU counts for a model and print the
+//! time-to-completion table.
+//!
+//! Usage: cargo run --release --example scaling_study -- [--model 70b]
+//!        [--csv results/scaling.csv]
+
+use yalis::coordinator::experiments;
+use yalis::util::cli::Cli;
+
+fn main() {
+    let mut cli = Cli::new("scaling_study", "Figs 1/2/11 strong-scaling sweep");
+    cli.opt("model", "70b", "model (70b|405b)");
+    cli.opt("csv", "", "also write CSV files with this prefix");
+    let args = cli.parse();
+
+    let tables = experiments::fig1_fig2_scaling(args.get("model"));
+    for (i, t) in tables.iter().enumerate() {
+        t.print();
+        if !args.get("csv").is_empty() {
+            let path = format!("{}.{}.csv", args.get("csv"), i);
+            t.write_csv(&path).expect("csv");
+            println!("-> {path}");
+        }
+    }
+}

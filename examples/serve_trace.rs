@@ -1,0 +1,59 @@
+//! Trace-driven serving (Figure 9/18): run a BurstGPT-style or
+//! decode-heavy trace through TP/NCCL, TP/NVRAR and HP deployments and
+//! report output throughput.
+//!
+//! Usage: cargo run --release --example serve_trace --
+//!        [--trace burstgpt|decode-heavy] [--prompts 300] [--conc 32,256]
+
+use yalis::collectives::AllReduceImpl;
+use yalis::serving::{fig9_config, serve, Deployment};
+use yalis::trace::TraceSpec;
+use yalis::util::cli::Cli;
+use yalis::util::tables::Table;
+
+fn main() {
+    let mut cli = Cli::new("serve_trace", "Fig 9/18 trace-driven serving");
+    cli.opt("trace", "burstgpt", "trace kind (burstgpt|decode-heavy)");
+    cli.opt("prompts", "300", "number of prompts");
+    cli.opt("conc", "32,256", "concurrency settings");
+    cli.opt("gpus", "16", "GPU count");
+    let args = cli.parse();
+
+    let mut spec = match args.get("trace") {
+        "burstgpt" => TraceSpec::burstgpt(),
+        "decode-heavy" => TraceSpec::decode_heavy(),
+        other => panic!("unknown trace '{other}'"),
+    };
+    spec.num_prompts = args.get_usize("prompts");
+    let reqs = spec.generate();
+    println!(
+        "trace: {} prompts, mean in {:.0} / out {:.0} tokens",
+        reqs.len(),
+        reqs.iter().map(|r| r.prompt_len).sum::<usize>() as f64 / reqs.len() as f64,
+        reqs.iter().map(|r| r.decode_len).sum::<usize>() as f64 / reqs.len() as f64,
+    );
+
+    let mut t = Table::new(
+        &format!("serving throughput ({} trace)", args.get("trace")),
+        &["deployment", "C", "tok/s", "makespan (s)", "mean TTFT (s)", "decode-only"],
+    );
+    for c in args.get_usize_list("conc") {
+        for dep in [
+            Deployment::Tp(AllReduceImpl::NcclAuto),
+            Deployment::Tp(AllReduceImpl::Nvrar),
+            Deployment::Hp,
+        ] {
+            let cfg = fig9_config(dep, c, "perlmutter", args.get_usize("gpus"));
+            let rep = serve(&cfg, &reqs);
+            t.row(&[
+                dep.label(),
+                c.to_string(),
+                format!("{:.1}", rep.output_throughput),
+                format!("{:.1}", rep.makespan),
+                format!("{:.2}", rep.mean_ttft),
+                format!("{:.0}%", rep.decode_only_frac * 100.0),
+            ]);
+        }
+    }
+    t.print();
+}

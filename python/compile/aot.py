@@ -1,0 +1,177 @@
+"""AOT entry point: lower every Layer-2 graph to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the rust binary is then fully
+self-contained. HLO text — NOT ``lowered.compile()``/``.serialize()`` — is
+the interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids that the crate's xla_extension 0.5.1 rejects; the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Artifacts (B = batch, S = TP shards, cfg = configs.TINY):
+
+  prefill_full.hlo.txt   (tokens i32[B,T0], <stacked weights>) -> (logits, kc, vc)
+  decode_full.hlo.txt    (token i32[B], pos i32, kc, vc, <stacked weights>)
+  embed.hlo.txt          (tokens i32[B], embed) -> x[B,d]
+  attn_shard.hlo.txt     per-layer TP attention segment (partial output)
+  mlp_shard.hlo.txt      per-layer TP MLP segment (partial output)
+  head.hlo.txt           (x, final_norm, lm_head) -> logits
+  gemm_<kind>_<var>.hlo.txt   Table-4 GEMMs (base / mhalf / khalf)
+  weights.bin            YWT1 tensor bundle (stacked layer weights)
+  config.txt             key=value manifest (dims, arg orders, shapes)
+
+Argument order in each artifact == the python function signature order; the
+manifest records it so the rust loader can assert agreement.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import TINY
+from .export import write_weights
+
+# Static compile-time choices for the tiny end-to-end model.
+BATCH = 2          # decode batch (B)
+PROMPT = 16        # prefill prompt length (T0)
+SHARDS = 2         # TP degree of the sharded artifacts
+SEED = 0
+
+# Table-4 GEMM shapes, scaled to CPU (paper: prefill M=32768 N=8192 K=57344,
+# decode M=32 N=8192 K=57344). N,K scaled 1/8; prefill M scaled 1/32 to keep
+# the bench wall-clock sane; decode M kept exact (it IS the effect: M below
+# the tile floor).
+GEMMS = {
+    "prefill": (1024, 1024, 7168),
+    "decode": (32, 1024, 7168),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+STACK_ORDER = ("embed", "attn_norm", "wq", "wk", "wv", "wo", "mlp_norm",
+               "wg", "wu", "wd", "final_norm", "lm_head")
+
+
+def build_artifacts(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = TINY
+    cfg.validate_tp(SHARDS)
+    b, t0, s = BATCH, PROMPT, SHARDS
+    d, v, t = cfg.d_model, cfg.vocab, cfg.max_seq
+    kvd, qd, f = cfg.kv_dim, cfg.q_dim, cfg.ffn
+    kvs = kvd // s
+    hs_dh = qd // s
+    fs = f // s
+
+    params = model.init_params(cfg, jax.random.PRNGKey(SEED))
+    wspecs = {k: _spec(params[k].shape) for k in STACK_ORDER}
+
+    manifest: dict[str, str] = {
+        "model.name": cfg.name, "model.vocab": v, "model.d_model": d,
+        "model.n_layers": cfg.n_layers, "model.n_heads": cfg.n_heads,
+        "model.n_kv_heads": cfg.n_kv_heads, "model.head_dim": cfg.head_dim,
+        "model.ffn": f, "model.max_seq": t, "model.params": cfg.param_count(),
+        "aot.batch": b, "aot.prompt": t0, "aot.shards": s, "aot.seed": SEED,
+    }
+
+    def emit(name, fn, *specs, args: str):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        manifest[f"artifact.{name}.args"] = args
+        print(f"  {name}.hlo.txt  ({len(text)/1e6:.2f} MB text)")
+
+    # ---- full model -----------------------------------------------------
+    def prefill(tokens, *stack):
+        p = dict(zip(STACK_ORDER, stack))
+        return model.prefill_full(cfg, p, tokens, use_pallas=False)
+
+    emit("prefill_full", prefill, _spec((b, t0), jnp.int32),
+         *(wspecs[k] for k in STACK_ORDER),
+         args="tokens," + ",".join(STACK_ORDER))
+
+    def decode(token, pos, kc, vc, *stack):
+        p = dict(zip(STACK_ORDER, stack))
+        return model.decode_full(cfg, p, token, pos, kc, vc, use_pallas=False)
+
+    cache_spec = _spec((cfg.n_layers, b, t, kvd))
+    emit("decode_full", decode, _spec((b,), jnp.int32),
+         _spec((), jnp.int32), cache_spec, cache_spec,
+         *(wspecs[k] for k in STACK_ORDER),
+         args="token,pos,k_caches,v_caches," + ",".join(STACK_ORDER))
+
+    # ---- TP-sharded segments --------------------------------------------
+    emit("embed", model.embed_fn, _spec((b,), jnp.int32), _spec((v, d)),
+         args="tokens,embed")
+
+    attn = functools.partial(model.attn_shard, cfg, s, use_pallas=False)
+
+    def attn_seg(x, norm_w, wq, wk, wv, wo, kc, vc, pos):
+        return attn(x, norm_w, wq, wk, wv, wo, kc, vc, pos)
+
+    emit("attn_shard", attn_seg, _spec((b, d)), _spec((d,)),
+         _spec((d, hs_dh)), _spec((d, kvs)), _spec((d, kvs)),
+         _spec((hs_dh, d)), _spec((b, t, kvs)), _spec((b, t, kvs)),
+         _spec((), jnp.int32),
+         args="x,attn_norm,wq,wk,wv,wo,k_cache,v_cache,pos")
+
+    def mlp_seg(x, norm_w, wg, wu, wd):
+        return model.mlp_shard(cfg, s, x, norm_w, wg, wu, wd,
+                               use_pallas=True)
+
+    emit("mlp_shard", mlp_seg, _spec((b, d)), _spec((d,)), _spec((d, fs)),
+         _spec((d, fs)), _spec((fs, d)),
+         args="x,mlp_norm,wg,wu,wd")
+
+    emit("head", model.head_fn, _spec((b, d)), _spec((d,)), _spec((d, v)),
+         args="x,final_norm,lm_head")
+
+    # ---- Table-4 GEMMs ---------------------------------------------------
+    def gemm(x, y):
+        return (jnp.dot(x, y, preferred_element_type=jnp.float32),)
+
+    for kind, (m, n, k) in GEMMS.items():
+        for var, (mm, nn, kk) in {
+            "base": (m, n, k), "mhalf": (max(m // 2, 1), n, k),
+            "khalf": (m, n, k // 2),
+        }.items():
+            emit(f"gemm_{kind}_{var}", gemm, _spec((mm, kk)), _spec((kk, nn)),
+                 args="x,y")
+            manifest[f"gemm.{kind}.{var}.mnk"] = f"{mm},{nn},{kk}"
+
+    # ---- weights + manifest ----------------------------------------------
+    write_weights(os.path.join(out_dir, "weights.bin"),
+                  {k: params[k] for k in STACK_ORDER})
+    print(f"  weights.bin  ({cfg.param_count()/1e6:.1f}M params)")
+
+    with open(os.path.join(out_dir, "config.txt"), "w") as fh:
+        for k in sorted(manifest):
+            fh.write(f"{k}={manifest[k]}\n")
+    print("  config.txt")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    print(f"AOT-lowering {TINY.name} to {args.out_dir}")
+    build_artifacts(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Model configurations for the AOT (Layer-2) path.
+
+Only the *tiny* config is compiled to artifacts and executed by the rust
+runtime; the paper-scale Llama 3.1 / Qwen3 configs live in the rust
+``models`` module where they drive the analytic performance model. The tiny
+config is a faithful Llama-style architecture (RMSNorm, RoPE, GQA, SwiGLU)
+at ~85M parameters so the end-to-end example can actually decode on CPU.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    ffn: int
+    max_seq: int          # static KV-cache length baked into the artifacts
+    rope_theta: float = 10000.0
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        per_layer = (
+            self.d_model * self.q_dim          # wq
+            + 2 * self.d_model * self.kv_dim   # wk, wv
+            + self.q_dim * self.d_model        # wo
+            + 3 * self.d_model * self.ffn      # wg, wu, wd
+            + 2 * self.d_model                 # norms
+        )
+        return (
+            self.n_layers * per_layer
+            + 2 * self.vocab * self.d_model    # embed + lm_head
+            + self.d_model                     # final norm
+        )
+
+    def validate_tp(self, shards: int) -> None:
+        if self.n_heads % shards or self.n_kv_heads % shards or self.ffn % shards:
+            raise ValueError(
+                f"{self.name}: heads={self.n_heads}/kv={self.n_kv_heads}/"
+                f"ffn={self.ffn} not divisible by TP={shards}")
+
+
+# ~85M parameters; GQA 12 query heads over 4 KV heads like Llama-3-family
+# ratios; dims chosen so MXU-shaped 128-tiles divide every GEMM dimension.
+TINY = ModelConfig(
+    name="tiny-llama-85m",
+    vocab=4096,
+    d_model=768,
+    n_layers=12,
+    n_heads=12,
+    n_kv_heads=4,
+    head_dim=64,
+    ffn=2048,
+    max_seq=256,
+)

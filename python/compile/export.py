@@ -1,0 +1,57 @@
+"""Binary weight export for the rust runtime.
+
+Format ``YWT1`` (little-endian throughout):
+
+    magic   b"YWT1"
+    count   u32                      number of tensors
+    repeat count times:
+      name_len u32, name bytes (utf-8)
+      dtype    u8                    0 = f32, 1 = i32
+      ndim     u8
+      dims     u32 * ndim
+      data     raw LE payload (prod(dims) * 4 bytes)
+
+The rust loader is ``rust/src/runtime/weights.rs``; keep the two in sync.
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"YWT1"
+_DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def write_weights(path: str, tensors: dict) -> None:
+    """Write a name -> ndarray mapping in YWT1 format."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.asarray(arr)
+            if arr.dtype not in _DTYPES:
+                arr = arr.astype(np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _DTYPES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(np.ascontiguousarray(arr).tobytes())
+
+
+def read_weights(path: str) -> dict:
+    """Inverse of write_weights (used by tests)."""
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            dt, nd = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{nd}I", f.read(4 * nd)) if nd else ()
+            n = int(np.prod(dims)) if nd else 1
+            dtype = np.float32 if dt == 0 else np.int32
+            out[name] = np.frombuffer(f.read(4 * n), dtype).reshape(dims)
+    return out

@@ -1,0 +1,17 @@
+"""Layer-1 Pallas kernels (interpret=True — CPU-PJRT executable HLO).
+
+Two kernels implement the paper's device-side compute:
+
+- ``matmul``: the tiled MXU-shaped matmul used by the L2 model's MLP
+  projections. BlockSpec expresses the HBM->VMEM tiling schedule that CUDA
+  GEMMs get from thread-block tiling; this is the mechanism behind the
+  paper's Table 4 M-tile-floor effect.
+- ``ll_reduce``: the NVRAR inter-node reduction step — LL-protocol fused
+  (4 B data + 4 B flag) payload pack / flag-check / unpack-sum, gridded over
+  chunks (the TPU analogue of the paper's B_s thread blocks x C_s chunks).
+"""
+
+from .matmul import matmul
+from .ll_reduce import ll_pack, ll_unpack_reduce
+
+__all__ = ["matmul", "ll_pack", "ll_unpack_reduce"]

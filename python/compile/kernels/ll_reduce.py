@@ -1,0 +1,114 @@
+"""LL fused-payload pack / unpack-reduce Pallas kernels (Layer 1).
+
+This is the device-side heart of NVRAR's inter-node recursive-doubling step
+(paper §4.2.2): instead of a separate completion signal (put_with_signal +
+wait_until, which costs a software fence on Slingshot), every 4 B data word
+is fused with a 4 B sequence flag into a single 8 B payload whose delivery
+is atomic and ordered. The receiver validates flags and reduces in the same
+pass, so reduction can begin the moment a chunk lands.
+
+On TPU there is no warp-level flag spin; what survives the hardware
+adaptation is the *payload layout* and the *chunked streaming reduction*:
+
+- ``ll_pack``:   f32[n] data + u32 seq  ->  u32[n, 2] fused payload
+  (word 0 = data bits, word 1 = flag; row-major == interleaved in memory,
+  i.e. exactly the wire format of the paper's 8 B LL payload).
+- ``ll_unpack_reduce``: u32[K, n, 2] payloads from K peers -> (f32[n] sum,
+  u32[n] flag-match count). Gridded over chunks of size C_s — the grid is
+  the TPU analogue of the paper's B_s thread blocks each walking C_s-byte
+  chunks; one chunk of all K peers fits VMEM per grid step.
+
+The rust runtime performs the actual peer exchange (shmem put_nbi); these
+kernels define/verify the payload math and let the L2 graph reduce shard
+buffers with identical semantics.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_chunk(n: int, requested: int) -> int:
+    """Largest divisor of ``n`` that is <= requested (>= 1)."""
+    c = min(requested, n)
+    while n % c:
+        c -= 1
+    return c
+
+
+def _pack_kernel(data_ref, seq_ref, out_ref):
+    bits = jax.lax.bitcast_convert_type(data_ref[...], jnp.uint32)
+    flags = jnp.full_like(bits, seq_ref[0])
+    out_ref[...] = jnp.stack([bits, flags], axis=-1)
+
+
+def ll_pack(data: jax.Array, seq: jax.Array, *, chunk: int = 2048) -> jax.Array:
+    """Fuse f32 data words with a u32 sequence flag into 8 B LL payloads.
+
+    Args:
+      data: f32[n] message (one recursive-doubling send buffer).
+      seq: u32[1] sequence number of this all-reduce operation.
+      chunk: requested C_s in elements (clamped to a divisor of n).
+
+    Returns:
+      u32[n, 2] payload; [:, 0] = data bits, [:, 1] = seq flag.
+    """
+    (n,) = data.shape
+    c = _pick_chunk(n, chunk)
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=(n // c,),
+        in_specs=[
+            pl.BlockSpec((c,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((c, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 2), jnp.uint32),
+        interpret=True,
+    )(data.astype(jnp.float32), seq.astype(jnp.uint32))
+
+
+def _unpack_reduce_kernel(p_ref, seq_ref, out_ref, ok_ref):
+    payload = p_ref[...]                      # (K, chunk, 2)
+    data = jax.lax.bitcast_convert_type(payload[:, :, 0], jnp.float32)
+    flags = payload[:, :, 1]
+    out_ref[...] = jnp.sum(data, axis=0)
+    ok_ref[...] = jnp.sum((flags == seq_ref[0]).astype(jnp.uint32), axis=0)
+
+
+def ll_unpack_reduce(payloads: jax.Array, seq: jax.Array, *,
+                     chunk: int = 2048) -> tuple[jax.Array, jax.Array]:
+    """Validate flags and sum K peer LL-payload buffers chunk-by-chunk.
+
+    Args:
+      payloads: u32[K, n, 2] — K peers' fused payload buffers.
+      seq: u32[1] expected sequence number.
+      chunk: requested C_s in elements (clamped to a divisor of n).
+
+    Returns:
+      (f32[n] elementwise sum of the K data vectors,
+       u32[n] count of peers whose flag matched ``seq`` — a correct,
+       fully-arrived reduction has every entry == K).
+    """
+    k, n, _ = payloads.shape
+    c = _pick_chunk(n, chunk)
+    out, ok = pl.pallas_call(
+        _unpack_reduce_kernel,
+        grid=(n // c,),
+        in_specs=[
+            pl.BlockSpec((k, c, 2), lambda i: (0, i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((c,), lambda i: (i,)),
+            pl.BlockSpec((c,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+        ],
+        interpret=True,
+    )(payloads.astype(jnp.uint32), seq.astype(jnp.uint32))
+    return out, ok

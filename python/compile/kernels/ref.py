@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+Every kernel in this package has a reference here with identical signature
+semantics; pytest/hypothesis sweeps assert allclose (bit-exact for the LL
+payload ops, which are pure integer/bit manipulation).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """f32 matmul oracle."""
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def ll_pack_ref(data: jax.Array, seq: jax.Array) -> jax.Array:
+    """Oracle for ll_pack: interleave data bits with the flag word."""
+    bits = jax.lax.bitcast_convert_type(data.astype(jnp.float32), jnp.uint32)
+    flags = jnp.full_like(bits, seq.astype(jnp.uint32)[0])
+    return jnp.stack([bits, flags], axis=-1)
+
+
+def ll_unpack_reduce_ref(payloads: jax.Array, seq: jax.Array):
+    """Oracle for ll_unpack_reduce: flag-validate and sum K peer buffers."""
+    p = payloads.astype(jnp.uint32)
+    data = jax.lax.bitcast_convert_type(p[:, :, 0], jnp.float32)
+    ok = jnp.sum((p[:, :, 1] == seq.astype(jnp.uint32)[0]).astype(jnp.uint32),
+                 axis=0)
+    return jnp.sum(data, axis=0), ok

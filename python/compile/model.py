@@ -1,0 +1,327 @@
+"""Layer-2: Llama-style decoder in JAX, calling the Layer-1 Pallas kernels.
+
+Two execution forms are lowered to HLO artifacts (see ``aot.py``):
+
+1. **Full (unsharded)** — ``prefill_full`` / ``decode_full``: one graph per
+   phase over stacked layer weights (lax.scan), used by the quickstart and
+   as the numeric oracle for the sharded path.
+2. **TP-sharded segments** — ``attn_shard`` / ``mlp_shard`` (+ ``embed_fn``
+   / ``head_fn``): shard *s* computes its head / FFN partition up to the
+   partial o_proj / down_proj output, exactly the point where Megatron-style
+   TP inserts its all-reduce. The all-reduce is deliberately **lifted out of
+   the graph**: the rust coordinator sums shard partials with the real NVRAR
+   implementation, making the rust binary own the paper's communication hot
+   path (message size = B x H, the paper's §3.5 decode regime).
+
+The MLP projections go through the Pallas ``matmul`` kernel so the L1 kernel
+lowers into the same HLO module (and its tile quantization is real); the
+attention einsums stay in jnp (they are not the paper's focus).
+
+KV caches have a static ``max_seq`` length; decode writes at position ``pos``
+via dynamic_update_slice and masks attention to ``<= pos`` — the CUDA-graph
+style fixed-shape step the paper's YALIS uses.
+
+Cache layout is ``(B, T, n_kv * head_dim)`` with the KV-head index major in
+the last axis, so TP shard *s*'s cache slice is a contiguous range of the
+last dimension (the rust coordinator slices prefill caches per shard).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import matmul
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation / sharding
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    """Deterministic random init; layer weights stacked on axis 0."""
+    k = jax.random.split(key, 12)
+    d, q, kv, f, L, V = (cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.ffn,
+                         cfg.n_layers, cfg.vocab)
+
+    def w(key, *shape):
+        fan_in = shape[-2] if len(shape) > 1 else shape[-1]
+        return (jax.random.normal(key, shape, jnp.float32)
+                * (1.0 / jnp.sqrt(fan_in)))
+
+    return {
+        "embed": w(k[0], V, d),
+        "attn_norm": jnp.ones((L, d), jnp.float32),
+        "wq": w(k[1], L, d, q),
+        "wk": w(k[2], L, d, kv),
+        "wv": w(k[3], L, d, kv),
+        "wo": w(k[4], L, q, d),
+        "mlp_norm": jnp.ones((L, d), jnp.float32),
+        "wg": w(k[5], L, d, f),
+        "wu": w(k[6], L, d, f),
+        "wd": w(k[7], L, f, d),
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "lm_head": w(k[8], d, V),
+    }
+
+
+def shard_layer_params(params: dict, cfg: ModelConfig, layer: int,
+                       shard: int, shards: int) -> dict:
+    """Slice layer ``layer``'s weights for TP shard ``shard`` of ``shards``.
+
+    Query heads, KV heads, and FFN columns are partitioned; wo/wd rows are
+    partitioned correspondingly so each shard emits a *partial* output whose
+    sum over shards equals the full layer output.
+    """
+    cfg.validate_tp(shards)
+    hs, kvs, fs = (cfg.n_heads // shards, cfg.n_kv_heads // shards,
+                   cfg.ffn // shards)
+    dh = cfg.head_dim
+    qa, qb = shard * hs * dh, (shard + 1) * hs * dh
+    ka, kb = shard * kvs * dh, (shard + 1) * kvs * dh
+    fa, fb = shard * fs, (shard + 1) * fs
+    return {
+        "attn_norm": params["attn_norm"][layer],
+        "wq": params["wq"][layer][:, qa:qb],
+        "wk": params["wk"][layer][:, ka:kb],
+        "wv": params["wv"][layer][:, ka:kb],
+        "wo": params["wo"][layer][qa:qb, :],
+        "mlp_norm": params["mlp_norm"][layer],
+        "wg": params["wg"][layer][:, fa:fb],
+        "wu": params["wu"][layer][:, fa:fb],
+        "wd": params["wd"][layer][fa:fb, :],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * w
+
+
+def _rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (B, T, H, dh); positions: (T,)."""
+    dh = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # (T, dh/2)
+    cos = jnp.cos(angles)[None, :, None, :]
+    sin = jnp.sin(angles)[None, :, None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    ro = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return ro.reshape(x.shape)
+
+
+def _mlp(x2d: jax.Array, wg, wu, wd, use_pallas: bool) -> jax.Array:
+    """SwiGLU MLP over flattened (tokens, d) input, via the Pallas kernel.
+
+    Perf pass (§Perf / EXPERIMENTS.md): interpret=True lowers the Pallas
+    grid to a serial HLO while-loop, so on the CPU execution path we size
+    blocks to cover whole dimensions (grid ≈ 1 — the kernel body becomes a
+    single fused dot). On a real TPU the MXU-tile defaults (128³) apply;
+    the tiling choice is a BlockSpec parameter, not a kernel rewrite.
+    """
+    from .kernels.matmul import _pick_block
+
+    def mm_pallas(a, b):
+        (m, k), n = a.shape, b.shape[1]
+        return matmul(a, b, bm=_pick_whole(m), bn=_pick_whole(n), bk=_pick_whole(k))
+
+    def _pick_whole(dim, cap=2048):
+        if dim <= cap:
+            return dim
+        return _pick_block(dim, cap=cap)
+
+    mm = mm_pallas if use_pallas else (
+        lambda a, b: jnp.dot(a, b, preferred_element_type=jnp.float32))
+    gate = mm(x2d, wg)
+    up = mm(x2d, wu)
+    return mm(jax.nn.silu(gate) * up, wd)
+
+
+def _attention(q, k, v, mask):
+    """q: (B,Tq,H,dh); k,v: (B,Tk,KV,dh); mask: (Tq,Tk) bool."""
+    b, tq, h, dh = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(dh))
+    scores = jnp.where(mask[None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return out.reshape(b, tq, h * dh)
+
+
+# ---------------------------------------------------------------------------
+# TP-sharded segments (one graph each; rust composes them per layer)
+# ---------------------------------------------------------------------------
+
+def embed_fn(tokens: jax.Array, embed: jax.Array) -> jax.Array:
+    """tokens i32(B,) -> hidden f32(B, d)."""
+    return embed[tokens]
+
+
+def attn_shard(cfg: ModelConfig, shards: int, x, norm_w, wq, wk, wv, wo,
+               k_cache, v_cache, pos, use_pallas: bool = False):
+    """One decode step of shard *s*'s attention partition for one layer.
+
+    x: (B, d) residual-stream input (pre-norm, full — TP replicates it).
+    k_cache/v_cache: (B, max_seq, kv_s * dh) this shard's cache slice.
+    pos: i32 scalar — index of the token being decoded.
+
+    Returns (partial_out (B, d), k_cache', v_cache'); sum of partial_out
+    over shards == the full layer's attention output (pre-residual).
+    """
+    b, d = x.shape
+    dh = cfg.head_dim
+    hs = cfg.n_heads // shards
+    kvs = cfg.n_kv_heads // shards
+    h = rmsnorm(x, norm_w)
+    q = (h @ wq).reshape(b, 1, hs, dh)
+    kk = (h @ wk).reshape(b, 1, kvs, dh)
+    vv = (h @ wv).reshape(b, 1, kvs, dh)
+    posv = pos[None].astype(jnp.int32) if pos.ndim == 0 else pos
+    q = _rope(q, posv, cfg.rope_theta)
+    kk = _rope(kk, posv, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, kk.reshape(b, 1, kvs * dh), (0, pos, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, vv.reshape(b, 1, kvs * dh), (0, pos, 0))
+    t = cfg.max_seq
+    mask = (jnp.arange(t) <= pos)[None, :]                  # (1, T)
+    attn = _attention(q,
+                      k_cache.reshape(b, t, kvs, dh),
+                      v_cache.reshape(b, t, kvs, dh), mask)  # (B,1,hs*dh)
+    partial = attn.reshape(b, hs * dh) @ wo
+    return partial, k_cache, v_cache
+
+
+def mlp_shard(cfg: ModelConfig, shards: int, x, norm_w, wg, wu, wd,
+              use_pallas: bool = True):
+    """Shard *s*'s SwiGLU partition; sum over shards == full MLP output."""
+    h = rmsnorm(x, norm_w)
+    return _mlp(h, wg, wu, wd, use_pallas)
+
+
+def head_fn(x, final_norm, lm_head):
+    """(B, d) -> logits (B, V)."""
+    return rmsnorm(x, final_norm) @ lm_head
+
+
+# ---------------------------------------------------------------------------
+# Full (unsharded) model — scan over stacked layer weights
+# ---------------------------------------------------------------------------
+
+def _layer_weights(params):
+    return {k: params[k] for k in
+            ("attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "wg", "wu", "wd")}
+
+
+def decode_full(cfg: ModelConfig, params: dict, token, pos, k_caches,
+                v_caches, use_pallas: bool = False):
+    """One full-model decode step.
+
+    token: i32 (B,); pos: i32 scalar; caches: (L, B, max_seq, kv*dh).
+    Returns (logits (B, V), k_caches', v_caches').
+    """
+    b = token.shape[0]
+    dh, kvh, hq, t = cfg.head_dim, cfg.n_kv_heads, cfg.n_heads, cfg.max_seq
+    x = embed_fn(token, params["embed"])
+    posv = pos[None].astype(jnp.int32)
+    mask = (jnp.arange(t) <= pos)[None, :]
+
+    def step(x, layer):
+        w, kc, vc = layer
+        h = rmsnorm(x, w["attn_norm"])
+        q = _rope((h @ w["wq"]).reshape(b, 1, hq, dh), posv, cfg.rope_theta)
+        kk = _rope((h @ w["wk"]).reshape(b, 1, kvh, dh), posv, cfg.rope_theta)
+        vv = (h @ w["wv"]).reshape(b, 1, kvh, dh)
+        kc = jax.lax.dynamic_update_slice(kc, kk.reshape(b, 1, kvh * dh),
+                                          (0, pos, 0))
+        vc = jax.lax.dynamic_update_slice(vc, vv.reshape(b, 1, kvh * dh),
+                                          (0, pos, 0))
+        attn = _attention(q, kc.reshape(b, t, kvh, dh),
+                          vc.reshape(b, t, kvh, dh), mask)
+        x = x + attn.reshape(b, hq * dh) @ w["wo"]
+        x = x + _mlp(rmsnorm(x, w["mlp_norm"]), w["wg"], w["wu"], w["wd"],
+                     use_pallas)
+        return x, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        step, x, (_layer_weights(params), k_caches, v_caches))
+    return head_fn(x, params["final_norm"], params["lm_head"]), k_new, v_new
+
+
+def prefill_full(cfg: ModelConfig, params: dict, tokens,
+                 use_pallas: bool = False):
+    """Process a (B, T0) prompt; return last-position logits + padded caches.
+
+    Caches come back as (L, B, max_seq, kv*dh) with rows [0, T0) filled, so
+    decode can continue at pos = T0.
+    """
+    b, t0 = tokens.shape
+    dh, kvh, hq, t = cfg.head_dim, cfg.n_kv_heads, cfg.n_heads, cfg.max_seq
+    x = params["embed"][tokens]                       # (B, T0, d)
+    positions = jnp.arange(t0)
+    mask = jnp.tril(jnp.ones((t0, t0), bool))
+
+    def step(x, w):
+        h = rmsnorm(x, w["attn_norm"])
+        q = _rope((h @ w["wq"]).reshape(b, t0, hq, dh), positions,
+                  cfg.rope_theta)
+        kk = _rope((h @ w["wk"]).reshape(b, t0, kvh, dh), positions,
+                   cfg.rope_theta)
+        vv = (h @ w["wv"]).reshape(b, t0, kvh, dh)
+        attn = _attention(q, kk, vv, mask)
+        x = x + attn @ w["wo"]
+        h2 = rmsnorm(x, w["mlp_norm"])
+        x = x + _mlp(h2.reshape(b * t0, -1), w["wg"], w["wu"], w["wd"],
+                     use_pallas).reshape(b, t0, -1)
+        kpad = jnp.zeros((b, t, kvh * dh), jnp.float32)
+        kpad = jax.lax.dynamic_update_slice(
+            kpad, kk.reshape(b, t0, kvh * dh), (0, 0, 0))
+        vpad = jnp.zeros((b, t, kvh * dh), jnp.float32)
+        vpad = jax.lax.dynamic_update_slice(
+            vpad, vv.reshape(b, t0, kvh * dh), (0, 0, 0))
+        return x, (kpad, vpad)
+
+    x, (k_caches, v_caches) = jax.lax.scan(step, x, _layer_weights(params))
+    logits = head_fn(x[:, -1, :], params["final_norm"], params["lm_head"])
+    return logits, k_caches, v_caches
+
+
+# ---------------------------------------------------------------------------
+# Reference composition of the sharded path (used by tests; rust mirrors it)
+# ---------------------------------------------------------------------------
+
+def decode_sharded_reference(cfg: ModelConfig, params: dict, shards: int,
+                             token, pos, k_caches, v_caches,
+                             use_pallas: bool = False):
+    """Python mirror of the rust per-layer shard + all-reduce composition.
+
+    caches: (L, S, B, max_seq, kv_s*dh) per-shard slices. Returns logits and
+    updated caches. Must match ``decode_full`` to f32 tolerance — this is
+    the contract the rust e2e example asserts via real NVRAR.
+    """
+    x = embed_fn(token, params["embed"])
+    new_k, new_v = [], []
+    for layer in range(cfg.n_layers):
+        partials, ks, vs = [], [], []
+        for s in range(shards):
+            w = shard_layer_params(params, cfg, layer, s, shards)
+            p, kc, vc = attn_shard(cfg, shards, x, w["attn_norm"], w["wq"],
+                                   w["wk"], w["wv"], w["wo"],
+                                   k_caches[layer, s], v_caches[layer, s],
+                                   pos, use_pallas)
+            partials.append(p); ks.append(kc); vs.append(vc)
+        x = x + sum(partials)                         # <- the TP all-reduce
+        partials = []
+        for s in range(shards):
+            w = shard_layer_params(params, cfg, layer, s, shards)
+            partials.append(mlp_shard(cfg, shards, x, w["mlp_norm"],
+                                      w["wg"], w["wu"], w["wd"], use_pallas))
+        x = x + sum(partials)                         # <- the TP all-reduce
+        new_k.append(jnp.stack(ks)); new_v.append(jnp.stack(vs))
+    logits = head_fn(x, params["final_norm"], params["lm_head"])
+    return logits, jnp.stack(new_k), jnp.stack(new_v)

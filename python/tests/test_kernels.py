@@ -1,0 +1,152 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes/chunkings; every property asserts
+allclose (or bit-exact equality for the integer LL payload ops).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ll_pack, ll_unpack_reduce, matmul
+from compile.kernels import ref
+from compile.kernels.matmul import _pick_block
+from compile.kernels.ll_reduce import _pick_chunk
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape,
+                             jnp.float32) * scale
+
+
+# ---------------------------------------------------------------- matmul --
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 96), n=st.integers(1, 96), k=st.integers(1, 96),
+       seed=st.integers(0, 2**16))
+def test_matmul_matches_ref_any_shape(m, n, k, seed):
+    x = _rand(seed, (m, k))
+    y = _rand(seed + 1, (k, n))
+    got = matmul(x, y)
+    want = ref.matmul_ref(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(bm=st.sampled_from([2, 4, 8]), bn=st.sampled_from([2, 4, 8]),
+       bk=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**16))
+def test_matmul_tile_override(bm, bn, bk, seed):
+    m, n, k = bm * 3, bn * 2, bk * 4
+    x = _rand(seed, (m, k))
+    y = _rand(seed + 1, (k, n))
+    got = matmul(x, y, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, y), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_matmul_mxu_shaped_tiles():
+    """The model-sized GEMM uses true 128-tiles end to end."""
+    x = _rand(7, (256, 768))
+    y = _rand(8, (768, 2048))
+    got = matmul(x, y, bm=128, bn=128, bk=256)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, y), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_matmul_rejects_bad_tiles():
+    x, y = jnp.ones((4, 4)), jnp.ones((4, 4))
+    try:
+        matmul(x, y, bm=3)
+    except ValueError:
+        return
+    raise AssertionError("expected ValueError for non-dividing tile")
+
+
+def test_matmul_rejects_shape_mismatch():
+    try:
+        matmul(jnp.ones((2, 3)), jnp.ones((4, 2)))
+    except ValueError:
+        return
+    raise AssertionError("expected ValueError for mismatched inner dims")
+
+
+def test_pick_block_prefers_mxu_tiles():
+    assert _pick_block(768) == 128
+    assert _pick_block(2048) == 128
+    assert _pick_block(8) == 8
+    assert _pick_block(7) == 1
+    assert _pick_block(96) == 32
+
+
+# ------------------------------------------------------------- ll_reduce --
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 512), seq=st.integers(0, 2**32 - 1),
+       chunk=st.integers(1, 128), seed=st.integers(0, 2**16))
+def test_ll_pack_bit_exact(n, seq, chunk, seed):
+    data = _rand(seed, (n,), scale=10.0)
+    s = jnp.array([seq], jnp.uint32)
+    got = ll_pack(data, s, chunk=chunk)
+    want = ref.ll_pack_ref(data, s)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(**SETTINGS)
+@given(k=st.integers(1, 8), n=st.integers(1, 256),
+       seq=st.integers(0, 2**31), chunk=st.integers(1, 64),
+       seed=st.integers(0, 2**16))
+def test_ll_unpack_reduce_matches_ref(k, n, seq, chunk, seed):
+    bufs = jnp.stack([
+        ref.ll_pack_ref(_rand(seed + i, (n,)), jnp.array([seq], jnp.uint32))
+        for i in range(k)
+    ])
+    s = jnp.array([seq], jnp.uint32)
+    got_sum, got_ok = ll_unpack_reduce(bufs, s, chunk=chunk)
+    want_sum, want_ok = ref.ll_unpack_reduce_ref(bufs, s)
+    np.testing.assert_allclose(got_sum, want_sum, rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got_ok), np.asarray(want_ok))
+    assert (np.asarray(got_ok) == k).all()
+
+
+@settings(**SETTINGS)
+@given(k=st.integers(2, 6), n=st.integers(4, 64), seed=st.integers(0, 2**16))
+def test_ll_roundtrip_is_sum(k, n, seed):
+    """pack -> unpack_reduce over K peers == elementwise sum of the data."""
+    datas = [_rand(seed + i, (n,)) for i in range(k)]
+    s = jnp.array([42], jnp.uint32)
+    bufs = jnp.stack([ll_pack(d, s) for d in datas])
+    got, ok = ll_unpack_reduce(bufs, s)
+    np.testing.assert_allclose(got, sum(datas), rtol=1e-6, atol=1e-6)
+    assert (np.asarray(ok) == k).all()
+
+
+def test_ll_detects_stale_flag():
+    """A buffer written with an old sequence number must show ok < K."""
+    n, s_new, s_old = 16, jnp.array([5], jnp.uint32), jnp.array([4], jnp.uint32)
+    fresh = ll_pack(jnp.ones((n,)), s_new)
+    stale = ll_pack(jnp.ones((n,)), s_old)
+    _, ok = ll_unpack_reduce(jnp.stack([fresh, stale]), s_new)
+    assert (np.asarray(ok) == 1).all()
+
+
+def test_ll_pack_preserves_nan_payload_bits():
+    """LL pack is a bit move, not an arithmetic op: NaN/Inf bits survive."""
+    data = jnp.array([np.nan, np.inf, -np.inf, -0.0], jnp.float32)
+    s = jnp.array([1], jnp.uint32)
+    p = np.asarray(ll_pack(data, s))
+    back = p[:, 0].view(np.float32)
+    np.testing.assert_array_equal(back.view(np.uint32),
+                                  np.asarray(data).view(np.uint32))
+
+
+def test_pick_chunk_divides():
+    for n in (1, 7, 12, 100, 2048):
+        for req in (1, 3, 8, 4096):
+            c = _pick_chunk(n, req)
+            assert 1 <= c <= max(req, 1) or c == n
+            assert n % c == 0

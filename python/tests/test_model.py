@@ -1,0 +1,141 @@
+"""L2 model tests: shapes, KV-cache semantics, TP shard-sum == full model."""
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.configs import TINY, ModelConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+# A small config so hypothesis can run many cases.
+SMALL = replace(TINY, n_layers=2, max_seq=24, vocab=64, d_model=32,
+                n_heads=4, n_kv_heads=2, head_dim=8, ffn=64)
+
+
+def _params(cfg, seed=0):
+    return model.init_params(cfg, jax.random.PRNGKey(seed))
+
+
+def _prompt(cfg, b, t0, seed=1):
+    return jax.random.randint(jax.random.PRNGKey(seed), (b, t0), 0,
+                              cfg.vocab, jnp.int32)
+
+
+def _shard_caches(cfg, kc, vc, shards):
+    kvs = cfg.kv_dim // shards
+    def per(c):
+        return jnp.stack([
+            jnp.stack([c[l][:, :, s * kvs:(s + 1) * kvs]
+                       for s in range(shards)])
+            for l in range(cfg.n_layers)])
+    return per(kc), per(vc)
+
+
+def test_param_count_matches_init():
+    p = _params(SMALL)
+    total = sum(int(np.prod(v.shape)) for v in p.values())
+    assert total == SMALL.param_count()
+
+
+def test_prefill_shapes():
+    b, t0 = 2, 6
+    logits, kc, vc = model.prefill_full(SMALL, _params(SMALL),
+                                        _prompt(SMALL, b, t0))
+    assert logits.shape == (b, SMALL.vocab)
+    assert kc.shape == (SMALL.n_layers, b, SMALL.max_seq, SMALL.kv_dim)
+    assert vc.shape == kc.shape
+    # cache rows beyond the prompt are untouched zeros
+    assert np.asarray(kc[:, :, t0:, :]).max() == 0.0
+
+
+def test_decode_matches_prefill_extension():
+    """prefill(T0+1 tokens) last logits == prefill(T0) + decode(token T0)."""
+    cfg = SMALL
+    p = _params(cfg)
+    b, t0 = 2, 5
+    toks = _prompt(cfg, b, t0 + 1)
+    want, _, _ = model.prefill_full(cfg, p, toks)
+    _, kc, vc = model.prefill_full(cfg, p, toks[:, :t0])
+    got, _, _ = model.decode_full(cfg, p, toks[:, t0], jnp.int32(t0), kc, vc)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 3), t0=st.integers(1, 8), seed=st.integers(0, 99))
+def test_sharded_equals_full(b, t0, seed):
+    cfg = SMALL
+    p = _params(cfg, seed)
+    toks = _prompt(cfg, b, t0, seed + 1)
+    logits, kc, vc = model.prefill_full(cfg, p, toks)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    want, kfull, vfull = model.decode_full(cfg, p, tok, jnp.int32(t0), kc, vc)
+    kcs, vcs = _shard_caches(cfg, kc, vc, 2)
+    got, kn, vn = model.decode_sharded_reference(cfg, p, 2, tok,
+                                                 jnp.int32(t0), kcs, vcs)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+    # shard cache slices re-concatenate to the full cache
+    for l in range(cfg.n_layers):
+        cat = jnp.concatenate([kn[l, s] for s in range(2)], axis=-1)
+        np.testing.assert_allclose(kfull[l], cat, rtol=1e-5, atol=1e-5)
+
+
+def test_sharded_four_way():
+    cfg = replace(SMALL, n_kv_heads=4, n_heads=8, ffn=64)
+    p = _params(cfg)
+    toks = _prompt(cfg, 2, 4)
+    logits, kc, vc = model.prefill_full(cfg, p, toks)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    want, _, _ = model.decode_full(cfg, p, tok, jnp.int32(4), kc, vc)
+    kcs, vcs = _shard_caches(cfg, kc, vc, 4)
+    got, _, _ = model.decode_sharded_reference(cfg, p, 4, tok, jnp.int32(4),
+                                               kcs, vcs)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+def test_pallas_mlp_matches_jnp_path():
+    cfg = SMALL
+    p = _params(cfg)
+    toks = _prompt(cfg, 2, 4)
+    logits, kc, vc = model.prefill_full(cfg, p, toks)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    a, _, _ = model.decode_full(cfg, p, tok, jnp.int32(4), kc, vc,
+                                use_pallas=False)
+    b_, _, _ = model.decode_full(cfg, p, tok, jnp.int32(4), kc, vc,
+                                 use_pallas=True)
+    np.testing.assert_allclose(a, b_, rtol=2e-4, atol=2e-4)
+
+
+def test_validate_tp_rejects_bad_degree():
+    try:
+        SMALL.validate_tp(3)
+    except ValueError:
+        return
+    raise AssertionError("TP=3 must be rejected for 4 kv heads")
+
+
+def test_decode_is_deterministic():
+    cfg = SMALL
+    p = _params(cfg)
+    toks = _prompt(cfg, 1, 3)
+    _, kc, vc = model.prefill_full(cfg, p, toks)
+    tok = jnp.zeros((1,), jnp.int32)
+    a = model.decode_full(cfg, p, tok, jnp.int32(3), kc, vc)[0]
+    b = model.decode_full(cfg, p, tok, jnp.int32(3), kc, vc)[0]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rope_positions_matter():
+    """Same token at different positions must attend differently."""
+    cfg = SMALL
+    p = _params(cfg)
+    toks = _prompt(cfg, 1, 6)
+    _, kc, vc = model.prefill_full(cfg, p, toks)
+    tok = jnp.ones((1,), jnp.int32)
+    a = model.decode_full(cfg, p, tok, jnp.int32(6), kc, vc)[0]
+    b = model.decode_full(cfg, p, tok, jnp.int32(7), kc, vc)[0]
+    assert not np.allclose(np.asarray(a), np.asarray(b))

@@ -1,0 +1,9 @@
+//! Regenerates Figure 10: Qwen3-235B-A22B MoE deployments (EP / TPxDP / PP,
+//! NCCL vs NVRAR) on 16 GPUs serving the BurstGPT trace.
+use yalis::coordinator::experiments::fig10_moe;
+
+fn main() {
+    let t = fig10_moe();
+    t.print();
+    t.write_csv("results/fig10_moe.csv").unwrap();
+}

@@ -1,0 +1,10 @@
+//! Regenerates Figures 12/13 (Appendix B): NVRAR's deferred sequence-number
+//! synchronization is exposed in back-to-back microbenchmarks but hidden by
+//! interleaved matmul compute.
+use yalis::coordinator::experiments::fig13_sync_hiding;
+
+fn main() {
+    let t = fig13_sync_hiding();
+    t.print();
+    t.write_csv("results/fig13_sync_hiding.csv").unwrap();
+}

@@ -1,0 +1,11 @@
+//! Regenerates Figures 14 and 15 (Appendix C.3): Vista scaling curves,
+//! NVRAR speedups with NCCL pinned to Tree/Ring, and the NCCL 2.27 vs 2.28
+//! version comparison.
+use yalis::coordinator::experiments::fig14_fig15_nccl_variants;
+
+fn main() {
+    for (i, t) in fig14_fig15_nccl_variants().iter().enumerate() {
+        t.print();
+        t.write_csv(&format!("results/fig14_fig15_{i}.csv")).unwrap();
+    }
+}

@@ -1,0 +1,9 @@
+//! Regenerates Figure 16 (Appendix C.4.1): end-to-end decode-heavy NVRAR
+//! speedup on Vista (InfiniBand, 1 GPU/node).
+use yalis::coordinator::experiments::fig7_e2e_speedup;
+
+fn main() {
+    let t = fig7_e2e_speedup("70b", "vista");
+    t.print();
+    t.write_csv("results/fig16_vista.csv").unwrap();
+}

@@ -1,0 +1,10 @@
+//! Regenerates Figure 17 (BurstGPT trace length distributions) and Figure
+//! 18 (decode-heavy trace serving throughput).
+use yalis::coordinator::experiments::fig17_fig18_traces;
+
+fn main() {
+    for (i, t) in fig17_fig18_traces().iter().enumerate() {
+        t.print();
+        t.write_csv(&format!("results/fig17_fig18_{i}.csv")).unwrap();
+    }
+}

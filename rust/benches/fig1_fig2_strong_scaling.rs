@@ -1,0 +1,13 @@
+//! Regenerates Figures 1, 2 and 11: strong scaling of TP/HP across engines
+//! for Llama 3.1 70B and 405B (Table 2 workloads). `cargo bench` prints the
+//! same series the paper plots and writes CSVs under results/.
+use yalis::coordinator::experiments::fig1_fig2_scaling;
+
+fn main() {
+    for model in ["70b", "405b"] {
+        for (i, t) in fig1_fig2_scaling(model).iter().enumerate() {
+            t.print();
+            t.write_csv(&format!("results/fig1_fig2_{model}_{i}.csv")).unwrap();
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Regenerates Figure 3: per-GPU time breakdown (Matmul / Other / Comm /
+//! Idle) for YALIS (TP) and vLLM (HP) on 8 and 16 GPUs.
+use yalis::coordinator::experiments::fig3_breakdown;
+
+fn main() {
+    let t = fig3_breakdown();
+    t.print();
+    t.write_csv("results/fig3_breakdown.csv").unwrap();
+}

@@ -1,0 +1,9 @@
+//! Regenerates Figure 4: NCCL vs GPU-aware MPI all-reduce scaling across
+//! message sizes and GPU counts (Perlmutter 40 GB partition).
+use yalis::coordinator::experiments::fig4_nccl_vs_mpi;
+
+fn main() {
+    let t = fig4_nccl_vs_mpi();
+    t.print();
+    t.write_csv("results/fig4_nccl_vs_mpi.csv").unwrap();
+}

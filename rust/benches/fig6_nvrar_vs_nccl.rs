@@ -1,0 +1,12 @@
+//! Regenerates Figure 6: NVRAR vs NCCL all-reduce scaling curves (left) and
+//! the speedup-by-size-and-GPU-count grids for Perlmutter and Vista.
+use yalis::coordinator::experiments::fig6_microbench;
+
+fn main() {
+    for machine in ["perlmutter", "vista"] {
+        for (i, t) in fig6_microbench(machine).iter().enumerate() {
+            t.print();
+            t.write_csv(&format!("results/fig6_{machine}_{i}.csv")).unwrap();
+        }
+    }
+}

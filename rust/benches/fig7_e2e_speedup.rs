@@ -1,0 +1,11 @@
+//! Regenerates Figure 7: end-to-end decode-heavy batch-latency speedup of
+//! NVRAR over NCCL for YALIS (TP) and vLLM (TP), 70B and 405B.
+use yalis::coordinator::experiments::fig7_e2e_speedup;
+
+fn main() {
+    for model in ["70b", "405b"] {
+        let t = fig7_e2e_speedup(model, "perlmutter");
+        t.print();
+        t.write_csv(&format!("results/fig7_{model}.csv")).unwrap();
+    }
+}

@@ -1,0 +1,9 @@
+//! Regenerates Figure 8: per-phase breakdown of YALIS (TP) under NVRAR vs
+//! NCCL all-reduce on 16 GPUs (decode-heavy, #P in {8, 32}).
+use yalis::coordinator::experiments::fig8_phase_breakdown;
+
+fn main() {
+    let t = fig8_phase_breakdown();
+    t.print();
+    t.write_csv("results/fig8_phase_breakdown.csv").unwrap();
+}

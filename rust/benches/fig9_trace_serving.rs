@@ -1,0 +1,9 @@
+//! Regenerates Figure 9: output throughput serving the BurstGPT trace with
+//! NCCL-TP, NVRAR-TP and HP at C in {32, 256}.
+use yalis::coordinator::experiments::fig9_trace_serving;
+
+fn main() {
+    let t = fig9_trace_serving();
+    t.print();
+    t.write_csv("results/fig9_trace_serving.csv").unwrap();
+}

@@ -1,0 +1,71 @@
+//! Wall-clock benchmark of the REAL shared-memory collectives (this host):
+//! NVRAR (Algorithm 1) vs flat ring, flat recursive doubling, and the
+//! central-reduce yardstick, across message sizes, world shapes and chunk
+//! sizes. This is the L3 hot path the perf pass optimizes (EXPERIMENTS.md
+//! §Perf); correctness is asserted on every measured run.
+use yalis::collectives::real::{serial_sum, Algo, Harness};
+use yalis::util::bench::Bencher;
+use yalis::util::rng::Rng;
+use yalis::util::tables::Table;
+
+fn main() {
+    let b = Bencher { target_secs: 0.3, warmup: 1, max_iters: 50, min_iters: 3 };
+    let mut table = Table::new(
+        "real shmem all-reduce wall-clock (this host)",
+        &["algo", "world", "elems", "chunk", "mean (ms)", "p99 (ms)"],
+    );
+    for (nodes, g) in [(2usize, 2usize), (4, 2), (8, 1)] {
+        for n_elems in [4_096usize, 65_536] {
+            for algo in Algo::all() {
+                if matches!(algo, Algo::RdFlat | Algo::Rabenseifner)
+                    && !(nodes * g).is_power_of_two()
+                {
+                    continue;
+                }
+                let h = Harness { nodes, gpus_per_node: g, n_elems, chunk_words: 2048, algo };
+                let mut rng = Rng::new(42);
+                let inputs: Vec<Vec<f32>> = (0..h.pes())
+                    .map(|_| (0..n_elems).map(|_| rng.f32() - 0.5).collect())
+                    .collect();
+                let want = serial_sum(&inputs);
+                let m = b.run(&format!("{}-{}x{}-{}", algo.name(), nodes, g, n_elems), || {
+                    let out = h.run_once(|pe| inputs[pe].clone());
+                    // Correctness asserted inside the timed region is
+                    // cheap relative to the collective itself.
+                    assert!(out[0]
+                        .iter()
+                        .zip(&want)
+                        .all(|(a, w)| (a - w).abs() <= 1e-3 * (1.0 + w.abs())));
+                });
+                table.row(&[
+                    algo.name().to_string(),
+                    format!("{nodes}x{g}"),
+                    n_elems.to_string(),
+                    "2048".to_string(),
+                    format!("{:.3}", m.mean() * 1e3),
+                    format!("{:.3}", m.summary.percentile(99.0) * 1e3),
+                ]);
+            }
+        }
+    }
+    // Chunk-size ablation on NVRAR (Table 5's C_s knob, real substrate).
+    for chunk in [64usize, 512, 4096, 65_536] {
+        let h = Harness { nodes: 4, gpus_per_node: 2, n_elems: 65_536, chunk_words: chunk, algo: Algo::Nvrar };
+        let mut rng = Rng::new(1);
+        let inputs: Vec<Vec<f32>> =
+            (0..8).map(|_| (0..65_536).map(|_| rng.f32()).collect()).collect();
+        let m = b.run(&format!("nvrar-chunk-{chunk}"), || {
+            let _ = h.run_once(|pe| inputs[pe].clone());
+        });
+        table.row(&[
+            "nvrar".into(),
+            "4x2".into(),
+            "65536".into(),
+            chunk.to_string(),
+            format!("{:.3}", m.mean() * 1e3),
+            format!("{:.3}", m.summary.percentile(99.0) * 1e3),
+        ]);
+    }
+    table.print();
+    table.write_csv("results/real_allreduce_hotpath.csv").unwrap();
+}

@@ -1,0 +1,53 @@
+//! Regenerates Table 4 twice: (a) the analytic tile-quantized GEMM model at
+//! the paper's exact A100 shapes, and (b) REAL wall-clock PJRT executions of
+//! the CPU-scaled GEMM artifacts (M/2 vs K/2), proving the tile-floor effect
+//! on real hardware too (XLA CPU also tiles).
+use yalis::coordinator::experiments::table4_gemm_model;
+use yalis::runtime::{lit_f32, Runtime};
+use yalis::util::bench::Bencher;
+use yalis::util::rng::Rng;
+use yalis::util::tables::Table;
+
+fn main() -> anyhow::Result<()> {
+    let t = table4_gemm_model();
+    t.print();
+    t.write_csv("results/table4_model.csv").unwrap();
+
+    if !std::path::Path::new("artifacts/gemm_decode_base.hlo.txt").exists() {
+        println!("(artifacts not built; skipping real-GEMM half — run `make artifacts`)");
+        return Ok(());
+    }
+    let rt = Runtime::cpu()?;
+    let manifest = yalis::runtime::manifest::Manifest::load("artifacts")?;
+    let mut table = Table::new(
+        "Table4 real PJRT GEMMs (CPU-scaled shapes, ms)",
+        &["workload", "variant", "M,N,K", "time (ms)"],
+    );
+    let b = Bencher::quick();
+    let mut rng = Rng::new(11);
+    for kind in ["prefill", "decode"] {
+        for var in ["base", "mhalf", "khalf"] {
+            let name = format!("gemm_{kind}_{var}");
+            let exe = rt.load("artifacts", &name)?;
+            let mnk = manifest.get(&format!("gemm.{kind}.{var}.mnk"))?;
+            let dims: Vec<usize> = mnk.split(',').map(|s| s.parse().unwrap()).collect();
+            let (m, n, k) = (dims[0], dims[1], dims[2]);
+            let x: Vec<f32> = (0..m * k).map(|_| rng.f32()).collect();
+            let y: Vec<f32> = (0..k * n).map(|_| rng.f32()).collect();
+            let xl = lit_f32(&x, &[m, k])?;
+            let yl = lit_f32(&y, &[k, n])?;
+            let meas = b.run(&name, || {
+                let _ = exe.run_lits(&[xl.clone(), yl.clone()]).unwrap();
+            });
+            table.row(&[
+                kind.to_string(),
+                var.to_string(),
+                mnk.to_string(),
+                format!("{:.3}", meas.mean() * 1e3),
+            ]);
+        }
+    }
+    table.print();
+    table.write_csv("results/table4_real.csv").unwrap();
+    Ok(())
+}

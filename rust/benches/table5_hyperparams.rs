@@ -1,0 +1,40 @@
+//! Regenerates Table 5: NVRAR B_s x C_s hyperparameter sensitivity for a
+//! 1024 KB all-reduce on 16 GPUs.
+use yalis::cluster::presets;
+use yalis::collectives::sim::{nvrar, CommConfig};
+use yalis::collectives::tuner;
+use yalis::coordinator::experiments::table5_hyperparams;
+use yalis::util::tables::Table;
+
+fn main() {
+    let t = table5_hyperparams();
+    t.print();
+    t.write_csv("results/table5_hyperparams.csv").unwrap();
+
+    // Ablation (paper future work): the B_s x C_s auto-tuner vs the fixed
+    // default configuration across message sizes.
+    let topo = presets::perlmutter(4);
+    let base = CommConfig::perlmutter();
+    let table = tuner::TunedTable::build(&topo, &base);
+    let mut ab = Table::new(
+        "Table5-ext auto-tuned B_s/C_s vs default (16 GPUs, ms)",
+        &["size", "default", "tuned", "B_s", "C_s", "gain"],
+    );
+    for kb in [64u64, 256, 1024, 4096] {
+        let bytes = kb * 1024;
+        let d = nvrar(&topo, &base, bytes, 0.0).total;
+        let cfg = table.apply(&base, bytes);
+        let tt = nvrar(&topo, &cfg, bytes, 0.0).total;
+        let picked = table.lookup(bytes);
+        ab.row(&[
+            format!("{kb} KB"),
+            format!("{:.4}", d * 1e3),
+            format!("{:.4}", tt * 1e3),
+            picked.block_count.to_string(),
+            picked.chunk_bytes.to_string(),
+            format!("{:.1}%", (1.0 - tt / d) * 100.0),
+        ]);
+    }
+    ab.print();
+    ab.write_csv("results/table5_autotuner.csv").unwrap();
+}

@@ -1,0 +1,57 @@
+//! All-reduce algorithms: closed-form α-β models, event-level simulations,
+//! and **real** shared-memory implementations.
+//!
+//! - [`model`] — the paper's Equations 1–6 (Ring, Tree, recursive doubling,
+//!   NVRAR's three phases) as closed forms.
+//! - [`sim`] — event-level simulations over [`crate::simnet`], modelling
+//!   what the closed forms cannot: chunk pipelining (B_s × C_s), LL payload
+//!   inflation η, per-phase kernel launches, NCCL protocol/algorithm
+//!   selection, and NVRAR's deferred sequence-number synchronization.
+//! - [`real`] — Algorithm 1 and the baselines implemented for real over the
+//!   [`crate::shmem`] PGAS substrate (one thread per PE): bitwise-verifiable
+//!   all-reduces with fused 8-byte data+flag payloads.
+//! - [`tuner`] — B_s × C_s auto-tuning (the paper's Appendix C.1 future
+//!   work), cached per message-size bucket.
+
+pub mod model;
+pub mod real;
+pub mod sim;
+pub mod tuner;
+
+/// Which all-reduce implementation an engine uses (paper §5 comparisons).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllReduceImpl {
+    /// NCCL with automatic algorithm selection (Ring vs Tree).
+    NcclAuto,
+    /// NCCL pinned to Ring (Appendix C.3.2).
+    NcclRing,
+    /// NCCL pinned to Tree (Appendix C.3.2).
+    NcclTree,
+    /// GPU-aware MPI (recursive doubling, §3.5 / Fig 4).
+    Mpi,
+    /// The paper's NVSHMEM hierarchical recursive-doubling all-reduce.
+    Nvrar,
+}
+
+impl AllReduceImpl {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AllReduceImpl::NcclAuto => "NCCL",
+            AllReduceImpl::NcclRing => "NCCL(Ring)",
+            AllReduceImpl::NcclTree => "NCCL(Tree)",
+            AllReduceImpl::Mpi => "MPI",
+            AllReduceImpl::Nvrar => "NVRAR",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Self {
+        match name.to_ascii_lowercase().as_str() {
+            "nccl" => AllReduceImpl::NcclAuto,
+            "nccl-ring" => AllReduceImpl::NcclRing,
+            "nccl-tree" => AllReduceImpl::NcclTree,
+            "mpi" => AllReduceImpl::Mpi,
+            "nvrar" => AllReduceImpl::Nvrar,
+            other => panic!("unknown all-reduce impl '{other}'"),
+        }
+    }
+}

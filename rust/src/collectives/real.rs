@@ -1,0 +1,644 @@
+//! **Real** all-reduce implementations over the [`crate::shmem`] PGAS
+//! substrate — Algorithm 1 of the paper, executed by one thread per PE,
+//! bitwise-verifiable against a serial sum.
+//!
+//! [`Algo::Nvrar`] follows Algorithm 1 step by step:
+//!
+//! 1. *intra-node ring reduce-scatter* (the paper delegates this phase to
+//!    NCCL's host API; we run it on the same LL substrate),
+//! 2. *inter-node recursive doubling*: `log2(N)` steps; at step `ℓ`,
+//!    GPU `(r_n, r_g)` exchanges its segment with `(r_n ⊕ 2^ℓ, r_g)` using
+//!    chunked non-blocking puts of fused 8 B (data, flag) payloads
+//!    (§4.2.1–4.2.2) into **per-step receive buffers**, reducing each chunk
+//!    as it lands,
+//! 3. *intra-node ring all-gather*.
+//!
+//! Sequence numbers (§4.2.3): every all-reduce round carries `seq`; each PE
+//! announces its `seq` and waits — peer-wise, not globally — for every PE
+//! it will *put into* to have reached the same round before sending. This
+//! is what makes buffer reuse across back-to-back all-reduces safe, and the
+//! property tests hammer exactly that.
+//!
+//! Baselines ([`Algo::Ring`], [`Algo::RdFlat`], [`Algo::Central`]) share the
+//! substrate so the hot-path bench compares algorithms, not plumbing.
+
+use crate::shmem::{Pe, World};
+use std::sync::Mutex;
+
+/// Which real algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// Algorithm 1: hierarchical RS → recursive doubling → AG.
+    Nvrar,
+    /// Flat ring reduce-scatter + all-gather over all P PEs (NCCL Ring).
+    Ring,
+    /// Flat recursive doubling over all P PEs (MPI-style).
+    RdFlat,
+    /// Binary-tree reduce + broadcast (NCCL Tree's skeleton).
+    Tree,
+    /// Rabenseifner: recursive-halving reduce-scatter + recursive-doubling
+    /// all-gather — the bandwidth-optimal log-latency baseline
+    /// (Thakur & Gropp).
+    Rabenseifner,
+    /// Naive: PE 0 gathers, reduces, broadcasts (correctness yardstick).
+    Central,
+}
+
+impl Algo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Nvrar => "nvrar",
+            Algo::Ring => "ring",
+            Algo::RdFlat => "rd-flat",
+            Algo::Tree => "tree",
+            Algo::Rabenseifner => "rabenseifner",
+            Algo::Central => "central",
+        }
+    }
+
+    pub fn all() -> [Algo; 6] {
+        [Algo::Nvrar, Algo::Ring, Algo::RdFlat, Algo::Tree, Algo::Rabenseifner, Algo::Central]
+    }
+}
+
+/// Harness for running `rounds` back-to-back all-reduces on an N×G world.
+#[derive(Clone, Copy, Debug)]
+pub struct Harness {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub n_elems: usize,
+    /// C_s in words (f32 elements per chunked put).
+    pub chunk_words: usize,
+    pub algo: Algo,
+}
+
+impl Harness {
+    pub fn pes(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    fn padded(&self) -> usize {
+        let p = self.pes().max(1);
+        self.n_elems.div_ceil(p.max(1)).max(1) * p
+    }
+
+    /// Heap words needed per PE for the chosen algorithm.
+    fn heap_words(&self) -> usize {
+        let p = self.pes();
+        let n_pad = self.padded();
+        match self.algo {
+            Algo::Nvrar => {
+                let g = self.gpus_per_node;
+                let seg = n_pad / g;
+                let rd_steps = log2(self.nodes);
+                (2 * g.saturating_sub(1) + rd_steps) * seg + 1
+            }
+            Algo::Ring => 2 * p.saturating_sub(1) * (n_pad / p) + 1,
+            Algo::RdFlat => log2(p) * n_pad + 1,
+            // Tree: two child slots for the reduce + one broadcast slot.
+            Algo::Tree => 3 * n_pad + 1,
+            // Rabenseifner: a full-width buffer PER halving step (the
+            // nested windows are written by different peers, so a fast
+            // peer's step ℓ+1 put must not share words with a slow
+            // receiver's unread step ℓ data) + one all-gather region.
+            Algo::Rabenseifner => (log2(p) + 1) * n_pad + 2,
+            Algo::Central => (p + 1) * n_pad + 1,
+        }
+    }
+
+    /// Run `rounds` consecutive all-reduces. `input(pe, round)` supplies
+    /// each PE's contribution; returns `out[round][pe]` result vectors.
+    ///
+    /// Every PE's result for a round must equal the elementwise sum of all
+    /// PEs' inputs for that round (tests assert this for every algorithm).
+    pub fn run_rounds<F>(&self, rounds: usize, input: F) -> Vec<Vec<Vec<f32>>>
+    where
+        F: Fn(usize, usize) -> Vec<f32> + Sync,
+    {
+        let p = self.pes();
+        assert!(p >= 1);
+        if matches!(self.algo, Algo::Nvrar | Algo::RdFlat) {
+            assert!(self.nodes.is_power_of_two(), "recursive doubling needs power-of-two nodes");
+        }
+        if matches!(self.algo, Algo::RdFlat | Algo::Rabenseifner) {
+            assert!(p.is_power_of_two(), "{:?} needs power-of-two PEs", self.algo);
+        }
+        let world = World::new(p, self.heap_words());
+        let results: Vec<Vec<Mutex<Vec<f32>>>> = (0..rounds)
+            .map(|_| (0..p).map(|_| Mutex::new(Vec::new())).collect())
+            .collect();
+
+        world.run(|pe| {
+            for round in 0..rounds {
+                let seq = (round + 1) as u64;
+                let mut x = input(pe.id, round);
+                assert_eq!(x.len(), self.n_elems, "input length mismatch");
+                x.resize(self.padded(), 0.0);
+                match self.algo {
+                    Algo::Nvrar => self.nvrar_once(&pe, seq, &mut x),
+                    Algo::Ring => self.ring_once(&pe, seq, &mut x),
+                    Algo::RdFlat => self.rd_flat_once(&pe, seq, &mut x),
+                    Algo::Tree => self.tree_once(&pe, seq, &mut x),
+                    Algo::Rabenseifner => self.rabenseifner_once(&pe, seq, &mut x),
+                    Algo::Central => self.central_once(&pe, seq, &mut x),
+                }
+                x.truncate(self.n_elems);
+                *results[round][pe.id].lock().unwrap() = x;
+            }
+        });
+
+        results
+            .into_iter()
+            .map(|row| row.into_iter().map(|m| m.into_inner().unwrap()).collect())
+            .collect()
+    }
+
+    /// Convenience: one round.
+    pub fn run_once<F>(&self, input: F) -> Vec<Vec<f32>>
+    where
+        F: Fn(usize) -> Vec<f32> + Sync,
+    {
+        self.run_rounds(1, |pe, _| input(pe)).remove(0)
+    }
+
+    // ---------------------------------------------------------------------
+    // NVRAR — Algorithm 1
+    // ---------------------------------------------------------------------
+
+    fn nvrar_once(&self, pe: &Pe<'_>, seq: u64, x: &mut [f32]) {
+        let g = self.gpus_per_node;
+        let n = self.nodes;
+        let (rn, rg) = (pe.id / g, pe.id % g);
+        let n_pad = x.len();
+        let seg = n_pad / g;
+        let rd_steps = log2(n);
+        // Heap layout per PE: [rs_recv (G-1)·seg][rd_recv steps·seg][ag_recv (G-1)·seg]
+        let rs_off = 0;
+        let rd_off = rs_off + g.saturating_sub(1) * seg;
+        let ag_off = rd_off + rd_steps * seg;
+
+        // --- sequence sync (Alg. 1 lines 3–6): peer-wise, before any put.
+        pe.announce_seq(seq);
+        if g > 1 {
+            pe.wait_peer_seq(rn * g + (rg + 1) % g, seq); // ring right neighbour
+        }
+        for l in 0..rd_steps {
+            pe.wait_peer_seq((rn ^ (1 << l)) * g + rg, seq);
+        }
+
+        // --- Phase 1: intra-node ring reduce-scatter (Alg. 1 line 2).
+        if g > 1 {
+            let right = rn * g + (rg + 1) % g;
+            for s in 0..g - 1 {
+                let send_chunk = (rg + g - s) % g;
+                let recv_chunk = (rg + g - s - 1) % g;
+                put_f32(pe, right, rs_off + s * seg, &x[send_chunk * seg..(send_chunk + 1) * seg], seq as u32);
+                wait_add_f32(pe, rs_off + s * seg, &mut x[recv_chunk * seg..(recv_chunk + 1) * seg], seq as u32);
+            }
+        }
+        let owned = (rg + 1) % g;
+
+        // --- Phase 2: inter-node recursive doubling (Alg. 1 RD_inter).
+        if n > 1 {
+            // m: this PE's reduced segment (whole message when G == 1).
+            let mut m: Vec<f32> = x[owned * seg..(owned + 1) * seg].to_vec();
+            let cw = self.chunk_words.max(1);
+            for l in 0..rd_steps {
+                let peer = (rn ^ (1 << l)) * g + rg;
+                // Non-blocking chunked sends (lines 16–18): issue all puts.
+                let mut off = 0;
+                while off < seg {
+                    let end = (off + cw).min(seg);
+                    put_f32(pe, peer, rd_off + l * seg + off, &m[off..end], seq as u32);
+                    off = end;
+                }
+                // Receive + reduce chunk-by-chunk (lines 19–20).
+                wait_add_f32(pe, rd_off + l * seg, &mut m, seq as u32);
+            }
+            x[owned * seg..(owned + 1) * seg].copy_from_slice(&m);
+        }
+
+        // --- Phase 3: intra-node ring all-gather (Alg. 1 line 11).
+        if g > 1 {
+            let right = rn * g + (rg + 1) % g;
+            for s in 0..g - 1 {
+                let send_seg = (rg + 1 + g - s) % g;
+                let recv_seg = (rg + g - s) % g;
+                put_f32(pe, right, ag_off + s * seg, &x[send_seg * seg..(send_seg + 1) * seg], seq as u32);
+                wait_copy_f32(pe, ag_off + s * seg, &mut x[recv_seg * seg..(recv_seg + 1) * seg], seq as u32);
+            }
+        }
+    }
+
+    // ---------------------------------------------------------------------
+    // Baselines
+    // ---------------------------------------------------------------------
+
+    /// Flat ring: reduce-scatter + all-gather over all P PEs (what NCCL
+    /// Ring does, minus topology-aware ordering).
+    fn ring_once(&self, pe: &Pe<'_>, seq: u64, x: &mut [f32]) {
+        let p = self.pes();
+        if p == 1 {
+            return;
+        }
+        let n_pad = x.len();
+        let seg = n_pad / p;
+        let rs_off = 0;
+        let ag_off = (p - 1) * seg;
+        let me = pe.id;
+        let right = (me + 1) % p;
+
+        pe.announce_seq(seq);
+        pe.wait_peer_seq(right, seq);
+
+        for s in 0..p - 1 {
+            let send_chunk = (me + p - s) % p;
+            let recv_chunk = (me + p - s - 1) % p;
+            put_f32(pe, right, rs_off + s * seg, &x[send_chunk * seg..(send_chunk + 1) * seg], seq as u32);
+            wait_add_f32(pe, rs_off + s * seg, &mut x[recv_chunk * seg..(recv_chunk + 1) * seg], seq as u32);
+        }
+        for s in 0..p - 1 {
+            let send_seg = (me + 1 + p - s) % p;
+            let recv_seg = (me + p - s) % p;
+            put_f32(pe, right, ag_off + s * seg, &x[send_seg * seg..(send_seg + 1) * seg], seq as u32);
+            wait_copy_f32(pe, ag_off + s * seg, &mut x[recv_seg * seg..(recv_seg + 1) * seg], seq as u32);
+        }
+    }
+
+    /// Flat recursive doubling: log2(P) full-message pairwise exchanges.
+    fn rd_flat_once(&self, pe: &Pe<'_>, seq: u64, x: &mut [f32]) {
+        let p = self.pes();
+        let n_pad = x.len();
+        let steps = log2(p);
+        pe.announce_seq(seq);
+        for l in 0..steps {
+            pe.wait_peer_seq(pe.id ^ (1 << l), seq);
+        }
+        let cw = self.chunk_words.max(1);
+        for l in 0..steps {
+            let peer = pe.id ^ (1 << l);
+            let mut off = 0;
+            while off < n_pad {
+                let end = (off + cw).min(n_pad);
+                put_f32(pe, peer, l * n_pad + off, &x[off..end], seq as u32);
+                off = end;
+            }
+            wait_add_f32(pe, l * n_pad, x, seq as u32);
+        }
+    }
+
+    /// Binary-tree reduce to PE 0, then tree broadcast — the skeleton of
+    /// NCCL's Tree algorithm (single tree; NCCL runs two interleaved).
+    /// Works for any PE count.
+    fn tree_once(&self, pe: &Pe<'_>, seq: u64, x: &mut [f32]) {
+        let p = self.pes();
+        if p == 1 {
+            return;
+        }
+        let n_pad = x.len();
+        let me = pe.id;
+        let parent = (me.wrapping_sub(1)) / 2;
+        let (c0, c1) = (2 * me + 1, 2 * me + 2);
+        // Heap layout: child slot 0 [0, n), child slot 1 [n, 2n),
+        // broadcast slot [2n, 3n).
+        pe.announce_seq(seq);
+        // Everyone we put into must have reached this round.
+        if me != 0 {
+            pe.wait_peer_seq(parent, seq);
+        }
+        if c0 < p {
+            pe.wait_peer_seq(c0, seq);
+        }
+        if c1 < p {
+            pe.wait_peer_seq(c1, seq);
+        }
+        // Reduce up: wait for children, add, send to parent.
+        if c0 < p {
+            wait_add_f32(pe, 0, x, seq as u32);
+        }
+        if c1 < p {
+            wait_add_f32(pe, n_pad, x, seq as u32);
+        }
+        if me != 0 {
+            let slot = if me % 2 == 1 { 0 } else { n_pad };
+            put_f32(pe, parent, slot, x, seq as u32);
+            // Broadcast down: wait for the result from the parent.
+            wait_copy_f32(pe, 2 * n_pad, x, seq as u32);
+        }
+        for c in [c0, c1] {
+            if c < p {
+                put_f32(pe, c, 2 * n_pad, x, seq as u32);
+            }
+        }
+    }
+
+    /// Rabenseifner's all-reduce: recursive-halving reduce-scatter, then
+    /// recursive-doubling all-gather. Bandwidth-optimal (2·(P-1)/P·|M|)
+    /// with log2(P) latency — the canonical large-message algorithm the
+    /// small-message-optimal flat RD trades against.
+    fn rabenseifner_once(&self, pe: &Pe<'_>, seq: u64, x: &mut [f32]) {
+        let p = self.pes();
+        if p == 1 {
+            return;
+        }
+        let n_pad = x.len();
+        let steps = log2(p);
+        let me = pe.id;
+        // Heap layout: one full-width RS buffer per step at [ℓ·n, (ℓ+1)·n)
+        // — steps are served by DIFFERENT peers, so sharing the nested
+        // window across steps would let a fast peer's step ℓ+1 put clobber
+        // a slow receiver's unread step ℓ words (a deadlock the property
+        // tests caught). AG recv at [steps·n, (steps+1)·n): each word is
+        // written exactly once per round, so one region suffices.
+        pe.announce_seq(seq);
+        for l in 0..steps {
+            pe.wait_peer_seq(me ^ (1 << l), seq);
+        }
+        // Recursive halving: at step ℓ the active window halves; we keep
+        // the half containing our rank and send the other half into the
+        // peer's step-ℓ buffer.
+        let (mut lo, mut hi) = (0usize, n_pad); // our live window in elements
+        for l in 0..steps {
+            let peer = me ^ (1 << l);
+            let mid = lo + (hi - lo) / 2;
+            let keep_low = me & (1 << l) == 0;
+            let (send_a, send_b, keep_a, keep_b) = if keep_low {
+                (mid, hi, lo, mid)
+            } else {
+                (lo, mid, mid, hi)
+            };
+            put_f32(pe, peer, l * n_pad + send_a, &x[send_a..send_b], seq as u32);
+            wait_add_f32(pe, l * n_pad + keep_a, &mut x[keep_a..keep_b], seq as u32);
+            lo = keep_a;
+            hi = keep_b;
+        }
+        // x[lo..hi] now holds this rank's fully-reduced segment.
+        // Recursive doubling all-gather: windows merge back, reversed.
+        let ag = steps * n_pad;
+        for l in (0..steps).rev() {
+            let peer = me ^ (1 << l);
+            let span = hi - lo;
+            let keep_low = me & (1 << l) == 0;
+            let (peer_lo, peer_hi) = if keep_low { (hi, hi + span) } else { (lo - span, lo) };
+            put_f32(pe, peer, ag + lo, &x[lo..hi], seq as u32);
+            wait_copy_f32(pe, ag + peer_lo, &mut x[peer_lo..peer_hi], seq as u32);
+            lo = lo.min(peer_lo);
+            hi = hi.max(peer_hi);
+        }
+        debug_assert!(lo == 0 && hi == n_pad);
+    }
+
+    /// PE 0 gathers every buffer, reduces serially, broadcasts the result.
+    fn central_once(&self, pe: &Pe<'_>, seq: u64, x: &mut [f32]) {
+        let p = self.pes();
+        if p == 1 {
+            return;
+        }
+        let n_pad = x.len();
+        // Layout on PE 0: p slots of n_pad; result slot at p*n_pad on all.
+        pe.announce_seq(seq);
+        pe.wait_peer_seq(0, seq);
+        put_f32(pe, 0, pe.id * n_pad, x, seq as u32);
+        if pe.id == 0 {
+            let mut acc = vec![0.0f32; n_pad];
+            for src in 0..p {
+                wait_add_f32(pe, src * n_pad, &mut acc, seq as u32);
+            }
+            for peer in 1..p {
+                pe.wait_peer_seq(peer, seq);
+                put_f32(pe, peer, p * n_pad, &acc, seq as u32);
+            }
+            x.copy_from_slice(&acc);
+        } else {
+            wait_copy_f32(pe, p * n_pad, x, seq as u32);
+        }
+    }
+}
+
+fn log2(x: usize) -> usize {
+    assert!(x.is_power_of_two(), "{x} not a power of two");
+    x.trailing_zeros() as usize
+}
+
+/// Put a f32 slice as LL words (data bits fused with `flag`).
+/// Delegates to the zero-allocation packing put (perf pass: the original
+/// pack-into-`Vec<u64>`-then-`put_nbi` allocated per chunk on the hot path).
+#[inline]
+fn put_f32(pe: &Pe<'_>, peer: usize, dst_off: usize, data: &[f32], flag: u32) {
+    pe.put_f32_ll(peer, dst_off, data, flag);
+}
+
+/// Wait for `dst.len()` LL words at `off` carrying `flag`; add into `dst`.
+///
+/// Perf pass: senders write chunks in order with Release stores, so
+/// acquiring the *last* word of a chunk happens-after every earlier store
+/// of that chunk — one spin per chunk instead of one per word, then a bulk
+/// read of the chunk body (each word's flag still validated; LL semantics
+/// are preserved, just amortized).
+fn wait_add_f32(pe: &Pe<'_>, off: usize, dst: &mut [f32], flag: u32) {
+    wait_chunks(pe, off, dst, flag, |d, v| *d += v);
+}
+
+/// Wait for LL words and overwrite `dst`.
+fn wait_copy_f32(pe: &Pe<'_>, off: usize, dst: &mut [f32], flag: u32) {
+    wait_chunks(pe, off, dst, flag, |d, v| *d = v);
+}
+
+/// Chunk-tail waiting strategy shared by add/copy receives.
+const RECV_CHUNK: usize = 512;
+
+fn wait_chunks(pe: &Pe<'_>, off: usize, dst: &mut [f32], flag: u32, mut apply: impl FnMut(&mut f32, f32)) {
+    let n = dst.len();
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + RECV_CHUNK).min(n);
+        // Spin once on the chunk tail; earlier words are then visible.
+        let tail_bits = pe.wait_ll(off + hi - 1, flag);
+        for i in lo..hi - 1 {
+            // Already-arrived words: a failed flag check here would mean a
+            // memory-ordering bug; wait_ll degrades to a spin, not an error.
+            let bits = pe.wait_ll(off + i, flag);
+            apply(&mut dst[i], f32::from_bits(bits));
+        }
+        apply(&mut dst[hi - 1], f32::from_bits(tail_bits));
+        lo = hi;
+    }
+}
+
+/// Serial oracle: elementwise sum of all inputs.
+pub fn serial_sum(inputs: &[Vec<f32>]) -> Vec<f32> {
+    let n = inputs[0].len();
+    let mut out = vec![0.0f32; n];
+    for x in inputs {
+        for (o, v) in out.iter_mut().zip(x) {
+            *o += v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    fn run_and_check(algo: Algo, nodes: usize, g: usize, n_elems: usize, chunk: usize, seed: u64) {
+        let h = Harness { nodes, gpus_per_node: g, n_elems, chunk_words: chunk, algo };
+        let p = h.pes();
+        let inputs: Vec<Vec<f32>> = (0..p)
+            .map(|pe| {
+                let mut r = crate::util::rng::Rng::new(seed + pe as u64);
+                (0..n_elems).map(|_| r.f32() * 2.0 - 1.0).collect()
+            })
+            .collect();
+        let want = serial_sum(&inputs);
+        let got = h.run_once(|pe| inputs[pe].clone());
+        for (pe, out) in got.iter().enumerate() {
+            for (i, (a, b)) in out.iter().zip(&want).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                    "{} N={nodes} G={g} n={n_elems}: pe {pe} elem {i}: {a} != {b}",
+                    algo.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nvrar_2x2_basic() {
+        run_and_check(Algo::Nvrar, 2, 2, 64, 8, 1);
+    }
+
+    #[test]
+    fn nvrar_4x2() {
+        run_and_check(Algo::Nvrar, 4, 2, 100, 16, 2);
+    }
+
+    #[test]
+    fn nvrar_vista_shape_g1() {
+        run_and_check(Algo::Nvrar, 8, 1, 33, 4, 3);
+    }
+
+    #[test]
+    fn nvrar_single_node() {
+        run_and_check(Algo::Nvrar, 1, 4, 40, 8, 4);
+    }
+
+    #[test]
+    fn ring_and_rd_and_central() {
+        run_and_check(Algo::Ring, 2, 3, 50, 8, 5); // ring works for any P
+        run_and_check(Algo::RdFlat, 4, 2, 50, 8, 6);
+        run_and_check(Algo::Central, 2, 2, 50, 8, 7);
+    }
+
+    #[test]
+    fn tree_various_worlds() {
+        run_and_check(Algo::Tree, 2, 2, 64, 8, 8);
+        run_and_check(Algo::Tree, 3, 2, 40, 8, 9); // non-pow2 PE count
+        run_and_check(Algo::Tree, 1, 7, 33, 8, 10);
+    }
+
+    #[test]
+    fn rabenseifner_pow2_worlds() {
+        run_and_check(Algo::Rabenseifner, 2, 2, 64, 8, 11);
+        run_and_check(Algo::Rabenseifner, 4, 2, 100, 8, 12);
+        run_and_check(Algo::Rabenseifner, 8, 1, 128, 8, 13);
+        run_and_check(Algo::Rabenseifner, 2, 1, 5, 8, 14); // n < P padding
+    }
+
+    #[test]
+    fn rabenseifner_back_to_back_rounds() {
+        // Per-step flags + seq gating: nested RS buffers must not leak
+        // across steps or rounds.
+        let h = Harness { nodes: 4, gpus_per_node: 1, n_elems: 32, chunk_words: 8, algo: Algo::Rabenseifner };
+        let out = h.run_rounds(5, |pe, round| {
+            (0..32).map(|i| (pe * 100 + round * 7 + i) as f32).collect()
+        });
+        for round in 0..5 {
+            let inputs: Vec<Vec<f32>> = (0..4)
+                .map(|pe| (0..32).map(|i| (pe * 100 + round * 7 + i) as f32).collect())
+                .collect();
+            let want = serial_sum(&inputs);
+            for pe in 0..4 {
+                assert_eq!(out[round][pe], want, "round {round} pe {pe}");
+            }
+        }
+    }
+
+    #[test]
+    fn back_to_back_rounds_reuse_buffers_safely() {
+        // The §4.2.3 sequence-number property: consecutive all-reduces with
+        // the same buffers must not mix rounds.
+        let h = Harness { nodes: 2, gpus_per_node: 2, n_elems: 32, chunk_words: 4, algo: Algo::Nvrar };
+        let rounds = 6;
+        let out = h.run_rounds(rounds, |pe, round| {
+            (0..32).map(|i| (pe * 1000 + round * 10 + i) as f32).collect()
+        });
+        for round in 0..rounds {
+            let inputs: Vec<Vec<f32>> = (0..4)
+                .map(|pe| (0..32).map(|i| (pe * 1000 + round * 10 + i) as f32).collect())
+                .collect();
+            let want = serial_sum(&inputs);
+            for pe in 0..4 {
+                assert_eq!(out[round][pe], want, "round {round} pe {pe}");
+            }
+        }
+    }
+
+    #[test]
+    fn property_all_algos_equal_serial_sum() {
+        check("real all-reduce == serial sum", 14, |g: &mut Gen| {
+            let algo = *g.pick(&Algo::all());
+            let nodes = g.pow2(0, 3); // 1..8 nodes
+            let gpn = match algo {
+                Algo::RdFlat | Algo::Rabenseifner => g.pow2(0, 2),
+                _ => g.usize(1, 4),
+            };
+            if nodes * gpn > 24 {
+                return; // keep thread counts sane on 1 core
+            }
+            let n_elems = g.usize(1, 200);
+            let chunk = g.usize(1, 64);
+            let seed = g.u64(0, 1 << 30);
+            run_and_check(algo, nodes, gpn, n_elems, chunk, seed);
+        });
+    }
+
+    #[test]
+    fn property_rounds_with_varying_lengths_chunks() {
+        check("nvrar rounds safe", 6, |g: &mut Gen| {
+            let nodes = g.pow2(1, 2);
+            let gpn = g.usize(1, 3);
+            let n_elems = g.usize(3, 120);
+            let chunk = g.usize(1, 32);
+            let h = Harness { nodes, gpus_per_node: gpn, n_elems, chunk_words: chunk, algo: Algo::Nvrar };
+            let p = h.pes();
+            let rounds = 3;
+            let out = h.run_rounds(rounds, |pe, round| {
+                (0..n_elems).map(|i| ((pe + 1) * (round + 2) + i) as f32 * 0.5).collect()
+            });
+            for round in 0..rounds {
+                let inputs: Vec<Vec<f32>> = (0..p)
+                    .map(|pe| (0..n_elems).map(|i| ((pe + 1) * (round + 2) + i) as f32 * 0.5).collect())
+                    .collect();
+                let want = serial_sum(&inputs);
+                for pe in 0..p {
+                    for (a, b) in out[round][pe].iter().zip(&want) {
+                        assert!((a - b).abs() <= 1e-3, "mismatch");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn nan_inputs_propagate_bitwise() {
+        // LL words are bit moves; a NaN contribution must surface as NaN.
+        let h = Harness { nodes: 2, gpus_per_node: 1, n_elems: 4, chunk_words: 2, algo: Algo::Nvrar };
+        let out = h.run_once(|pe| {
+            if pe == 0 { vec![f32::NAN, 1.0, 2.0, 3.0] } else { vec![1.0; 4] }
+        });
+        assert!(out[0][0].is_nan() && out[1][0].is_nan());
+        assert_eq!(out[0][1], 2.0);
+    }
+}

@@ -1,0 +1,489 @@
+//! Event-level all-reduce simulations over the α-β cluster model.
+//!
+//! Where the closed forms (Eqs 1–6) stop, these simulations model what the
+//! paper measures: chunk pipelining (B_s thread blocks × C_s-byte chunks),
+//! per-put injection overheads, LL payload inflation η, per-phase kernel
+//! launches, NCCL's protocol (LL vs Simple) and algorithm (Ring vs Tree)
+//! selection, host-proxy costs of NCCL/MPI versus GPU-initiated NVSHMEM
+//! RMA, and NVRAR's deferred sequence-number synchronization (hidden by
+//! interleaved compute — Appendix B / Fig 13).
+
+use crate::cluster::Topology;
+use crate::simnet::Server;
+
+/// Tunables of the communication stack (per machine; see [`CommConfig::perlmutter`]).
+#[derive(Clone, Copy, Debug)]
+pub struct CommConfig {
+    /// LL fused-payload inflation factor (1 < η ≤ 2); paper §4.3.
+    pub eta: f64,
+    /// NVRAR thread-block count B_s (concurrent chunk lanes).
+    pub block_count: usize,
+    /// NVRAR chunk size C_s in bytes.
+    pub chunk_bytes: u64,
+    /// GPU-local reduction bandwidth (bytes/s of *reduced output*; HBM-bound).
+    pub reduce_bw: f64,
+    /// Host kernel-launch overhead per launched kernel/phase.
+    pub launch_overhead: f64,
+    /// Extra per-hop latency of host-proxied transports (NCCL net/MPI).
+    pub proxy_overhead: f64,
+    /// Extra per-hop latency of GPU-initiated NVSHMEM RMA.
+    pub nvshmem_overhead: f64,
+    /// Per-put injection overhead (each put_nbi chunk pays this on the NIC).
+    pub put_overhead: f64,
+    /// Cost of NVRAR's sequence-number peer sync when *not* hidden by
+    /// interleaved compute (§4.2.3, Fig 13).
+    pub sync_cost: f64,
+    /// NCCL LL protocol: bandwidth divides by this (8 B carries 4 B data).
+    pub ll_bw_penalty: f64,
+    /// NCCL LL protocol: latency multiplier (< 1; LL path skips syncs).
+    pub ll_alpha_factor: f64,
+    /// MPI per-call host overhead (no CUDA-graph capture; §4 intro).
+    pub mpi_host_overhead: f64,
+}
+
+impl CommConfig {
+    /// Slingshot-11 stack (Perlmutter). NVSHMEM's libfabric path has high
+    /// per-put costs (the paper's §4.2.2 motivation for fused payloads).
+    ///
+    /// η = 1.25: the paper's 1 < η < 2 — the tuned kernel packs flags per
+    /// cache line (LL128-style), not per 8 B word. (The *real* shmem
+    /// implementation in `collectives::real` keeps word-granular flags,
+    /// i.e. η = 2; it optimizes correctness clarity, not wire efficiency.)
+    pub fn perlmutter() -> Self {
+        CommConfig {
+            eta: 1.25,
+            block_count: 32,
+            chunk_bytes: 32 * 1024,
+            reduce_bw: 600.0e9,
+            launch_overhead: 4.0e-6,
+            proxy_overhead: 5.0e-6,
+            nvshmem_overhead: 1.0e-6,
+            put_overhead: 0.3e-6,
+            sync_cost: 18.0e-6,
+            ll_bw_penalty: 2.0,
+            ll_alpha_factor: 0.6,
+            mpi_host_overhead: 12.0e-6,
+        }
+    }
+
+    /// InfiniBand stack (Vista). GPU-initiated RMA is very efficient on IB
+    /// verbs; NCCL's proxy thread costs relatively more (drives the larger
+    /// Vista speedups in Fig 6 right / Fig 14).
+    /// NCCL's IB transport progresses through a host proxy thread whose
+    /// per-hop cost dominates small messages, and its LL protocol's flag
+    /// traffic crosses PCIe — while NVSHMEM IBGDA issues NIC doorbells from
+    /// the GPU directly. This asymmetry is what gives Vista its larger
+    /// NVRAR speedups (Fig 6 right / Fig 14).
+    pub fn vista() -> Self {
+        CommConfig {
+            eta: 1.25,
+            block_count: 32,
+            chunk_bytes: 32 * 1024,
+            reduce_bw: 900.0e9,
+            launch_overhead: 4.0e-6,
+            proxy_overhead: 25.0e-6,
+            nvshmem_overhead: 0.5e-6,
+            put_overhead: 0.1e-6,
+            sync_cost: 10.0e-6,
+            ll_bw_penalty: 3.0,
+            ll_alpha_factor: 0.6,
+            mpi_host_overhead: 10.0e-6,
+        }
+    }
+
+    pub fn for_machine(name: &str) -> Self {
+        match name {
+            "perlmutter" => Self::perlmutter(),
+            "vista" => Self::vista(),
+            _ => Self::perlmutter(),
+        }
+    }
+}
+
+/// Result of one simulated all-reduce.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub total: f64,
+    /// (phase name, seconds) — Fig 8 / Fig 13 breakdowns.
+    pub phases: Vec<(&'static str, f64)>,
+    /// Which algorithm/protocol was actually used (NCCL auto-selection).
+    pub algo: &'static str,
+}
+
+impl Timing {
+    fn new(algo: &'static str) -> Self {
+        Timing { total: 0.0, phases: Vec::new(), algo }
+    }
+
+    fn phase(mut self, name: &'static str, secs: f64) -> Self {
+        self.total += secs;
+        self.phases.push((name, secs));
+        self
+    }
+
+    pub fn phase_secs(&self, name: &str) -> f64 {
+        self.phases.iter().filter(|(n, _)| *n == name).map(|(_, s)| s).sum()
+    }
+}
+
+/// NCCL protocol choice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Proto {
+    Ll,
+    Simple,
+}
+
+fn inter_alpha(t: &Topology, c: &CommConfig, proto: Proto) -> f64 {
+    let a = t.inter.alpha + c.proxy_overhead;
+    match proto {
+        Proto::Ll => a * c.ll_alpha_factor,
+        Proto::Simple => a,
+    }
+}
+
+fn inter_beta(t: &Topology, c: &CommConfig, proto: Proto) -> f64 {
+    match proto {
+        Proto::Ll => t.inter.beta / c.ll_bw_penalty,
+        Proto::Simple => t.inter.beta,
+    }
+}
+
+/// NCCL Ring all-reduce (flat, node-major ring). Every one of the
+/// 2(P-1) steps moves |M|/P bytes and is gated by the inter-node hop.
+pub fn nccl_ring(t: &Topology, c: &CommConfig, bytes: u64, proto: Proto) -> Timing {
+    let p = t.total_gpus() as f64;
+    if t.total_gpus() == 1 {
+        return Timing::new("ring").phase("launch", c.launch_overhead);
+    }
+    let chunk = bytes as f64 / p;
+    let steps = 2.0 * (p - 1.0);
+    let (a_ie, b_ie) = (inter_alpha(t, c, proto), inter_beta(t, c, proto));
+    // On a node-major ring only 1/G of the hops cross nodes, but every
+    // synchronous ring step is gated by its slowest active hop, which is
+    // inter-node whenever N > 1.
+    let step_time = if t.nodes > 1 {
+        a_ie + chunk / b_ie
+    } else {
+        t.intra.alpha + chunk / t.intra.beta
+    };
+    Timing::new(if proto == Proto::Ll { "ring/LL" } else { "ring" })
+        .phase("launch", c.launch_overhead)
+        .phase("ring-steps", steps * step_time)
+}
+
+/// Pipelined chain: `hops` sequential (α, β) hops carrying `bytes` split
+/// into `chunk`-byte pieces. T = Σα + Σ(c/β_i) + (Q-1)·max_i(c/β_i).
+fn pipelined_chain(hops: &[(f64, f64)], bytes: u64, chunk: u64) -> f64 {
+    if hops.is_empty() || bytes == 0 {
+        return 0.0;
+    }
+    let chunk = chunk.max(1).min(bytes);
+    let q = bytes.div_ceil(chunk) as f64;
+    let c = bytes as f64 / q; // equalized chunk size
+    let sum_alpha: f64 = hops.iter().map(|(a, _)| a).sum();
+    let sum_ser: f64 = hops.iter().map(|(_, b)| c / b).sum();
+    let bottleneck = hops.iter().map(|(_, b)| c / b).fold(0.0, f64::max);
+    sum_alpha + sum_ser + (q - 1.0) * bottleneck
+}
+
+/// NCCL Tree all-reduce: intra-node chain + double-binary-tree inter-node
+/// reduce, then the mirrored broadcast. Chunk-pipelined along the chain.
+pub fn nccl_tree(t: &Topology, c: &CommConfig, bytes: u64, proto: Proto) -> Timing {
+    let (a_ie, b_ie) = (inter_alpha(t, c, proto), inter_beta(t, c, proto));
+    let mut up: Vec<(f64, f64)> = Vec::new();
+    // Intra-node chain: G-1 hops on NVLink.
+    for _ in 1..t.gpus_per_node {
+        up.push((t.intra.alpha, t.intra.beta));
+    }
+    // Inter-node binary-tree depth: log2(N) hops. The double binary tree
+    // halves per-tree traffic; model as bandwidth ×2 on inter hops.
+    let depth = (t.nodes as f64).log2().ceil() as usize;
+    for _ in 0..depth {
+        up.push((a_ie, b_ie * 2.0));
+    }
+    let pipe_chunk = c.chunk_bytes.max(4096);
+    let reduce = pipelined_chain(&up, bytes, pipe_chunk);
+    let bcast = reduce; // mirrored down-phase
+    Timing::new(if proto == Proto::Ll { "tree/LL" } else { "tree" })
+        .phase("launch", c.launch_overhead)
+        .phase("tree-reduce", reduce)
+        .phase("tree-bcast", bcast)
+}
+
+/// NCCL with automatic algorithm+protocol selection (what `NcclAuto` runs):
+/// the cheapest of {ring, tree} × {LL, Simple}, mirroring NCCL's tuner.
+pub fn nccl_auto(t: &Topology, c: &CommConfig, bytes: u64) -> Timing {
+    let candidates = [
+        nccl_ring(t, c, bytes, Proto::Ll),
+        nccl_ring(t, c, bytes, Proto::Simple),
+        nccl_tree(t, c, bytes, Proto::Ll),
+        nccl_tree(t, c, bytes, Proto::Simple),
+    ];
+    candidates
+        .into_iter()
+        .min_by(|a, b| a.total.partial_cmp(&b.total).unwrap())
+        .unwrap()
+}
+
+/// GPU-aware MPI all-reduce: flat recursive doubling (Thakur-Gropp), host-
+/// driven (no CUDA graphs ⇒ per-call host overhead — §4 intro).
+pub fn mpi_rd(t: &Topology, c: &CommConfig, bytes: u64) -> Timing {
+    let p = t.total_gpus();
+    assert!(p.is_power_of_two(), "recursive doubling needs a power-of-two rank count");
+    let steps = p.trailing_zeros() as usize;
+    let mut total = 0.0;
+    for step in 0..steps {
+        // First log2(G) exchange rounds stay intra-node under node-major
+        // rank order XOR peering.
+        let intra = (1usize << step) < t.gpus_per_node;
+        let (a, b) = if intra {
+            (t.intra.alpha + c.proxy_overhead, t.intra.beta)
+        } else {
+            (t.inter.alpha + c.proxy_overhead, t.inter.beta)
+        };
+        total += a + bytes as f64 / b;
+    }
+    Timing::new("mpi-rd").phase("host", c.mpi_host_overhead).phase("rd-steps", total)
+}
+
+/// NVRAR (Algorithm 1), event-level: intra RS → chunked inter-node RD with
+/// LL payloads and per-step buffers → intra AG. `gap_compute` is the GPU
+/// compute time elapsed since the previous collective, which hides the
+/// deferred sequence-number sync (§4.2.3; Fig 13's "w/ matmul" case).
+pub fn nvrar(t: &Topology, c: &CommConfig, bytes: u64, gap_compute: f64) -> Timing {
+    let g = t.gpus_per_node as f64;
+    let n = t.nodes;
+    let mut timing = Timing::new("nvrar");
+
+    // Host-side: one launch per phase (RS + RD kernel + AG); single-GPU
+    // nodes skip the intra phases entirely (Vista: one launch — §5.1).
+    let launches = if t.gpus_per_node > 1 { 3.0 } else { 1.0 };
+    timing = timing.phase("launch", launches * c.launch_overhead);
+
+    // Deferred peer sync: pay only what interleaved compute didn't hide.
+    timing = timing.phase("sync", (c.sync_cost - gap_compute).max(0.0));
+
+    // Phase 1: intra-node ring reduce-scatter (NCCL under the hood).
+    if t.gpus_per_node > 1 {
+        let rs = (g - 1.0) * t.intra.alpha + ((g - 1.0) / g) * (bytes as f64 / t.intra.beta);
+        timing = timing.phase("reduce-scatter", rs);
+    }
+
+    // Phase 2: inter-node recursive doubling on |M|/G bytes, η-inflated,
+    // B_s lanes × C_s chunks, per-chunk put overhead, reduction overlapped.
+    if n > 1 {
+        assert!(n.is_power_of_two(), "NVRAR inter-node phase needs power-of-two node count");
+        let steps = n.trailing_zeros() as usize;
+        let msg = (bytes as f64 / g * c.eta).ceil() as u64;
+        let alpha = t.inter.alpha + c.nvshmem_overhead;
+        let lane_bytes = msg.div_ceil(c.block_count as u64).max(1);
+        let q = lane_bytes.div_ceil(c.chunk_bytes).max(1) as usize;
+        let chunk = lane_bytes as f64 / q as f64;
+
+        // One GPU's timeline; peers are symmetric. The NIC serializes all
+        // lanes' puts; each lane's reduce depends on its chunk arrival.
+        let mut nic = Server::new();
+        let mut reduce_srv = Server::new();
+        // ready[lane][chunk] = when this chunk's data is ready to send.
+        let mut ready = vec![vec![0.0f64; q]; c.block_count];
+        let mut phase_end: f64 = 0.0;
+        for _step in 0..steps {
+            let mut next_ready = vec![vec![0.0f64; q]; c.block_count];
+            for ci in 0..q {
+                for lane in 0..c.block_count {
+                    let ser = chunk / t.inter.beta + c.put_overhead;
+                    let (_s, sent) = nic.book(ready[lane][ci], ser);
+                    let arrive = sent + alpha;
+                    // LL reduction begins on arrival (warp-level flag spin).
+                    let rtime = chunk / c.reduce_bw;
+                    let (_rs, rdone) = reduce_srv.book(arrive, rtime);
+                    next_ready[lane][ci] = rdone;
+                    phase_end = phase_end.max(rdone);
+                }
+            }
+            ready = next_ready;
+        }
+        timing = timing.phase("recursive-doubling", phase_end);
+    }
+
+    // Phase 3: intra-node all-gather.
+    if t.gpus_per_node > 1 {
+        let ag = (g - 1.0) * t.intra.alpha + ((g - 1.0) / g) * (bytes as f64 / t.intra.beta);
+        timing = timing.phase("all-gather", ag);
+    }
+    timing
+}
+
+/// Above this size the NVRAR integration falls back to NCCL — the same
+/// size gating vLLM's custom all-reduce uses; the paper notes NVRAR
+/// "primarily benefits small messages (128 KB–4 MB)", and prefill-phase
+/// all-reduces (tens of MB) are bandwidth-bound where the LL η-inflation
+/// loses.
+pub const NVRAR_FALLBACK_BYTES: u64 = 4 * 1024 * 1024;
+
+/// Dispatch by implementation choice. `gap_compute` only affects NVRAR.
+/// The `Nvrar` arm models the engine *integration*: size-gated between the
+/// NVRAR kernel and NCCL (see [`NVRAR_FALLBACK_BYTES`]).
+pub fn allreduce(
+    which: super::AllReduceImpl,
+    t: &Topology,
+    c: &CommConfig,
+    bytes: u64,
+    gap_compute: f64,
+) -> Timing {
+    use super::AllReduceImpl::*;
+    match which {
+        NcclAuto => nccl_auto(t, c, bytes),
+        NcclRing => {
+            let ll = nccl_ring(t, c, bytes, Proto::Ll);
+            let simple = nccl_ring(t, c, bytes, Proto::Simple);
+            if ll.total < simple.total { ll } else { simple }
+        }
+        NcclTree => {
+            let ll = nccl_tree(t, c, bytes, Proto::Ll);
+            let simple = nccl_tree(t, c, bytes, Proto::Simple);
+            if ll.total < simple.total { ll } else { simple }
+        }
+        Mpi => mpi_rd(t, c, bytes),
+        Nvrar => {
+            if bytes > NVRAR_FALLBACK_BYTES {
+                nccl_auto(t, c, bytes)
+            } else {
+                nvrar(t, c, bytes, gap_compute)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::collectives::model;
+
+    #[test]
+    fn nccl_selects_tree_for_small_multinode() {
+        let t = presets::perlmutter(8);
+        let c = CommConfig::perlmutter();
+        let pick = nccl_auto(&t, &c, 128 * 1024);
+        assert!(pick.algo.starts_with("tree"), "picked {}", pick.algo);
+    }
+
+    #[test]
+    fn nccl_selects_ring_for_large_single_node() {
+        let t = presets::perlmutter(1);
+        let c = CommConfig::perlmutter();
+        let pick = nccl_auto(&t, &c, 64 * 1024 * 1024);
+        assert!(pick.algo.starts_with("ring"), "picked {}", pick.algo);
+    }
+
+    #[test]
+    fn nvrar_sim_tracks_closed_form_in_latency_regime() {
+        // With chunking trivial and overheads zeroed, the event-level RD
+        // phase must agree with Eq. 4 within a put-overhead margin.
+        let t = presets::perlmutter(8);
+        let mut c = CommConfig::perlmutter();
+        c.block_count = 1;
+        c.chunk_bytes = u64::MAX;
+        c.put_overhead = 0.0;
+        c.nvshmem_overhead = 0.0;
+        c.sync_cost = 0.0;
+        c.launch_overhead = 0.0;
+        c.reduce_bw = f64::INFINITY;
+        let bytes = 512 * 1024;
+        let sim = nvrar(&t, &c, bytes, 0.0);
+        let rd_sim = sim.phase_secs("recursive-doubling");
+        let rd_model = model::nvrar_recursive_doubling(&t, bytes, c.eta);
+        // Model uses (N-1)/N bandwidth credit; sim sends full msg per step:
+        // allow 2x slack but demand the same order.
+        assert!(
+            rd_sim > 0.5 * rd_model && rd_sim < 3.0 * rd_model,
+            "sim {rd_sim} vs model {rd_model}"
+        );
+        let rs = sim.phase_secs("reduce-scatter");
+        let rs_model = model::nvrar_reduce_scatter(&t, bytes);
+        assert!((rs - rs_model).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nvrar_scales_logarithmically() {
+        let c = CommConfig::perlmutter();
+        let bytes = 256 * 1024;
+        let t2 = nvrar(&presets::perlmutter(2), &c, bytes, 0.0).total;
+        let t4 = nvrar(&presets::perlmutter(4), &c, bytes, 0.0).total;
+        let t16 = nvrar(&presets::perlmutter(16), &c, bytes, 0.0).total;
+        // Each node doubling adds ~one RD step: deltas roughly equal.
+        let d1 = t4 - t2;
+        let d2 = (t16 - t4) / 2.0;
+        assert!(d1 > 0.0 && d2 > 0.0);
+        assert!(d2 < 2.5 * d1, "not log-shaped: {d1} then {d2}");
+    }
+
+    #[test]
+    fn ring_scales_linearly() {
+        let c = CommConfig::perlmutter();
+        let bytes = 256 * 1024;
+        let t4 = nccl_ring(&presets::perlmutter(4), &c, bytes, Proto::Simple).total;
+        let t16 = nccl_ring(&presets::perlmutter(16), &c, bytes, Proto::Simple).total;
+        assert!(t16 / t4 > 3.0, "ratio {}", t16 / t4);
+    }
+
+    #[test]
+    fn gap_compute_hides_sync() {
+        let t = presets::perlmutter(4);
+        let c = CommConfig::perlmutter();
+        let bytes = 128 * 1024;
+        let cold = nvrar(&t, &c, bytes, 0.0);
+        let hot = nvrar(&t, &c, bytes, 1.0); // plenty of interleaved compute
+        assert!(cold.total > hot.total);
+        assert!((cold.total - hot.total - c.sync_cost).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vista_single_gpu_nodes_skip_intra_phases() {
+        let t = presets::vista(8);
+        let c = CommConfig::vista();
+        let timing = nvrar(&t, &c, 512 * 1024, 0.0);
+        assert_eq!(timing.phase_secs("reduce-scatter"), 0.0);
+        assert_eq!(timing.phase_secs("all-gather"), 0.0);
+        assert!(timing.phase_secs("recursive-doubling") > 0.0);
+    }
+
+    #[test]
+    fn chunking_hyperparams_matter() {
+        // Table 5: performance is sensitive to C_s; degenerate chunking
+        // (tiny chunks => per-put overhead dominates) must be slower.
+        let t = presets::perlmutter(4);
+        let mut good = CommConfig::perlmutter();
+        good.chunk_bytes = 32 * 1024;
+        let mut bad = good;
+        bad.chunk_bytes = 512;
+        let bytes = 1024 * 1024;
+        let tg = nvrar(&t, &good, bytes, 0.0).total;
+        let tb = nvrar(&t, &bad, bytes, 0.0).total;
+        assert!(tb > tg, "tiny chunks {tb} should beat.. err, lose to {tg}");
+    }
+
+    #[test]
+    fn pipelined_chain_limits() {
+        // Single chunk: plain store-and-forward sum.
+        let hops = [(1e-6, 1e9), (2e-6, 2e9)];
+        let t1 = pipelined_chain(&hops, 1000, u64::MAX);
+        assert!((t1 - (3e-6 + 1e-6 + 0.5e-6)).abs() < 1e-12);
+        // Many chunks: bottleneck-dominated, strictly faster than
+        // unpipelined transfer of the whole message per hop.
+        let big = 10_000_000;
+        let pipelined = pipelined_chain(&hops, big, 10_000);
+        let store_fwd = pipelined_chain(&hops, big, u64::MAX);
+        assert!(pipelined < store_fwd);
+    }
+
+    #[test]
+    fn mpi_beats_nccl_multinode_small_but_not_intra() {
+        // Fig 4's observation: NCCL faster within a node; MPI competitive
+        // across nodes for 512 KB–1 MB.
+        let c = CommConfig::perlmutter();
+        let intra = presets::perlmutter(1);
+        assert!(nccl_auto(&intra, &c, 512 * 1024).total < mpi_rd(&intra, &c, 512 * 1024).total);
+    }
+}

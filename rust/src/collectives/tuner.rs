@@ -1,0 +1,151 @@
+//! NVRAR hyperparameter auto-tuner — the paper's stated future work
+//! ("We leave heuristic-based hyperparameter tuning to future work",
+//! Appendix C.1).
+//!
+//! Table 5 shows NVRAR's latency is sensitive to the thread-block count
+//! B_s and chunk size C_s, and the best setting depends on message size
+//! and node count. [`tune`] grid-searches the event-level simulation once
+//! per (topology, message size) and [`TunedTable`] caches the result per
+//! size bucket so an engine can pick tuned parameters per all-reduce call
+//! at zero cost on the hot path.
+
+use super::sim::{nvrar, CommConfig};
+use crate::cluster::Topology;
+
+/// Search space: powers of two around the paper's Table 5 values.
+const BLOCK_CANDIDATES: [usize; 5] = [4, 8, 16, 32, 64];
+const CHUNK_CANDIDATES: [u64; 6] =
+    [4 * 1024, 8 * 1024, 16 * 1024, 32 * 1024, 64 * 1024, 128 * 1024];
+
+/// One tuned configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Tuned {
+    pub block_count: usize,
+    pub chunk_bytes: u64,
+    /// Predicted all-reduce time with these parameters (s).
+    pub predicted: f64,
+}
+
+/// Grid-search B_s × C_s for one (topology, message size).
+pub fn tune(topo: &Topology, base: &CommConfig, bytes: u64) -> Tuned {
+    let mut best = Tuned { block_count: base.block_count, chunk_bytes: base.chunk_bytes, predicted: f64::INFINITY };
+    for &bs in &BLOCK_CANDIDATES {
+        for &cs in &CHUNK_CANDIDATES {
+            let mut c = *base;
+            c.block_count = bs;
+            c.chunk_bytes = cs;
+            let t = nvrar(topo, &c, bytes, 0.0).total;
+            if t < best.predicted {
+                best = Tuned { block_count: bs, chunk_bytes: cs, predicted: t };
+            }
+        }
+    }
+    best
+}
+
+/// Pre-tuned table over power-of-two size buckets (the engine integration:
+/// tune once per deployment, look up per call).
+#[derive(Clone, Debug)]
+pub struct TunedTable {
+    /// (max message bytes of bucket, tuned params).
+    buckets: Vec<(u64, Tuned)>,
+}
+
+impl TunedTable {
+    /// Tune buckets from 32 KB to 8 MB for a deployment.
+    pub fn build(topo: &Topology, base: &CommConfig) -> Self {
+        let mut buckets = Vec::new();
+        let mut size = 32 * 1024u64;
+        while size <= 8 * 1024 * 1024 {
+            buckets.push((size, tune(topo, base, size)));
+            size *= 2;
+        }
+        TunedTable { buckets }
+    }
+
+    /// Tuned parameters for a message of `bytes` (clamps to the largest
+    /// bucket above 8 MB).
+    pub fn lookup(&self, bytes: u64) -> Tuned {
+        for (cap, t) in &self.buckets {
+            if bytes <= *cap {
+                return *t;
+            }
+        }
+        self.buckets.last().expect("non-empty").1
+    }
+
+    /// Apply the tuned parameters for `bytes` onto a CommConfig.
+    pub fn apply(&self, base: &CommConfig, bytes: u64) -> CommConfig {
+        let t = self.lookup(bytes);
+        let mut c = *base;
+        c.block_count = t.block_count;
+        c.chunk_bytes = t.chunk_bytes;
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+
+    #[test]
+    fn tuned_never_worse_than_default() {
+        let topo = presets::perlmutter(4);
+        let base = CommConfig::perlmutter();
+        for kb in [64u64, 256, 1024, 4096] {
+            let bytes = kb * 1024;
+            let default_t = nvrar(&topo, &base, bytes, 0.0).total;
+            let tuned = tune(&topo, &base, bytes);
+            assert!(
+                tuned.predicted <= default_t * (1.0 + 1e-9),
+                "{kb}KB: tuned {} vs default {default_t}",
+                tuned.predicted
+            );
+        }
+    }
+
+    #[test]
+    fn tuned_params_in_search_space() {
+        let topo = presets::vista(8);
+        let t = tune(&topo, &CommConfig::vista(), 512 * 1024);
+        assert!(BLOCK_CANDIDATES.contains(&t.block_count));
+        assert!(CHUNK_CANDIDATES.contains(&t.chunk_bytes));
+        assert!(t.predicted.is_finite() && t.predicted > 0.0);
+    }
+
+    #[test]
+    fn table_lookup_monotone_buckets() {
+        let topo = presets::perlmutter(8);
+        let base = CommConfig::perlmutter();
+        let table = TunedTable::build(&topo, &base);
+        // Lookup picks the right bucket and clamps above the top.
+        let small = table.lookup(40 * 1024);
+        let big = table.lookup(64 * 1024 * 1024);
+        assert_eq!(big, table.buckets.last().unwrap().1);
+        assert!(small.predicted <= big.predicted);
+    }
+
+    #[test]
+    fn apply_improves_sim_time() {
+        let topo = presets::perlmutter(8);
+        let base = CommConfig::perlmutter();
+        let table = TunedTable::build(&topo, &base);
+        for kb in [128u64, 1024] {
+            let bytes = kb * 1024;
+            let tuned_cfg = table.apply(&base, bytes);
+            let t_tuned = nvrar(&topo, &tuned_cfg, bytes, 0.0).total;
+            let t_base = nvrar(&topo, &base, bytes, 0.0).total;
+            assert!(t_tuned <= t_base * (1.0 + 1e-9));
+        }
+    }
+
+    #[test]
+    fn large_messages_prefer_larger_chunks() {
+        // The Table 5 intuition: per-put overhead penalizes tiny chunks on
+        // big messages.
+        let topo = presets::perlmutter(4);
+        let t_big = tune(&topo, &CommConfig::perlmutter(), 4 * 1024 * 1024);
+        assert!(t_big.chunk_bytes >= 16 * 1024, "got {}", t_big.chunk_bytes);
+    }
+}

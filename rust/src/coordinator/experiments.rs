@@ -1,0 +1,533 @@
+//! One function per paper table/figure. See DESIGN.md's per-experiment
+//! index; EXPERIMENTS.md records paper-vs-measured for each.
+
+use crate::cluster::presets;
+use crate::collectives::sim::{self, CommConfig};
+use crate::collectives::AllReduceImpl;
+use crate::engine::persona::Persona;
+use crate::engine::{engine_for, Workload};
+use crate::models::ModelConfig;
+use crate::moe::{moe_step_time, MoeDeployment};
+use crate::perfmodel::{gemm_time, GpuSpec};
+use crate::serving::{fig9_config, serve, serve_with, Deployment};
+use crate::trace::TraceSpec;
+use crate::util::tables::{fmt_speedup, Table};
+
+fn fmt_s(x: f64) -> String {
+    if x.is_nan() {
+        "OOM".to_string()
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+fn fmt_us(x: f64) -> String {
+    format!("{:.1}", x * 1e6)
+}
+
+/// GPU counts for the strong-scaling sweeps (paper §3.2).
+pub fn scaling_gpus(model: &str) -> Vec<usize> {
+    if model.contains("405") {
+        vec![16, 32, 64, 128]
+    } else {
+        vec![4, 8, 16, 32]
+    }
+}
+
+/// Figures 1, 2 and 11: strong scaling of engines × parallelism schemes.
+pub fn fig1_fig2_scaling(model_name: &str) -> Vec<Table> {
+    let model = ModelConfig::by_name(model_name);
+    let engines: [(&str, &str, Persona); 5] = [
+        ("YALIS (TP)", "tp", Persona::yalis()),
+        ("vLLM (TP)", "tp", Persona::vllm_v1()),
+        ("SGLang (TP)", "tp", Persona::sglang()),
+        ("vLLM (HP)", "hp", Persona::vllm_v0()),
+        ("SGLang (HP)", "hp", Persona::sglang()),
+    ];
+    let workloads = [
+        ("prefill-heavy #P=32", Workload::prefill_heavy(32)),
+        ("prefill-heavy #P=8", Workload::prefill_heavy(8)),
+        ("decode-heavy #P=8", Workload::decode_heavy(8)),
+        ("decode-heavy #P=32", Workload::decode_heavy(32)), // Fig 11
+    ];
+    let mut tables = Vec::new();
+    for (wname, w) in workloads {
+        let mut t = Table::new(
+            &format!("Fig1/2 strong scaling {} {}", model.name, wname),
+            &["engine", "4", "8", "16", "32", "64", "128"],
+        );
+        let gpus = scaling_gpus(model_name);
+        for (ename, plan, persona) in engines.iter() {
+            let mut cells = vec![ename.to_string()];
+            for g in [4usize, 8, 16, 32, 64, 128] {
+                if !gpus.contains(&g) {
+                    cells.push("-".into());
+                    continue;
+                }
+                let e = engine_for("perlmutter", model.clone(), g, plan, *persona, AllReduceImpl::NcclAuto);
+                let r = e.run_batch(&w);
+                cells.push(fmt_s(r.total));
+            }
+            t.row(&cells);
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+/// Figure 3: per-GPU breakdown of YALIS (TP) and vLLM (HP), 8 vs 16 GPUs.
+pub fn fig3_breakdown() -> Table {
+    let model = ModelConfig::llama31_70b();
+    let mut t = Table::new(
+        "Fig3 breakdown 70B (seconds)",
+        &["workload", "engine", "gpus", "matmul", "other", "comm", "idle", "total"],
+    );
+    for (wname, w) in [
+        ("prefill-heavy #P=32", Workload::prefill_heavy(32)),
+        ("decode-heavy #P=8", Workload::decode_heavy(8)),
+    ] {
+        for (ename, plan, persona) in [
+            ("YALIS (TP)", "tp", Persona::yalis()),
+            ("vLLM (HP)", "hp", Persona::vllm_v0()),
+        ] {
+            for g in [8usize, 16] {
+                let e = engine_for("perlmutter", model.clone(), g, plan, persona, AllReduceImpl::NcclAuto);
+                let r = e.run_batch(&w);
+                let mut cells =
+                    vec![wname.to_string(), ename.to_string(), g.to_string()];
+                cells.extend(r.breakdown.row_cells());
+                t.row(&cells);
+            }
+        }
+    }
+    t
+}
+
+/// Table 4: Prefill-GEMM / Decode-GEMM with M or K halved (analytic model
+/// at the paper's exact A100 shapes).
+pub fn table4_gemm_model() -> Table {
+    let g = GpuSpec::a100();
+    let mut t = Table::new(
+        "Table4 GEMM tile quantization (ms, A100 model)",
+        &["workload", "baseline (M,N,K)", "HP (M/2,N,K)", "TP (M,N,K/2)"],
+    );
+    for (name, m, n, k) in
+        [("Prefill-GEMM", 32768usize, 8192usize, 57344usize), ("Decode-GEMM", 32, 8192, 57344)]
+    {
+        let base = gemm_time(&g, m, n, k, 2) * 1e3;
+        let mhalf = gemm_time(&g, m / 2, n, k, 2) * 1e3;
+        let khalf = gemm_time(&g, m, n, k / 2, 2) * 1e3;
+        t.row(&[
+            name.to_string(),
+            format!("{base:.3}"),
+            format!("{mhalf:.3}"),
+            format!("{khalf:.3}"),
+        ]);
+    }
+    t
+}
+
+/// Figure 4: NCCL vs MPI all-reduce across message sizes and GPU counts.
+pub fn fig4_nccl_vs_mpi() -> Table {
+    let c = CommConfig::perlmutter();
+    let mut t = Table::new(
+        "Fig4 NCCL vs MPI all-reduce (us, Perlmutter A100-40GB)",
+        &["gpus", "size", "NCCL", "MPI", "NCCL/MPI"],
+    );
+    for gpus in [4usize, 8, 16, 32, 64] {
+        let topo = presets::perlmutter(1).with_gpus(gpus);
+        for kb in [32u64, 128, 512, 1024, 4096] {
+            let bytes = kb * 1024;
+            let nccl = sim::nccl_auto(&topo, &c, bytes).total;
+            let mpi = sim::mpi_rd(&topo, &c, bytes).total;
+            t.row(&[
+                gpus.to_string(),
+                format!("{kb} KB"),
+                fmt_us(nccl),
+                fmt_us(mpi),
+                format!("{:.2}", nccl / mpi),
+            ]);
+        }
+    }
+    t
+}
+
+/// Figure 6 (+ Fig 14 left): NVRAR vs NCCL microbenchmark — scaling curves
+/// and the speedup grid. Microbenchmark = back-to-back collectives (no
+/// interleaved compute), so NVRAR pays its deferred sync (Appendix B).
+pub fn fig6_microbench(machine: &str) -> Vec<Table> {
+    let c = CommConfig::for_machine(machine);
+    let base = presets::by_name(machine, 1);
+    let gpus_list: Vec<usize> = match machine {
+        "vista" => vec![2, 4, 8, 16, 32],
+        _ => vec![8, 16, 32, 64, 128],
+    };
+
+    let mut scaling = Table::new(
+        &format!("Fig6-left all-reduce scaling on {machine} (us)"),
+        &["gpus", "NVRAR 256KB", "NCCL 256KB", "NVRAR 1024KB", "NCCL 1024KB"],
+    );
+    for &g in &gpus_list {
+        let topo = base.with_gpus(g);
+        if topo.nodes > 1 && !topo.nodes.is_power_of_two() {
+            continue;
+        }
+        let row: Vec<String> = [256u64, 1024]
+            .iter()
+            .flat_map(|kb| {
+                let b = kb * 1024;
+                vec![
+                    fmt_us(sim::nvrar(&topo, &c, b, 0.0).total),
+                    fmt_us(sim::nccl_auto(&topo, &c, b).total),
+                ]
+            })
+            .collect();
+        let mut cells = vec![g.to_string()];
+        cells.extend(row);
+        scaling.row(&cells);
+    }
+
+    let mut grid = Table::new(
+        &format!("Fig6 speedup grid NVRAR vs NCCL on {machine} (microbench, no overlap)"),
+        &["size", "g4", "g8", "g16", "g32", "g64", "g128"],
+    );
+    for kb in [64u64, 128, 256, 512, 1024, 2048] {
+        let mut cells = vec![format!("{kb} KB")];
+        for g in [4usize, 8, 16, 32, 64, 128] {
+            if g < base.gpus_per_node || (machine == "vista" && g > 32) {
+                cells.push("-".into());
+                continue;
+            }
+            let topo = base.with_gpus(g);
+            if topo.nodes > 1 && !topo.nodes.is_power_of_two() {
+                cells.push("-".into());
+                continue;
+            }
+            let b = kb * 1024;
+            let nccl = sim::nccl_auto(&topo, &c, b).total;
+            let nv = sim::nvrar(&topo, &c, b, 0.0).total;
+            cells.push(format!("{:.2}", nccl / nv));
+        }
+        grid.row(&cells);
+    }
+    vec![scaling, grid]
+}
+
+/// Table 5: B_s × C_s hyperparameter sensitivity (1 MB, 16 GPUs).
+pub fn table5_hyperparams() -> Table {
+    let topo = presets::perlmutter(4); // 16 GPUs
+    let mut t = Table::new(
+        "Table5 NVRAR hyperparameters, 1024 KB on 16 GPUs",
+        &["B_s", "C_s", "time (ms)"],
+    );
+    for (bs, cs) in [(32usize, 32768u64), (32, 4096), (8, 16384), (8, 131072)] {
+        let mut c = CommConfig::perlmutter();
+        c.block_count = bs;
+        c.chunk_bytes = cs;
+        let secs = sim::nvrar(&topo, &c, 1024 * 1024, 0.0).total;
+        t.row(&[bs.to_string(), cs.to_string(), format!("{:.4}", secs * 1e3)]);
+    }
+    t
+}
+
+/// Figures 7 & 16: end-to-end decode-heavy speedup of NVRAR over NCCL.
+pub fn fig7_e2e_speedup(model_name: &str, machine: &str) -> Table {
+    let model = ModelConfig::by_name(model_name);
+    let mut t = Table::new(
+        &format!("Fig7/16 e2e decode-heavy NVRAR speedup, {} on {machine}", model.name),
+        &["engine", "#P", "gpus", "msg", "NCCL (s)", "NVRAR (s)", "speedup"],
+    );
+    let gpus_list = if model_name.contains("405") {
+        vec![16usize, 32, 64, 128]
+    } else if machine == "vista" {
+        vec![4usize, 8, 16]
+    } else {
+        vec![8usize, 16, 32]
+    };
+    for persona in [Persona::yalis(), Persona::vllm_v1()] {
+        for np in [8usize, 32] {
+            let w = Workload::decode_heavy(np);
+            for &g in &gpus_list {
+                let nccl = engine_for(machine, model.clone(), g, "tp", persona, AllReduceImpl::NcclAuto)
+                    .run_batch(&w);
+                let nvrar = engine_for(machine, model.clone(), g, "tp", persona, AllReduceImpl::Nvrar)
+                    .run_batch(&w);
+                if nccl.oom || nvrar.oom {
+                    continue;
+                }
+                t.row(&[
+                    persona.name.to_string(),
+                    np.to_string(),
+                    g.to_string(),
+                    crate::util::stats::fmt_bytes(model.tp_allreduce_bytes(np)),
+                    fmt_s(nccl.total),
+                    fmt_s(nvrar.total),
+                    fmt_speedup(nccl.total / nvrar.total),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// Figure 8: per-phase breakdown of YALIS (TP) with NCCL vs NVRAR.
+pub fn fig8_phase_breakdown() -> Table {
+    let model = ModelConfig::llama31_70b();
+    let mut t = Table::new(
+        "Fig8 YALIS(TP) breakdown, 16 GPUs, decode-heavy (s)",
+        &["#P", "all-reduce", "matmul", "other", "comm", "idle", "total"],
+    );
+    for np in [8usize, 32] {
+        let w = Workload::decode_heavy(np);
+        for ar in [AllReduceImpl::NcclAuto, AllReduceImpl::Nvrar] {
+            let e = engine_for("perlmutter", model.clone(), 16, "tp", Persona::yalis(), ar);
+            let r = e.run_batch(&w);
+            let mut cells = vec![np.to_string(), ar.name().to_string()];
+            cells.extend(r.breakdown.row_cells());
+            t.row(&cells);
+        }
+    }
+    t
+}
+
+/// Figure 9: BurstGPT trace serving throughput (70B, Perlmutter, 16 GPUs).
+pub fn fig9_trace_serving() -> Table {
+    serving_table("Fig9 BurstGPT serving 70B/Perlmutter (16 GPUs)", TraceSpec::burstgpt(), &[32, 256])
+}
+
+/// Figure 18: decode-heavy trace serving.
+pub fn fig18_decode_trace_serving() -> Table {
+    serving_table(
+        "Fig18 decode-heavy trace serving 70B/Perlmutter (16 GPUs)",
+        TraceSpec::decode_heavy(),
+        &[32, 256],
+    )
+}
+
+fn serving_table(title: &str, mut spec: TraceSpec, concurrencies: &[usize]) -> Table {
+    // Scaled-down trace keeps bench wall-clock sane; rates and shapes keep
+    // the paper's Table 6 proportions.
+    spec.num_prompts = 200;
+    let reqs = spec.generate();
+    let mut t = Table::new(title, &["deployment", "C", "tok/s", "decode-only steps", "mean TTFT (s)"]);
+    for &c in concurrencies {
+        for dep in [
+            Deployment::Tp(AllReduceImpl::NcclAuto),
+            Deployment::Tp(AllReduceImpl::Nvrar),
+            Deployment::Hp,
+        ] {
+            let cfg = fig9_config(dep, c, "perlmutter", 16);
+            let rep = serve(&cfg, &reqs);
+            t.row(&[
+                dep.label(),
+                c.to_string(),
+                format!("{:.1}", rep.output_throughput),
+                format!("{:.0}%", rep.decode_only_frac * 100.0),
+                format!("{:.2}", rep.mean_ttft),
+            ]);
+        }
+    }
+    t
+}
+
+/// Figure 10: Qwen3-235B-A22B MoE deployments on 16 GPUs.
+pub fn fig10_moe() -> Table {
+    let model = ModelConfig::qwen3_235b_a22b();
+    let mut spec = TraceSpec::burstgpt();
+    spec.num_prompts = 150;
+    let reqs = spec.generate();
+    let mut t = Table::new(
+        "Fig10 Qwen3-235B-A22B serving on 16 GPUs",
+        &["deployment", "C", "tok/s"],
+    );
+    for &c in &[32usize, 128] {
+        for dep in MoeDeployment::fig10() {
+            let mut cfg = fig9_config(Deployment::Tp(dep.ar), c, "perlmutter", 16);
+            cfg.model = model.clone();
+            let rep = serve_with(&cfg, &reqs, |scfg, step| {
+                moe_step_time(&scfg.model, &scfg.topo, &scfg.gpu, &scfg.comm, &scfg.persona, &dep, step)
+            });
+            t.row(&[dep.label.to_string(), c.to_string(), format!("{:.1}", rep.output_throughput)]);
+        }
+    }
+    t
+}
+
+/// Figures 12/13 (Appendix B): sync-time hiding with interleaved matmul.
+pub fn fig13_sync_hiding() -> Table {
+    let topo = presets::perlmutter(4); // 16 GPUs
+    let c = CommConfig::perlmutter();
+    let bytes = 128 * 1024;
+    // Representative interleaved matmul: one 70B decode layer's MLP GEMM.
+    let g = GpuSpec::a100();
+    let m70 = ModelConfig::llama31_70b();
+    let gap = gemm_time(&g, 8, 2 * m70.ffn / 16, m70.d_model, 2);
+    let mut t = Table::new(
+        "Fig13 128KB all-reduce on 16 GPUs: sync hiding (us)",
+        &["impl", "variant", "sync", "comm phases", "total"],
+    );
+    for (variant, gap_secs) in [("back-to-back", 0.0), ("w/ interleaved matmul", gap)] {
+        let nv = sim::nvrar(&topo, &c, bytes, gap_secs);
+        t.row(&[
+            "NVRAR".to_string(),
+            variant.to_string(),
+            fmt_us(nv.phase_secs("sync")),
+            fmt_us(nv.total - nv.phase_secs("sync")),
+            fmt_us(nv.total),
+        ]);
+        let nccl = sim::nccl_auto(&topo, &c, bytes);
+        t.row(&[
+            "NCCL".to_string(),
+            variant.to_string(),
+            "0.0".to_string(),
+            fmt_us(nccl.total),
+            fmt_us(nccl.total),
+        ]);
+    }
+    t
+}
+
+/// Figures 14/15 (Appendix C.3): Vista scaling, NCCL pinned algorithms,
+/// and NCCL version comparison.
+pub fn fig14_fig15_nccl_variants() -> Vec<Table> {
+    let mut out = fig6_microbench("vista");
+
+    // Fig 14 middle/right: speedup with NCCL pinned to Tree / Ring.
+    let c = CommConfig::vista();
+    let base = presets::vista(1);
+    for (algo, name) in [(AllReduceImpl::NcclTree, "Tree"), (AllReduceImpl::NcclRing, "Ring")] {
+        let mut t = Table::new(
+            &format!("Fig14 NVRAR speedup vs NCCL pinned {name} (Vista)"),
+            &["size", "g4", "g8", "g16", "g32"],
+        );
+        for kb in [64u64, 256, 1024] {
+            let mut cells = vec![format!("{kb} KB")];
+            for g in [4usize, 8, 16, 32] {
+                let topo = base.with_gpus(g);
+                let b = kb * 1024;
+                let nccl = sim::allreduce(algo, &topo, &c, b, 0.0).total;
+                let nv = sim::nvrar(&topo, &c, b, 0.0).total;
+                cells.push(format!("{:.2}", nccl / nv));
+            }
+            t.row(&cells);
+        }
+        out.push(t);
+    }
+
+    // Fig 15: "NCCL 2.28.9" — modest transport improvements (bw +3%,
+    // launch -0.5us), orthogonal to the heterogeneous-network path.
+    let mut t = Table::new(
+        "Fig15 NCCL versions vs NVRAR on Perlmutter (us)",
+        &["gpus", "size", "NCCL 2.27.3", "NCCL 2.28.9", "NVRAR"],
+    );
+    let cp = CommConfig::perlmutter();
+    let mut cp_new = cp;
+    cp_new.launch_overhead = (cp.launch_overhead - 0.5e-6).max(0.0);
+    cp_new.proxy_overhead *= 0.97;
+    for g in [8usize, 16, 32, 64] {
+        let topo = presets::perlmutter(1).with_gpus(g);
+        for kb in [256u64, 1024] {
+            let b = kb * 1024;
+            t.row(&[
+                g.to_string(),
+                format!("{kb} KB"),
+                fmt_us(sim::nccl_auto(&topo, &cp, b).total),
+                fmt_us(sim::nccl_auto(&topo, &cp_new, b).total),
+                fmt_us(sim::nvrar(&topo, &cp, b, 0.0).total),
+            ]);
+        }
+    }
+    out.push(t);
+    out
+}
+
+/// Figure 17 + 18: trace distributions and decode-heavy serving.
+pub fn fig17_fig18_traces() -> Vec<Table> {
+    let buckets = [128usize, 256, 512, 1024, 2048, 4096, 8192];
+    let mut t = Table::new(
+        "Fig17 BurstGPT trace length distributions (1000 prompts)",
+        &["bucket <=", "input count", "output count"],
+    );
+    let (hin, hout) = TraceSpec::burstgpt().length_histogram(&buckets);
+    for (i, b) in buckets.iter().enumerate() {
+        t.row(&[b.to_string(), hin[i].to_string(), hout[i].to_string()]);
+    }
+    t.row(&["more".to_string(), hin[buckets.len()].to_string(), hout[buckets.len()].to_string()]);
+    vec![t, fig18_decode_trace_serving()]
+}
+
+/// Everything, in paper order (the `yalis all` command).
+pub fn all_experiments() -> Vec<Table> {
+    let mut out = Vec::new();
+    out.extend(fig1_fig2_scaling("70b"));
+    out.extend(fig1_fig2_scaling("405b"));
+    out.push(fig3_breakdown());
+    out.push(table4_gemm_model());
+    out.push(fig4_nccl_vs_mpi());
+    out.extend(fig6_microbench("perlmutter"));
+    out.push(table5_hyperparams());
+    out.push(fig7_e2e_speedup("70b", "perlmutter"));
+    out.push(fig7_e2e_speedup("405b", "perlmutter"));
+    out.push(fig8_phase_breakdown());
+    out.push(fig9_trace_serving());
+    out.push(fig10_moe());
+    out.push(fig13_sync_hiding());
+    out.extend(fig14_fig15_nccl_variants());
+    out.push(fig7_e2e_speedup("70b", "vista"));
+    out.extend(fig17_fig18_traces());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_shape_matches_paper() {
+        let t = table4_gemm_model();
+        let rows = t.rows();
+        // Prefill: both halvings ~halve. Decode: only K/2 helps.
+        let get = |r: usize, c: usize| rows[r][c].parse::<f64>().unwrap();
+        assert!((get(0, 2) / get(0, 1) - 0.5).abs() < 0.06);
+        assert!((get(0, 3) / get(0, 1) - 0.5).abs() < 0.06);
+        assert!(get(1, 2) / get(1, 1) > 0.9);
+        assert!(get(1, 3) / get(1, 1) < 0.65);
+    }
+
+    #[test]
+    fn fig6_grid_positive_speedups_mid_range() {
+        let tables = fig6_microbench("perlmutter");
+        let grid = &tables[1];
+        // 512 KB row, 32 GPUs column should show a speedup > 1.
+        let row = grid.rows().iter().find(|r| r[0] == "512 KB").unwrap();
+        let v: f64 = row[4].parse().unwrap();
+        assert!(v > 1.0, "512KB@32gpus speedup {v}");
+    }
+
+    #[test]
+    fn fig7_shows_speedups() {
+        let t = fig7_e2e_speedup("70b", "perlmutter");
+        assert!(!t.rows().is_empty());
+        for row in t.rows() {
+            let sp: f64 = row[6].trim_end_matches('x').parse().unwrap();
+            assert!(sp > 0.9 && sp < 3.0, "speedup {sp} out of plausible range");
+        }
+    }
+
+    #[test]
+    fn fig13_sync_hidden_with_matmul() {
+        let t = fig13_sync_hiding();
+        let rows = t.rows();
+        let sync_cold: f64 = rows[0][2].parse().unwrap();
+        let sync_hot: f64 = rows[2][2].parse().unwrap();
+        assert!(sync_cold > 0.0);
+        assert!(sync_hot < sync_cold);
+    }
+
+    #[test]
+    fn scaling_tables_have_oom_for_small_gpu_counts() {
+        let tables = fig1_fig2_scaling("405b");
+        // 405B on 16 GPUs fits, but nothing smaller is even listed.
+        assert!(tables[0].rows()[0][1] == "-");
+    }
+}

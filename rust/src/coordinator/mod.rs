@@ -1,0 +1,74 @@
+//! Coordinator: the experiment registry behind the `yalis` CLI and every
+//! `cargo bench` harness.
+//!
+//! Each function regenerates one of the paper's tables/figures as a
+//! [`crate::util::tables::Table`] (printed + optionally CSV'd). The bench
+//! harnesses in `rust/benches/` are thin wrappers over these, so the CLI,
+//! the benches, and the integration tests all exercise identical code.
+
+pub mod experiments;
+
+use crate::util::cli::Cli;
+
+/// CLI entry (called by `rust/src/main.rs`).
+pub fn main() {
+    let mut cli = Cli::new(
+        "yalis",
+        "multi-node LLM inference study + NVRAR all-reduce (paper reproduction).\n\
+         Subcommand = first positional arg: scaling | breakdown | gemm | nccl-vs-mpi |\n\
+         micro | hyperparams | e2e | phase | serve | moe | sync | variants | traces | all",
+    );
+    cli.opt("machine", "perlmutter", "machine preset (perlmutter|vista)");
+    cli.opt("model", "70b", "model (70b|405b|qwen3|tiny)");
+    cli.opt("csv-dir", "", "write CSVs into this directory (empty = don't)");
+    let args = cli.parse();
+    let csv = if args.get("csv-dir").is_empty() { None } else { Some(args.get("csv-dir").to_string()) };
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let machine = args.get("machine");
+    let model = args.get("model");
+
+    let tables = match cmd {
+        "scaling" => experiments::fig1_fig2_scaling(model),
+        "breakdown" => vec![experiments::fig3_breakdown()],
+        "gemm" => vec![experiments::table4_gemm_model()],
+        "nccl-vs-mpi" => vec![experiments::fig4_nccl_vs_mpi()],
+        "micro" => experiments::fig6_microbench(machine),
+        "hyperparams" => vec![experiments::table5_hyperparams()],
+        "e2e" => vec![experiments::fig7_e2e_speedup(model, machine)],
+        "phase" => vec![experiments::fig8_phase_breakdown()],
+        "serve" => vec![experiments::fig9_trace_serving()],
+        "moe" => vec![experiments::fig10_moe()],
+        "sync" => vec![experiments::fig13_sync_hiding()],
+        "variants" => experiments::fig14_fig15_nccl_variants(),
+        "traces" => experiments::fig17_fig18_traces(),
+        "all" => experiments::all_experiments(),
+        other => {
+            eprintln!("unknown subcommand '{other}'");
+            std::process::exit(2);
+        }
+    };
+    for t in &tables {
+        t.print();
+        if let Some(dir) = &csv {
+            let path = format!("{dir}/{}.csv", slug(t));
+            if let Err(e) = t.write_csv(&path) {
+                eprintln!("csv write failed: {e}");
+            } else {
+                println!("-> {path}");
+            }
+        }
+    }
+}
+
+fn slug(t: &crate::util::tables::Table) -> String {
+    t.render()
+        .lines()
+        .next()
+        .unwrap_or("table")
+        .trim_matches(['=', ' '])
+        .to_lowercase()
+        .replace([' ', '/', '(', ')', ',', ':'], "-")
+        .replace("--", "-")
+        .trim_matches('-')
+        .to_string()
+}

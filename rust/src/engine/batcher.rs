@@ -1,0 +1,260 @@
+//! Continuous-batching scheduler (Orca-style) — the real admission / step
+//! construction logic the serving simulator drives.
+//!
+//! Each engine step builds a batch from (a) running sequences needing one
+//! decode token each and (b) waiting prompts admitted under three caps:
+//! max concurrency, a per-step token budget (prefill chunks count their
+//! full prompt), and KV-page availability. The paper's §5.2.3 behaviour —
+//! mixed prefill/decode batches at low concurrency, decode-only batches at
+//! high concurrency — emerges from exactly these rules.
+
+use super::kv::{PagedKv, SeqId};
+use std::collections::VecDeque;
+
+/// One client request.
+#[derive(Clone, Copy, Debug)]
+pub struct Request {
+    pub id: SeqId,
+    pub prompt_len: usize,
+    pub decode_len: usize,
+    pub arrival: f64,
+}
+
+/// What one engine step will execute.
+#[derive(Clone, Debug, Default)]
+pub struct StepBatch {
+    /// Sequences doing their prefill this step (id, prompt tokens).
+    pub prefills: Vec<(SeqId, usize)>,
+    /// Sequences decoding one token this step.
+    pub decodes: Vec<SeqId>,
+}
+
+impl StepBatch {
+    pub fn is_empty(&self) -> bool {
+        self.prefills.is_empty() && self.decodes.is_empty()
+    }
+
+    /// Total token rows fed to the GEMMs this step.
+    pub fn token_rows(&self) -> usize {
+        self.prefills.iter().map(|(_, t)| *t).sum::<usize>() + self.decodes.len()
+    }
+
+    /// Batch rows for the attention/all-reduce message (B of B×H).
+    pub fn batch_rows(&self) -> usize {
+        self.token_rows()
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Running {
+    id: SeqId,
+    remaining_decode: usize,
+}
+
+/// The continuous batcher.
+#[derive(Clone, Debug)]
+pub struct Batcher {
+    pub max_concurrency: usize,
+    /// Token budget per step (vLLM's max_num_batched_tokens analogue).
+    pub max_step_tokens: usize,
+    waiting: VecDeque<Request>,
+    running: Vec<Running>,
+    finished: Vec<SeqId>,
+}
+
+impl Batcher {
+    pub fn new(max_concurrency: usize, max_step_tokens: usize) -> Self {
+        Batcher {
+            max_concurrency,
+            max_step_tokens,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            finished: Vec::new(),
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.waiting.push_back(req);
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn idle(&self) -> bool {
+        self.waiting.is_empty() && self.running.is_empty()
+    }
+
+    /// Drain the list of sequences that finished since the last call.
+    pub fn take_finished(&mut self) -> Vec<SeqId> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Build the next step: admit waiting prompts (FCFS) under the caps,
+    /// then add one decode token for every running sequence.
+    pub fn next_step(&mut self, kv: &mut PagedKv) -> StepBatch {
+        let mut step = StepBatch::default();
+        let mut budget = self.max_step_tokens;
+
+        // Decodes first: running sequences are never starved.
+        for r in &self.running {
+            if budget == 0 {
+                break;
+            }
+            step.decodes.push(r.id);
+            budget -= 1;
+        }
+
+        // Admit new prompts while caps allow.
+        while let Some(req) = self.waiting.front().copied() {
+            if self.running.len() + step.prefills.len() >= self.max_concurrency
+                || req.prompt_len > budget
+                || !kv.can_admit(req.prompt_len)
+            {
+                break;
+            }
+            kv.admit(req.id, req.prompt_len).expect("can_admit checked");
+            step.prefills.push((req.id, req.prompt_len));
+            budget -= req.prompt_len;
+            self.waiting.pop_front();
+        }
+        step
+    }
+
+    /// Account the completion of a step: append KV tokens, retire finished
+    /// sequences, move prefilled sequences into the running set.
+    pub fn complete_step(&mut self, step: &StepBatch, kv: &mut PagedKv, reqs: &[Request]) {
+        // Prefilled sequences start decoding (their first token was
+        // produced by the prefill itself).
+        for (id, _) in &step.prefills {
+            let req = reqs.iter().find(|r| r.id == *id).expect("request known");
+            let remaining = req.decode_len.saturating_sub(1);
+            if remaining == 0 {
+                kv.release(*id).unwrap();
+                self.finished.push(*id);
+            } else {
+                self.running.push(Running { id: *id, remaining_decode: remaining });
+            }
+        }
+        // Decoded sequences: append a token, retire at their decode length.
+        let mut still = Vec::with_capacity(self.running.len());
+        for r in &self.running {
+            if !step.decodes.contains(&r.id) {
+                still.push(*r);
+                continue;
+            }
+            if kv.append_token(r.id).is_err() {
+                // KV exhaustion: finish the sequence early (real engines
+                // would preempt; completion keeps the simulation total).
+                kv.release(r.id).unwrap();
+                self.finished.push(r.id);
+                continue;
+            }
+            if r.remaining_decode <= 1 {
+                kv.release(r.id).unwrap();
+                self.finished.push(r.id);
+            } else {
+                still.push(Running { id: r.id, remaining_decode: r.remaining_decode - 1 });
+            }
+        }
+        self.running = still;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    fn req(id: u64, p: usize, d: usize) -> Request {
+        Request { id, prompt_len: p, decode_len: d, arrival: 0.0 }
+    }
+
+    fn drive_to_completion(reqs: Vec<Request>, conc: usize, pages: usize) -> usize {
+        let mut kv = PagedKv::new(pages, 16);
+        let mut b = Batcher::new(conc, 8192);
+        for r in &reqs {
+            b.submit(*r);
+        }
+        let mut steps = 0;
+        let mut done = 0;
+        while !b.idle() {
+            let step = b.next_step(&mut kv);
+            assert!(!step.is_empty(), "live batcher must make progress");
+            b.complete_step(&step, &mut kv, &reqs);
+            done += b.take_finished().len();
+            steps += 1;
+            kv.check_invariants();
+            assert!(steps < 1_000_000, "runaway");
+        }
+        assert_eq!(done, reqs.len());
+        assert_eq!(kv.used_pages(), 0);
+        steps
+    }
+
+    #[test]
+    fn single_request_steps() {
+        // 1 prefill step + (decode_len - 1) decode steps.
+        let steps = drive_to_completion(vec![req(1, 10, 5)], 8, 64);
+        assert_eq!(steps, 5);
+    }
+
+    #[test]
+    fn concurrency_cap_respected() {
+        let mut kv = PagedKv::new(1024, 16);
+        let mut b = Batcher::new(2, 100_000);
+        let reqs: Vec<Request> = (0..5).map(|i| req(i, 8, 4)).collect();
+        for r in &reqs {
+            b.submit(*r);
+        }
+        let step = b.next_step(&mut kv);
+        assert_eq!(step.prefills.len(), 2);
+        b.complete_step(&step, &mut kv, &reqs);
+        assert_eq!(b.running_len(), 2);
+    }
+
+    #[test]
+    fn token_budget_limits_prefills() {
+        let mut kv = PagedKv::new(1024, 16);
+        let mut b = Batcher::new(64, 100);
+        let reqs: Vec<Request> = (0..4).map(|i| req(i, 60, 2)).collect();
+        for r in &reqs {
+            b.submit(*r);
+        }
+        let step = b.next_step(&mut kv);
+        assert_eq!(step.prefills.len(), 1, "only one 60-token prompt fits in 100");
+    }
+
+    #[test]
+    fn mixed_batches_at_low_concurrency() {
+        // §5.2.3: with spare concurrency, later steps mix decodes+prefills.
+        let mut kv = PagedKv::new(1024, 16);
+        let mut b = Batcher::new(4, 100_000);
+        let reqs: Vec<Request> = (0..4).map(|i| req(i, 32, 8)).collect();
+        b.submit(reqs[0]);
+        b.submit(reqs[1]);
+        let s1 = b.next_step(&mut kv);
+        b.complete_step(&s1, &mut kv, &reqs);
+        b.submit(reqs[2]);
+        let s2 = b.next_step(&mut kv);
+        assert!(!s2.decodes.is_empty() && !s2.prefills.is_empty(), "mixed batch expected");
+        b.complete_step(&s2, &mut kv, &reqs);
+    }
+
+    #[test]
+    fn property_all_requests_complete() {
+        check("batcher completes everything", 20, |g: &mut Gen| {
+            let n = g.usize(1, 30);
+            let reqs: Vec<Request> = (0..n as u64)
+                .map(|i| req(i, g.usize(1, 64), g.usize(1, 20)))
+                .collect();
+            let conc = g.usize(1, 16);
+            let pages = g.usize(8, 256);
+            drive_to_completion(reqs, conc, pages);
+        });
+    }
+}

@@ -1,0 +1,224 @@
+//! Paged KV-cache manager — a real block allocator with PagedAttention's
+//! invariants.
+//!
+//! The serving stack admits a request only if its KV pages fit; decode
+//! steps append tokens and allocate pages on block-boundary crossings;
+//! completion frees the pages. Invariants (property-tested):
+//!
+//! 1. a physical page is owned by at most one sequence at a time,
+//! 2. allocated + free == total, always,
+//! 3. a sequence's page count == ceil(tokens / page_size).
+
+use std::collections::BTreeMap;
+
+/// Sequence identifier.
+pub type SeqId = u64;
+
+/// Errors from the allocator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvError {
+    OutOfPages,
+    UnknownSeq,
+    SeqExists,
+}
+
+/// A paged KV-cache block allocator.
+#[derive(Clone, Debug)]
+pub struct PagedKv {
+    page_tokens: usize,
+    free: Vec<u32>,
+    seqs: BTreeMap<SeqId, SeqAlloc>,
+    total_pages: usize,
+}
+
+#[derive(Clone, Debug)]
+struct SeqAlloc {
+    pages: Vec<u32>,
+    tokens: usize,
+}
+
+impl PagedKv {
+    pub fn new(total_pages: usize, page_tokens: usize) -> Self {
+        assert!(page_tokens > 0 && total_pages > 0);
+        PagedKv {
+            page_tokens,
+            free: (0..total_pages as u32).rev().collect(),
+            seqs: BTreeMap::new(),
+            total_pages,
+        }
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.total_pages - self.free.len()
+    }
+
+    pub fn pages_needed(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_tokens)
+    }
+
+    /// Can a sequence of `tokens` be admitted right now?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.pages_needed(tokens.max(1)) <= self.free.len()
+    }
+
+    /// Admit a new sequence holding `tokens` (its prompt). Allocates
+    /// ceil(tokens/page) pages atomically (all or nothing).
+    pub fn admit(&mut self, id: SeqId, tokens: usize) -> Result<(), KvError> {
+        if self.seqs.contains_key(&id) {
+            return Err(KvError::SeqExists);
+        }
+        let need = self.pages_needed(tokens.max(1));
+        if need > self.free.len() {
+            return Err(KvError::OutOfPages);
+        }
+        let pages = self.free.split_off(self.free.len() - need);
+        self.seqs.insert(id, SeqAlloc { pages, tokens: tokens.max(1) });
+        Ok(())
+    }
+
+    /// Append one decoded token; allocates a page at block boundaries.
+    pub fn append_token(&mut self, id: SeqId) -> Result<(), KvError> {
+        // Two-phase to satisfy the borrow checker AND keep atomicity:
+        // check first, then mutate.
+        let need_page = {
+            let s = self.seqs.get(&id).ok_or(KvError::UnknownSeq)?;
+            s.tokens % self.page_tokens == 0
+        };
+        if need_page && self.free.is_empty() {
+            return Err(KvError::OutOfPages);
+        }
+        let page = if need_page { self.free.pop() } else { None };
+        let s = self.seqs.get_mut(&id).expect("checked above");
+        if let Some(p) = page {
+            s.pages.push(p);
+        }
+        s.tokens += 1;
+        Ok(())
+    }
+
+    /// Release a finished sequence's pages.
+    pub fn release(&mut self, id: SeqId) -> Result<(), KvError> {
+        let s = self.seqs.remove(&id).ok_or(KvError::UnknownSeq)?;
+        self.free.extend(s.pages);
+        Ok(())
+    }
+
+    pub fn seq_tokens(&self, id: SeqId) -> Option<usize> {
+        self.seqs.get(&id).map(|s| s.tokens)
+    }
+
+    pub fn seq_pages(&self, id: SeqId) -> Option<usize> {
+        self.seqs.get(&id).map(|s| s.pages.len())
+    }
+
+    pub fn active_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Check invariants (used by property tests).
+    pub fn check_invariants(&self) {
+        let mut seen = std::collections::BTreeSet::new();
+        for p in &self.free {
+            assert!(seen.insert(*p), "page {p} duplicated in free list");
+        }
+        for (id, s) in &self.seqs {
+            assert_eq!(
+                s.pages.len(),
+                s.tokens.div_ceil(self.page_tokens),
+                "seq {id}: page count mismatch"
+            );
+            for p in &s.pages {
+                assert!(seen.insert(*p), "page {p} double-owned (seq {id})");
+            }
+        }
+        assert_eq!(seen.len(), self.total_pages, "page conservation violated");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn admit_append_release_cycle() {
+        let mut kv = PagedKv::new(10, 16);
+        kv.admit(1, 20).unwrap(); // 2 pages
+        assert_eq!(kv.seq_pages(1), Some(2));
+        assert_eq!(kv.used_pages(), 2);
+        for _ in 0..12 {
+            kv.append_token(1).unwrap();
+        }
+        assert_eq!(kv.seq_tokens(1), Some(32));
+        assert_eq!(kv.seq_pages(1), Some(2));
+        kv.append_token(1).unwrap(); // crosses boundary -> 3rd page
+        assert_eq!(kv.seq_pages(1), Some(3));
+        kv.release(1).unwrap();
+        assert_eq!(kv.free_pages(), 10);
+        kv.check_invariants();
+    }
+
+    #[test]
+    fn admission_is_atomic() {
+        let mut kv = PagedKv::new(3, 16);
+        kv.admit(1, 17).unwrap(); // 2 pages
+        assert_eq!(kv.admit(2, 30), Err(KvError::OutOfPages));
+        assert_eq!(kv.free_pages(), 1); // nothing leaked
+        kv.check_invariants();
+    }
+
+    #[test]
+    fn duplicate_and_unknown_ids() {
+        let mut kv = PagedKv::new(4, 8);
+        kv.admit(1, 8).unwrap();
+        assert_eq!(kv.admit(1, 8), Err(KvError::SeqExists));
+        assert_eq!(kv.release(9), Err(KvError::UnknownSeq));
+        assert_eq!(kv.append_token(9), Err(KvError::UnknownSeq));
+    }
+
+    #[test]
+    fn out_of_pages_on_append_keeps_state() {
+        let mut kv = PagedKv::new(1, 2);
+        kv.admit(1, 2).unwrap();
+        assert_eq!(kv.append_token(1), Err(KvError::OutOfPages));
+        assert_eq!(kv.seq_tokens(1), Some(2)); // token not counted
+        kv.check_invariants();
+    }
+
+    #[test]
+    fn property_no_double_booking_under_random_ops() {
+        check("paged kv invariants", 30, |g: &mut Gen| {
+            let pages = g.usize(1, 64);
+            let page_tokens = g.usize(1, 32);
+            let mut kv = PagedKv::new(pages, page_tokens);
+            let mut live: Vec<SeqId> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..g.usize(10, 200) {
+                match g.usize(0, 2) {
+                    0 => {
+                        let toks = g.usize(1, 100);
+                        if kv.admit(next_id, toks).is_ok() {
+                            live.push(next_id);
+                        }
+                        next_id += 1;
+                    }
+                    1 if !live.is_empty() => {
+                        let id = live[g.usize(0, live.len() - 1)];
+                        let _ = kv.append_token(id);
+                    }
+                    2 if !live.is_empty() => {
+                        let i = g.usize(0, live.len() - 1);
+                        let id = live.swap_remove(i);
+                        kv.release(id).unwrap();
+                    }
+                    _ => {}
+                }
+                kv.check_invariants();
+            }
+        });
+    }
+}

@@ -1,0 +1,35 @@
+//! # yalis — multi-node LLM inference study + NVRAR all-reduce (reproduction)
+//!
+//! Reproduction of *"LLM Inference Beyond a Single Node: From Bottlenecks to
+//! Mitigations with Fast All-Reduce Communication"* (Singhania et al.) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the coordinator: the YALIS-style inference
+//!   engine ([`engine`]), the serving stack ([`serving`]), the cluster /
+//!   network simulation substrate ([`simnet`], [`cluster`]), the collective
+//!   algorithms ([`collectives`]) including the paper's NVRAR (both an
+//!   event-level simulation and a **real** shared-memory implementation over
+//!   the [`shmem`] PGAS substrate), and the PJRT [`runtime`] that executes
+//!   AOT-compiled model artifacts.
+//! - **Layer 2** — JAX model graphs (`python/compile/model.py`), lowered
+//!   once to HLO text in `artifacts/`.
+//! - **Layer 1** — Pallas kernels (`python/compile/kernels/`), lowered into
+//!   the same HLO.
+//!
+//! Python never runs at inference time: the `yalis` binary and every
+//! example/bench are self-contained once `make artifacts` has run.
+
+pub mod cluster;
+pub mod collectives;
+pub mod coordinator;
+pub mod engine;
+pub mod metrics;
+pub mod models;
+pub mod moe;
+pub mod perfmodel;
+pub mod runtime;
+pub mod serving;
+pub mod shmem;
+pub mod simnet;
+pub mod trace;
+pub mod util;

@@ -1,0 +1,8 @@
+//! `yalis` — CLI entry point for the paper-reproduction experiment suite.
+//!
+//! Run `yalis --help` for subcommands; each regenerates one of the paper's
+//! tables or figures (see DESIGN.md's per-experiment index).
+
+fn main() {
+    yalis::coordinator::main();
+}

@@ -1,0 +1,127 @@
+//! Time-breakdown accounting — the Fig 3 / Fig 8 four-way decomposition.
+//!
+//! Every engine simulation accumulates per-GPU time into the same four
+//! buckets the paper's Nsight+Pipit pipeline produces: *Matmul*, *Other
+//! Comp.*, *Comm.*, and *Idle*.
+
+/// Per-GPU time breakdown (seconds).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Breakdown {
+    pub matmul: f64,
+    pub other_comp: f64,
+    pub comm: f64,
+    pub idle: f64,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> f64 {
+        self.matmul + self.other_comp + self.comm + self.idle
+    }
+
+    pub fn add(&mut self, o: &Breakdown) {
+        self.matmul += o.matmul;
+        self.other_comp += o.other_comp;
+        self.comm += o.comm;
+        self.idle += o.idle;
+    }
+
+    pub fn scale(&self, f: f64) -> Breakdown {
+        Breakdown {
+            matmul: self.matmul * f,
+            other_comp: self.other_comp * f,
+            comm: self.comm * f,
+            idle: self.idle * f,
+        }
+    }
+
+    /// Fill `idle` so the breakdown sums to `wall` (never negative).
+    pub fn with_idle_to(mut self, wall: f64) -> Breakdown {
+        let busy = self.matmul + self.other_comp + self.comm;
+        self.idle = (wall - busy).max(0.0);
+        self
+    }
+
+    /// Percentages of total, in bucket order (Fig 3's stacked bars).
+    pub fn fractions(&self) -> [f64; 4] {
+        let t = self.total();
+        if t == 0.0 {
+            return [0.0; 4];
+        }
+        [self.matmul / t, self.other_comp / t, self.comm / t, self.idle / t]
+    }
+
+    pub fn row_cells(&self) -> Vec<String> {
+        [self.matmul, self.other_comp, self.comm, self.idle, self.total()]
+            .iter()
+            .map(|s| format!("{:.3}", s))
+            .collect()
+    }
+}
+
+/// A labelled span recorder for phase-wise timing (Fig 8's per-phase bars).
+#[derive(Clone, Debug, Default)]
+pub struct Spans {
+    spans: Vec<(String, f64)>,
+}
+
+impl Spans {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, name: &str, secs: f64) {
+        self.spans.push((name.to_string(), secs));
+    }
+
+    /// Total seconds across spans whose name matches `name`.
+    pub fn total(&self, name: &str) -> f64 {
+        self.spans.iter().filter(|(n, _)| n == name).map(|(_, s)| s).sum()
+    }
+
+    pub fn grand_total(&self) -> f64 {
+        self.spans.iter().map(|(_, s)| s).sum()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for (n, _) in &self.spans {
+            if !out.contains(n) {
+                out.push(n.clone());
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_sums() {
+        let mut b = Breakdown { matmul: 1.0, other_comp: 0.5, comm: 0.25, idle: 0.25 };
+        assert_eq!(b.total(), 2.0);
+        b.add(&Breakdown { matmul: 1.0, ..Default::default() });
+        assert_eq!(b.matmul, 2.0);
+        let f = b.fractions();
+        assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idle_fill_never_negative() {
+        let b = Breakdown { matmul: 2.0, other_comp: 1.0, comm: 1.0, idle: 0.0 };
+        assert_eq!(b.with_idle_to(5.0).idle, 1.0);
+        assert_eq!(b.with_idle_to(1.0).idle, 0.0);
+    }
+
+    #[test]
+    fn spans_aggregate_by_name() {
+        let mut s = Spans::new();
+        s.record("comm", 1.0);
+        s.record("matmul", 2.0);
+        s.record("comm", 0.5);
+        assert_eq!(s.total("comm"), 1.5);
+        assert_eq!(s.grand_total(), 3.5);
+        assert_eq!(s.names(), vec!["comm".to_string(), "matmul".to_string()]);
+    }
+}

@@ -1,0 +1,221 @@
+//! Model architectures: the paper's evaluation models plus the tiny model
+//! the PJRT runtime actually executes.
+//!
+//! Architecture constants are exact (Llama 3.1 / Qwen3 published configs);
+//! they drive the analytic performance model — FLOP counts, bytes moved,
+//! KV-cache traffic, and the TP all-reduce message size `B × H × dtype`
+//! that §3.5 identifies as the decode-phase communication regime.
+
+/// Dense (or MoE) decoder architecture description.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    /// Bytes per parameter/activation element (bf16 = 2).
+    pub dtype_bytes: usize,
+    /// MoE structure; `None` for dense models.
+    pub moe: Option<MoeConfig>,
+}
+
+/// Mixture-of-experts layer structure (Fig 10's Qwen3-235B-A22B).
+#[derive(Clone, Copy, Debug)]
+pub struct MoeConfig {
+    pub n_experts: usize,
+    pub active_experts: usize,
+    /// Per-expert FFN intermediate size.
+    pub expert_ffn: usize,
+}
+
+impl ModelConfig {
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    /// Total parameter count (dense weights; MoE counts all experts).
+    pub fn param_count(&self) -> u64 {
+        let d = self.d_model as u64;
+        let attn = d * self.q_dim() as u64 * 2 // wq, wo
+            + d * self.kv_dim() as u64 * 2; // wk, wv
+        let mlp = match self.moe {
+            None => 3 * d * self.ffn as u64,
+            Some(m) => 3 * d * m.expert_ffn as u64 * m.n_experts as u64
+                + d * m.n_experts as u64, // router
+        };
+        self.n_layers as u64 * (attn + mlp + 2 * d)
+            + 2 * self.vocab as u64 * d
+            + d
+    }
+
+    /// Parameters touched per token in decode (active experts only).
+    pub fn active_param_count(&self) -> u64 {
+        match self.moe {
+            None => self.param_count(),
+            Some(m) => {
+                let d = self.d_model as u64;
+                let attn = d * self.q_dim() as u64 * 2 + d * self.kv_dim() as u64 * 2;
+                let mlp = 3 * d * m.expert_ffn as u64 * m.active_experts as u64;
+                self.n_layers as u64 * (attn + mlp + 2 * d) + 2 * self.vocab as u64 * d + d
+            }
+        }
+    }
+
+    pub fn param_bytes(&self) -> u64 {
+        self.param_count() * self.dtype_bytes as u64
+    }
+
+    /// Bytes of parameters read per decoded token (what decode bandwidth
+    /// actually streams: active experts only for MoE).
+    pub fn active_param_bytes(&self) -> u64 {
+        self.active_param_count() * self.dtype_bytes as u64
+    }
+
+    /// KV-cache bytes per token per layer (both K and V).
+    pub fn kv_bytes_per_token_layer(&self) -> u64 {
+        2 * self.kv_dim() as u64 * self.dtype_bytes as u64
+    }
+
+    /// TP all-reduce message size for a decode step with batch `b` — the
+    /// §3.5 quantity B × H × dtype (128 KB for 70B at B=8, bf16).
+    pub fn tp_allreduce_bytes(&self, batch: usize) -> u64 {
+        (batch * self.d_model * self.dtype_bytes) as u64
+    }
+
+    /// Llama 3.1 70B Instruct.
+    pub fn llama31_70b() -> Self {
+        ModelConfig {
+            name: "Llama-3.1-70B",
+            vocab: 128_256,
+            d_model: 8192,
+            n_layers: 80,
+            n_heads: 64,
+            n_kv_heads: 8,
+            head_dim: 128,
+            ffn: 28_672,
+            dtype_bytes: 2,
+            moe: None,
+        }
+    }
+
+    /// Llama 3.1 405B Instruct.
+    pub fn llama31_405b() -> Self {
+        ModelConfig {
+            name: "Llama-3.1-405B",
+            vocab: 128_256,
+            d_model: 16_384,
+            n_layers: 126,
+            n_heads: 128,
+            n_kv_heads: 8,
+            head_dim: 128,
+            ffn: 53_248,
+            dtype_bytes: 2,
+            moe: None,
+        }
+    }
+
+    /// Qwen3-235B-A22B (MoE; Fig 10).
+    pub fn qwen3_235b_a22b() -> Self {
+        ModelConfig {
+            name: "Qwen3-235B-A22B",
+            vocab: 151_936,
+            d_model: 4096,
+            n_layers: 94,
+            n_heads: 64,
+            n_kv_heads: 4,
+            head_dim: 128,
+            ffn: 12_288,
+            dtype_bytes: 2,
+            moe: Some(MoeConfig { n_experts: 128, active_experts: 8, expert_ffn: 1536 }),
+        }
+    }
+
+    /// The ~85M tiny model the PJRT runtime executes (python/compile).
+    pub fn tiny() -> Self {
+        ModelConfig {
+            name: "tiny-llama-85m",
+            vocab: 4096,
+            d_model: 768,
+            n_layers: 12,
+            n_heads: 12,
+            n_kv_heads: 4,
+            head_dim: 64,
+            ffn: 2048,
+            dtype_bytes: 4, // f32 on CPU
+            moe: None,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Self {
+        match name.to_ascii_lowercase().as_str() {
+            "70b" | "llama-70b" | "llama31-70b" => Self::llama31_70b(),
+            "405b" | "llama-405b" | "llama31-405b" => Self::llama31_405b(),
+            "qwen3" | "qwen3-235b" => Self::qwen3_235b_a22b(),
+            "tiny" => Self::tiny(),
+            other => panic!("unknown model '{other}'"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama70b_params_about_70b() {
+        let p = ModelConfig::llama31_70b().param_count() as f64;
+        assert!((p - 70.0e9).abs() < 3.0e9, "{p}");
+    }
+
+    #[test]
+    fn llama405b_params_about_405b() {
+        let p = ModelConfig::llama31_405b().param_count() as f64;
+        assert!((p - 405.0e9).abs() < 10.0e9, "{p}");
+    }
+
+    #[test]
+    fn qwen_total_vs_active() {
+        let m = ModelConfig::qwen3_235b_a22b();
+        let total = m.param_count() as f64;
+        let active = m.active_param_count() as f64;
+        assert!((total - 235.0e9).abs() < 15.0e9, "total {total}");
+        assert!((active - 22.0e9).abs() < 4.0e9, "active {active}");
+    }
+
+    #[test]
+    fn paper_message_size_check() {
+        // §3.5: 70B, B=8, H=8192, bf16 -> 128 KB.
+        let m = ModelConfig::llama31_70b();
+        assert_eq!(m.tp_allreduce_bytes(8), 128 * 1024);
+        assert_eq!(m.tp_allreduce_bytes(32), 512 * 1024);
+        // 405B: B=8 -> 256 KB; B=32 -> 1 MB (Fig 7's "more favorable").
+        let m = ModelConfig::llama31_405b();
+        assert_eq!(m.tp_allreduce_bytes(8), 256 * 1024);
+        assert_eq!(m.tp_allreduce_bytes(32), 1024 * 1024);
+    }
+
+    #[test]
+    fn tiny_matches_python_config() {
+        let m = ModelConfig::tiny();
+        assert_eq!(m.d_model, 768);
+        assert_eq!(m.n_layers, 12);
+        // Param count must match python/compile/configs.py (~85M).
+        let p = m.param_count();
+        assert!(p > 80_000_000 && p < 90_000_000, "{p}");
+    }
+
+    #[test]
+    fn kv_bytes() {
+        let m = ModelConfig::llama31_70b();
+        // 8 kv heads * 128 dim * 2 (K+V) * 2 bytes = 4096 B.
+        assert_eq!(m.kv_bytes_per_token_layer(), 4096);
+    }
+}

@@ -1,0 +1,140 @@
+//! `artifacts/config.txt` parser: the key=value manifest `aot.py` writes
+//! (model dims, AOT batch/shard choices, per-artifact argument orders).
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    kv: BTreeMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Self> {
+        let path = format!("{dir}/config.txt");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+        Ok(Self::parse(&text))
+    }
+
+    pub fn parse(text: &str) -> Self {
+        let mut kv = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some((k, v)) = line.split_once('=') {
+                kv.insert(k.trim().to_string(), v.trim().to_string());
+            }
+        }
+        Manifest { kv }
+    }
+
+    pub fn get(&self, key: &str) -> Result<&str> {
+        self.kv.get(key).map(|s| s.as_str()).with_context(|| format!("manifest key '{key}'"))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        self.get(key)?.parse().with_context(|| format!("manifest key '{key}' not an integer"))
+    }
+
+    /// The argument-name order of an artifact (sanity check vs the caller).
+    pub fn artifact_args(&self, name: &str) -> Result<Vec<String>> {
+        Ok(self
+            .get(&format!("artifact.{name}.args"))?
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .collect())
+    }
+
+    /// Tiny-model dimensions as (vocab, d_model, layers, heads, kv_heads,
+    /// head_dim, ffn, max_seq).
+    pub fn model_dims(&self) -> Result<ModelDims> {
+        Ok(ModelDims {
+            vocab: self.get_usize("model.vocab")?,
+            d_model: self.get_usize("model.d_model")?,
+            n_layers: self.get_usize("model.n_layers")?,
+            n_heads: self.get_usize("model.n_heads")?,
+            n_kv_heads: self.get_usize("model.n_kv_heads")?,
+            head_dim: self.get_usize("model.head_dim")?,
+            ffn: self.get_usize("model.ffn")?,
+            max_seq: self.get_usize("model.max_seq")?,
+            batch: self.get_usize("aot.batch")?,
+            prompt: self.get_usize("aot.prompt")?,
+            shards: self.get_usize("aot.shards")?,
+        })
+    }
+}
+
+/// Static dims of the AOT-compiled tiny model.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub max_seq: usize,
+    pub batch: usize,
+    pub prompt: usize,
+    pub shards: usize,
+}
+
+impl ModelDims {
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+model.vocab=4096
+model.d_model=768
+model.n_layers=12
+model.n_heads=12
+model.n_kv_heads=4
+model.head_dim=64
+model.ffn=2048
+model.max_seq=256
+aot.batch=2
+aot.prompt=16
+aot.shards=2
+artifact.decode_full.args=token,pos,k_caches,v_caches,embed
+";
+
+    #[test]
+    fn parses_dims_and_args() {
+        let m = Manifest::parse(SAMPLE);
+        let d = m.model_dims().unwrap();
+        assert_eq!(d.d_model, 768);
+        assert_eq!(d.q_dim(), 768);
+        assert_eq!(d.kv_dim(), 256);
+        assert_eq!(
+            m.artifact_args("decode_full").unwrap()[..2],
+            ["token".to_string(), "pos".to_string()]
+        );
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        let m = Manifest::parse("a=1");
+        assert!(m.get("b").is_err());
+        assert!(m.get_usize("a").is_ok());
+    }
+
+    #[test]
+    fn ignores_comments_blank() {
+        let m = Manifest::parse("# comment\n\nx=7\n");
+        assert_eq!(m.get_usize("x").unwrap(), 7);
+    }
+}

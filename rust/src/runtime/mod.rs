@@ -1,0 +1,130 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and run them from
+//! rust — Python is never on this path.
+//!
+//! - [`Runtime`] wraps `xla::PjRtClient::cpu()`; [`Exe`] wraps one
+//!   compiled executable (`HloModuleProto::from_text_file` → compile).
+//! - [`weights`] loads the YWT1 tensor bundle written by
+//!   `python/compile/export.py`.
+//! - [`manifest`] parses `artifacts/config.txt` (dims + argument orders).
+//! - [`tensor`] is a minimal host-side f32 tensor with the slicing the TP
+//!   weight partitioner needs.
+//! - [`tp`] is the tensor-parallel coordinator: the per-layer
+//!   attn-shard / all-reduce / mlp-shard / all-reduce decode loop, with the
+//!   all-reduce performed by the **real NVRAR implementation** over shmem
+//!   PEs ([`crate::collectives::real`]) — the paper's Algorithm 1 sits in
+//!   the real hot path of a real model.
+
+pub mod manifest;
+pub mod tensor;
+pub mod tp;
+pub mod weights;
+
+use anyhow::{Context, Result};
+
+/// A PJRT client (CPU platform).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// A device buffer plus the host literal that backs its (asynchronous)
+/// upload. `BufferFromHostLiteral` on the TFRT CPU client copies lazily;
+/// dropping the literal before the copy completes reads freed memory.
+/// Keeping the literal alive for the buffer's lifetime makes the upload
+/// safe with zero extra copies (PJRT sequences executions after the
+/// transfer via the buffer's definition event).
+pub struct DeviceBuf {
+    pub buf: xla::PjRtBuffer,
+    _keepalive: xla::Literal,
+}
+
+impl std::ops::Deref for DeviceBuf {
+    type Target = xla::PjRtBuffer;
+    fn deref(&self) -> &xla::PjRtBuffer {
+        &self.buf
+    }
+}
+
+/// One compiled HLO executable.
+pub struct Exe {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime { client: xla::PjRtClient::cpu().context("PJRT CPU client")? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one `artifacts/<name>.hlo.txt` module.
+    pub fn load(&self, dir: &str, name: &str) -> Result<Exe> {
+        let path = format!("{dir}/{name}.hlo.txt");
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        Ok(Exe { name: name.to_string(), exe })
+    }
+
+    /// Upload a host literal to a device buffer (weights, caches): the
+    /// literal is retained inside the returned [`DeviceBuf`] so the async
+    /// transfer can never outlive its source.
+    pub fn upload(&self, lit: xla::Literal) -> Result<DeviceBuf> {
+        let buf = self.client.buffer_from_host_literal(None, &lit)?;
+        Ok(DeviceBuf { buf, _keepalive: lit })
+    }
+}
+
+impl Exe {
+    /// Execute with literal arguments; the artifacts are lowered with
+    /// `return_tuple=True`, so the single output buffer is a tuple —
+    /// download it and split into per-output host literals.
+    pub fn run_lits(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self.exe.execute::<xla::Literal>(args)?;
+        untuple(out)
+    }
+
+    /// Execute with device-buffer arguments (no host copies on inputs).
+    pub fn run_bufs(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let out = self.exe.execute_b::<&xla::PjRtBuffer>(args)?;
+        untuple(out)
+    }
+}
+
+fn untuple(mut out: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<xla::Literal>> {
+    let mut row = out.pop().context("no output row")?;
+    let buf = row.pop().context("empty output row")?;
+    let lit = buf.to_literal_sync()?;
+    Ok(lit.to_tuple()?)
+}
+
+/// Build an f32 literal from data + dims.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "lit_f32: {dims:?} vs {} elems", data.len());
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)?)
+}
+
+/// Build an i32 literal from data + dims.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "lit_i32: {dims:?} vs {} elems", data.len());
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, bytes)?)
+}
+
+/// Scalar i32 literal (decode position).
+pub fn lit_scalar_i32(v: i32) -> Result<xla::Literal> {
+    lit_i32(&[v], &[])
+}
+
+/// Literal to host f32 vector.
+pub fn to_host_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

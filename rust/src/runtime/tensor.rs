@@ -1,0 +1,163 @@
+//! Minimal host-side f32 tensor with the slicing the TP partitioner needs.
+
+use anyhow::{ensure, Result};
+
+/// A dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        ensure!(dims.iter().product::<usize>() == data.len(), "shape/data mismatch");
+        Ok(HostTensor { dims, data })
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> Self {
+        let n = dims.iter().product();
+        HostTensor { dims, data: vec![0.0; n] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Select index `i` along the first dimension (stacked-layer lookup).
+    pub fn index0(&self, i: usize) -> HostTensor {
+        assert!(self.rank() >= 1 && i < self.dims[0]);
+        let stride: usize = self.dims[1..].iter().product();
+        HostTensor {
+            dims: self.dims[1..].to_vec(),
+            data: self.data[i * stride..(i + 1) * stride].to_vec(),
+        }
+    }
+
+    /// Slice columns `[a, b)` of a 2-D tensor (TP column partition).
+    pub fn cols(&self, a: usize, b: usize) -> HostTensor {
+        assert!(self.rank() == 2 && a < b && b <= self.dims[1]);
+        let (r, c) = (self.dims[0], self.dims[1]);
+        let mut data = Vec::with_capacity(r * (b - a));
+        for row in 0..r {
+            data.extend_from_slice(&self.data[row * c + a..row * c + b]);
+        }
+        HostTensor { dims: vec![r, b - a], data }
+    }
+
+    /// Slice rows `[a, b)` of a 2-D tensor (TP row partition).
+    pub fn rows(&self, a: usize, b: usize) -> HostTensor {
+        assert!(self.rank() == 2 && a < b && b <= self.dims[0]);
+        let c = self.dims[1];
+        HostTensor { dims: vec![b - a, c], data: self.data[a * c..b * c].to_vec() }
+    }
+
+    /// Slice the last dimension `[a, b)` of a 3-D tensor (per-shard KV
+    /// cache slice: (B, T, kv·dh) → (B, T, kv_s·dh), contiguous because
+    /// the KV-head index is major in the last axis).
+    pub fn last_dim_slice3(&self, a: usize, b: usize) -> HostTensor {
+        assert!(self.rank() == 3 && a < b && b <= self.dims[2]);
+        let (d0, d1, d2) = (self.dims[0], self.dims[1], self.dims[2]);
+        let mut data = Vec::with_capacity(d0 * d1 * (b - a));
+        for i in 0..d0 * d1 {
+            data.extend_from_slice(&self.data[i * d2 + a..i * d2 + b]);
+        }
+        HostTensor { dims: vec![d0, d1, b - a], data }
+    }
+
+    /// Elementwise add (residual connections in the coordinator loop).
+    pub fn add_assign(&mut self, o: &[f32]) {
+        assert_eq!(self.data.len(), o.len());
+        for (a, b) in self.data.iter_mut().zip(o) {
+            *a += b;
+        }
+    }
+
+    pub fn allclose(&self, o: &HostTensor, tol: f32) -> bool {
+        self.dims == o.dims
+            && self
+                .data
+                .iter()
+                .zip(&o.data)
+                .all(|(a, b)| (a - b).abs() <= tol * (1.0 + b.abs()))
+    }
+}
+
+/// Row-major argmax over the last dim of a (B, V) logits buffer.
+pub fn argmax_rows(logits: &[f32], batch: usize) -> Vec<i32> {
+    assert!(batch > 0 && logits.len() % batch == 0);
+    let v = logits.len() / batch;
+    (0..batch)
+        .map(|b| {
+            let row = &logits[b * v..(b + 1) * v];
+            row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0 as i32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(dims: &[usize]) -> HostTensor {
+        let n: usize = dims.iter().product();
+        HostTensor::new(dims.to_vec(), (0..n).map(|i| i as f32).collect()).unwrap()
+    }
+
+    #[test]
+    fn index0_picks_layer() {
+        let x = t(&[3, 2, 2]);
+        let l1 = x.index0(1);
+        assert_eq!(l1.dims, vec![2, 2]);
+        assert_eq!(l1.data, vec![4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn cols_rows_partition() {
+        let x = t(&[2, 4]); // [[0,1,2,3],[4,5,6,7]]
+        assert_eq!(x.cols(1, 3).data, vec![1.0, 2.0, 5.0, 6.0]);
+        assert_eq!(x.rows(1, 2).data, vec![4.0, 5.0, 6.0, 7.0]);
+        // Column halves reassemble the original.
+        let l = x.cols(0, 2);
+        let r = x.cols(2, 4);
+        let mut rebuilt = Vec::new();
+        for row in 0..2 {
+            rebuilt.extend_from_slice(&l.data[row * 2..row * 2 + 2]);
+            rebuilt.extend_from_slice(&r.data[row * 2..row * 2 + 2]);
+        }
+        assert_eq!(rebuilt, x.data);
+    }
+
+    #[test]
+    fn last_dim_slice3_contiguous_kv() {
+        let x = t(&[2, 2, 4]);
+        let s = x.last_dim_slice3(2, 4);
+        assert_eq!(s.dims, vec![2, 2, 2]);
+        assert_eq!(s.data, vec![2.0, 3.0, 6.0, 7.0, 10.0, 11.0, 14.0, 15.0]);
+    }
+
+    #[test]
+    fn add_and_allclose() {
+        let mut a = t(&[2, 2]);
+        a.add_assign(&[1.0; 4]);
+        assert_eq!(a.data, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = HostTensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0000001]).unwrap();
+        assert!(a.allclose(&b, 1e-5));
+    }
+
+    #[test]
+    fn argmax() {
+        let logits = vec![0.1, 0.9, 0.0, 5.0, -1.0, 2.0];
+        assert_eq!(argmax_rows(&logits, 2), vec![1, 0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        t(&[2, 2]).cols(3, 2);
+    }
+}

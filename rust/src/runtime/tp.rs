@@ -1,0 +1,349 @@
+//! The tensor-parallel runtime coordinator — the end-to-end hot path.
+//!
+//! Mirrors the paper's TP execution structure exactly: every decode step,
+//! every layer runs its attention shard and MLP shard per TP rank, and the
+//! partial outputs are combined by an **all-reduce owned by the rust
+//! coordinator** — performed by the real NVRAR implementation (Algorithm 1
+//! over shmem PEs), or any baseline algorithm, at the paper's §3.5 message
+//! granularity (B × H floats, twice per layer).
+//!
+//! Weights are uploaded to device buffers once at load; KV caches come back
+//! from each step's output tuple and are re-uploaded for the next step (the
+//! CPU-PJRT client keeps root tuples whole, so a host round-trip per step
+//! is unavoidable — measured and reported in `TpStats`).
+
+use super::manifest::{Manifest, ModelDims};
+use super::tensor::{argmax_rows, HostTensor};
+use super::weights::load_weights;
+use super::{lit_f32, lit_i32, lit_scalar_i32, to_host_f32, DeviceBuf, Exe, Runtime};
+use crate::collectives::real::{Algo, Harness};
+use anyhow::{ensure, Context, Result};
+use std::time::Instant;
+
+/// Cumulative timing stats of the coordinator loop.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TpStats {
+    /// Seconds inside PJRT executions (incl. output tuple download).
+    pub pjrt: f64,
+    /// Seconds inside the real all-reduce (including PE thread spin-up).
+    pub allreduce: f64,
+    /// Seconds of host-side glue (slicing, residual adds, uploads).
+    pub host: f64,
+    /// Decode steps executed.
+    pub steps: u64,
+    /// All-reduce operations performed.
+    pub allreduces: u64,
+}
+
+/// Per-(layer, shard) uploaded weight buffers.
+struct ShardBufs {
+    attn: Vec<DeviceBuf>, // norm, wq, wk, wv, wo
+    mlp: Vec<DeviceBuf>,  // norm, wg, wu, wd
+}
+
+/// The TP coordinator over the AOT artifacts.
+pub struct TpRuntime {
+    pub dims: ModelDims,
+    rt: Runtime,
+    embed_exe: Exe,
+    attn_exe: Exe,
+    mlp_exe: Exe,
+    head_exe: Exe,
+    prefill_exe: Exe,
+    decode_exe: Exe,
+    /// Stacked full-model weights in artifact argument order.
+    full_w: Vec<DeviceBuf>,
+    embed_w: DeviceBuf,
+    final_norm_w: DeviceBuf,
+    lm_head_w: DeviceBuf,
+    shard_w: Vec<Vec<ShardBufs>>, // [layer][shard]
+    /// Sharded KV-cache device buffers: [layer][shard] -> (k, v).
+    caches: Vec<Vec<Option<(DeviceBuf, DeviceBuf)>>>,
+    /// Full-model caches for the oracle path.
+    full_caches: Option<(DeviceBuf, DeviceBuf)>,
+    pub pos: usize,
+    /// All-reduce algorithm for shard combination.
+    pub algo: Algo,
+    /// C_s in f32 words for the real NVRAR chunked puts.
+    pub chunk_words: usize,
+    pub stats: TpStats,
+}
+
+impl TpRuntime {
+    /// Load artifacts + weights from `dir` (usually "artifacts").
+    pub fn load(dir: &str) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let dims = manifest.model_dims()?;
+        ensure!(dims.shards.is_power_of_two(), "TP shard count must be a power of two");
+        let rt = Runtime::cpu()?;
+        let weights = load_weights(&format!("{dir}/weights.bin"))?;
+
+        // Sanity: artifact arg orders match what this coordinator feeds.
+        ensure!(
+            manifest.artifact_args("attn_shard")?
+                == ["x", "attn_norm", "wq", "wk", "wv", "wo", "k_cache", "v_cache", "pos"],
+            "attn_shard argument order drifted"
+        );
+        ensure!(
+            manifest.artifact_args("mlp_shard")? == ["x", "mlp_norm", "wg", "wu", "wd"],
+            "mlp_shard argument order drifted"
+        );
+
+        let stack_order = [
+            "embed", "attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "wg", "wu", "wd",
+            "final_norm", "lm_head",
+        ];
+        let mut full_w = Vec::new();
+        for name in stack_order {
+            let t = weights.get(name).with_context(|| format!("weight {name}"))?;
+            full_w.push(rt.upload(lit_f32(&t.data, &t.dims)?)?);
+        }
+
+        // Per-layer, per-shard slices (mirrors python shard_layer_params).
+        let s = dims.shards;
+        let (hs_dh, kvs_dh, fs) = (dims.q_dim() / s, dims.kv_dim() / s, dims.ffn / s);
+        let mut shard_w = Vec::with_capacity(dims.n_layers);
+        for l in 0..dims.n_layers {
+            let mut per_shard = Vec::with_capacity(s);
+            for sh in 0..s {
+                let (qa, qb) = (sh * hs_dh, (sh + 1) * hs_dh);
+                let (ka, kb) = (sh * kvs_dh, (sh + 1) * kvs_dh);
+                let (fa, fb) = (sh * fs, (sh + 1) * fs);
+                let up = |t: &HostTensor| -> Result<DeviceBuf> {
+                    rt.upload(lit_f32(&t.data, &t.dims)?)
+                };
+                let attn = vec![
+                    up(&weights["attn_norm"].index0(l))?,
+                    up(&weights["wq"].index0(l).cols(qa, qb))?,
+                    up(&weights["wk"].index0(l).cols(ka, kb))?,
+                    up(&weights["wv"].index0(l).cols(ka, kb))?,
+                    up(&weights["wo"].index0(l).rows(qa, qb))?,
+                ];
+                let mlp = vec![
+                    up(&weights["mlp_norm"].index0(l))?,
+                    up(&weights["wg"].index0(l).cols(fa, fb))?,
+                    up(&weights["wu"].index0(l).cols(fa, fb))?,
+                    up(&weights["wd"].index0(l).rows(fa, fb))?,
+                ];
+                per_shard.push(ShardBufs { attn, mlp });
+            }
+            shard_w.push(per_shard);
+        }
+
+        let embed_w = rt.upload(lit_f32(&weights["embed"].data, &weights["embed"].dims)?)?;
+        let final_norm_w =
+            rt.upload(lit_f32(&weights["final_norm"].data, &weights["final_norm"].dims)?)?;
+        let lm_head_w =
+            rt.upload(lit_f32(&weights["lm_head"].data, &weights["lm_head"].dims)?)?;
+
+        let caches = (0..dims.n_layers).map(|_| (0..s).map(|_| None).collect()).collect();
+
+        Ok(TpRuntime {
+            embed_exe: rt.load(dir, "embed")?,
+            attn_exe: rt.load(dir, "attn_shard")?,
+            mlp_exe: rt.load(dir, "mlp_shard")?,
+            head_exe: rt.load(dir, "head")?,
+            prefill_exe: rt.load(dir, "prefill_full")?,
+            decode_exe: rt.load(dir, "decode_full")?,
+            rt,
+            dims,
+            full_w,
+            embed_w,
+            final_norm_w,
+            lm_head_w,
+            shard_w,
+            caches,
+            full_caches: None,
+            pos: 0,
+            algo: Algo::Nvrar,
+            chunk_words: 256,
+            stats: TpStats::default(),
+        })
+    }
+
+    /// Prefill the fixed AOT prompt shape; initialize both the sharded and
+    /// the full-model caches. `tokens` is row-major (B, prompt).
+    pub fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let (b, t0) = (self.dims.batch, self.dims.prompt);
+        ensure!(tokens.len() == b * t0, "prefill expects {}x{} tokens", b, t0);
+        let t_start = Instant::now();
+        let tok_buf = self.rt.upload(lit_i32(tokens, &[b, t0])?)?;
+        let mut bufs: Vec<&xla::PjRtBuffer> = vec![&tok_buf.buf];
+        for w in &self.full_w {
+            bufs.push(&w.buf);
+        }
+        let out = self.prefill_exe.run_bufs(&bufs)?;
+        self.stats.pjrt += t_start.elapsed().as_secs_f64();
+        ensure!(out.len() == 3, "prefill_full returns (logits, kc, vc), got {}", out.len());
+        let logits = to_host_f32(&out[0])?;
+        let kc = to_host_f32(&out[1])?;
+        let vc = to_host_f32(&out[2])?;
+
+        let host_start = Instant::now();
+        // Slice the (L, B, T, kv·dh) caches per layer per shard and upload.
+        let (l, tmax, kvd) = (self.dims.n_layers, self.dims.max_seq, self.dims.kv_dim());
+        let s = self.dims.shards;
+        let kvs = kvd / s;
+        let per_layer = b * tmax * kvd;
+        for layer in 0..l {
+            let lk = HostTensor::new(
+                vec![b, tmax, kvd],
+                kc[layer * per_layer..(layer + 1) * per_layer].to_vec(),
+            )?;
+            let lv = HostTensor::new(
+                vec![b, tmax, kvd],
+                vc[layer * per_layer..(layer + 1) * per_layer].to_vec(),
+            )?;
+            for sh in 0..s {
+                let ks = lk.last_dim_slice3(sh * kvs, (sh + 1) * kvs);
+                let vs = lv.last_dim_slice3(sh * kvs, (sh + 1) * kvs);
+                let kb = self.rt.upload(lit_f32(&ks.data, &ks.dims)?)?;
+                let vb = self.rt.upload(lit_f32(&vs.data, &vs.dims)?)?;
+                self.caches[layer][sh] = Some((kb, vb));
+            }
+        }
+        // Full caches for the oracle path.
+        let kc_buf = self.rt.upload(lit_f32(&kc, &[l, b, tmax, kvd])?)?;
+        let vc_buf = self.rt.upload(lit_f32(&vc, &[l, b, tmax, kvd])?)?;
+        self.full_caches = Some((kc_buf, vc_buf));
+        self.pos = t0;
+        self.stats.host += host_start.elapsed().as_secs_f64();
+        Ok(logits)
+    }
+
+    /// All-reduce shard partials with the configured real algorithm.
+    fn reduce_partials(&mut self, partials: Vec<Vec<f32>>) -> Vec<f32> {
+        let t = Instant::now();
+        let n = partials[0].len();
+        let h = Harness {
+            nodes: self.dims.shards,
+            gpus_per_node: 1,
+            n_elems: n,
+            chunk_words: self.chunk_words,
+            algo: self.algo,
+        };
+        let out = h.run_once(|pe| partials[pe].clone());
+        self.stats.allreduce += t.elapsed().as_secs_f64();
+        self.stats.allreduces += 1;
+        out.into_iter().next().unwrap()
+    }
+
+    /// One sharded decode step: returns logits (B, V) and advances pos.
+    pub fn decode_step_sharded(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let b = self.dims.batch;
+        let d = self.dims.d_model;
+        ensure!(tokens.len() == b, "decode expects batch {b}");
+        ensure!(self.pos < self.dims.max_seq, "KV cache exhausted at pos {}", self.pos);
+        let s = self.dims.shards;
+
+        // Embed.
+        let t0 = Instant::now();
+        let tok_buf = self.rt.upload(lit_i32(tokens, &[b])?)?;
+        let x_out = self.embed_exe.run_bufs(&[&tok_buf.buf, &self.embed_w.buf])?;
+        let mut x = to_host_f32(&x_out[0])?;
+        let pos_buf = self.rt.upload(lit_scalar_i32(self.pos as i32)?)?;
+        self.stats.pjrt += t0.elapsed().as_secs_f64();
+
+        for layer in 0..self.dims.n_layers {
+            // --- attention shards.
+            let tp = Instant::now();
+            let x_buf = self.rt.upload(lit_f32(&x, &[b, d])?)?;
+            let mut partials: Vec<Vec<f32>> = Vec::with_capacity(s);
+            for sh in 0..s {
+                let (kc, vc) = self.caches[layer][sh].take().expect("prefill first");
+                let w = &self.shard_w[layer][sh].attn;
+                let out = self.attn_exe.run_bufs(&[
+                    &x_buf.buf, &w[0].buf, &w[1].buf, &w[2].buf, &w[3].buf, &w[4].buf, &kc.buf,
+                    &vc.buf, &pos_buf.buf,
+                ])?;
+                ensure!(out.len() == 3, "attn_shard returns 3 outputs");
+                let mut it = out.into_iter();
+                partials.push(to_host_f32(&it.next().unwrap())?);
+                let new_k = self.rt.upload(it.next().unwrap())?;
+                let new_v = self.rt.upload(it.next().unwrap())?;
+                self.caches[layer][sh] = Some((new_k, new_v));
+            }
+            self.stats.pjrt += tp.elapsed().as_secs_f64();
+
+            // --- TP all-reduce #1 (attention output) + residual.
+            let reduced = self.reduce_partials(partials);
+            let th = Instant::now();
+            for (a, r) in x.iter_mut().zip(&reduced) {
+                *a += r;
+            }
+            self.stats.host += th.elapsed().as_secs_f64();
+
+            // --- MLP shards.
+            let tp = Instant::now();
+            let x_buf = self.rt.upload(lit_f32(&x, &[b, d])?)?;
+            let mut partials: Vec<Vec<f32>> = Vec::with_capacity(s);
+            for sh in 0..s {
+                let w = &self.shard_w[layer][sh].mlp;
+                let out = self
+                    .mlp_exe
+                    .run_bufs(&[&x_buf.buf, &w[0].buf, &w[1].buf, &w[2].buf, &w[3].buf])?;
+                partials.push(to_host_f32(&out[0])?);
+            }
+            self.stats.pjrt += tp.elapsed().as_secs_f64();
+
+            // --- TP all-reduce #2 (MLP output) + residual.
+            let reduced = self.reduce_partials(partials);
+            let th = Instant::now();
+            for (a, r) in x.iter_mut().zip(&reduced) {
+                *a += r;
+            }
+            self.stats.host += th.elapsed().as_secs_f64();
+        }
+
+        // Head.
+        let tp = Instant::now();
+        let x_buf = self.rt.upload(lit_f32(&x, &[b, d])?)?;
+        let out =
+            self.head_exe.run_bufs(&[&x_buf.buf, &self.final_norm_w.buf, &self.lm_head_w.buf])?;
+        let logits = to_host_f32(&out[0])?;
+        self.stats.pjrt += tp.elapsed().as_secs_f64();
+        self.pos += 1;
+        self.stats.steps += 1;
+        Ok(logits)
+    }
+
+    /// One full-model (unsharded) decode step — the numeric oracle.
+    /// Does NOT advance `pos`; call in lockstep before the sharded step.
+    pub fn decode_step_full(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let b = self.dims.batch;
+        let (kc, vc) = self.full_caches.take().context("prefill first")?;
+        let t0 = Instant::now();
+        let tok_buf = self.rt.upload(lit_i32(tokens, &[b])?)?;
+        let pos_buf = self.rt.upload(lit_scalar_i32(self.pos as i32)?)?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&tok_buf.buf, &pos_buf.buf, &kc.buf, &vc.buf];
+        for w in &self.full_w {
+            args.push(&w.buf);
+        }
+        let out = self.decode_exe.run_bufs(&args)?;
+        ensure!(out.len() == 3, "decode_full returns 3 outputs");
+        let mut it = out.into_iter();
+        let logits = to_host_f32(&it.next().unwrap())?;
+        let new_k = self.rt.upload(it.next().unwrap())?;
+        let new_v = self.rt.upload(it.next().unwrap())?;
+        self.full_caches = Some((new_k, new_v));
+        self.stats.pjrt += t0.elapsed().as_secs_f64();
+        Ok(logits)
+    }
+
+    /// Greedy-decode `steps` tokens with the sharded path; returns the
+    /// token ids produced per step (batch-major).
+    pub fn generate(&mut self, first_logits: &[f32], steps: usize) -> Result<Vec<Vec<i32>>> {
+        let b = self.dims.batch;
+        let mut toks = argmax_rows(first_logits, b);
+        let mut out = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            if self.pos + 1 >= self.dims.max_seq {
+                break;
+            }
+            out.push(toks.clone());
+            let logits = self.decode_step_sharded(&toks)?;
+            toks = argmax_rows(&logits, b);
+        }
+        Ok(out)
+    }
+}

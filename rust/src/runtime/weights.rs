@@ -1,0 +1,112 @@
+//! YWT1 weight-bundle loader (inverse of `python/compile/export.py`).
+//!
+//! Format (little-endian): magic `YWT1`, u32 count, then per tensor:
+//! u32 name_len, name, u8 dtype (0=f32, 1=i32), u8 ndim, u32 dims[],
+//! raw data. The rust side only needs f32 tensors.
+
+use super::tensor::HostTensor;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::io::Read;
+
+/// Load every f32 tensor from a YWT1 bundle.
+pub fn load_weights(path: &str) -> Result<BTreeMap<String, HostTensor>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    parse_weights(&bytes)
+}
+
+pub fn parse_weights(bytes: &[u8]) -> Result<BTreeMap<String, HostTensor>> {
+    let mut r = std::io::Cursor::new(bytes);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic).context("magic")?;
+    ensure!(&magic == b"YWT1", "bad magic {magic:?}");
+    let count = read_u32(&mut r)? as usize;
+    let mut out = BTreeMap::new();
+    for i in 0..count {
+        let nlen = read_u32(&mut r)? as usize;
+        ensure!(nlen < 4096, "tensor {i}: absurd name length {nlen}");
+        let mut name = vec![0u8; nlen];
+        r.read_exact(&mut name).context("name")?;
+        let name = String::from_utf8(name).context("utf8 name")?;
+        let mut hdr = [0u8; 2];
+        r.read_exact(&mut hdr).context("dtype/ndim")?;
+        let (dtype, ndim) = (hdr[0], hdr[1] as usize);
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut r)? as usize);
+        }
+        let numel: usize = dims.iter().product();
+        let mut raw = vec![0u8; numel * 4];
+        r.read_exact(&mut raw).with_context(|| format!("data of {name}"))?;
+        match dtype {
+            0 => {
+                let data: Vec<f32> = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                out.insert(name, HostTensor::new(dims, data)?);
+            }
+            1 => {
+                // i32 tensors are not used by the runtime; store as f32.
+                let data: Vec<f32> = raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f32)
+                    .collect();
+                out.insert(name, HostTensor::new(dims, data)?);
+            }
+            other => bail!("tensor {name}: unknown dtype {other}"),
+        }
+    }
+    Ok(out)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn encode(tensors: &[(&str, &[usize], &[f32])]) -> Vec<u8> {
+        let mut out = b"YWT1".to_vec();
+        out.extend((tensors.len() as u32).to_le_bytes());
+        for (name, dims, data) in tensors {
+            out.extend((name.len() as u32).to_le_bytes());
+            out.extend(name.as_bytes());
+            out.push(0u8);
+            out.push(dims.len() as u8);
+            for d in *dims {
+                out.extend((*d as u32).to_le_bytes());
+            }
+            for v in *data {
+                out.extend(v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn roundtrip() {
+        let bytes =
+            encode(&[("a", &[2, 2], &[1.0, 2.0, 3.0, 4.0]), ("b.c", &[3], &[5.0, 6.0, 7.0])]);
+        let w = parse_weights(&bytes).unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w["a"].dims, vec![2, 2]);
+        assert_eq!(w["b.c"].data, vec![5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse_weights(b"NOPE\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let mut bytes = encode(&[("a", &[2, 2], &[1.0, 2.0, 3.0, 4.0])]);
+        bytes.truncate(bytes.len() - 3);
+        assert!(parse_weights(&bytes).is_err());
+    }
+}

@@ -1,0 +1,189 @@
+//! Workload traces: BurstGPT-style arrival/length generation (Table 6,
+//! Fig 17) and the synthetic decode-heavy trace (Appendix C.4.3).
+//!
+//! Arrivals follow the vLLM benchmark convention the paper uses: a target
+//! request rate with Gamma-distributed inter-arrival gaps; *burstiness* 2.0
+//! means the Gamma shape is `1/2` (coefficient of variation² = 2 — burstier
+//! than Poisson), keeping the configured mean rate.
+
+use crate::engine::batcher::Request;
+use crate::util::rng::Rng;
+
+/// Trace generation spec.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceSpec {
+    pub num_prompts: usize,
+    /// Mean request rate (requests/second) — Table 6: 10 req/s.
+    pub rate: f64,
+    /// Burstiness (Gamma CV²); 1.0 = Poisson, 2.0 = Table 6.
+    pub burstiness: f64,
+    /// Input-length distribution.
+    pub input: LenDist,
+    /// Output-length distribution.
+    pub output: LenDist,
+    pub seed: u64,
+}
+
+/// A token-length distribution (log-normal, truncated).
+#[derive(Clone, Copy, Debug)]
+pub struct LenDist {
+    /// Median length (exp of the underlying normal's mean).
+    pub median: f64,
+    /// Log-space sigma.
+    pub sigma: f64,
+    pub min: usize,
+    pub max: usize,
+}
+
+impl LenDist {
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let v = rng.lognormal(self.median.ln(), self.sigma);
+        (v.round() as usize).clamp(self.min, self.max)
+    }
+
+    /// Mean of the truncated log-normal, estimated by quick sampling.
+    pub fn approx_mean(&self, seed: u64) -> f64 {
+        let mut rng = Rng::new(seed);
+        let n = 4000;
+        (0..n).map(|_| self.sample(&mut rng) as f64).sum::<f64>() / n as f64
+    }
+}
+
+impl TraceSpec {
+    /// The paper's BurstGPT sample (Table 6 / Fig 17): 1,000 prompts,
+    /// 10 req/s, burstiness 2.0; mixed short/long prompts with shorter
+    /// outputs (Fig 17's distribution shape).
+    pub fn burstgpt() -> Self {
+        TraceSpec {
+            num_prompts: 1000,
+            rate: 10.0,
+            burstiness: 2.0,
+            input: LenDist { median: 550.0, sigma: 0.9, min: 16, max: 8192 },
+            output: LenDist { median: 260.0, sigma: 0.5, min: 8, max: 1024 },
+            seed: 0xB0257,
+        }
+    }
+
+    /// Appendix C.4.3: randomly generated decode-heavy trace with mean
+    /// input/output lengths of 1024 and 4096.
+    pub fn decode_heavy() -> Self {
+        TraceSpec {
+            num_prompts: 1000,
+            rate: 10.0,
+            burstiness: 2.0,
+            input: LenDist { median: 950.0, sigma: 0.4, min: 64, max: 4096 },
+            output: LenDist { median: 3900.0, sigma: 0.3, min: 256, max: 8192 },
+            seed: 0xDEC0DE,
+        }
+    }
+
+    /// Generate the request list (sorted by arrival time).
+    pub fn generate(&self) -> Vec<Request> {
+        let mut rng = Rng::new(self.seed);
+        let shape = 1.0 / self.burstiness;
+        let scale = (1.0 / self.rate) / shape; // keep the configured mean
+        let mut t = 0.0;
+        let mut out = Vec::with_capacity(self.num_prompts);
+        for id in 0..self.num_prompts as u64 {
+            t += rng.gamma(shape, scale);
+            out.push(Request {
+                id,
+                prompt_len: self.input.sample(&mut rng),
+                decode_len: self.output.sample(&mut rng),
+                arrival: t,
+            });
+        }
+        out
+    }
+
+    /// Summary histogram of lengths (Fig 17 regeneration).
+    pub fn length_histogram(&self, buckets: &[usize]) -> (Vec<usize>, Vec<usize>) {
+        let reqs = self.generate();
+        let mut hin = vec![0usize; buckets.len() + 1];
+        let mut hout = vec![0usize; buckets.len() + 1];
+        for r in &reqs {
+            hin[bucket_of(r.prompt_len, buckets)] += 1;
+            hout[bucket_of(r.decode_len, buckets)] += 1;
+        }
+        (hin, hout)
+    }
+}
+
+fn bucket_of(v: usize, buckets: &[usize]) -> usize {
+    buckets.iter().position(|&b| v <= b).unwrap_or(buckets.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrival_rate_matches_spec() {
+        let spec = TraceSpec::burstgpt();
+        let reqs = spec.generate();
+        assert_eq!(reqs.len(), 1000);
+        let span = reqs.last().unwrap().arrival - reqs[0].arrival;
+        let rate = (reqs.len() - 1) as f64 / span;
+        assert!((rate - 10.0).abs() < 1.5, "rate {rate}");
+    }
+
+    #[test]
+    fn burstiness_raises_variance() {
+        let mut poisson = TraceSpec::burstgpt();
+        poisson.burstiness = 1.0;
+        let bursty = TraceSpec::burstgpt();
+        let cv2 = |reqs: &[Request]| {
+            let gaps: Vec<f64> =
+                reqs.windows(2).map(|w| w[1].arrival - w[0].arrival).collect();
+            let m = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let v = gaps.iter().map(|g| (g - m) * (g - m)).sum::<f64>() / gaps.len() as f64;
+            v / (m * m)
+        };
+        let c_poisson = cv2(&poisson.generate());
+        let c_bursty = cv2(&bursty.generate());
+        assert!(c_bursty > 1.4 * c_poisson, "{c_poisson} vs {c_bursty}");
+        assert!((c_bursty - 2.0).abs() < 0.6, "bursty CV² {c_bursty}");
+    }
+
+    #[test]
+    fn arrivals_sorted_and_lengths_bounded() {
+        let spec = TraceSpec::decode_heavy();
+        let reqs = spec.generate();
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        for r in &reqs {
+            assert!((64..=4096).contains(&r.prompt_len));
+            assert!((256..=8192).contains(&r.decode_len));
+        }
+    }
+
+    #[test]
+    fn decode_heavy_means_match_appendix() {
+        // C.4.3: mean input 1024, output 4096 (tolerances: sampled).
+        let spec = TraceSpec::decode_heavy();
+        let reqs = spec.generate();
+        let mi = reqs.iter().map(|r| r.prompt_len).sum::<usize>() as f64 / reqs.len() as f64;
+        let mo = reqs.iter().map(|r| r.decode_len).sum::<usize>() as f64 / reqs.len() as f64;
+        assert!((mi - 1024.0).abs() < 150.0, "mean input {mi}");
+        assert!((mo - 4096.0).abs() < 500.0, "mean output {mo}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = TraceSpec::burstgpt().generate();
+        let b = TraceSpec::burstgpt().generate();
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().zip(&b).all(|(x, y)| x.arrival == y.arrival
+            && x.prompt_len == y.prompt_len
+            && x.decode_len == y.decode_len));
+    }
+
+    #[test]
+    fn histogram_covers_all() {
+        let spec = TraceSpec::burstgpt();
+        let (hin, hout) = spec.length_histogram(&[128, 512, 2048]);
+        assert_eq!(hin.iter().sum::<usize>(), 1000);
+        assert_eq!(hout.iter().sum::<usize>(), 1000);
+    }
+}

@@ -1,0 +1,113 @@
+//! Criterion-style wall-clock timing harness (vendored set has no
+//! `criterion`). Used by `cargo bench` harnesses (`harness = false`) and the
+//! performance pass.
+//!
+//! Mirrors the paper's microbenchmark methodology (§5): warm-up iterations
+//! followed by timed iterations, reporting the mean per-call time.
+
+use std::time::Instant;
+
+use super::stats::{fmt_time, Summary};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub summary: Summary,
+}
+
+impl Measurement {
+    pub fn mean(&self) -> f64 {
+        self.summary.mean()
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (p50 {:>10}, p99 {:>10}, n={})",
+            self.name,
+            fmt_time(self.summary.mean()),
+            fmt_time(self.summary.median()),
+            fmt_time(self.summary.percentile(99.0)),
+            self.summary.n(),
+        )
+    }
+}
+
+/// Benchmark runner with warmup and an adaptive iteration count.
+pub struct Bencher {
+    /// Target total measurement time per benchmark.
+    pub target_secs: f64,
+    /// Number of warm-up calls before timing.
+    pub warmup: usize,
+    /// Hard cap on timed iterations.
+    pub max_iters: usize,
+    /// Minimum timed iterations (even if slow).
+    pub min_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // Modest defaults: the full bench suite regenerates every paper
+        // figure in one `cargo bench` run, so per-case budgets stay small.
+        Bencher { target_secs: 0.5, warmup: 2, max_iters: 1000, min_iters: 3 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { target_secs: 0.2, warmup: 1, max_iters: 200, min_iters: 2 }
+    }
+
+    /// Time `f` repeatedly; each sample is one call's wall-clock seconds.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        // Pilot call to size the iteration count.
+        let t0 = Instant::now();
+        f();
+        let pilot = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.target_secs / pilot) as usize)
+            .clamp(self.min_iters, self.max_iters);
+        let mut summary = Summary::new();
+        summary.add(pilot);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            summary.add(t.elapsed().as_secs_f64());
+        }
+        Measurement { name: name.to_string(), iters: iters + 1, summary }
+    }
+
+    /// Time `f` and print the report line immediately.
+    pub fn bench<F: FnMut()>(&self, name: &str, f: F) -> Measurement {
+        let m = self.run(name, f);
+        println!("{}", m.report());
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleepy_closure() {
+        let b = Bencher { target_secs: 0.02, warmup: 1, max_iters: 10, min_iters: 2 };
+        let m = b.run("spin", || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+        assert!(m.mean() >= 0.0015, "mean {} too small", m.mean());
+        assert!(m.summary.n() >= 3);
+    }
+
+    #[test]
+    fn adaptive_iteration_count_bounded() {
+        let b = Bencher { target_secs: 0.01, warmup: 0, max_iters: 50, min_iters: 2 };
+        let m = b.run("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(m.iters <= 51);
+    }
+}

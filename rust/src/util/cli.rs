@@ -1,0 +1,221 @@
+//! Minimal declarative CLI parser (vendored crate set has no `clap`).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! args, and auto-generated `--help`. Used by the `yalis` binary, all
+//! examples, and all bench harnesses.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+struct Opt {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative argument parser.
+///
+/// ```no_run
+/// let mut cli = yalis::util::cli::Cli::new("demo", "example");
+/// cli.opt("gpus", "16", "number of GPUs");
+/// cli.flag("csv", "emit CSV");
+/// let args = cli.parse_from(vec!["--gpus".into(), "32".into()]).unwrap();
+/// assert_eq!(args.get_usize("gpus"), 32);
+/// assert!(!args.get_flag("csv"));
+/// ```
+pub struct Cli {
+    program: &'static str,
+    about: &'static str,
+    opts: Vec<Opt>,
+}
+
+/// Parsed argument values.
+pub struct Args {
+    values: BTreeMap<&'static str, String>,
+    flags: BTreeMap<&'static str, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Cli { program, about, opts: Vec::new() }
+    }
+
+    /// Option with a default value.
+    pub fn opt(&mut self, name: &'static str, default: &str, help: &'static str) -> &mut Self {
+        self.opts.push(Opt { name, help, default: Some(default.to_string()), is_flag: false });
+        self
+    }
+
+    /// Required option (no default).
+    pub fn req(&mut self, name: &'static str, help: &'static str) -> &mut Self {
+        self.opts.push(Opt { name, help, default: None, is_flag: false });
+        self
+    }
+
+    /// Boolean flag (default false).
+    pub fn flag(&mut self, name: &'static str, help: &'static str) -> &mut Self {
+        self.opts.push(Opt { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let kind = if o.is_flag {
+                String::new()
+            } else if let Some(d) = &o.default {
+                format!(" <value> (default {d})")
+            } else {
+                " <value> (required)".to_string()
+            };
+            s.push_str(&format!("  --{}{}\n      {}\n", o.name, kind, o.help));
+        }
+        s
+    }
+
+    /// Parse `std::env::args()` (skipping argv[0]); exits on `--help`.
+    pub fn parse(&self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        if argv.iter().any(|a| a == "--help" || a == "-h") {
+            println!("{}", self.usage());
+            std::process::exit(0);
+        }
+        match self.parse_from(argv) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("error: {e}\n\n{}", self.usage());
+                std::process::exit(2);
+            }
+        }
+    }
+
+    pub fn parse_from(&self, argv: Vec<String>) -> Result<Args, String> {
+        let mut values = BTreeMap::new();
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        for o in &self.opts {
+            if o.is_flag {
+                flags.insert(o.name, false);
+            } else if let Some(d) = &o.default {
+                values.insert(o.name, d.clone());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}"))?;
+                if opt.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("flag --{name} takes no value"));
+                    }
+                    flags.insert(opt.name, true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it.next().ok_or_else(|| format!("--{name} needs a value"))?,
+                    };
+                    values.insert(opt.name, v);
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        for o in &self.opts {
+            if !o.is_flag && !values.contains_key(o.name) {
+                return Err(format!("missing required option --{}", o.name));
+            }
+        }
+        Ok(Args { values, flags, positional })
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option {name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name} must be a number"))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        *self.flags.get(name).unwrap_or_else(|| panic!("flag {name} not declared"))
+    }
+
+    /// Comma-separated list of integers, e.g. `--gpus 4,8,16`.
+    pub fn get_usize_list(&self, name: &str) -> Vec<usize> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad integer '{s}'")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        let mut c = Cli::new("t", "test");
+        c.opt("gpus", "8", "gpu count").flag("csv", "csv out").opt("sizes", "1,2", "list");
+        c
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cli().parse_from(vec![]).unwrap();
+        assert_eq!(a.get_usize("gpus"), 8);
+        assert!(!a.get_flag("csv"));
+        assert_eq!(a.get_usize_list("sizes"), vec![1, 2]);
+    }
+
+    #[test]
+    fn overrides_and_inline() {
+        let a = cli()
+            .parse_from(vec!["--gpus=32".into(), "--csv".into(), "--sizes".into(), "4,8,16".into()])
+            .unwrap();
+        assert_eq!(a.get_usize("gpus"), 32);
+        assert!(a.get_flag("csv"));
+        assert_eq!(a.get_usize_list("sizes"), vec![4, 8, 16]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cli().parse_from(vec!["--nope".into()]).is_err());
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        let mut c = Cli::new("t", "test");
+        c.req("model", "model name");
+        assert!(c.parse_from(vec![]).is_err());
+        assert!(c.parse_from(vec!["--model".into(), "70b".into()]).is_ok());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cli().parse_from(vec!["foo".into(), "--gpus".into(), "4".into(), "bar".into()]).unwrap();
+        assert_eq!(a.positional, vec!["foo", "bar"]);
+    }
+}

@@ -1,0 +1,25 @@
+//! From-scratch utility substrates.
+//!
+//! The build is fully offline against a minimal vendored crate set (no
+//! `rand`, `clap`, `criterion`, `proptest`, `serde`), so the facilities a
+//! production framework would pull from those crates are implemented here:
+//!
+//! - [`rng`] — SplitMix64 / xoshiro256++ PRNGs + distributions (uniform,
+//!   normal, gamma — the gamma sampler drives the BurstGPT-style bursty
+//!   arrival process).
+//! - [`stats`] — streaming mean/variance, percentiles, confidence
+//!   intervals.
+//! - [`cli`] — a small declarative `--flag value` argument parser.
+//! - [`prop`] — a property-based-testing harness (randomised cases with
+//!   seed reporting on failure) standing in for `proptest`.
+//! - [`tables`] — aligned console tables + CSV emission for the bench
+//!   harnesses that regenerate the paper's tables and figures.
+//! - [`bench`] — a criterion-style timing harness (warmup, adaptive
+//!   iteration counts, mean/p50/p99).
+
+pub mod bench;
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod tables;

@@ -1,0 +1,144 @@
+//! Property-based testing harness (vendored crate set has no `proptest`).
+//!
+//! [`check`] runs a property over `cases` randomised inputs drawn through a
+//! [`Gen`]; on failure it panics with the failing case index and the seed so
+//! the case can be replayed exactly. No shrinking — failures print the
+//! generated values instead (callers format their inputs in the property's
+//! panic message).
+//!
+//! ```no_run
+//! use yalis::util::prop::{check, Gen};
+//! check("addition commutes", 200, |g: &mut Gen| {
+//!     let (a, b) = (g.i64(-100, 100), g.i64(-100, 100));
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Input generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    pub case: usize,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range(lo, hi + 1)
+    }
+
+    pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + self.rng.range(0, (hi - lo + 1) as u64) as i64
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    /// Power of two in `[2^lo_exp, 2^hi_exp]`.
+    pub fn pow2(&mut self, lo_exp: u32, hi_exp: u32) -> usize {
+        1usize << self.u64(lo_exp as u64, hi_exp as u64)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.usize(0, xs.len() - 1);
+        &xs[i]
+    }
+
+    /// Vector of f32 data (the usual all-reduce message payload).
+    pub fn f32_vec(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32(lo, hi)).collect()
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Environment knob: `YALIS_PROP_SEED` replays a failure; `YALIS_PROP_CASES`
+/// scales case counts up/down.
+fn base_seed() -> u64 {
+    std::env::var("YALIS_PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xC0FFEE)
+}
+
+fn scaled_cases(cases: usize) -> usize {
+    match std::env::var("YALIS_PROP_CASES").ok().and_then(|s| s.parse::<f64>().ok()) {
+        Some(f) => ((cases as f64 * f) as usize).max(1),
+        None => cases,
+    }
+}
+
+/// Run `property` over `cases` randomised inputs.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut property: F) {
+    let base = base_seed();
+    for case in 0..scaled_cases(cases) {
+        let seed = base ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen { rng: Rng::new(seed), case, seed };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| property(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (replay with \
+                 YALIS_PROP_SEED={base} YALIS_PROP_CASES=1):\n{msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("sum symmetric", 50, |g| {
+            let a = g.i64(-1000, 1000);
+            let b = g.i64(-1000, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failing_case() {
+        check("always fails", 10, |g| {
+            assert!(g.usize(0, 10) > 100, "value too small");
+        });
+    }
+
+    #[test]
+    fn gen_ranges_inclusive() {
+        check("ranges", 200, |g| {
+            let x = g.usize(3, 7);
+            assert!((3..=7).contains(&x));
+            let p = g.pow2(2, 5);
+            assert!(p.is_power_of_two() && (4..=32).contains(&p));
+        });
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut first: Vec<u64> = Vec::new();
+        check("collect", 5, |g| first.push(g.u64(0, u64::MAX - 1)));
+        let mut second: Vec<u64> = Vec::new();
+        check("collect", 5, |g| second.push(g.u64(0, u64::MAX - 1)));
+        assert_eq!(first, second);
+    }
+}

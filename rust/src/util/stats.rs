@@ -1,0 +1,144 @@
+//! Summary statistics for benchmark harnesses and the simulator.
+
+/// Streaming mean/variance (Welford) plus retained samples for percentiles.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    mean: f64,
+    m2: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.samples.push(x);
+        let n = self.samples.len() as f64;
+        let d = x - self.mean;
+        self.mean += d / n;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn n(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.samples.len() < 2 { 0.0 } else { self.m2 / (self.samples.len() - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Linear-interpolated percentile, `q` in [0, 100].
+    pub fn percentile(&self, q: f64) -> f64 {
+        assert!(!self.samples.is_empty(), "percentile of empty summary");
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = (q / 100.0) * (v.len() - 1) as f64;
+        let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+        if lo == hi { v[lo] } else { v[lo] + (pos - lo as f64) * (v[hi] - v[lo]) }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// Half-width of the 95% CI of the mean (normal approximation).
+    pub fn ci95(&self) -> f64 {
+        if self.samples.len() < 2 { return 0.0; }
+        1.96 * self.std() / (self.samples.len() as f64).sqrt()
+    }
+}
+
+/// Pretty time formatting: picks ns/µs/ms/s.
+pub fn fmt_time(seconds: f64) -> String {
+    let abs = seconds.abs();
+    if abs >= 1.0 {
+        format!("{seconds:.3} s")
+    } else if abs >= 1e-3 {
+        format!("{:.3} ms", seconds * 1e3)
+    } else if abs >= 1e-6 {
+        format!("{:.3} µs", seconds * 1e6)
+    } else {
+        format!("{:.1} ns", seconds * 1e9)
+    }
+}
+
+/// Pretty byte formatting: KB/MB/GB (powers of 1024, KB as in the paper).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const K: u64 = 1024;
+    if bytes >= K * K * K {
+        format!("{:.1} GB", bytes as f64 / (K * K * K) as f64)
+    } else if bytes >= K * K {
+        format!("{:.1} MB", bytes as f64 / (K * K) as f64)
+    } else if bytes >= K {
+        format!("{} KB", bytes / K)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_var_match_formulas() {
+        let mut s = Summary::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.add(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.var() - 32.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Summary::new();
+        for x in 1..=100 {
+            s.add(x as f64);
+        }
+        assert!((s.median() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.percentile(99.0) - 99.01).abs() < 0.02);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_time(2.5), "2.500 s");
+        assert_eq!(fmt_time(0.0025), "2.500 ms");
+        assert_eq!(fmt_time(2.5e-6), "2.500 µs");
+        assert_eq!(fmt_bytes(128 * 1024), "128 KB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.0 MB");
+    }
+
+    #[test]
+    fn ci_shrinks_with_n() {
+        let mut small = Summary::new();
+        let mut big = Summary::new();
+        for i in 0..10 {
+            small.add((i % 3) as f64);
+        }
+        for i in 0..1000 {
+            big.add((i % 3) as f64);
+        }
+        assert!(big.ci95() < small.ci95());
+    }
+}

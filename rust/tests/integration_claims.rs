@@ -1,0 +1,120 @@
+//! Integration: the paper's headline claims hold end-to-end in the
+//! simulation stack (the "shape" contract of the reproduction).
+
+use yalis::cluster::presets;
+use yalis::collectives::sim::{self, CommConfig};
+use yalis::collectives::AllReduceImpl;
+use yalis::coordinator::experiments;
+use yalis::engine::persona::Persona;
+use yalis::engine::{engine_for, Workload};
+use yalis::models::ModelConfig;
+
+/// §5.1/Fig 6: NVRAR beats NCCL in the 256 KB–2 MB range at scale, on both
+/// interconnects; bigger wins on InfiniBand (Vista).
+#[test]
+fn nvrar_speedup_range_matches_paper() {
+    for (machine, nodes, min_s, max_s) in
+        [("perlmutter", 8usize, 1.05, 2.2), ("vista", 16, 1.5, 4.0)]
+    {
+        let c = CommConfig::for_machine(machine);
+        let topo = presets::by_name(machine, nodes);
+        let mut best: f64 = 0.0;
+        for kb in [256u64, 512, 1024] {
+            let s = sim::nccl_auto(&topo, &c, kb * 1024).total
+                / sim::nvrar(&topo, &c, kb * 1024, 1.0).total;
+            assert!(s > 1.05, "{machine} {kb}KB speedup {s}");
+            best = best.max(s);
+        }
+        // 2 MB sits at the top of NVRAR's useful range: still >= breakeven.
+        let s2m = sim::nccl_auto(&topo, &c, 2048 * 1024).total
+            / sim::nvrar(&topo, &c, 2048 * 1024, 1.0).total;
+        assert!(s2m > 0.9, "{machine} 2MB speedup {s2m}");
+        assert!(best < max_s, "{machine} best {best} exceeds plausible bound");
+        assert!(best > min_s, "{machine} best {best} below paper floor");
+    }
+}
+
+/// Fig 6 middle: on Perlmutter the microbenchmark (no interleaved compute)
+/// shows NVRAR at a disadvantage for 64–128 KB messages.
+#[test]
+fn small_message_microbench_slowdown_on_perlmutter() {
+    let c = CommConfig::perlmutter();
+    let topo = presets::perlmutter(4);
+    let s64 = sim::nccl_auto(&topo, &c, 64 * 1024).total / sim::nvrar(&topo, &c, 64 * 1024, 0.0).total;
+    assert!(s64 < 1.1, "64KB cold speedup should be marginal/negative: {s64}");
+    // ...but the e2e workload (interleaved compute) recovers it (App. B).
+    let s64_hot =
+        sim::nccl_auto(&topo, &c, 64 * 1024).total / sim::nvrar(&topo, &c, 64 * 1024, 1.0).total;
+    assert!(s64_hot > s64);
+}
+
+/// Fig 7: 1.17x–1.72x e2e speedups for the 405B model decode-heavy.
+#[test]
+fn e2e_405b_speedups_in_paper_band() {
+    let w = Workload::decode_heavy(32);
+    for gpus in [32usize, 64] {
+        let nccl = engine_for("perlmutter", ModelConfig::llama31_405b(), gpus, "tp",
+            Persona::yalis(), AllReduceImpl::NcclAuto).run_batch(&w);
+        let nvrar = engine_for("perlmutter", ModelConfig::llama31_405b(), gpus, "tp",
+            Persona::yalis(), AllReduceImpl::Nvrar).run_batch(&w);
+        let s = nccl.total / nvrar.total;
+        assert!(s > 1.05 && s < 2.0, "405B {gpus} GPUs speedup {s}");
+    }
+}
+
+/// Observation 1 end-to-end: crossover between HP (prefill-heavy) and TP
+/// (decode-heavy) on 16 GPUs.
+#[test]
+fn tp_hp_crossover() {
+    let m = ModelConfig::llama31_70b();
+    let tp_p = engine_for("perlmutter", m.clone(), 16, "tp", Persona::vllm_v1(), AllReduceImpl::NcclAuto)
+        .run_batch(&Workload::prefill_heavy(32));
+    let hp_p = engine_for("perlmutter", m.clone(), 16, "hp", Persona::vllm_v0(), AllReduceImpl::NcclAuto)
+        .run_batch(&Workload::prefill_heavy(32));
+    let tp_d = engine_for("perlmutter", m.clone(), 16, "tp", Persona::vllm_v1(), AllReduceImpl::NcclAuto)
+        .run_batch(&Workload::decode_heavy(8));
+    let hp_d = engine_for("perlmutter", m, 16, "hp", Persona::vllm_v0(), AllReduceImpl::NcclAuto)
+        .run_batch(&Workload::decode_heavy(8));
+    assert!(hp_p.total < tp_p.total, "HP should win prefill-heavy: {} vs {}", hp_p.total, tp_p.total);
+    assert!(tp_d.total < hp_d.total, "TP should win decode-heavy: {} vs {}", tp_d.total, hp_d.total);
+}
+
+/// The event-level sim agrees with the closed-form Eq. 6 when chunking and
+/// implementation overheads are disabled.
+#[test]
+fn sim_vs_closed_form_agreement() {
+    use yalis::collectives::model;
+    let topo = presets::perlmutter(8);
+    let mut c = CommConfig::perlmutter();
+    c.block_count = 1;
+    c.chunk_bytes = u64::MAX;
+    c.put_overhead = 0.0;
+    c.nvshmem_overhead = 0.0;
+    c.sync_cost = 0.0;
+    c.launch_overhead = 0.0;
+    c.reduce_bw = f64::INFINITY;
+    for kb in [32u64, 128] {
+        let sim_t = sim::nvrar(&topo, &c, kb * 1024, 0.0).total;
+        let model_t = model::nvrar(&topo, kb * 1024, c.eta);
+        let ratio = sim_t / model_t;
+        assert!((0.7..1.6).contains(&ratio), "{kb}KB sim/model ratio {ratio}");
+        // (At multi-MB sizes the sim intentionally diverges upward: true
+        // recursive doubling retransmits the full segment per step, while
+        // Eq. 4 charges a single (N-1)/N transfer — see DESIGN.md.)
+    }
+}
+
+/// Every experiment driver runs and produces non-empty tables (smoke over
+/// the full figure registry, minus the slow serving ones).
+#[test]
+fn experiment_registry_smoke() {
+    assert!(!experiments::fig3_breakdown().rows().is_empty());
+    assert!(!experiments::table4_gemm_model().rows().is_empty());
+    assert!(!experiments::fig4_nccl_vs_mpi().rows().is_empty());
+    assert!(!experiments::table5_hyperparams().rows().is_empty());
+    assert!(!experiments::fig8_phase_breakdown().rows().is_empty());
+    assert!(!experiments::fig13_sync_hiding().rows().is_empty());
+    for t in experiments::fig6_microbench("perlmutter") {
+        assert!(!t.rows().is_empty());
+    }
+}
