@@ -1,0 +1,146 @@
+//! Fleet serving at scale: drive a BurstGPT-style trace (100k+ requests by
+//! default, `--prompts 1000000` for the million-request run) through a
+//! multi-replica fleet under every routing policy, monolithic vs
+//! disaggregated prefill/decode pools, and report p50/p95/p99 TTFT, TPOT,
+//! and SLO goodput per configuration. Deterministic for a fixed `--seed`.
+//!
+//! Usage: cargo run --release --example fleet_serve --
+//!        [--trace burstgpt|decode-heavy] [--prompts 100000] [--rate 40]
+//!        [--replicas 4] [--prefill 1] [--conc 256] [--gpus 16]
+//!        [--allreduce nvrar] [--policies round-robin,least-tokens,kv-pressure,session-affinity]
+//!        [--slo-ttft 5.0] [--slo-tpot 0.2] [--ramp 0] [--autoscale]
+
+use yalis::collectives::AllReduceImpl;
+use yalis::fleet::autoscaler::AutoscaleConfig;
+use yalis::fleet::metrics::{FleetReport, SloTargets};
+use yalis::fleet::router::RoutePolicy;
+use yalis::fleet::{run_fleet, FleetConfig};
+use yalis::serving::{fig9_config, Deployment};
+use yalis::trace::{RateShape, TraceSpec};
+use yalis::util::cli::Cli;
+use yalis::util::tables::Table;
+
+fn main() {
+    let mut cli = Cli::new("fleet_serve", "multi-replica SLO-aware fleet serving study");
+    cli.opt("trace", "burstgpt", "trace kind (burstgpt|decode-heavy)");
+    cli.opt("prompts", "100000", "number of requests");
+    cli.opt("rate", "40", "mean arrival rate (req/s) across the fleet");
+    cli.opt("seed", "0", "trace seed override (0 = trace default)");
+    cli.opt("replicas", "4", "monolithic (or decode-pool) replicas");
+    cli.opt("prefill", "1", "prefill replicas for the disaggregated rows");
+    cli.opt("conc", "256", "per-replica max concurrency");
+    cli.opt("gpus", "16", "GPUs per replica");
+    cli.opt("allreduce", "nvrar", "per-replica all-reduce (nccl|nccl-ring|nccl-tree|mpi|nvrar)");
+    cli.opt("policies", "round-robin,least-tokens,kv-pressure,session-affinity", "routing policies to sweep");
+    cli.opt("slo-ttft", "5.0", "TTFT SLO target (s)");
+    cli.opt("slo-tpot", "0.2", "TPOT SLO target (s)");
+    cli.opt("ramp", "0", "rate ramp end-multiplier (0 = flat trace)");
+    cli.flag("autoscale", "enable the SLO-driven autoscaler");
+    let args = cli.parse();
+
+    let ar = args.get_with("allreduce", AllReduceImpl::by_name);
+    let policies: Vec<RoutePolicy> = args
+        .get("policies")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| {
+            RoutePolicy::by_name(s.trim()).unwrap_or_else(|e| {
+                eprintln!("error: --policies: {e}");
+                std::process::exit(2);
+            })
+        })
+        .collect();
+
+    let mut spec = match args.get("trace") {
+        "burstgpt" => TraceSpec::burstgpt(),
+        "decode-heavy" => TraceSpec::decode_heavy(),
+        other => {
+            eprintln!("error: unknown trace '{other}' (expected burstgpt|decode-heavy)");
+            std::process::exit(2);
+        }
+    };
+    spec.num_prompts = args.get_usize("prompts");
+    spec.rate = args.get_f64("rate");
+    if args.get_u64("seed") != 0 {
+        spec.seed = args.get_u64("seed");
+    }
+    let ramp = args.get_f64("ramp");
+    if ramp > 0.0 {
+        spec.shape = RateShape::Ramp { from: 1.0, to: ramp };
+    }
+    let reqs = spec.generate();
+    println!(
+        "trace: {} requests at ~{:.0} req/s (mean in {:.0} / out {:.0} tokens, {:.0}s span)",
+        reqs.len(),
+        spec.rate,
+        reqs.iter().map(|r| r.prompt_len).sum::<usize>() as f64 / reqs.len() as f64,
+        reqs.iter().map(|r| r.decode_len).sum::<usize>() as f64 / reqs.len() as f64,
+        reqs.last().map(|r| r.arrival).unwrap_or(0.0),
+    );
+
+    let slo = SloTargets { ttft: args.get_f64("slo-ttft"), tpot: args.get_f64("slo-tpot") };
+    let base = fig9_config(Deployment::Tp(ar), args.get_usize("conc"), "perlmutter", args.get_usize("gpus"));
+    let replicas = args.get_usize("replicas");
+    let prefill = args.get_usize("prefill");
+
+    let mut t = Table::new(
+        &format!(
+            "fleet serving: {} replicas x 70B TP{}/{} ({} trace)",
+            replicas,
+            args.get_usize("gpus"),
+            ar.name(),
+            args.get("trace"),
+        ),
+        &[
+            "policy", "pools", "tok/s", "goodput", "SLO %", "TTFT p50", "TTFT p95", "TTFT p99",
+            "TPOT p50", "TPOT p95", "TPOT p99", "peak rep", "handoff GB",
+        ],
+    );
+    for &policy in &policies {
+        for disagg in [false, true] {
+            if disagg && prefill == 0 {
+                continue;
+            }
+            // Keep total replica count comparable: the disaggregated rows
+            // carve the prefill pool out of the same fleet size.
+            let decode_replicas = if disagg { replicas.saturating_sub(prefill).max(1) } else { replicas };
+            let mut cfg = FleetConfig::new(base.clone(), decode_replicas)
+                .with_policy(policy)
+                .with_slo(slo);
+            if disagg {
+                cfg = cfg.disaggregated(prefill);
+            }
+            if args.get_flag("autoscale") {
+                cfg = cfg.with_autoscale(AutoscaleConfig::default());
+            }
+            let rep = run_fleet(&cfg, &reqs);
+            let pools = if disagg {
+                format!("{}D+{}P", decode_replicas, prefill)
+            } else {
+                format!("{replicas} mono")
+            };
+            t.row(&row_cells(policy, &pools, &rep));
+        }
+    }
+    t.print();
+    t.write_csv("results/fleet_serve.csv").unwrap();
+    println!("-> results/fleet_serve.csv");
+}
+
+fn row_cells(policy: RoutePolicy, pools: &str, r: &FleetReport) -> Vec<String> {
+    vec![
+        policy.name().to_string(),
+        pools.to_string(),
+        format!("{:.1}", r.throughput),
+        format!("{:.1}", r.goodput),
+        format!("{:.1}%", r.slo_attainment * 100.0),
+        format!("{:.3}", r.ttft_p50),
+        format!("{:.3}", r.ttft_p95),
+        format!("{:.3}", r.ttft_p99),
+        format!("{:.4}", r.tpot_p50),
+        format!("{:.4}", r.tpot_p95),
+        format!("{:.4}", r.tpot_p99),
+        r.peak_replicas.to_string(),
+        format!("{:.1}", r.handoff_gb),
+    ]
+}

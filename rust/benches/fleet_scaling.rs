@@ -1,0 +1,48 @@
+//! Fleet scaling sweep: replicas × routing policy × all-reduce impl on a
+//! scaled BurstGPT trace. Shows (a) near-linear goodput scaling while the
+//! fleet is the bottleneck, (b) the policy spread at high load, and (c)
+//! that the per-replica NVRAR gain survives aggregation — the fleet-level
+//! answer to the paper's single-replica Fig 9.
+use yalis::collectives::AllReduceImpl;
+use yalis::fleet::router::RoutePolicy;
+use yalis::fleet::{run_fleet, FleetConfig};
+use yalis::serving::{fig9_config, Deployment};
+use yalis::trace::TraceSpec;
+use yalis::util::tables::Table;
+
+fn main() {
+    let mut spec = TraceSpec::burstgpt();
+    spec.num_prompts = 600;
+    spec.rate = 20.0;
+    let reqs = spec.generate();
+
+    let mut t = Table::new(
+        "fleet scaling: BurstGPT x600 @ 20 req/s, 70B TP16 per replica",
+        &["replicas", "policy", "allreduce", "tok/s", "goodput", "TTFT p99", "TPOT p99", "SLO %"],
+    );
+    for replicas in [2usize, 4, 8] {
+        for policy in [
+            RoutePolicy::RoundRobin,
+            RoutePolicy::LeastOutstanding,
+            RoutePolicy::KvPressure,
+        ] {
+            for ar in [AllReduceImpl::NcclAuto, AllReduceImpl::Nvrar] {
+                let base = fig9_config(Deployment::Tp(ar), 64, "perlmutter", 16);
+                let cfg = FleetConfig::new(base, replicas).with_policy(policy);
+                let rep = run_fleet(&cfg, &reqs);
+                t.row(&[
+                    replicas.to_string(),
+                    policy.name().to_string(),
+                    ar.name().to_string(),
+                    format!("{:.1}", rep.throughput),
+                    format!("{:.1}", rep.goodput),
+                    format!("{:.2}", rep.ttft_p99),
+                    format!("{:.3}", rep.tpot_p99),
+                    format!("{:.0}%", rep.slo_attainment * 100.0),
+                ]);
+            }
+        }
+    }
+    t.print();
+    t.write_csv("results/fleet_scaling.csv").unwrap();
+}

@@ -44,14 +44,49 @@ impl AllReduceImpl {
         }
     }
 
-    pub fn by_name(name: &str) -> Self {
-        match name.to_ascii_lowercase().as_str() {
+    /// Every selectable implementation (sweep order of the benches).
+    pub fn all() -> [AllReduceImpl; 5] {
+        [
+            AllReduceImpl::NcclAuto,
+            AllReduceImpl::NcclRing,
+            AllReduceImpl::NcclTree,
+            AllReduceImpl::Mpi,
+            AllReduceImpl::Nvrar,
+        ]
+    }
+
+    /// Parse a CLI name. Unknown names are an error, not a panic, so a bad
+    /// `--allreduce` flag produces a usable message.
+    pub fn by_name(name: &str) -> anyhow::Result<Self> {
+        Ok(match name.to_ascii_lowercase().as_str() {
             "nccl" => AllReduceImpl::NcclAuto,
             "nccl-ring" => AllReduceImpl::NcclRing,
             "nccl-tree" => AllReduceImpl::NcclTree,
             "mpi" => AllReduceImpl::Mpi,
             "nvrar" => AllReduceImpl::Nvrar,
-            other => panic!("unknown all-reduce impl '{other}'"),
-        }
+            other => anyhow::bail!(
+                "unknown all-reduce impl '{other}' (expected nccl, nccl-ring, nccl-tree, mpi or nvrar)"
+            ),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_parses_known_impls() {
+        assert_eq!(AllReduceImpl::by_name("nvrar").unwrap(), AllReduceImpl::Nvrar);
+        assert_eq!(AllReduceImpl::by_name("NCCL").unwrap(), AllReduceImpl::NcclAuto);
+        assert_eq!(AllReduceImpl::by_name("nccl-tree").unwrap(), AllReduceImpl::NcclTree);
+        assert_eq!(AllReduceImpl::by_name("nccl-ring").unwrap(), AllReduceImpl::NcclRing);
+        assert_eq!(AllReduceImpl::by_name("mpi").unwrap(), AllReduceImpl::Mpi);
+    }
+
+    #[test]
+    fn by_name_rejects_unknown_with_usable_message() {
+        let err = AllReduceImpl::by_name("gloo").unwrap_err().to_string();
+        assert!(err.contains("gloo") && err.contains("nvrar"), "{err}");
     }
 }

@@ -6,6 +6,8 @@ use crate::collectives::sim::{self, CommConfig};
 use crate::collectives::AllReduceImpl;
 use crate::engine::persona::Persona;
 use crate::engine::{engine_for, Workload};
+use crate::fleet::router::RoutePolicy;
+use crate::fleet::{run_fleet, FleetConfig};
 use crate::models::ModelConfig;
 use crate::moe::{moe_step_time, MoeDeployment};
 use crate::perfmodel::{gemm_time, GpuSpec};
@@ -353,6 +355,53 @@ pub fn fig10_moe() -> Table {
     t
 }
 
+/// Fleet: multi-replica SLO-aware serving — routing policies × pool modes
+/// on a scaled BurstGPT trace with the chosen per-replica all-reduce.
+/// (Beyond the paper: its serving experiments stop at one replica.)
+pub fn fleet_experiment(ar: AllReduceImpl) -> Table {
+    let mut spec = TraceSpec::burstgpt();
+    spec.num_prompts = 800;
+    spec.rate = 12.0;
+    let reqs = spec.generate();
+    let base = fig9_config(Deployment::Tp(ar), 64, "perlmutter", 16);
+    let mut t = Table::new(
+        &format!("Fleet serving, 4x(70B TP16/{}) replicas, BurstGPT x{}", ar.name(), reqs.len()),
+        &[
+            "policy",
+            "pools",
+            "tok/s",
+            "goodput",
+            "TTFT p50",
+            "TTFT p99",
+            "TPOT p50",
+            "SLO %",
+            "handoffs",
+        ],
+    );
+    for policy in RoutePolicy::all() {
+        for disagg in [false, true] {
+            let cfg = if disagg {
+                FleetConfig::new(base.clone(), 3).with_policy(policy).disaggregated(1)
+            } else {
+                FleetConfig::new(base.clone(), 4).with_policy(policy)
+            };
+            let rep = run_fleet(&cfg, &reqs);
+            t.row(&[
+                policy.name().to_string(),
+                if disagg { "3D+1P".to_string() } else { "4 mono".to_string() },
+                format!("{:.1}", rep.throughput),
+                format!("{:.1}", rep.goodput),
+                format!("{:.2}", rep.ttft_p50),
+                format!("{:.2}", rep.ttft_p99),
+                format!("{:.3}", rep.tpot_p50),
+                format!("{:.0}%", rep.slo_attainment * 100.0),
+                rep.handoffs.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
 /// Figures 12/13 (Appendix B): sync-time hiding with interleaved matmul.
 pub fn fig13_sync_hiding() -> Table {
     let topo = presets::perlmutter(4); // 16 GPUs
@@ -475,6 +524,7 @@ pub fn all_experiments() -> Vec<Table> {
     out.extend(fig14_fig15_nccl_variants());
     out.push(fig7_e2e_speedup("70b", "vista"));
     out.extend(fig17_fig18_traces());
+    out.push(fleet_experiment(AllReduceImpl::Nvrar));
     out
 }
 

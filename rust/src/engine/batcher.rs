@@ -8,7 +8,7 @@
 //! mixed prefill/decode batches at low concurrency, decode-only batches at
 //! high concurrency — emerges from exactly these rules.
 
-use super::kv::{PagedKv, SeqId};
+use super::kv::{KvError, PagedKv, SeqId};
 use std::collections::VecDeque;
 
 /// One client request.
@@ -125,13 +125,43 @@ impl Batcher {
         step
     }
 
+    /// Admit a sequence whose prefill ran elsewhere (disaggregated
+    /// prefill/decode serving): its prompt KV pages are allocated here and
+    /// the sequence joins the running set directly — no prefill step is
+    /// scheduled. The first output token was produced by the remote
+    /// prefill, so `decode_len - 1` tokens remain to decode locally.
+    pub fn submit_prefilled(&mut self, req: Request, kv: &mut PagedKv) -> Result<(), KvError> {
+        kv.admit(req.id, req.prompt_len)?;
+        let remaining = req.decode_len.saturating_sub(1);
+        if remaining == 0 {
+            kv.release(req.id).expect("just admitted");
+            self.finished.push(req.id);
+        } else {
+            self.running.push(Running { id: req.id, remaining_decode: remaining });
+        }
+        Ok(())
+    }
+
     /// Account the completion of a step: append KV tokens, retire finished
     /// sequences, move prefilled sequences into the running set.
     pub fn complete_step(&mut self, step: &StepBatch, kv: &mut PagedKv, reqs: &[Request]) {
+        self.complete_step_by(step, kv, |id| {
+            *reqs.iter().find(|r| r.id == id).expect("request known")
+        })
+    }
+
+    /// [`Self::complete_step`] with a caller-supplied request lookup. The
+    /// fleet layer routes by dense request index, so its lookup is O(1)
+    /// where the slice search above is O(n) — the difference between a
+    /// 100k-request trace finishing and quadratic blow-up.
+    pub fn complete_step_by<F>(&mut self, step: &StepBatch, kv: &mut PagedKv, lookup: F)
+    where
+        F: Fn(SeqId) -> Request,
+    {
         // Prefilled sequences start decoding (their first token was
         // produced by the prefill itself).
         for (id, _) in &step.prefills {
-            let req = reqs.iter().find(|r| r.id == *id).expect("request known");
+            let req = lookup(*id);
             let remaining = req.decode_len.saturating_sub(1);
             if remaining == 0 {
                 kv.release(*id).unwrap();
@@ -141,9 +171,13 @@ impl Batcher {
             }
         }
         // Decoded sequences: append a token, retire at their decode length.
+        // Set lookup: the O(B) `contains` scan per running sequence is
+        // quadratic per step, which the fleet's 100k-request traces turn
+        // into minutes of wall-clock.
+        let decoded: std::collections::BTreeSet<SeqId> = step.decodes.iter().copied().collect();
         let mut still = Vec::with_capacity(self.running.len());
         for r in &self.running {
-            if !step.decodes.contains(&r.id) {
+            if !decoded.contains(&r.id) {
                 still.push(*r);
                 continue;
             }
@@ -243,6 +277,78 @@ mod tests {
         let s2 = b.next_step(&mut kv);
         assert!(!s2.decodes.is_empty() && !s2.prefills.is_empty(), "mixed batch expected");
         b.complete_step(&s2, &mut kv, &reqs);
+    }
+
+    #[test]
+    fn zero_free_kv_pages_blocks_admission_but_not_decodes() {
+        // All pages consumed by the running sequence: new prompts must not
+        // be admitted, while the running sequence keeps decoding.
+        let mut kv = PagedKv::new(2, 16);
+        let mut b = Batcher::new(8, 100_000);
+        let reqs = vec![req(0, 32, 4), req(1, 8, 2)];
+        b.submit(reqs[0]);
+        b.submit(reqs[1]);
+        let s1 = b.next_step(&mut kv);
+        assert_eq!(s1.prefills.len(), 1, "only the 2-page prompt fits");
+        assert_eq!(kv.free_pages(), 0);
+        b.complete_step(&s1, &mut kv, &reqs);
+        // Zero free pages now: the next step must be decode-only.
+        let s2 = b.next_step(&mut kv);
+        assert!(s2.prefills.is_empty() && s2.decodes == vec![0]);
+        b.complete_step(&s2, &mut kv, &reqs);
+        kv.check_invariants();
+    }
+
+    #[test]
+    fn concurrency_cap_one_serializes_requests() {
+        // C=1: requests run strictly one at a time, so total step count is
+        // the sum of per-request step counts (1 prefill + d-1 decodes).
+        let reqs: Vec<Request> = (0..3).map(|i| req(i, 8, 3 + i as usize)).collect();
+        let expected: usize = reqs.iter().map(|r| r.decode_len).sum();
+        let steps = drive_to_completion(reqs, 1, 64);
+        assert_eq!(steps, expected);
+    }
+
+    #[test]
+    fn submit_prefilled_joins_running_without_prefill_step() {
+        let mut kv = PagedKv::new(64, 16);
+        let mut b = Batcher::new(8, 8192);
+        let reqs = vec![req(7, 40, 5)];
+        b.submit_prefilled(reqs[0], &mut kv).unwrap();
+        assert_eq!(b.running_len(), 1);
+        assert_eq!(kv.seq_pages(7), Some(3)); // ceil(40/16)
+        let mut done = 0;
+        let mut steps = 0;
+        while !b.idle() {
+            let step = b.next_step(&mut kv);
+            assert!(step.prefills.is_empty(), "prefill ran remotely");
+            b.complete_step(&step, &mut kv, &reqs);
+            done += b.take_finished().len();
+            steps += 1;
+        }
+        // 4 local decode steps (the 5th token's prefill happened remotely).
+        assert_eq!((steps, done), (4, 1));
+        assert_eq!(kv.used_pages(), 0);
+    }
+
+    #[test]
+    fn submit_prefilled_single_token_finishes_immediately() {
+        let mut kv = PagedKv::new(8, 16);
+        let mut b = Batcher::new(8, 8192);
+        b.submit_prefilled(req(3, 10, 1), &mut kv).unwrap();
+        assert_eq!(b.running_len(), 0);
+        assert_eq!(b.take_finished(), vec![3]);
+        assert_eq!(kv.used_pages(), 0);
+    }
+
+    #[test]
+    fn submit_prefilled_out_of_pages_leaves_state_clean() {
+        let mut kv = PagedKv::new(2, 16);
+        let mut b = Batcher::new(8, 8192);
+        assert_eq!(b.submit_prefilled(req(1, 100, 8), &mut kv), Err(crate::engine::kv::KvError::OutOfPages));
+        assert_eq!(b.running_len(), 0);
+        assert_eq!(kv.free_pages(), 2);
+        kv.check_invariants();
     }
 
     #[test]

@@ -1,0 +1,189 @@
+//! SLO-driven autoscaler: adds replicas when recent tail latency breaches
+//! the TTFT/TPOT targets, drains them when the fleet is comfortably under
+//! target.
+//!
+//! Deliberately simple control: a periodic tick computes the p95 of a
+//! sliding window of recently-completed requests and compares it against
+//! the SLO with hysteresis (scale up above the target, scale down only
+//! below `down_frac ×` target with a near-empty queue). One provisioning
+//! action is in flight at a time, and new capacity arrives only after
+//! `provision_delay` — the cold-start the fleet actually pays.
+
+use super::metrics::SloTargets;
+use std::collections::VecDeque;
+
+/// Autoscaler tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct AutoscaleConfig {
+    /// Control-loop interval (s).
+    pub tick: f64,
+    /// Replica cold-start: decided → serving (s).
+    pub provision_delay: f64,
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+    /// Sliding window of completed requests the controller looks at.
+    pub window: usize,
+    /// Scale down only when p95 TTFT < `down_frac × slo.ttft`.
+    pub down_frac: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            tick: 10.0,
+            provision_delay: 30.0,
+            min_replicas: 1,
+            max_replicas: 16,
+            window: 128,
+            down_frac: 0.25,
+        }
+    }
+}
+
+/// One control decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    Up,
+    Down,
+    Hold,
+}
+
+/// The controller.
+#[derive(Clone, Debug)]
+pub struct Autoscaler {
+    pub cfg: AutoscaleConfig,
+    slo: SloTargets,
+    recent_ttft: VecDeque<f64>,
+    recent_tpot: VecDeque<f64>,
+    /// A scale-up was decided but its replica has not come online yet.
+    pub pending_up: bool,
+    pub scale_ups: usize,
+    pub scale_downs: usize,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscaleConfig, slo: SloTargets) -> Self {
+        Autoscaler {
+            cfg,
+            slo,
+            recent_ttft: VecDeque::new(),
+            recent_tpot: VecDeque::new(),
+            pending_up: false,
+            scale_ups: 0,
+            scale_downs: 0,
+        }
+    }
+
+    /// Feed one completed request's latencies into the sliding window.
+    pub fn observe(&mut self, ttft: f64, tpot: f64) {
+        self.recent_ttft.push_back(ttft);
+        self.recent_tpot.push_back(tpot);
+        while self.recent_ttft.len() > self.cfg.window {
+            self.recent_ttft.pop_front();
+        }
+        while self.recent_tpot.len() > self.cfg.window {
+            self.recent_tpot.pop_front();
+        }
+    }
+
+    fn p95(window: &VecDeque<f64>) -> f64 {
+        if window.is_empty() {
+            return 0.0;
+        }
+        let mut v: Vec<f64> = window.iter().copied().collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[((v.len() - 1) as f64 * 0.95).round() as usize]
+    }
+
+    /// One control tick. `active` counts serving (non-draining) replicas of
+    /// the scalable pool; `queued` is fleet-wide not-yet-completed work
+    /// (waiting + pending handoffs), used to veto premature scale-down.
+    pub fn decide(&mut self, active: usize, queued: usize) -> Decision {
+        let ttft95 = Self::p95(&self.recent_ttft);
+        let tpot95 = Self::p95(&self.recent_tpot);
+        let breach = ttft95 > self.slo.ttft || tpot95 > self.slo.tpot;
+        if breach && !self.pending_up && active < self.cfg.max_replicas {
+            self.pending_up = true;
+            self.scale_ups += 1;
+            return Decision::Up;
+        }
+        let comfortable = !self.recent_ttft.is_empty()
+            && ttft95 < self.cfg.down_frac * self.slo.ttft
+            && tpot95 < self.slo.tpot
+            && queued == 0;
+        // min is clamped to 1: draining the last replica would strand work.
+        if comfortable && active > self.cfg.min_replicas.max(1) {
+            self.scale_downs += 1;
+            return Decision::Down;
+        }
+        Decision::Hold
+    }
+
+    /// The provisioned replica came online.
+    pub fn replica_online(&mut self) {
+        self.pending_up = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scaler(slo_ttft: f64) -> Autoscaler {
+        Autoscaler::new(
+            AutoscaleConfig { window: 16, min_replicas: 1, max_replicas: 4, ..Default::default() },
+            SloTargets { ttft: slo_ttft, tpot: 1.0 },
+        )
+    }
+
+    #[test]
+    fn breach_triggers_single_pending_up() {
+        let mut a = scaler(1.0);
+        for _ in 0..16 {
+            a.observe(5.0, 0.01);
+        }
+        assert_eq!(a.decide(2, 10), Decision::Up);
+        // Second tick while provisioning: no double-fire.
+        assert_eq!(a.decide(2, 10), Decision::Hold);
+        a.replica_online();
+        assert_eq!(a.decide(3, 10), Decision::Up);
+        assert_eq!(a.scale_ups, 2);
+    }
+
+    #[test]
+    fn comfortable_and_idle_scales_down_with_hysteresis() {
+        let mut a = scaler(10.0);
+        for _ in 0..16 {
+            a.observe(0.5, 0.01); // well under 0.25 * 10.0
+        }
+        assert_eq!(a.decide(3, 0), Decision::Down);
+        // Queue pressure vetoes the down-scale.
+        assert_eq!(a.decide(3, 50), Decision::Hold);
+        // Floor respected.
+        assert_eq!(a.decide(1, 0), Decision::Hold);
+    }
+
+    #[test]
+    fn mid_band_holds() {
+        let mut a = scaler(10.0);
+        for _ in 0..16 {
+            a.observe(5.0, 0.01); // between 2.5 and 10.0
+        }
+        assert_eq!(a.decide(2, 0), Decision::Hold);
+    }
+
+    #[test]
+    fn max_replicas_caps_upscale() {
+        let mut a = scaler(1.0);
+        for _ in 0..16 {
+            a.observe(9.0, 0.01);
+        }
+        assert_eq!(a.decide(4, 10), Decision::Hold);
+    }
+
+    #[test]
+    fn empty_window_never_scales_down() {
+        let mut a = scaler(10.0);
+        assert_eq!(a.decide(3, 0), Decision::Hold);
+    }
+}

@@ -1,0 +1,172 @@
+//! Fleet-level serving metrics: per-request TTFT/TPOT percentiles and
+//! SLO-conditioned goodput, built on [`crate::util::stats::Summary`].
+//!
+//! Definitions follow the serving literature the fleet layer targets:
+//!
+//! - **TTFT** (time to first token): arrival → completion of the request's
+//!   prefill (wherever that prefill ran).
+//! - **TPOT** (time per output token): (completion − first token) /
+//!   (output tokens − 1); zero for single-token outputs.
+//! - **SLO attainment**: fraction of completed requests meeting *both*
+//!   targets; **goodput**: output tokens of SLO-meeting requests per
+//!   second of makespan — the "useful" half of raw throughput.
+
+use crate::util::stats::Summary;
+
+/// Latency targets a request must meet to count toward goodput.
+#[derive(Clone, Copy, Debug)]
+pub struct SloTargets {
+    /// Max acceptable time-to-first-token (s).
+    pub ttft: f64,
+    /// Max acceptable time-per-output-token (s).
+    pub tpot: f64,
+}
+
+impl Default for SloTargets {
+    fn default() -> Self {
+        // Interactive-serving ballpark: sub-5s first token, ≥5 tok/s decode.
+        SloTargets { ttft: 5.0, tpot: 0.2 }
+    }
+}
+
+/// Streaming per-request accumulator the fleet simulation feeds.
+#[derive(Clone, Debug, Default)]
+pub struct FleetMetrics {
+    ttft: Summary,
+    tpot: Summary,
+    completed: usize,
+    good_requests: usize,
+    good_tokens: u64,
+    output_tokens: u64,
+}
+
+impl FleetMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one completed request.
+    pub fn record(&mut self, ttft: f64, tpot: f64, out_tokens: u64, slo: &SloTargets) {
+        self.ttft.add(ttft);
+        self.tpot.add(tpot);
+        self.completed += 1;
+        self.output_tokens += out_tokens;
+        if ttft <= slo.ttft && tpot <= slo.tpot {
+            self.good_requests += 1;
+            self.good_tokens += out_tokens;
+        }
+    }
+
+    pub fn completed(&self) -> usize {
+        self.completed
+    }
+
+    /// Freeze into a report. `makespan` is the time of the last completion.
+    pub fn report(&self, makespan: f64) -> FleetReport {
+        let pct = |s: &Summary, q: f64| if s.n() == 0 { 0.0 } else { s.percentile(q) };
+        let span = makespan.max(1e-9);
+        FleetReport {
+            completed: self.completed,
+            output_tokens: self.output_tokens,
+            makespan,
+            throughput: self.output_tokens as f64 / span,
+            ttft_p50: pct(&self.ttft, 50.0),
+            ttft_p95: pct(&self.ttft, 95.0),
+            ttft_p99: pct(&self.ttft, 99.0),
+            ttft_mean: if self.ttft.n() == 0 { 0.0 } else { self.ttft.mean() },
+            tpot_p50: pct(&self.tpot, 50.0),
+            tpot_p95: pct(&self.tpot, 95.0),
+            tpot_p99: pct(&self.tpot, 99.0),
+            slo_attainment: if self.completed == 0 {
+                0.0
+            } else {
+                self.good_requests as f64 / self.completed as f64
+            },
+            goodput: self.good_tokens as f64 / span,
+            scale_ups: 0,
+            scale_downs: 0,
+            peak_replicas: 0,
+            handoffs: 0,
+            handoff_gb: 0.0,
+            max_committed_pages: 0,
+            over_capacity_routes: 0,
+        }
+    }
+}
+
+/// Outcome of one fleet run — everything the tables, benches and tests
+/// consume. Scale/handoff/router fields are filled in by the simulation
+/// after [`FleetMetrics::report`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetReport {
+    pub completed: usize,
+    pub output_tokens: u64,
+    /// Time of the last request completion (s).
+    pub makespan: f64,
+    /// Raw output tokens/s over the makespan.
+    pub throughput: f64,
+    pub ttft_p50: f64,
+    pub ttft_p95: f64,
+    pub ttft_p99: f64,
+    pub ttft_mean: f64,
+    pub tpot_p50: f64,
+    pub tpot_p95: f64,
+    pub tpot_p99: f64,
+    /// Fraction of requests meeting both SLO targets.
+    pub slo_attainment: f64,
+    /// Output tokens/s counting only SLO-meeting requests.
+    pub goodput: f64,
+    pub scale_ups: usize,
+    pub scale_downs: usize,
+    pub peak_replicas: usize,
+    /// Prefill→decode KV transfers performed (disaggregated mode).
+    pub handoffs: u64,
+    /// Total KV bytes moved by handoffs, in GB.
+    pub handoff_gb: f64,
+    /// Max pages the router ever had committed against one replica.
+    pub max_committed_pages: usize,
+    /// Times the router had to place a request past every replica's
+    /// KV-capacity bound (pressure-relief path; 0 under KV-aware routing
+    /// with adequate capacity).
+    pub over_capacity_routes: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn goodput_counts_only_slo_meeting_requests() {
+        let slo = SloTargets { ttft: 1.0, tpot: 0.1 };
+        let mut m = FleetMetrics::new();
+        m.record(0.5, 0.05, 100, &slo); // good
+        m.record(2.0, 0.05, 100, &slo); // ttft violation
+        m.record(0.5, 0.50, 100, &slo); // tpot violation
+        let r = m.report(10.0);
+        assert_eq!(r.completed, 3);
+        assert_eq!(r.output_tokens, 300);
+        assert!((r.throughput - 30.0).abs() < 1e-9);
+        assert!((r.goodput - 10.0).abs() < 1e-9);
+        assert!((r.slo_attainment - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_metrics_report_is_all_zero() {
+        let r = FleetMetrics::new().report(0.0);
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.ttft_p99, 0.0);
+        assert_eq!(r.slo_attainment, 0.0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let slo = SloTargets::default();
+        let mut m = FleetMetrics::new();
+        for i in 1..=100 {
+            m.record(i as f64 * 0.01, i as f64 * 0.001, 10, &slo);
+        }
+        let r = m.report(1.0);
+        assert!(r.ttft_p50 <= r.ttft_p95 && r.ttft_p95 <= r.ttft_p99);
+        assert!(r.tpot_p50 <= r.tpot_p95 && r.tpot_p95 <= r.tpot_p99);
+    }
+}

@@ -1,0 +1,716 @@
+//! Multi-replica SLO-aware serving fleet — the layer *above* the engine.
+//!
+//! The paper's serving experiments (Figs 9/17/18) stop at one engine
+//! replica; production serving needs routing, load-balancing and scaling
+//! across many. This module is a discrete-event fleet simulation over
+//! [`crate::simnet::EventQueue`] in which every replica wraps the **real**
+//! scheduling machinery — [`crate::engine::batcher::Batcher`] +
+//! [`crate::engine::kv::PagedKv`] — with per-step costs from
+//! [`crate::serving::step_time`] (perfmodel GEMMs + the chosen
+//! [`crate::collectives::AllReduceImpl`]). Pieces:
+//!
+//! - [`router`] — pluggable placement policies (round-robin,
+//!   least-outstanding-tokens, KV-pressure-aware, session-affinity) with
+//!   per-replica KV-commitment bookkeeping.
+//! - **Disaggregated prefill/decode pools** — prefill replicas produce the
+//!   first token, then the prompt's KV pages migrate to a decode replica
+//!   as a real network transfer over [`crate::cluster::Topology`]'s
+//!   inter-node link (FIFO-serialized per target NIC).
+//! - [`autoscaler`] — adds replicas when recent p95 TTFT/TPOT breach the
+//!   SLO, drains them (no new work; retire when idle) when comfortable.
+//! - [`metrics`] — p50/p95/p99 TTFT, TPOT, SLO attainment and goodput via
+//!   [`crate::util::stats`].
+//!
+//! Invariants enforced at the end of every run (and property-tested):
+//! every admitted request completes exactly once across the fleet, no
+//! replica leaks KV pages, and the whole simulation is bit-deterministic
+//! for a fixed trace seed.
+
+pub mod autoscaler;
+pub mod metrics;
+pub mod router;
+
+use crate::engine::batcher::{Batcher, Request, StepBatch};
+use crate::engine::kv::{KvError, PagedKv};
+use crate::serving::{step_time, ServeConfig};
+use crate::simnet::{EventQueue, Server};
+use autoscaler::{AutoscaleConfig, Autoscaler, Decision};
+use metrics::{FleetMetrics, FleetReport, SloTargets};
+use router::{ReplicaView, RoutePolicy, Router};
+use std::collections::VecDeque;
+
+/// Which pool a replica serves in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolKind {
+    /// Full-lifecycle replica (prefill + decode on the same engine).
+    Monolithic,
+    /// Prefill-only replica: runs prompts, produces the first token, then
+    /// hands the KV cache off.
+    Prefill,
+    /// Decode-only replica: receives prefilled KV and streams tokens.
+    Decode,
+}
+
+/// Fleet deployment description.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Per-replica engine configuration (model, topology, all-reduce,
+    /// concurrency, KV sizing) — every replica is one such engine.
+    pub base: ServeConfig,
+    /// Routing policy for the monolithic pool (or, when disaggregated,
+    /// for prefill→decode placement; prefill placement is always
+    /// least-outstanding).
+    pub policy: RoutePolicy,
+    /// Replicas in the scalable pool (monolithic, or decode when
+    /// disaggregated).
+    pub replicas: usize,
+    /// Prefill-pool replicas; 0 = monolithic fleet.
+    pub prefill_replicas: usize,
+    pub slo: SloTargets,
+    /// SLO-driven scaling of the scalable pool; `None` = fixed fleet.
+    pub autoscale: Option<AutoscaleConfig>,
+    /// Session key space for [`RoutePolicy::SessionAffinity`].
+    pub sessions: u64,
+}
+
+impl FleetConfig {
+    pub fn new(base: ServeConfig, replicas: usize) -> Self {
+        FleetConfig {
+            base,
+            policy: RoutePolicy::LeastOutstanding,
+            replicas,
+            prefill_replicas: 0,
+            slo: SloTargets::default(),
+            autoscale: None,
+            sessions: 64,
+        }
+    }
+
+    pub fn with_policy(mut self, policy: RoutePolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Split the fleet into `prefill` prefill-only replicas plus the
+    /// existing `replicas` as decode-only.
+    pub fn disaggregated(mut self, prefill: usize) -> Self {
+        assert!(prefill >= 1, "disaggregation needs at least one prefill replica");
+        self.prefill_replicas = prefill;
+        self
+    }
+
+    pub fn with_slo(mut self, slo: SloTargets) -> Self {
+        self.slo = slo;
+        self
+    }
+
+    pub fn with_autoscale(mut self, cfg: AutoscaleConfig) -> Self {
+        self.autoscale = Some(cfg);
+        self
+    }
+
+    fn disaggregated_mode(&self) -> bool {
+        self.prefill_replicas > 0
+    }
+
+    fn scalable_kind(&self) -> PoolKind {
+        if self.disaggregated_mode() {
+            PoolKind::Decode
+        } else {
+            PoolKind::Monolithic
+        }
+    }
+}
+
+/// Run `reqs` (sorted by arrival) through the fleet; panics on any
+/// conservation/allocator invariant violation, returns the metrics report.
+pub fn run_fleet(cfg: &FleetConfig, reqs: &[Request]) -> FleetReport {
+    assert!(cfg.replicas >= 1, "need at least one serving replica");
+    let page_tokens = cfg.base.kv_page_tokens.max(1);
+    for (i, r) in reqs.iter().enumerate() {
+        // The simulation indexes per-request state by id, so ids must be
+        // the dense 0..n the trace generator produces.
+        assert_eq!(r.id, i as u64, "request ids must be dense 0..n in arrival order");
+        // A request that cannot fit an *empty* replica would deadlock the
+        // fleet exactly as it would a single engine; reject up front.
+        assert!(
+            r.prompt_len.div_ceil(page_tokens) <= cfg.base.kv_pages,
+            "request {} prompt ({} tokens) exceeds a replica's KV capacity",
+            r.id,
+            r.prompt_len
+        );
+        assert!(
+            r.prompt_len <= cfg.base.max_step_tokens,
+            "request {} prompt ({} tokens) exceeds the per-step token budget",
+            r.id,
+            r.prompt_len
+        );
+    }
+    Sim::new(cfg, reqs).run()
+}
+
+// ---------------------------------------------------------------------
+// Internals
+// ---------------------------------------------------------------------
+
+enum Ev {
+    Arrival(usize),
+    StepDone(usize),
+    Handoff { replica: usize, req: usize },
+    ScaleTick,
+    ReplicaUp,
+}
+
+/// Load the router has committed for one request against one replica.
+#[derive(Clone, Copy, Debug)]
+struct Commit {
+    replica: usize,
+    pages: usize,
+    tokens: u64,
+}
+
+struct Replica {
+    kind: PoolKind,
+    kv: PagedKv,
+    batcher: Batcher,
+    stepping: bool,
+    current: Option<StepBatch>,
+    draining: bool,
+    retired: bool,
+    /// Handed-off requests waiting for concurrency/KV admission.
+    pending: VecDeque<usize>,
+    /// Ingress NIC serializing KV handoffs into this replica.
+    ingress: Server,
+}
+
+struct Sim<'a> {
+    cfg: &'a FleetConfig,
+    reqs: &'a [Request],
+    q: EventQueue<Ev>,
+    replicas: Vec<Replica>,
+    router: Router,
+    autoscaler: Option<Autoscaler>,
+    metrics: FleetMetrics,
+    first_token: Vec<f64>,
+    /// Tokens actually produced per request (prefill's first token + one
+    /// per decode-step participation) — differs from the nominal
+    /// `decode_len` only when KV exhaustion truncated a decode.
+    produced: Vec<u32>,
+    done: Vec<bool>,
+    commit_prefill: Vec<Option<Commit>>,
+    commit_main: Vec<Option<Commit>>,
+    last_done: f64,
+    peak_replicas: usize,
+    handoffs: u64,
+    handoff_bytes: u64,
+}
+
+impl<'a> Sim<'a> {
+    fn new(cfg: &'a FleetConfig, reqs: &'a [Request]) -> Self {
+        let mut sim = Sim {
+            cfg,
+            reqs,
+            q: EventQueue::new(),
+            replicas: Vec::new(),
+            router: Router::new(0),
+            autoscaler: cfg.autoscale.map(|a| Autoscaler::new(a, cfg.slo)),
+            metrics: FleetMetrics::new(),
+            first_token: vec![f64::NAN; reqs.len()],
+            produced: vec![0; reqs.len()],
+            done: vec![false; reqs.len()],
+            commit_prefill: vec![None; reqs.len()],
+            commit_main: vec![None; reqs.len()],
+            last_done: 0.0,
+            peak_replicas: 0,
+            handoffs: 0,
+            handoff_bytes: 0,
+        };
+        let scalable = cfg.scalable_kind();
+        for _ in 0..cfg.replicas {
+            sim.push_replica(scalable);
+        }
+        for _ in 0..cfg.prefill_replicas {
+            sim.push_replica(PoolKind::Prefill);
+        }
+        for (i, r) in reqs.iter().enumerate() {
+            sim.q.push(r.arrival, Ev::Arrival(i));
+        }
+        if let Some(a) = &sim.autoscaler {
+            sim.q.push(a.cfg.tick, Ev::ScaleTick);
+        }
+        sim
+    }
+
+    fn run(mut self) -> FleetReport {
+        while let Some((now, ev)) = self.q.pop() {
+            match ev {
+                Ev::Arrival(i) => self.on_arrival(i),
+                Ev::StepDone(r) => self.on_step_done(r, now),
+                Ev::Handoff { replica, req } => self.on_handoff(replica, req),
+                Ev::ScaleTick => self.on_scale_tick(),
+                Ev::ReplicaUp => self.on_replica_up(),
+            }
+        }
+        // Conservation + allocator cleanliness: the fleet's contract.
+        assert_eq!(self.metrics.completed(), self.reqs.len(), "request conservation violated");
+        for (i, d) in self.done.iter().enumerate() {
+            assert!(*d, "request {i} never completed");
+        }
+        for rep in &self.replicas {
+            assert_eq!(rep.kv.used_pages(), 0, "replica leaked KV pages");
+            rep.kv.check_invariants();
+        }
+        let mut report = self.metrics.report(self.last_done);
+        if let Some(a) = &self.autoscaler {
+            report.scale_ups = a.scale_ups;
+            report.scale_downs = a.scale_downs;
+        }
+        report.peak_replicas = self.peak_replicas;
+        report.handoffs = self.handoffs;
+        report.handoff_gb = self.handoff_bytes as f64 / (1u64 << 30) as f64;
+        report.max_committed_pages = self.router.max_committed_pages;
+        report.over_capacity_routes = self.router.over_capacity_routes;
+        report
+    }
+
+    // -- event handlers ------------------------------------------------
+
+    fn on_arrival(&mut self, i: usize) {
+        let req = self.reqs[i];
+        let session = self.session_of(req.id);
+        if self.cfg.disaggregated_mode() {
+            let views = self.views(PoolKind::Prefill);
+            let pages = self.pages_for(req.prompt_len);
+            let tokens = req.prompt_len as u64;
+            let target =
+                self.router.route(RoutePolicy::LeastOutstanding, &views, session, pages, tokens);
+            self.commit_prefill[i] = Some(Commit { replica: target, pages, tokens });
+            self.replicas[target].batcher.submit(req);
+            self.try_start(target);
+        } else {
+            let views = self.views(PoolKind::Monolithic);
+            let pages = self.pages_for(req.prompt_len + req.decode_len);
+            let tokens = (req.prompt_len + req.decode_len) as u64;
+            let target = self.router.route(self.cfg.policy, &views, session, pages, tokens);
+            self.commit_main[i] = Some(Commit { replica: target, pages, tokens });
+            self.replicas[target].batcher.submit(req);
+            self.try_start(target);
+        }
+    }
+
+    fn on_step_done(&mut self, r: usize, now: f64) {
+        let (kind, step) = {
+            let rep = &mut self.replicas[r];
+            rep.stepping = false;
+            (rep.kind, rep.current.take().expect("step in flight"))
+        };
+        // A prefill's completion IS the first token, in every pool kind.
+        for (id, _) in &step.prefills {
+            self.first_token[*id as usize] = now;
+            self.produced[*id as usize] += 1;
+        }
+        for id in &step.decodes {
+            self.produced[*id as usize] += 1;
+        }
+        let reqs = self.reqs;
+        let finished = {
+            let rep = &mut self.replicas[r];
+            let force_single = kind == PoolKind::Prefill;
+            rep.batcher.complete_step_by(&step, &mut rep.kv, move |id| {
+                let mut rq = reqs[id as usize];
+                if force_single {
+                    // Prefill replicas only produce the first token; the
+                    // rest of the decode happens after the KV handoff.
+                    rq.decode_len = 1;
+                }
+                rq
+            });
+            rep.batcher.take_finished()
+        };
+        for id in finished {
+            let i = id as usize;
+            match kind {
+                PoolKind::Prefill => {
+                    if let Some(c) = self.commit_prefill[i].take() {
+                        self.router.complete(c.replica, c.pages, c.tokens);
+                    }
+                    if reqs[i].decode_len <= 1 {
+                        self.complete_request(i, now);
+                    } else {
+                        self.start_handoff(i, now);
+                    }
+                }
+                PoolKind::Monolithic | PoolKind::Decode => {
+                    if let Some(c) = self.commit_main[i].take() {
+                        self.router.complete(c.replica, c.pages, c.tokens);
+                    }
+                    self.complete_request(i, now);
+                }
+            }
+        }
+        self.try_start(r);
+        self.maybe_retire(r);
+    }
+
+    /// Ship request `i`'s prompt KV from its prefill replica to a decode
+    /// replica chosen by the configured policy.
+    fn start_handoff(&mut self, i: usize, now: f64) {
+        let req = self.reqs[i];
+        let views = self.views(PoolKind::Decode);
+        let pages = self.pages_for(req.prompt_len + req.decode_len);
+        let tokens = req.decode_len as u64;
+        let target =
+            self.router.route(self.cfg.policy, &views, self.session_of(req.id), pages, tokens);
+        self.commit_main[i] = Some(Commit { replica: target, pages, tokens });
+        let bytes = self.kv_handoff_bytes(req.prompt_len);
+        let link = self.cfg.base.topo.inter;
+        let (_start, end) = self.replicas[target].ingress.book(now, bytes as f64 / link.beta);
+        self.handoffs += 1;
+        self.handoff_bytes += bytes;
+        self.q.push(end + link.alpha, Ev::Handoff { replica: target, req: i });
+    }
+
+    fn on_handoff(&mut self, replica: usize, req: usize) {
+        // The transfer raced a scale-down: if the target retired while the
+        // KV was in flight, release the stale commitment and re-ship to a
+        // live decode replica (the pool always keeps ≥1 accepting).
+        if self.replicas[replica].retired {
+            if let Some(c) = self.commit_main[req].take() {
+                self.router.complete(c.replica, c.pages, c.tokens);
+            }
+            let now = self.q.now();
+            self.start_handoff(req, now);
+            return;
+        }
+        let cap = self.cfg.base.max_concurrency;
+        let rep = &mut self.replicas[replica];
+        if rep.batcher.running_len() < cap {
+            match rep.batcher.submit_prefilled(self.reqs[req], &mut rep.kv) {
+                Ok(()) => {}
+                Err(KvError::OutOfPages) => rep.pending.push_back(req),
+                Err(e) => panic!("handoff admission failed: {e:?}"),
+            }
+        } else {
+            rep.pending.push_back(req);
+        }
+        self.try_start(replica);
+    }
+
+    fn on_scale_tick(&mut self) {
+        if self.metrics.completed() >= self.reqs.len() {
+            return; // fleet drained; stop the control loop
+        }
+        let kind = self.cfg.scalable_kind();
+        let active = self
+            .replicas
+            .iter()
+            .filter(|r| r.kind == kind && !r.retired && !r.draining)
+            .count();
+        let queued: usize = self
+            .replicas
+            .iter()
+            .map(|r| r.batcher.waiting_len() + r.pending.len())
+            .sum();
+        let decision = match self.autoscaler.as_mut() {
+            Some(a) => a.decide(active, queued),
+            None => Decision::Hold,
+        };
+        match decision {
+            Decision::Up => {
+                let delay = self.autoscaler.as_ref().expect("decided").cfg.provision_delay;
+                self.q.push_in(delay, Ev::ReplicaUp);
+            }
+            Decision::Down => {
+                // Drain the highest-indexed active replica: no new routes,
+                // retire once its in-flight work drains.
+                if let Some(victim) = (0..self.replicas.len()).rev().find(|&i| {
+                    let r = &self.replicas[i];
+                    r.kind == kind && !r.retired && !r.draining
+                }) {
+                    self.replicas[victim].draining = true;
+                    self.router.evict_replica_sessions(victim);
+                    self.maybe_retire(victim);
+                }
+            }
+            Decision::Hold => {}
+        }
+        let tick = self.autoscaler.as_ref().map(|a| a.cfg.tick).unwrap_or(0.0);
+        if tick > 0.0 {
+            self.q.push_in(tick, Ev::ScaleTick);
+        }
+    }
+
+    fn on_replica_up(&mut self) {
+        if let Some(a) = self.autoscaler.as_mut() {
+            a.replica_online();
+        }
+        if self.metrics.completed() >= self.reqs.len() {
+            return; // capacity arrived after the rush ended
+        }
+        self.push_replica(self.cfg.scalable_kind());
+    }
+
+    // -- mechanics -----------------------------------------------------
+
+    fn push_replica(&mut self, kind: PoolKind) {
+        let b = &self.cfg.base;
+        self.replicas.push(Replica {
+            kind,
+            kv: PagedKv::new(b.kv_pages, b.kv_page_tokens),
+            batcher: Batcher::new(b.max_concurrency, b.max_step_tokens),
+            stepping: false,
+            current: None,
+            draining: false,
+            retired: false,
+            pending: VecDeque::new(),
+            ingress: Server::new(),
+        });
+        self.router.grow(self.replicas.len());
+        let live = self.replicas.iter().filter(|r| !r.retired).count();
+        self.peak_replicas = self.peak_replicas.max(live);
+    }
+
+    /// Admit pending handoffs, then launch the next engine step if idle.
+    fn try_start(&mut self, r: usize) {
+        self.try_admit_pending(r);
+        let rep = &mut self.replicas[r];
+        if rep.stepping {
+            return;
+        }
+        let step = rep.batcher.next_step(&mut rep.kv);
+        if step.is_empty() {
+            return;
+        }
+        let dur = step_time(&self.cfg.base, &step);
+        rep.current = Some(step);
+        rep.stepping = true;
+        self.q.push_in(dur, Ev::StepDone(r));
+    }
+
+    fn try_admit_pending(&mut self, r: usize) {
+        let cap = self.cfg.base.max_concurrency;
+        let reqs = self.reqs;
+        let rep = &mut self.replicas[r];
+        while let Some(&i) = rep.pending.front() {
+            if rep.batcher.running_len() >= cap
+                || rep.batcher.submit_prefilled(reqs[i], &mut rep.kv).is_err()
+            {
+                break;
+            }
+            rep.pending.pop_front();
+        }
+    }
+
+    fn maybe_retire(&mut self, r: usize) {
+        let rep = &mut self.replicas[r];
+        if rep.draining
+            && !rep.retired
+            && !rep.stepping
+            && rep.batcher.idle()
+            && rep.pending.is_empty()
+        {
+            rep.retired = true;
+        }
+    }
+
+    fn complete_request(&mut self, i: usize, now: f64) {
+        assert!(!self.done[i], "request {i} completed twice");
+        self.done[i] = true;
+        let r = &self.reqs[i];
+        let ft = self.first_token[i];
+        debug_assert!(ft.is_finite(), "request {i} finished without a first token");
+        let ttft = ft - r.arrival;
+        // Credit only tokens that were actually produced: a KV-exhaustion
+        // truncation must not inflate throughput or deflate TPOT.
+        let toks = self.produced[i].max(1);
+        let tpot = if toks > 1 { (now - ft) / (toks - 1) as f64 } else { 0.0 };
+        self.metrics.record(ttft, tpot, toks as u64, &self.cfg.slo);
+        if let Some(a) = self.autoscaler.as_mut() {
+            a.observe(ttft, tpot);
+        }
+        self.last_done = now;
+    }
+
+    fn views(&self, kind: PoolKind) -> Vec<ReplicaView> {
+        self.replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.kind == kind && !r.retired)
+            .map(|(id, r)| ReplicaView {
+                id,
+                accepting: !r.draining,
+                total_pages: self.cfg.base.kv_pages,
+            })
+            .collect()
+    }
+
+    fn pages_for(&self, tokens: usize) -> usize {
+        tokens.max(1).div_ceil(self.cfg.base.kv_page_tokens.max(1))
+    }
+
+    /// KV bytes that migrate on a prefill→decode handoff: the full prompt
+    /// cache across all layers (the TP shards move in parallel over the
+    /// per-node NICs; the aggregate bytes are what the fabric carries).
+    fn kv_handoff_bytes(&self, prompt_len: usize) -> u64 {
+        (prompt_len * self.cfg.base.model.n_layers) as u64
+            * self.cfg.base.model.kv_bytes_per_token_layer()
+    }
+
+    fn session_of(&self, id: u64) -> u64 {
+        (id.wrapping_mul(0x9E3779B97F4A7C15) >> 33) % self.cfg.sessions.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::AllReduceImpl;
+    use crate::serving::{fig9_config, Deployment};
+    use crate::trace::{LenDist, RateShape, TraceSpec};
+    use crate::util::prop::{check, Gen};
+
+    fn small_spec(n: usize, rate: f64, seed: u64) -> TraceSpec {
+        TraceSpec {
+            num_prompts: n,
+            rate,
+            burstiness: 2.0,
+            shape: RateShape::Flat,
+            input: LenDist { median: 96.0, sigma: 0.8, min: 8, max: 512 },
+            output: LenDist { median: 48.0, sigma: 0.6, min: 1, max: 256 },
+            seed,
+        }
+    }
+
+    fn base_cfg(concurrency: usize) -> ServeConfig {
+        let mut cfg =
+            fig9_config(Deployment::Tp(AllReduceImpl::NcclAuto), concurrency, "perlmutter", 16);
+        cfg.kv_pages = 4096; // small enough that KV pressure is reachable
+        cfg
+    }
+
+    #[test]
+    fn fleet_conserves_requests_all_policies_and_modes() {
+        let reqs = small_spec(60, 4.0, 11).generate();
+        for policy in RoutePolicy::all() {
+            for prefill in [0usize, 1] {
+                let mut cfg = FleetConfig::new(base_cfg(32), 3).with_policy(policy);
+                if prefill > 0 {
+                    cfg = cfg.disaggregated(prefill);
+                }
+                // run_fleet asserts conservation + KV cleanliness itself.
+                let rep = run_fleet(&cfg, &reqs);
+                assert_eq!(rep.completed, 60, "{policy:?} prefill={prefill}");
+                assert!(rep.throughput > 0.0 && rep.makespan > 0.0);
+                if prefill > 0 {
+                    let multi_tok =
+                        reqs.iter().filter(|r| r.decode_len > 1).count() as u64;
+                    assert_eq!(rep.handoffs, multi_tok);
+                    assert!(rep.handoff_gb > 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fleet_deterministic_for_fixed_seed() {
+        let reqs = small_spec(50, 5.0, 23).generate();
+        let cfg = FleetConfig::new(base_cfg(32), 4).with_policy(RoutePolicy::KvPressure);
+        let a = run_fleet(&cfg, &reqs);
+        let b = run_fleet(&cfg, &reqs);
+        assert_eq!(a, b, "fleet must be bit-deterministic");
+    }
+
+    #[test]
+    fn kv_pressure_routing_respects_capacity() {
+        // Tight KV: each replica fits only a handful of requests' worth of
+        // pages. Worst-case commitment per request is ceil(900/16) = 57
+        // pages, so 16 outstanding requests (≤ 912 pages) always fit the
+        // 4×256-page fleet: the KV-aware router must keep every per-replica
+        // commitment within capacity without ever taking the relief path.
+        let mut spec = small_spec(16, 20.0, 31);
+        spec.input = LenDist { median: 400.0, sigma: 0.3, min: 64, max: 600 };
+        spec.output = LenDist { median: 200.0, sigma: 0.3, min: 16, max: 300 };
+        let reqs = spec.generate();
+        let mut base = base_cfg(16);
+        base.kv_pages = 256; // 4096 tokens per replica
+        let cfg = FleetConfig::new(base, 4).with_policy(RoutePolicy::KvPressure);
+        let rep = run_fleet(&cfg, &reqs);
+        assert!(
+            rep.max_committed_pages <= 256,
+            "router over-committed: {} pages",
+            rep.max_committed_pages
+        );
+        assert_eq!(rep.over_capacity_routes, 0);
+        assert_eq!(rep.completed, 16);
+    }
+
+    #[test]
+    fn property_fleet_conservation_random_configs() {
+        check("fleet conserves requests", 12, |g: &mut Gen| {
+            let n = g.usize(5, 40);
+            let reqs = small_spec(n, g.f64(1.0, 12.0), g.u64(1, 1 << 20)).generate();
+            let policy = *g.pick(&RoutePolicy::all());
+            let replicas = g.usize(1, 5);
+            let prefill = if g.bool() { g.usize(1, 2) } else { 0 };
+            let mut cfg =
+                FleetConfig::new(base_cfg(g.pow2(2, 6)), replicas).with_policy(policy);
+            if prefill > 0 {
+                cfg = cfg.disaggregated(prefill);
+            }
+            cfg.sessions = g.u64(1, 16);
+            let rep = run_fleet(&cfg, &reqs);
+            assert_eq!(rep.completed, n);
+        });
+    }
+
+    #[test]
+    fn disaggregation_cuts_ttft_on_decode_heavy_load() {
+        // Decode-heavy requests occupy monolithic replicas for their whole
+        // lifetime, so waiting prompts queue behind slots held by long
+        // decodes; a dedicated prefill pool answers first tokens while the
+        // decode pool streams. Same total replica count (4) both ways.
+        // ~5 req/s × ~7 s/request ≈ 35 concurrent > 4×8 slots: saturated.
+        let mut spec = small_spec(60, 5.0, 7);
+        spec.output = LenDist { median: 600.0, sigma: 0.2, min: 256, max: 1024 };
+        let reqs = spec.generate();
+        let mono = run_fleet(&FleetConfig::new(base_cfg(8), 4), &reqs);
+        let disagg = run_fleet(&FleetConfig::new(base_cfg(8), 3).disaggregated(1), &reqs);
+        assert!(
+            disagg.ttft_p99 < mono.ttft_p99,
+            "disaggregated TTFT p99 {} should beat monolithic {}",
+            disagg.ttft_p99,
+            mono.ttft_p99
+        );
+    }
+
+    #[test]
+    fn autoscaler_reacts_to_ramp() {
+        let mut spec = small_spec(120, 3.0, 5);
+        spec.shape = RateShape::Ramp { from: 0.3, to: 6.0 };
+        let reqs = spec.generate();
+        let slo = SloTargets { ttft: 0.5, tpot: 0.2 };
+        let auto = AutoscaleConfig {
+            tick: 2.0,
+            provision_delay: 4.0,
+            min_replicas: 1,
+            max_replicas: 8,
+            window: 32,
+            down_frac: 0.25,
+        };
+        let cfg = FleetConfig::new(base_cfg(8), 1).with_slo(slo).with_autoscale(auto);
+        let rep = run_fleet(&cfg, &reqs);
+        assert!(rep.scale_ups > 0, "ramp load must trigger scale-up");
+        assert!(rep.peak_replicas > 1);
+        assert_eq!(rep.completed, 120);
+    }
+
+    #[test]
+    fn session_affinity_pins_sessions() {
+        let reqs = small_spec(40, 6.0, 13).generate();
+        let mut cfg =
+            FleetConfig::new(base_cfg(32), 4).with_policy(RoutePolicy::SessionAffinity);
+        cfg.sessions = 4;
+        let rep = run_fleet(&cfg, &reqs);
+        assert_eq!(rep.completed, 40);
+    }
+}

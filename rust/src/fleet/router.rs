@@ -1,0 +1,293 @@
+//! Request router: pluggable placement policies over a replica pool, with
+//! per-replica load and KV-commitment bookkeeping.
+//!
+//! The router is deliberately *stateful about its own decisions* only: it
+//! tracks the tokens and KV pages it has committed to each replica (and
+//! releases them on completion), rather than peeking inside replica
+//! internals on every arrival. That makes routing O(replicas) per request,
+//! keeps the decision deterministic, and gives the KV-capacity invariant a
+//! precise statement: under [`RoutePolicy::KvPressure`], the router never
+//! commits more pages against a replica than its allocator owns, as long
+//! as *some* replica can fit the request (otherwise the pressure-relief
+//! path places it on the least-committed replica, where it waits in the
+//! batcher queue — admission is still gated by the real allocator, so the
+//! replica itself can never over-allocate).
+
+use std::collections::BTreeMap;
+
+/// Placement policy for new requests (and, in disaggregated mode, for
+/// prefill→decode handoffs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle through accepting replicas.
+    RoundRobin,
+    /// Fewest outstanding (routed, incomplete) tokens.
+    LeastOutstanding,
+    /// Lowest committed-KV-pages fraction; never knowingly over-commits.
+    KvPressure,
+    /// Sticky session→replica mapping (prefix-cache affinity); falls back
+    /// to least-outstanding for new or orphaned sessions.
+    SessionAffinity,
+}
+
+impl RoutePolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::LeastOutstanding => "least-tokens",
+            RoutePolicy::KvPressure => "kv-pressure",
+            RoutePolicy::SessionAffinity => "session-affinity",
+        }
+    }
+
+    pub fn all() -> [RoutePolicy; 4] {
+        [
+            RoutePolicy::RoundRobin,
+            RoutePolicy::LeastOutstanding,
+            RoutePolicy::KvPressure,
+            RoutePolicy::SessionAffinity,
+        ]
+    }
+
+    pub fn by_name(name: &str) -> anyhow::Result<Self> {
+        Ok(match name.to_ascii_lowercase().as_str() {
+            "round-robin" | "rr" => RoutePolicy::RoundRobin,
+            "least-tokens" | "least-outstanding" => RoutePolicy::LeastOutstanding,
+            "kv-pressure" | "kv" => RoutePolicy::KvPressure,
+            "session-affinity" | "session" => RoutePolicy::SessionAffinity,
+            other => anyhow::bail!(
+                "unknown routing policy '{other}' (expected round-robin, least-tokens, \
+                 kv-pressure or session-affinity)"
+            ),
+        })
+    }
+}
+
+/// What the router sees of one replica when placing a request.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplicaView {
+    pub id: usize,
+    /// Replica accepts new work (alive, not draining).
+    pub accepting: bool,
+    /// KV pages its allocator owns in total.
+    pub total_pages: usize,
+}
+
+/// The stateful router.
+#[derive(Clone, Debug, Default)]
+pub struct Router {
+    rr_next: usize,
+    committed_pages: Vec<usize>,
+    outstanding_tokens: Vec<u64>,
+    sessions: BTreeMap<u64, usize>,
+    /// High-water mark of committed pages on any replica.
+    pub max_committed_pages: usize,
+    /// Placements that exceeded every accepting replica's capacity bound.
+    pub over_capacity_routes: u64,
+}
+
+impl Router {
+    pub fn new(replicas: usize) -> Self {
+        Router {
+            rr_next: 0,
+            committed_pages: vec![0; replicas],
+            outstanding_tokens: vec![0; replicas],
+            sessions: BTreeMap::new(),
+            max_committed_pages: 0,
+            over_capacity_routes: 0,
+        }
+    }
+
+    /// Extend bookkeeping when the autoscaler adds replicas.
+    pub fn grow(&mut self, replicas: usize) {
+        while self.committed_pages.len() < replicas {
+            self.committed_pages.push(0);
+            self.outstanding_tokens.push(0);
+        }
+    }
+
+    pub fn committed_pages(&self, replica: usize) -> usize {
+        self.committed_pages[replica]
+    }
+
+    pub fn outstanding_tokens(&self, replica: usize) -> u64 {
+        self.outstanding_tokens[replica]
+    }
+
+    /// Place a request on one of `views` under `policy`, committing
+    /// `pages`/`tokens` of load against the chosen replica until
+    /// [`Router::complete`] releases them. Panics if no view is accepting
+    /// (the fleet always keeps ≥1 accepting replica per pool).
+    ///
+    /// Returns the chosen replica id.
+    pub fn route(
+        &mut self,
+        policy: RoutePolicy,
+        views: &[ReplicaView],
+        session: u64,
+        pages: usize,
+        tokens: u64,
+    ) -> usize {
+        let accepting: Vec<&ReplicaView> = views.iter().filter(|v| v.accepting).collect();
+        assert!(!accepting.is_empty(), "router needs at least one accepting replica");
+        // Capacity pre-filter: never knowingly commit past a replica's KV
+        // allocator. If nothing fits, fall back to least-committed (the
+        // request queues there) and record the relief placement.
+        let fits: Vec<&&ReplicaView> = accepting
+            .iter()
+            .filter(|v| self.committed_pages[v.id] + pages <= v.total_pages)
+            .collect();
+        let pool: Vec<&ReplicaView> = if fits.is_empty() {
+            self.over_capacity_routes += 1;
+            accepting.clone()
+        } else {
+            fits.into_iter().copied().collect()
+        };
+
+        let chosen = match policy {
+            RoutePolicy::RoundRobin => {
+                let idx = self.rr_next % pool.len();
+                self.rr_next = self.rr_next.wrapping_add(1);
+                pool[idx].id
+            }
+            RoutePolicy::LeastOutstanding => self.least_tokens(&pool),
+            RoutePolicy::KvPressure => {
+                // Lowest committed/total fraction, compared exactly via
+                // cross-multiplication (deterministic, no float ties).
+                pool.iter()
+                    .min_by(|a, b| {
+                        let la = self.committed_pages[a.id] * b.total_pages.max(1);
+                        let lb = self.committed_pages[b.id] * a.total_pages.max(1);
+                        la.cmp(&lb).then(a.id.cmp(&b.id))
+                    })
+                    .expect("non-empty pool")
+                    .id
+            }
+            RoutePolicy::SessionAffinity => {
+                let pinned = self.sessions.get(&session).copied();
+                match pinned {
+                    Some(r) if pool.iter().any(|v| v.id == r) => r,
+                    _ => {
+                        let r = self.least_tokens(&pool);
+                        self.sessions.insert(session, r);
+                        r
+                    }
+                }
+            }
+        };
+
+        self.committed_pages[chosen] += pages;
+        self.outstanding_tokens[chosen] += tokens;
+        self.max_committed_pages = self.max_committed_pages.max(self.committed_pages[chosen]);
+        chosen
+    }
+
+    fn least_tokens(&self, pool: &[&ReplicaView]) -> usize {
+        pool.iter()
+            .min_by(|a, b| {
+                self.outstanding_tokens[a.id]
+                    .cmp(&self.outstanding_tokens[b.id])
+                    .then(a.id.cmp(&b.id))
+            })
+            .expect("non-empty pool")
+            .id
+    }
+
+    /// Release a prior commitment (request completed or handed off).
+    pub fn complete(&mut self, replica: usize, pages: usize, tokens: u64) {
+        debug_assert!(self.committed_pages[replica] >= pages, "commitment underflow");
+        self.committed_pages[replica] = self.committed_pages[replica].saturating_sub(pages);
+        self.outstanding_tokens[replica] =
+            self.outstanding_tokens[replica].saturating_sub(tokens);
+    }
+
+    /// Drop session stickiness to a retiring replica so future requests
+    /// re-pin elsewhere.
+    pub fn evict_replica_sessions(&mut self, replica: usize) {
+        self.sessions.retain(|_, r| *r != replica);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn views(n: usize, pages: usize) -> Vec<ReplicaView> {
+        (0..n).map(|id| ReplicaView { id, accepting: true, total_pages: pages }).collect()
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(3);
+        let v = views(3, 1000);
+        let picks: Vec<usize> =
+            (0..6).map(|_| r.route(RoutePolicy::RoundRobin, &v, 0, 1, 1)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_outstanding_prefers_idle_replica() {
+        let mut r = Router::new(2);
+        let v = views(2, 1000);
+        let a = r.route(RoutePolicy::LeastOutstanding, &v, 0, 1, 100);
+        let b = r.route(RoutePolicy::LeastOutstanding, &v, 0, 1, 1);
+        assert_eq!((a, b), (0, 1));
+        r.complete(0, 1, 100);
+        assert_eq!(r.route(RoutePolicy::LeastOutstanding, &v, 0, 1, 1), 0);
+    }
+
+    #[test]
+    fn kv_pressure_never_exceeds_capacity_when_any_fits() {
+        let mut r = Router::new(2);
+        let v = views(2, 10);
+        for _ in 0..4 {
+            r.route(RoutePolicy::KvPressure, &v, 0, 5, 10);
+        }
+        assert_eq!(r.committed_pages(0), 10);
+        assert_eq!(r.committed_pages(1), 10);
+        assert_eq!(r.over_capacity_routes, 0);
+        assert_eq!(r.max_committed_pages, 10);
+        // Fifth placement cannot fit anywhere: relief path, counted.
+        r.route(RoutePolicy::KvPressure, &v, 0, 5, 10);
+        assert_eq!(r.over_capacity_routes, 1);
+    }
+
+    #[test]
+    fn session_affinity_sticks_and_evicts() {
+        let mut r = Router::new(3);
+        let v = views(3, 1000);
+        let first = r.route(RoutePolicy::SessionAffinity, &v, 42, 1, 1000);
+        // Same session goes back despite the load imbalance.
+        let second = r.route(RoutePolicy::SessionAffinity, &v, 42, 1, 1000);
+        assert_eq!(first, second);
+        // A different session balances away.
+        let other = r.route(RoutePolicy::SessionAffinity, &v, 7, 1, 1);
+        assert_ne!(other, first);
+        // After eviction the session re-pins.
+        r.evict_replica_sessions(first);
+        let mut v2 = v.clone();
+        v2[first].accepting = false;
+        let repinned = r.route(RoutePolicy::SessionAffinity, &v2, 42, 1, 1);
+        assert_ne!(repinned, first);
+    }
+
+    #[test]
+    fn draining_replicas_excluded() {
+        let mut r = Router::new(2);
+        let mut v = views(2, 100);
+        v[0].accepting = false;
+        for _ in 0..5 {
+            assert_eq!(r.route(RoutePolicy::RoundRobin, &v, 0, 1, 1), 1);
+        }
+    }
+
+    #[test]
+    fn by_name_parses_and_rejects() {
+        assert_eq!(RoutePolicy::by_name("kv").unwrap(), RoutePolicy::KvPressure);
+        assert_eq!(RoutePolicy::by_name("RR").unwrap(), RoutePolicy::RoundRobin);
+        assert!(RoutePolicy::by_name("random").is_err());
+        for p in RoutePolicy::all() {
+            assert_eq!(RoutePolicy::by_name(p.name()).unwrap(), p);
+        }
+    }
+}

@@ -5,7 +5,9 @@
 //! three-layer Rust + JAX + Pallas stack:
 //!
 //! - **Layer 3 (this crate)** — the coordinator: the YALIS-style inference
-//!   engine ([`engine`]), the serving stack ([`serving`]), the cluster /
+//!   engine ([`engine`]), the single-replica serving stack ([`serving`]),
+//!   the multi-replica SLO-aware serving fleet ([`fleet`]: router +
+//!   disaggregated prefill/decode pools + autoscaler), the cluster /
 //!   network simulation substrate ([`simnet`], [`cluster`]), the collective
 //!   algorithms ([`collectives`]) including the paper's NVRAR (both an
 //!   event-level simulation and a **real** shared-memory implementation over
@@ -23,6 +25,7 @@ pub mod cluster;
 pub mod collectives;
 pub mod coordinator;
 pub mod engine;
+pub mod fleet;
 pub mod metrics;
 pub mod models;
 pub mod moe;

@@ -17,11 +17,43 @@ pub struct TraceSpec {
     pub rate: f64,
     /// Burstiness (Gamma CV²); 1.0 = Poisson, 2.0 = Table 6.
     pub burstiness: f64,
+    /// Time-varying multiplier on `rate` (fleet-autoscaling stimulus).
+    pub shape: RateShape,
     /// Input-length distribution.
     pub input: LenDist,
     /// Output-length distribution.
     pub output: LenDist,
     pub seed: u64,
+}
+
+/// A time-varying request-rate multiplier. Real serving traffic is not
+/// stationary — BurstGPT-style production traces ramp and follow diurnal
+/// cycles — and a fleet autoscaler needs exactly that non-stationarity to
+/// have anything to react to.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RateShape {
+    /// Constant configured rate (the paper's Table 6 setting).
+    Flat,
+    /// Linear ramp of the multiplier from `from` to `to` across the trace
+    /// (by request index, so the shape is independent of the base rate).
+    Ramp { from: f64, to: f64 },
+    /// Diurnal-style sinusoid in *time*: `1 + amplitude·sin(2πt/period)`.
+    Diurnal { period: f64, amplitude: f64 },
+}
+
+impl RateShape {
+    /// Multiplier at trace progress `frac ∈ [0, 1]` and absolute time `t`.
+    /// Clamped away from zero so inter-arrival gaps stay finite.
+    pub fn multiplier(&self, frac: f64, t: f64) -> f64 {
+        let m = match *self {
+            RateShape::Flat => 1.0,
+            RateShape::Ramp { from, to } => from + (to - from) * frac,
+            RateShape::Diurnal { period, amplitude } => {
+                1.0 + amplitude * (std::f64::consts::TAU * t / period.max(1e-9)).sin()
+            }
+        };
+        m.max(0.05)
+    }
 }
 
 /// A token-length distribution (log-normal, truncated).
@@ -58,6 +90,7 @@ impl TraceSpec {
             num_prompts: 1000,
             rate: 10.0,
             burstiness: 2.0,
+            shape: RateShape::Flat,
             input: LenDist { median: 550.0, sigma: 0.9, min: 16, max: 8192 },
             output: LenDist { median: 260.0, sigma: 0.5, min: 8, max: 1024 },
             seed: 0xB0257,
@@ -71,6 +104,7 @@ impl TraceSpec {
             num_prompts: 1000,
             rate: 10.0,
             burstiness: 2.0,
+            shape: RateShape::Flat,
             input: LenDist { median: 950.0, sigma: 0.4, min: 64, max: 4096 },
             output: LenDist { median: 3900.0, sigma: 0.3, min: 256, max: 8192 },
             seed: 0xDEC0DE,
@@ -82,10 +116,14 @@ impl TraceSpec {
         let mut rng = Rng::new(self.seed);
         let shape = 1.0 / self.burstiness;
         let scale = (1.0 / self.rate) / shape; // keep the configured mean
+        let denom = (self.num_prompts.max(2) - 1) as f64;
         let mut t = 0.0;
         let mut out = Vec::with_capacity(self.num_prompts);
         for id in 0..self.num_prompts as u64 {
-            t += rng.gamma(shape, scale);
+            // Instantaneous rate = rate · multiplier: the sampled gap (mean
+            // 1/rate) shrinks where the multiplier is high.
+            let frac = id as f64 / denom;
+            t += rng.gamma(shape, scale) / self.shape.multiplier(frac, t);
             out.push(Request {
                 id,
                 prompt_len: self.input.sample(&mut rng),
@@ -177,6 +215,60 @@ mod tests {
         assert!(a.iter().zip(&b).all(|(x, y)| x.arrival == y.arrival
             && x.prompt_len == y.prompt_len
             && x.decode_len == y.decode_len));
+    }
+
+    #[test]
+    fn lendist_sample_respects_truncation_bounds() {
+        // A wide sigma pushes raw samples far outside [min, max]; every
+        // returned length must still be clamped into the bounds.
+        let d = LenDist { median: 500.0, sigma: 3.0, min: 32, max: 900 };
+        let mut rng = Rng::new(99);
+        let mut saw_min = false;
+        let mut saw_max = false;
+        for _ in 0..5000 {
+            let v = d.sample(&mut rng);
+            assert!((32..=900).contains(&v), "sample {v} out of bounds");
+            saw_min |= v == 32;
+            saw_max |= v == 900;
+        }
+        // With sigma 3 both tails must actually be hit (clamping active).
+        assert!(saw_min && saw_max);
+        // Degenerate distribution: min == max pins every sample.
+        let pin = LenDist { median: 10.0, sigma: 1.0, min: 7, max: 7 };
+        assert_eq!(pin.sample(&mut rng), 7);
+    }
+
+    #[test]
+    fn ramp_shape_compresses_late_arrivals() {
+        let mut flat = TraceSpec::burstgpt();
+        flat.shape = RateShape::Flat;
+        let mut ramp = TraceSpec::burstgpt();
+        ramp.shape = RateShape::Ramp { from: 0.5, to: 4.0 };
+        let half_span = |reqs: &[Request]| {
+            let mid = reqs.len() / 2;
+            let first = reqs[mid - 1].arrival - reqs[0].arrival;
+            let second = reqs[reqs.len() - 1].arrival - reqs[mid].arrival;
+            (first, second)
+        };
+        let (rf, rs) = half_span(&ramp.generate());
+        assert!(rs < rf * 0.5, "late half should be much denser: {rf} vs {rs}");
+        let (ff, fs) = half_span(&flat.generate());
+        assert!(fs > ff * 0.5, "flat trace stays roughly uniform: {ff} vs {fs}");
+    }
+
+    #[test]
+    fn diurnal_multiplier_oscillates_and_stays_positive() {
+        let s = RateShape::Diurnal { period: 100.0, amplitude: 0.99 };
+        let hi = s.multiplier(0.0, 25.0); // sin peak
+        let lo = s.multiplier(0.0, 75.0); // sin trough
+        assert!(hi > 1.9 && lo < 0.1);
+        assert!(lo >= 0.05, "clamped away from zero");
+        // Extreme amplitude never produces a non-positive multiplier.
+        let s = RateShape::Diurnal { period: 10.0, amplitude: 5.0 };
+        for i in 0..100 {
+            assert!(s.multiplier(0.0, i as f64 * 0.1) >= 0.05);
+        }
+        assert_eq!(RateShape::Flat.multiplier(0.3, 42.0), 1.0);
     }
 
     #[test]

@@ -162,6 +162,23 @@ impl Args {
         *self.flags.get(name).unwrap_or_else(|| panic!("flag {name} not declared"))
     }
 
+    /// Parse an option's value with a fallible domain parser (e.g.
+    /// `AllReduceImpl::by_name`). A rejected value exits with the parser's
+    /// error message — a usable diagnostic, not a panic/backtrace.
+    pub fn get_with<T, E: std::fmt::Display>(
+        &self,
+        name: &str,
+        parse: impl FnOnce(&str) -> Result<T, E>,
+    ) -> T {
+        match parse(self.get(name)) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("error: --{name}: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+
     /// Comma-separated list of integers, e.g. `--gpus 4,8,16`.
     pub fn get_usize_list(&self, name: &str) -> Vec<usize> {
         self.get(name)
@@ -211,6 +228,13 @@ mod tests {
         c.req("model", "model name");
         assert!(c.parse_from(vec![]).is_err());
         assert!(c.parse_from(vec!["--model".into(), "70b".into()]).is_ok());
+    }
+
+    #[test]
+    fn get_with_accepts_valid_values() {
+        let a = cli().parse_from(vec!["--gpus".into(), "12".into()]).unwrap();
+        let doubled = a.get_with("gpus", |s| s.parse::<usize>().map(|v| v * 2));
+        assert_eq!(doubled, 24);
     }
 
     #[test]

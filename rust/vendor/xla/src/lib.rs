@@ -1,0 +1,168 @@
+//! Offline stub of the PJRT/XLA bindings the `yalis` runtime compiles
+//! against.
+//!
+//! The real PJRT path needs the upstream `xla` bindings plus a built
+//! `artifacts/` directory (`make artifacts`); this stub keeps the crate —
+//! and every simulation/fleet/collective code path, which never touches
+//! PJRT — fully functional in environments without either. Every entry
+//! point that would actually execute XLA returns [`Error::Unsupported`];
+//! the runtime integration tests and examples already skip or fail
+//! gracefully when artifacts are absent.
+//!
+//! The API surface mirrors exactly what `yalis::runtime` uses: nothing
+//! more, nothing less.
+
+use std::fmt;
+
+/// Error type of the stubbed bindings.
+#[derive(Clone, Debug)]
+pub enum Error {
+    /// Operation requires the real PJRT bindings.
+    Unsupported(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unsupported(what) => write!(
+                f,
+                "{what}: built with the vendored `xla` stub — real PJRT execution is \
+                 unavailable (swap rust/vendor/xla for the real bindings and rebuild)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the runtime uploads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// A host literal: shape + raw little-endian bytes. Constructible so that
+/// pure host-side code paths keep working; device/dehosting operations are
+/// stubbed.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    pub element_type: ElementType,
+    pub dims: Vec<usize>,
+    pub raw: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        element_type: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        Ok(Literal { element_type, dims: dims.to_vec(), raw: data.to_vec() })
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::Unsupported("Literal::to_vec"))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::Unsupported("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module (stub: never constructible from a file offline).
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::Unsupported("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+#[derive(Clone, Debug)]
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+/// A PJRT device buffer (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unsupported("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled + loaded executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unsupported("PjRtLoadedExecutable::execute"))
+    }
+
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unsupported("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// A PJRT client (stub: construction fails with a clear message).
+#[derive(Debug)]
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unsupported("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unsupported("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::Unsupported("PjRtClient::buffer_from_host_literal"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips_host_side() {
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2, 2],
+            &[0u8; 16],
+        )
+        .unwrap();
+        assert_eq!(lit.dims, vec![2, 2]);
+        assert_eq!(lit.raw.len(), 16);
+    }
+
+    #[test]
+    fn device_paths_report_unsupported() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("nope.hlo.txt").is_err());
+        let err = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("stub"), "{err}");
+    }
+}
