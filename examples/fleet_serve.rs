@@ -4,10 +4,15 @@
 //! disaggregated prefill/decode pools, and report p50/p95/p99 TTFT, TPOT,
 //! and SLO goodput per configuration. Deterministic for a fixed `--seed`.
 //!
+//! Replicas are named by `ParallelSpec` with a count, so heterogeneous
+//! fleets are one flag: `--specs tp16:2,tp8:2` mixes TP16 and TP8 replicas
+//! (each spec's GPU count is implied by the spec itself) and the
+//! cost-aware router loads them in proportion to predicted step time.
+//!
 //! Usage: cargo run --release --example fleet_serve --
 //!        [--trace burstgpt|decode-heavy] [--prompts 100000] [--rate 40]
-//!        [--replicas 4] [--prefill 1] [--conc 256] [--gpus 16]
-//!        [--allreduce nvrar] [--policies round-robin,least-tokens,kv-pressure,session-affinity]
+//!        [--specs tp16:4] [--prefill 1] [--conc 256] [--allreduce nvrar]
+//!        [--policies round-robin,least-tokens,kv-pressure,session-affinity]
 //!        [--slo-ttft 5.0] [--slo-tpot 0.2] [--ramp 0] [--autoscale]
 
 use yalis::collectives::AllReduceImpl;
@@ -15,7 +20,8 @@ use yalis::fleet::autoscaler::AutoscaleConfig;
 use yalis::fleet::metrics::{FleetReport, SloTargets};
 use yalis::fleet::router::RoutePolicy;
 use yalis::fleet::{run_fleet, FleetConfig};
-use yalis::serving::{fig9_config, Deployment};
+use yalis::parallel::ParallelSpec;
+use yalis::serving::{fig9_config, ServeConfig};
 use yalis::trace::{RateShape, TraceSpec};
 use yalis::util::cli::Cli;
 use yalis::util::tables::Table;
@@ -26,10 +32,9 @@ fn main() {
     cli.opt("prompts", "100000", "number of requests");
     cli.opt("rate", "40", "mean arrival rate (req/s) across the fleet");
     cli.opt("seed", "0", "trace seed override (0 = trace default)");
-    cli.opt("replicas", "4", "monolithic (or decode-pool) replicas");
+    cli.opt("specs", "tp16:4", "replica specs with counts, e.g. tp16:2,tp8:2");
     cli.opt("prefill", "1", "prefill replicas for the disaggregated rows");
     cli.opt("conc", "256", "per-replica max concurrency");
-    cli.opt("gpus", "16", "GPUs per replica");
     cli.opt("allreduce", "nvrar", "per-replica all-reduce (nccl|nccl-ring|nccl-tree|mpi|nvrar)");
     cli.opt("policies", "round-robin,least-tokens,kv-pressure,session-affinity", "routing policies to sweep");
     cli.opt("slo-ttft", "5.0", "TTFT SLO target (s)");
@@ -39,17 +44,49 @@ fn main() {
     let args = cli.parse();
 
     let ar = args.get_with("allreduce", AllReduceImpl::by_name);
-    let policies: Vec<RoutePolicy> = args
-        .get("policies")
-        .split(',')
-        .filter(|s| !s.is_empty())
-        .map(|s| {
-            RoutePolicy::by_name(s.trim()).unwrap_or_else(|e| {
-                eprintln!("error: --policies: {e}");
-                std::process::exit(2);
-            })
-        })
-        .collect();
+    let conc = args.get_usize("conc");
+    // Expand `tp16:2,tp8:2` into `(spec, count)` entries; each spec's GPU
+    // count is its own tp·pp·dp. Validation happens here so an invalid
+    // spec prints a usable error instead of panicking in fig9_config.
+    let node = yalis::cluster::presets::perlmutter(1);
+    let entries: Vec<(ParallelSpec, usize)> = args.get_list_with("specs", |entry| {
+        let (name, count) = match entry.split_once(':') {
+            Some((n, c)) => (
+                n.trim(),
+                c.trim()
+                    .parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("bad replica count in '{entry}'"))?,
+            ),
+            None => (entry, 1),
+        };
+        let spec = ParallelSpec::by_name(name)?;
+        if spec.ep > 1 {
+            anyhow::bail!("spec {spec} is expert-parallel but this example serves the dense 70B model");
+        }
+        let gpus = spec.gpus();
+        if gpus > node.gpus_per_node && gpus % node.gpus_per_node != 0 {
+            anyhow::bail!(
+                "spec {spec} needs {gpus} GPUs, not a multiple of {}/node",
+                node.gpus_per_node
+            );
+        }
+        spec.validate(&node.with_gpus(gpus))?;
+        Ok::<_, anyhow::Error>((spec, count))
+    });
+    let mut pool: Vec<ServeConfig> = Vec::new();
+    let mut pool_label = Vec::new();
+    for (spec, count) in entries {
+        let cfg = fig9_config(spec, ar, conc, "perlmutter", spec.gpus());
+        pool_label.push(format!("{}x{}", count, cfg.deployment_label()));
+        for _ in 0..count {
+            pool.push(cfg.clone());
+        }
+    }
+    if pool.is_empty() {
+        eprintln!("error: --specs expanded to zero replicas");
+        std::process::exit(2);
+    }
+    let policies: Vec<RoutePolicy> = args.get_list_with("policies", RoutePolicy::by_name);
 
     let mut spec = match args.get("trace") {
         "burstgpt" => TraceSpec::burstgpt(),
@@ -79,16 +116,12 @@ fn main() {
     );
 
     let slo = SloTargets { ttft: args.get_f64("slo-ttft"), tpot: args.get_f64("slo-tpot") };
-    let base = fig9_config(Deployment::Tp(ar), args.get_usize("conc"), "perlmutter", args.get_usize("gpus"));
-    let replicas = args.get_usize("replicas");
     let prefill = args.get_usize("prefill");
 
     let mut t = Table::new(
         &format!(
-            "fleet serving: {} replicas x 70B TP{}/{} ({} trace)",
-            replicas,
-            args.get_usize("gpus"),
-            ar.name(),
+            "fleet serving: {} replicas (70B, {} trace)",
+            pool_label.join(" + "),
             args.get("trace"),
         ),
         &[
@@ -98,26 +131,26 @@ fn main() {
     );
     for &policy in &policies {
         for disagg in [false, true] {
-            if disagg && prefill == 0 {
+            if disagg && (prefill == 0 || pool.len() <= prefill) {
                 continue;
             }
             // Keep total replica count comparable: the disaggregated rows
             // carve the prefill pool out of the same fleet size.
-            let decode_replicas = if disagg { replicas.saturating_sub(prefill).max(1) } else { replicas };
-            let mut cfg = FleetConfig::new(base.clone(), decode_replicas)
-                .with_policy(policy)
-                .with_slo(slo);
-            if disagg {
-                cfg = cfg.disaggregated(prefill);
-            }
+            let mut cfg = if disagg {
+                FleetConfig::heterogeneous(pool[prefill..].to_vec())
+                    .with_prefill_pool(pool[..prefill].to_vec())
+            } else {
+                FleetConfig::heterogeneous(pool.clone())
+            };
+            cfg = cfg.with_policy(policy).with_slo(slo);
             if args.get_flag("autoscale") {
                 cfg = cfg.with_autoscale(AutoscaleConfig::default());
             }
             let rep = run_fleet(&cfg, &reqs);
             let pools = if disagg {
-                format!("{}D+{}P", decode_replicas, prefill)
+                format!("{}D+{}P", pool.len() - prefill, prefill)
             } else {
-                format!("{replicas} mono")
+                format!("{} mono", pool.len())
             };
             t.row(&row_cells(policy, &pools, &rep));
         }

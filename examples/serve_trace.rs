@@ -1,12 +1,14 @@
 //! Trace-driven serving (Figure 9/18): run a BurstGPT-style or
-//! decode-heavy trace through TP/NCCL, TP/NVRAR and HP deployments and
-//! report output throughput.
+//! decode-heavy trace through a grid of parallelism specs × all-reduce
+//! implementations and report output throughput.
 //!
 //! Usage: cargo run --release --example serve_trace --
 //!        [--trace burstgpt|decode-heavy] [--prompts 300] [--conc 32,256]
+//!        [--gpus 16] [--specs tp16,tp4-pp4] [--allreduce nccl,nvrar]
 
 use yalis::collectives::AllReduceImpl;
-use yalis::serving::{fig9_config, serve, Deployment};
+use yalis::parallel::ParallelSpec;
+use yalis::serving::{fig9_config, serve};
 use yalis::trace::TraceSpec;
 use yalis::util::cli::Cli;
 use yalis::util::tables::Table;
@@ -17,6 +19,8 @@ fn main() {
     cli.opt("prompts", "300", "number of prompts");
     cli.opt("conc", "32,256", "concurrency settings");
     cli.opt("gpus", "16", "GPU count");
+    cli.opt("specs", "tp16,tp4-pp4", "parallelism specs to sweep (e.g. tp16,tp8-pp2)");
+    cli.opt("allreduce", "nccl,nvrar", "all-reduce impls to sweep");
     let args = cli.parse();
 
     let mut spec = match args.get("trace") {
@@ -33,26 +37,36 @@ fn main() {
         reqs.iter().map(|r| r.decode_len).sum::<usize>() as f64 / reqs.len() as f64,
     );
 
+    let gpus = args.get_usize("gpus");
+    let topo = yalis::cluster::presets::perlmutter(1).with_gpus(gpus);
+    let pspecs: Vec<ParallelSpec> = args.get_list_with("specs", |s| {
+        let p = ParallelSpec::by_name(s)?;
+        p.validate(&topo)?;
+        if p.ep > 1 {
+            anyhow::bail!("spec {p} is expert-parallel but this example serves the dense 70B model");
+        }
+        Ok::<_, anyhow::Error>(p)
+    });
+    let ars: Vec<AllReduceImpl> = args.get_list_with("allreduce", AllReduceImpl::by_name);
+
     let mut t = Table::new(
         &format!("serving throughput ({} trace)", args.get("trace")),
         &["deployment", "C", "tok/s", "makespan (s)", "mean TTFT (s)", "decode-only"],
     );
     for c in args.get_usize_list("conc") {
-        for dep in [
-            Deployment::Tp(AllReduceImpl::NcclAuto),
-            Deployment::Tp(AllReduceImpl::Nvrar),
-            Deployment::Hp,
-        ] {
-            let cfg = fig9_config(dep, c, "perlmutter", args.get_usize("gpus"));
-            let rep = serve(&cfg, &reqs);
-            t.row(&[
-                dep.label(),
-                c.to_string(),
-                format!("{:.1}", rep.output_throughput),
-                format!("{:.1}", rep.makespan),
-                format!("{:.2}", rep.mean_ttft),
-                format!("{:.0}%", rep.decode_only_frac * 100.0),
-            ]);
+        for &pspec in &pspecs {
+            for &ar in &ars {
+                let cfg = fig9_config(pspec, ar, c, "perlmutter", gpus);
+                let rep = serve(&cfg, &reqs);
+                t.row(&[
+                    cfg.deployment_label(),
+                    c.to_string(),
+                    format!("{:.1}", rep.output_throughput),
+                    format!("{:.1}", rep.makespan),
+                    format!("{:.2}", rep.mean_ttft),
+                    format!("{:.0}%", rep.decode_only_frac * 100.0),
+                ]);
+            }
         }
     }
     t.print();

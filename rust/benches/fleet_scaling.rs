@@ -2,11 +2,13 @@
 //! scaled BurstGPT trace. Shows (a) near-linear goodput scaling while the
 //! fleet is the bottleneck, (b) the policy spread at high load, and (c)
 //! that the per-replica NVRAR gain survives aggregation — the fleet-level
-//! answer to the paper's single-replica Fig 9.
+//! answer to the paper's single-replica Fig 9. Deployments are named by
+//! their canonical `ParallelSpec` string (`tp16/NCCL`, `tp16/NVRAR`).
 use yalis::collectives::AllReduceImpl;
 use yalis::fleet::router::RoutePolicy;
 use yalis::fleet::{run_fleet, FleetConfig};
-use yalis::serving::{fig9_config, Deployment};
+use yalis::parallel::ParallelSpec;
+use yalis::serving::fig9_config;
 use yalis::trace::TraceSpec;
 use yalis::util::tables::Table;
 
@@ -17,8 +19,8 @@ fn main() {
     let reqs = spec.generate();
 
     let mut t = Table::new(
-        "fleet scaling: BurstGPT x600 @ 20 req/s, 70B TP16 per replica",
-        &["replicas", "policy", "allreduce", "tok/s", "goodput", "TTFT p99", "TPOT p99", "SLO %"],
+        "fleet scaling: BurstGPT x600 @ 20 req/s, 70B tp16 per replica",
+        &["replicas", "policy", "deployment", "tok/s", "goodput", "TTFT p99", "TPOT p99", "SLO %"],
     );
     for replicas in [2usize, 4, 8] {
         for policy in [
@@ -27,13 +29,14 @@ fn main() {
             RoutePolicy::KvPressure,
         ] {
             for ar in [AllReduceImpl::NcclAuto, AllReduceImpl::Nvrar] {
-                let base = fig9_config(Deployment::Tp(ar), 64, "perlmutter", 16);
+                let base = fig9_config(ParallelSpec::tp(16), ar, 64, "perlmutter", 16);
+                let label = base.deployment_label();
                 let cfg = FleetConfig::new(base, replicas).with_policy(policy);
                 let rep = run_fleet(&cfg, &reqs);
                 t.row(&[
                     replicas.to_string(),
                     policy.name().to_string(),
-                    ar.name().to_string(),
+                    label,
                     format!("{:.1}", rep.throughput),
                     format!("{:.1}", rep.goodput),
                     format!("{:.2}", rep.ttft_p99),

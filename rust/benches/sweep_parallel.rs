@@ -1,0 +1,10 @@
+//! Regenerates the `yalis sweep-parallel` grid: every valid ParallelSpec ×
+//! {NCCL, NVRAR} for 70B on Perlmutter-16, with the Pareto frontier of
+//! throughput vs mean TTFT marked.
+use yalis::coordinator::experiments::sweep_parallel;
+
+fn main() {
+    let t = sweep_parallel("70b", "perlmutter", 16);
+    t.print();
+    t.write_csv("results/sweep_parallel.csv").unwrap();
+}

@@ -9,9 +9,9 @@ use crate::engine::{engine_for, Workload};
 use crate::fleet::router::RoutePolicy;
 use crate::fleet::{run_fleet, FleetConfig};
 use crate::models::ModelConfig;
-use crate::moe::{moe_step_time, MoeDeployment};
+use crate::parallel::ParallelSpec;
 use crate::perfmodel::{gemm_time, GpuSpec};
-use crate::serving::{fig9_config, serve, serve_with, Deployment};
+use crate::serving::{fig9_config, serve};
 use crate::trace::TraceSpec;
 use crate::util::tables::{fmt_speedup, Table};
 
@@ -313,15 +313,17 @@ fn serving_table(title: &str, mut spec: TraceSpec, concurrencies: &[usize]) -> T
     let reqs = spec.generate();
     let mut t = Table::new(title, &["deployment", "C", "tok/s", "decode-only steps", "mean TTFT (s)"]);
     for &c in concurrencies {
-        for dep in [
-            Deployment::Tp(AllReduceImpl::NcclAuto),
-            Deployment::Tp(AllReduceImpl::Nvrar),
-            Deployment::Hp,
+        // tp4-pp4 is the old "HP" shape on Perlmutter-16 (TP within a
+        // node, PP across) expressed through the one spec vocabulary.
+        for (pspec, ar) in [
+            (ParallelSpec::tp(16), AllReduceImpl::NcclAuto),
+            (ParallelSpec::tp(16), AllReduceImpl::Nvrar),
+            (ParallelSpec::tp_pp(4, 4), AllReduceImpl::NcclAuto),
         ] {
-            let cfg = fig9_config(dep, c, "perlmutter", 16);
+            let cfg = fig9_config(pspec, ar, c, "perlmutter", 16);
             let rep = serve(&cfg, &reqs);
             t.row(&[
-                dep.label(),
+                cfg.deployment_label(),
                 c.to_string(),
                 format!("{:.1}", rep.output_throughput),
                 format!("{:.0}%", rep.decode_only_frac * 100.0),
@@ -343,14 +345,56 @@ pub fn fig10_moe() -> Table {
         &["deployment", "C", "tok/s"],
     );
     for &c in &[32usize, 128] {
-        for dep in MoeDeployment::fig10() {
-            let mut cfg = fig9_config(Deployment::Tp(dep.ar), c, "perlmutter", 16);
+        for (pspec, ar) in crate::moe::fig10_specs() {
+            let mut cfg = fig9_config(pspec, ar, c, "perlmutter", 16);
             cfg.model = model.clone();
-            let rep = serve_with(&cfg, &reqs, |scfg, step| {
-                moe_step_time(&scfg.model, &scfg.topo, &scfg.gpu, &scfg.comm, &scfg.persona, &dep, step)
-            });
-            t.row(&[dep.label.to_string(), c.to_string(), format!("{:.1}", rep.output_throughput)]);
+            let rep = serve(&cfg, &reqs);
+            t.row(&[
+                cfg.deployment_label(),
+                c.to_string(),
+                format!("{:.1}", rep.output_throughput),
+            ]);
         }
+    }
+    t
+}
+
+/// `yalis sweep-parallel`: grid-search every valid [`ParallelSpec`] ×
+/// all-reduce implementation for a model/machine/GPU count, report
+/// throughput and mean TTFT, and mark the Pareto frontier (no other
+/// configuration is at least as good on both axes and better on one).
+pub fn sweep_parallel(model_name: &str, machine: &str, gpus: usize) -> Table {
+    let model = ModelConfig::by_name(model_name);
+    let mut tspec = TraceSpec::burstgpt();
+    tspec.num_prompts = 120;
+    let reqs = tspec.generate();
+    let topo = presets::by_name(machine, 1).with_gpus(gpus);
+    let mut rows: Vec<(String, f64, f64)> = Vec::new();
+    for pspec in ParallelSpec::enumerate(gpus, model.moe.is_some()) {
+        if pspec.validate(&topo).is_err() {
+            continue;
+        }
+        for ar in [AllReduceImpl::NcclAuto, AllReduceImpl::Nvrar] {
+            let mut cfg = fig9_config(pspec, ar, 64, machine, gpus);
+            cfg.model = model.clone();
+            let rep = serve(&cfg, &reqs);
+            rows.push((cfg.deployment_label(), rep.output_throughput, rep.mean_ttft));
+        }
+    }
+    let mut t = Table::new(
+        &format!("sweep-parallel {} on {machine} x{gpus} GPUs", model.name),
+        &["deployment", "tok/s", "mean TTFT (s)", "pareto"],
+    );
+    for (label, thr, ttft) in &rows {
+        let dominated = rows.iter().any(|(l2, t2, f2)| {
+            l2 != label && *t2 >= *thr && *f2 <= *ttft && (*t2 > *thr || *f2 < *ttft)
+        });
+        t.row(&[
+            label.clone(),
+            format!("{thr:.1}"),
+            format!("{ttft:.2}"),
+            (if dominated { "" } else { "*" }).to_string(),
+        ]);
     }
     t
 }
@@ -363,9 +407,9 @@ pub fn fleet_experiment(ar: AllReduceImpl) -> Table {
     spec.num_prompts = 800;
     spec.rate = 12.0;
     let reqs = spec.generate();
-    let base = fig9_config(Deployment::Tp(ar), 64, "perlmutter", 16);
+    let base = fig9_config(ParallelSpec::tp(16), ar, 64, "perlmutter", 16);
     let mut t = Table::new(
-        &format!("Fleet serving, 4x(70B TP16/{}) replicas, BurstGPT x{}", ar.name(), reqs.len()),
+        &format!("Fleet serving, 4x(70B {}) replicas, BurstGPT x{}", base.deployment_label(), reqs.len()),
         &[
             "policy",
             "pools",
@@ -396,6 +440,52 @@ pub fn fleet_experiment(ar: AllReduceImpl) -> Table {
                 format!("{:.3}", rep.tpot_p50),
                 format!("{:.0}%", rep.slo_attainment * 100.0),
                 rep.handoffs.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+/// Heterogeneous fleet: the same 48-GPU budget spent as 3×TP16 vs
+/// 2×TP16 + 2×TP8, under every routing policy. The cost-aware router
+/// keeps the mixed fleet competitive by loading each replica in
+/// proportion to its predicted step time (the `routed` column shows the
+/// per-replica request split).
+pub fn fleet_hetero_experiment(ar: AllReduceImpl) -> Table {
+    let mut spec = TraceSpec::burstgpt();
+    spec.num_prompts = 500;
+    spec.rate = 10.0;
+    let reqs = spec.generate();
+    let tp16 = fig9_config(ParallelSpec::tp(16), ar, 64, "perlmutter", 16);
+    let tp8 = fig9_config(ParallelSpec::tp(8), ar, 64, "perlmutter", 8);
+    let mut t = Table::new(
+        &format!(
+            "Heterogeneous fleet, 48 GPUs as 3x{} vs 2x{} + 2x{}, BurstGPT x{}",
+            tp16.deployment_label(),
+            tp16.deployment_label(),
+            tp8.deployment_label(),
+            reqs.len()
+        ),
+        &["fleet", "policy", "tok/s", "goodput", "TTFT p99", "SLO %", "routed"],
+    );
+    for policy in RoutePolicy::all() {
+        for (name, pool) in [
+            ("3x tp16", vec![tp16.clone(); 3]),
+            (
+                "2x tp16 + 2x tp8",
+                vec![tp16.clone(), tp16.clone(), tp8.clone(), tp8.clone()],
+            ),
+        ] {
+            let cfg = FleetConfig::heterogeneous(pool).with_policy(policy);
+            let rep = run_fleet(&cfg, &reqs);
+            t.row(&[
+                name.to_string(),
+                policy.name().to_string(),
+                format!("{:.1}", rep.throughput),
+                format!("{:.1}", rep.goodput),
+                format!("{:.2}", rep.ttft_p99),
+                format!("{:.0}%", rep.slo_attainment * 100.0),
+                rep.routed.iter().map(|r| r.to_string()).collect::<Vec<_>>().join("/"),
             ]);
         }
     }
@@ -524,7 +614,9 @@ pub fn all_experiments() -> Vec<Table> {
     out.extend(fig14_fig15_nccl_variants());
     out.push(fig7_e2e_speedup("70b", "vista"));
     out.extend(fig17_fig18_traces());
+    out.push(sweep_parallel("70b", "perlmutter", 16));
     out.push(fleet_experiment(AllReduceImpl::Nvrar));
+    out.push(fleet_hetero_experiment(AllReduceImpl::Nvrar));
     out
 }
 
@@ -572,6 +664,17 @@ mod tests {
         let sync_hot: f64 = rows[2][2].parse().unwrap();
         assert!(sync_cold > 0.0);
         assert!(sync_hot < sync_cold);
+    }
+
+    #[test]
+    fn sweep_parallel_marks_a_nonempty_pareto_frontier() {
+        let t = sweep_parallel("70b", "perlmutter", 8);
+        let rows = t.rows();
+        assert!(rows.len() >= 4, "grid should cover several specs");
+        assert!(rows.iter().any(|r| r[3] == "*"), "at least one Pareto-optimal config");
+        // Rows carry canonical ParallelSpec strings.
+        assert!(rows.iter().any(|r| r[0] == "tp8/NVRAR"), "{:?}", rows[0]);
+        assert!(rows.iter().any(|r| r[0] == "tp4-pp2/NCCL"));
     }
 
     #[test]

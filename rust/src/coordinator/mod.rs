@@ -16,12 +16,13 @@ pub fn main() {
         "yalis",
         "multi-node LLM inference study + NVRAR all-reduce (paper reproduction).\n\
          Subcommand = first positional arg: scaling | breakdown | gemm | nccl-vs-mpi |\n\
-         micro | hyperparams | e2e | phase | serve | fleet | moe | sync | variants |\n\
-         traces | all",
+         micro | hyperparams | e2e | phase | serve | sweep-parallel | fleet |\n\
+         fleet-hetero | moe | sync | variants | traces | all",
     );
     cli.opt("machine", "perlmutter", "machine preset (perlmutter|vista)");
     cli.opt("model", "70b", "model (70b|405b|qwen3|tiny)");
-    cli.opt("allreduce", "nvrar", "per-replica all-reduce for `fleet` (nccl|nccl-ring|nccl-tree|mpi|nvrar)");
+    cli.opt("gpus", "16", "GPU count for `sweep-parallel`");
+    cli.opt("allreduce", "nvrar", "per-replica all-reduce for `fleet`/`fleet-hetero` (nccl|nccl-ring|nccl-tree|mpi|nvrar)");
     cli.opt("csv-dir", "", "write CSVs into this directory (empty = don't)");
     let args = cli.parse();
     let csv = if args.get("csv-dir").is_empty() { None } else { Some(args.get("csv-dir").to_string()) };
@@ -39,10 +40,17 @@ pub fn main() {
         "e2e" => vec![experiments::fig7_e2e_speedup(model, machine)],
         "phase" => vec![experiments::fig8_phase_breakdown()],
         "serve" => vec![experiments::fig9_trace_serving()],
+        "sweep-parallel" => {
+            vec![experiments::sweep_parallel(model, machine, args.get_usize("gpus"))]
+        }
         "fleet" => {
             // Bad --allreduce values exit with a usable message, not a panic.
             let ar = args.get_with("allreduce", crate::collectives::AllReduceImpl::by_name);
             vec![experiments::fleet_experiment(ar)]
+        }
+        "fleet-hetero" => {
+            let ar = args.get_with("allreduce", crate::collectives::AllReduceImpl::by_name);
+            vec![experiments::fleet_hetero_experiment(ar)]
         }
         "moe" => vec![experiments::fig10_moe()],
         "sync" => vec![experiments::fig13_sync_hiding()],

@@ -27,6 +27,11 @@ pub struct StepBatch {
     pub prefills: Vec<(SeqId, usize)>,
     /// Sequences decoding one token this step.
     pub decodes: Vec<SeqId>,
+    /// KV context length (prompt + tokens decoded so far) of each decode
+    /// row, aligned with `decodes`. Read from the paged allocator when the
+    /// step is built, so attention cost scales with real KV growth instead
+    /// of a hardcoded mean.
+    pub decode_ctx: Vec<usize>,
 }
 
 impl StepBatch {
@@ -42,6 +47,19 @@ impl StepBatch {
     /// Batch rows for the attention/all-reduce message (B of B×H).
     pub fn batch_rows(&self) -> usize {
         self.token_rows()
+    }
+
+    /// Mean KV context length the attention kernels read this step:
+    /// prefills contribute their prompt, decodes their current context.
+    /// Never 0 (an empty batch reports 1).
+    pub fn mean_ctx(&self) -> usize {
+        let n = self.prefills.len() + self.decodes.len();
+        if n == 0 {
+            return 1;
+        }
+        let total: usize = self.prefills.iter().map(|(_, t)| *t).sum::<usize>()
+            + self.decode_ctx.iter().sum::<usize>();
+        (total / n).max(1)
     }
 }
 
@@ -106,6 +124,7 @@ impl Batcher {
                 break;
             }
             step.decodes.push(r.id);
+            step.decode_ctx.push(kv.seq_tokens(r.id).unwrap_or(1));
             budget -= 1;
         }
 
@@ -349,6 +368,25 @@ mod tests {
         assert_eq!(b.running_len(), 0);
         assert_eq!(kv.free_pages(), 2);
         kv.check_invariants();
+    }
+
+    #[test]
+    fn step_batches_carry_real_context_lengths() {
+        let mut kv = PagedKv::new(64, 16);
+        let mut b = Batcher::new(8, 8192);
+        let reqs = vec![req(0, 40, 4)];
+        b.submit(reqs[0]);
+        let s1 = b.next_step(&mut kv); // prefill step
+        assert!(s1.decode_ctx.is_empty());
+        assert_eq!(s1.mean_ctx(), 40);
+        b.complete_step(&s1, &mut kv, &reqs);
+        let s2 = b.next_step(&mut kv); // first decode reads the prompt KV
+        assert_eq!(s2.decode_ctx, vec![40]);
+        b.complete_step(&s2, &mut kv, &reqs);
+        let s3 = b.next_step(&mut kv); // context grew by the decoded token
+        assert_eq!(s3.decode_ctx, vec![41]);
+        assert_eq!(s3.mean_ctx(), 41);
+        b.complete_step(&s3, &mut kv, &reqs);
     }
 
     #[test]

@@ -8,6 +8,13 @@
 //! below `down_frac ×` target with a near-empty queue). One provisioning
 //! action is in flight at a time, and new capacity arrives only after
 //! `provision_delay` — the cold-start the fleet actually pays.
+//!
+//! Disaggregated fleets run **two symmetric loops** over the same window:
+//! the prefill pool scales on p95 TTFT ([`Autoscaler::decide_prefill`] —
+//! first tokens are the prefill pool's product) and the decode pool on p95
+//! TPOT ([`Autoscaler::decide_decode`]), each with its own in-flight
+//! provisioning flag. Monolithic fleets keep the combined
+//! [`Autoscaler::decide`]. Both pools share `min_replicas`/`max_replicas`.
 
 use super::metrics::SloTargets;
 use std::collections::VecDeque;
@@ -59,6 +66,10 @@ pub struct Autoscaler {
     pub pending_up: bool,
     pub scale_ups: usize,
     pub scale_downs: usize,
+    /// Prefill-pool twin of `pending_up` (disaggregated fleets only).
+    pub pending_prefill_up: bool,
+    pub prefill_scale_ups: usize,
+    pub prefill_scale_downs: usize,
 }
 
 impl Autoscaler {
@@ -71,6 +82,9 @@ impl Autoscaler {
             pending_up: false,
             scale_ups: 0,
             scale_downs: 0,
+            pending_prefill_up: false,
+            prefill_scale_ups: 0,
+            prefill_scale_downs: 0,
         }
     }
 
@@ -119,9 +133,77 @@ impl Autoscaler {
         Decision::Hold
     }
 
+    /// The shared single-metric control law both per-pool loops apply:
+    /// scale up on a windowed-p95 breach of `target` (one provisioning
+    /// action in flight at a time), scale down with hysteresis when
+    /// comfortably under `down_frac × target` with an empty queue, floored
+    /// at `min_replicas` (clamped to 1).
+    #[allow(clippy::too_many_arguments)]
+    fn single_metric_loop(
+        cfg: AutoscaleConfig,
+        window: &VecDeque<f64>,
+        target: f64,
+        active: usize,
+        queued: usize,
+        pending: &mut bool,
+        ups: &mut usize,
+        downs: &mut usize,
+    ) -> Decision {
+        let p95 = Self::p95(window);
+        if p95 > target && !*pending && active < cfg.max_replicas {
+            *pending = true;
+            *ups += 1;
+            return Decision::Up;
+        }
+        let comfortable = !window.is_empty() && p95 < cfg.down_frac * target && queued == 0;
+        if comfortable && active > cfg.min_replicas.max(1) {
+            *downs += 1;
+            return Decision::Down;
+        }
+        Decision::Hold
+    }
+
+    /// Decode-pool tick for disaggregated fleets: TPOT is the decode
+    /// pool's product, so only it drives this loop (queueing in front of
+    /// prefill replicas must not grow the decode pool).
+    pub fn decide_decode(&mut self, active: usize, queued: usize) -> Decision {
+        Self::single_metric_loop(
+            self.cfg,
+            &self.recent_tpot,
+            self.slo.tpot,
+            active,
+            queued,
+            &mut self.pending_up,
+            &mut self.scale_ups,
+            &mut self.scale_downs,
+        )
+    }
+
+    /// Prefill-pool tick, symmetric with the decode loop: windowed p95
+    /// TTFT against the SLO, hysteresis on the way down, one provisioning
+    /// action in flight. `queued` counts prompts waiting at prefill
+    /// replicas.
+    pub fn decide_prefill(&mut self, active: usize, queued: usize) -> Decision {
+        Self::single_metric_loop(
+            self.cfg,
+            &self.recent_ttft,
+            self.slo.ttft,
+            active,
+            queued,
+            &mut self.pending_prefill_up,
+            &mut self.prefill_scale_ups,
+            &mut self.prefill_scale_downs,
+        )
+    }
+
     /// The provisioned replica came online.
     pub fn replica_online(&mut self) {
         self.pending_up = false;
+    }
+
+    /// The provisioned prefill replica came online.
+    pub fn prefill_online(&mut self) {
+        self.pending_prefill_up = false;
     }
 }
 
@@ -185,5 +267,49 @@ mod tests {
     fn empty_window_never_scales_down() {
         let mut a = scaler(10.0);
         assert_eq!(a.decide(3, 0), Decision::Hold);
+    }
+
+    #[test]
+    fn prefill_loop_scales_on_ttft_only() {
+        let mut a = scaler(1.0);
+        for _ in 0..16 {
+            a.observe(5.0, 0.01); // TTFT breached, TPOT comfortable
+        }
+        assert_eq!(a.decide_prefill(1, 10), Decision::Up);
+        assert_eq!(a.prefill_scale_ups, 1);
+        // One provisioning action in flight at a time.
+        assert_eq!(a.decide_prefill(1, 10), Decision::Hold);
+        a.prefill_online();
+        assert_eq!(a.decide_prefill(2, 10), Decision::Up);
+        // The decode loop is independent: TPOT is fine, so it holds —
+        // prefill queueing must not grow the decode pool.
+        assert_eq!(a.decide_decode(2, 10), Decision::Hold);
+    }
+
+    #[test]
+    fn prefill_loop_scales_down_with_floor() {
+        let mut a = scaler(10.0);
+        for _ in 0..16 {
+            a.observe(0.5, 0.01); // well under 0.25 * 10.0
+        }
+        assert_eq!(a.decide_prefill(3, 0), Decision::Down);
+        assert_eq!(a.prefill_scale_downs, 1);
+        // Queue pressure vetoes; floor of 1 respected.
+        assert_eq!(a.decide_prefill(3, 5), Decision::Hold);
+        assert_eq!(a.decide_prefill(1, 0), Decision::Hold);
+    }
+
+    #[test]
+    fn decode_loop_scales_on_tpot() {
+        let mut a = scaler(10.0); // ttft SLO generous; tpot SLO is 1.0
+        for _ in 0..16 {
+            a.observe(0.5, 5.0); // TPOT breached
+        }
+        assert_eq!(a.decide_decode(2, 10), Decision::Up);
+        a.replica_online();
+        for _ in 0..16 {
+            a.observe(0.5, 0.01); // comfortable again
+        }
+        assert_eq!(a.decide_decode(3, 0), Decision::Down);
     }
 }

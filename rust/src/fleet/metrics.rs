@@ -85,11 +85,15 @@ impl FleetMetrics {
             goodput: self.good_tokens as f64 / span,
             scale_ups: 0,
             scale_downs: 0,
+            prefill_scale_ups: 0,
+            prefill_scale_downs: 0,
             peak_replicas: 0,
+            peak_prefill: 0,
             handoffs: 0,
             handoff_gb: 0.0,
             max_committed_pages: 0,
             over_capacity_routes: 0,
+            routed: Vec::new(),
         }
     }
 }
@@ -118,7 +122,13 @@ pub struct FleetReport {
     pub goodput: f64,
     pub scale_ups: usize,
     pub scale_downs: usize,
+    /// Prefill-pool scaling actions (disaggregated fleets; the decode
+    /// pool's actions are `scale_ups`/`scale_downs`).
+    pub prefill_scale_ups: usize,
+    pub prefill_scale_downs: usize,
     pub peak_replicas: usize,
+    /// Peak live prefill replicas (disaggregated mode).
+    pub peak_prefill: usize,
     /// Prefill→decode KV transfers performed (disaggregated mode).
     pub handoffs: u64,
     /// Total KV bytes moved by handoffs, in GB.
@@ -129,6 +139,12 @@ pub struct FleetReport {
     /// KV-capacity bound (pressure-relief path; 0 under KV-aware routing
     /// with adequate capacity).
     pub over_capacity_routes: u64,
+    /// Router *placements* per replica index (heterogeneous-fleet
+    /// observability; includes retired replicas). A monolithic request is
+    /// one placement; a disaggregated request counts its prefill placement
+    /// and its decode handoff separately, so the sum can exceed
+    /// `completed`.
+    pub routed: Vec<u64>,
 }
 
 #[cfg(test)]

@@ -5,19 +5,25 @@
 //! across many. This module is a discrete-event fleet simulation over
 //! [`crate::simnet::EventQueue`] in which every replica wraps the **real**
 //! scheduling machinery — [`crate::engine::batcher::Batcher`] +
-//! [`crate::engine::kv::PagedKv`] — with per-step costs from
-//! [`crate::serving::step_time`] (perfmodel GEMMs + the chosen
-//! [`crate::collectives::AllReduceImpl`]). Pieces:
+//! [`crate::engine::kv::PagedKv`] — and owns its *own*
+//! [`crate::serving::ServeConfig`], i.e. its own
+//! [`crate::parallel::ParallelSpec`] + [`crate::parallel::StepCost`] model
+//! (perfmodel GEMMs + the chosen [`crate::collectives::AllReduceImpl`]).
+//! Heterogeneous fleets — mixed TP8/TP16 replicas, or different machines'
+//! pools — are just different per-replica configs side by side. Pieces:
 //!
 //! - [`router`] — pluggable placement policies (round-robin,
 //!   least-outstanding-tokens, KV-pressure-aware, session-affinity) with
-//!   per-replica KV-commitment bookkeeping.
+//!   per-replica KV-commitment bookkeeping, made **cost-aware** through
+//!   each replica's predicted step time.
 //! - **Disaggregated prefill/decode pools** — prefill replicas produce the
 //!   first token, then the prompt's KV pages migrate to a decode replica
 //!   as a real network transfer over [`crate::cluster::Topology`]'s
 //!   inter-node link (FIFO-serialized per target NIC).
-//! - [`autoscaler`] — adds replicas when recent p95 TTFT/TPOT breach the
-//!   SLO, drains them (no new work; retire when idle) when comfortable.
+//! - [`autoscaler`] — scales the decode/monolithic pool on p95 TTFT/TPOT
+//!   breaches and (disaggregated) the prefill pool symmetrically on p95
+//!   TTFT; drains replicas (no new work; retire when idle) when
+//!   comfortable.
 //! - [`metrics`] — p50/p95/p99 TTFT, TPOT, SLO attainment and goodput via
 //!   [`crate::util::stats`].
 //!
@@ -32,7 +38,7 @@ pub mod router;
 
 use crate::engine::batcher::{Batcher, Request, StepBatch};
 use crate::engine::kv::{KvError, PagedKv};
-use crate::serving::{step_time, ServeConfig};
+use crate::serving::ServeConfig;
 use crate::simnet::{EventQueue, Server};
 use autoscaler::{AutoscaleConfig, Autoscaler, Decision};
 use metrics::{FleetMetrics, FleetReport, SloTargets};
@@ -51,35 +57,41 @@ pub enum PoolKind {
     Decode,
 }
 
-/// Fleet deployment description.
+/// Fleet deployment description: one [`ServeConfig`] per replica, so a
+/// fleet can mix parallelism specs and GPU counts freely (all replicas
+/// must serve the same model and share a KV page size).
 #[derive(Clone, Debug)]
 pub struct FleetConfig {
-    /// Per-replica engine configuration (model, topology, all-reduce,
-    /// concurrency, KV sizing) — every replica is one such engine.
-    pub base: ServeConfig,
+    /// Replicas of the scalable pool (monolithic, or decode when
+    /// disaggregated) — heterogeneous fleets list different configs here.
+    /// The autoscaler provisions clones of `replicas[0]`.
+    pub replicas: Vec<ServeConfig>,
+    /// Prefill-pool replicas; empty = monolithic fleet. The prefill
+    /// autoscaler provisions clones of `prefill[0]`.
+    pub prefill: Vec<ServeConfig>,
     /// Routing policy for the monolithic pool (or, when disaggregated,
     /// for prefill→decode placement; prefill placement is always
     /// least-outstanding).
     pub policy: RoutePolicy,
-    /// Replicas in the scalable pool (monolithic, or decode when
-    /// disaggregated).
-    pub replicas: usize,
-    /// Prefill-pool replicas; 0 = monolithic fleet.
-    pub prefill_replicas: usize,
     pub slo: SloTargets,
-    /// SLO-driven scaling of the scalable pool; `None` = fixed fleet.
+    /// SLO-driven scaling; `None` = fixed fleet.
     pub autoscale: Option<AutoscaleConfig>,
     /// Session key space for [`RoutePolicy::SessionAffinity`].
     pub sessions: u64,
 }
 
 impl FleetConfig {
-    pub fn new(base: ServeConfig, replicas: usize) -> Self {
+    /// Homogeneous fleet: `n` replicas of `base`.
+    pub fn new(base: ServeConfig, n: usize) -> Self {
+        Self::heterogeneous(vec![base; n])
+    }
+
+    /// Fleet with explicit per-replica configs (mixed TP8/TP16 etc.).
+    pub fn heterogeneous(replicas: Vec<ServeConfig>) -> Self {
         FleetConfig {
-            base,
-            policy: RoutePolicy::LeastOutstanding,
             replicas,
-            prefill_replicas: 0,
+            prefill: Vec::new(),
+            policy: RoutePolicy::LeastOutstanding,
             slo: SloTargets::default(),
             autoscale: None,
             sessions: 64,
@@ -91,11 +103,17 @@ impl FleetConfig {
         self
     }
 
-    /// Split the fleet into `prefill` prefill-only replicas plus the
-    /// existing `replicas` as decode-only.
-    pub fn disaggregated(mut self, prefill: usize) -> Self {
-        assert!(prefill >= 1, "disaggregation needs at least one prefill replica");
-        self.prefill_replicas = prefill;
+    /// Add `n` prefill-only replicas cloned from the first scalable
+    /// replica's config; the existing `replicas` become decode-only.
+    pub fn disaggregated(self, n: usize) -> Self {
+        assert!(n >= 1, "disaggregation needs at least one prefill replica");
+        let base = self.replicas.first().expect("need a replica to clone").clone();
+        self.with_prefill_pool(vec![base; n])
+    }
+
+    /// Explicit prefill-pool configs (may differ from the decode pool's).
+    pub fn with_prefill_pool(mut self, prefill: Vec<ServeConfig>) -> Self {
+        self.prefill = prefill;
         self
     }
 
@@ -110,7 +128,7 @@ impl FleetConfig {
     }
 
     fn disaggregated_mode(&self) -> bool {
-        self.prefill_replicas > 0
+        !self.prefill.is_empty()
     }
 
     fn scalable_kind(&self) -> PoolKind {
@@ -125,26 +143,44 @@ impl FleetConfig {
 /// Run `reqs` (sorted by arrival) through the fleet; panics on any
 /// conservation/allocator invariant violation, returns the metrics report.
 pub fn run_fleet(cfg: &FleetConfig, reqs: &[Request]) -> FleetReport {
-    assert!(cfg.replicas >= 1, "need at least one serving replica");
-    let page_tokens = cfg.base.kv_page_tokens.max(1);
+    assert!(!cfg.replicas.is_empty(), "need at least one serving replica");
+    let page_tokens = cfg.replicas[0].kv_page_tokens.max(1);
+    for c in cfg.replicas.iter().chain(cfg.prefill.iter()) {
+        // Routing commits pages before a target is chosen, so page
+        // geometry must be fleet-uniform (specs/GPU counts may differ).
+        assert_eq!(
+            c.kv_page_tokens.max(1),
+            page_tokens,
+            "fleet replicas must share one KV page size"
+        );
+        // Handoff sizing and admission math read replicas[0].model, so the
+        // documented one-model-per-fleet constraint is enforced here too.
+        assert_eq!(
+            c.model.name, cfg.replicas[0].model.name,
+            "fleet replicas must serve the same model"
+        );
+    }
     for (i, r) in reqs.iter().enumerate() {
         // The simulation indexes per-request state by id, so ids must be
         // the dense 0..n the trace generator produces.
         assert_eq!(r.id, i as u64, "request ids must be dense 0..n in arrival order");
-        // A request that cannot fit an *empty* replica would deadlock the
-        // fleet exactly as it would a single engine; reject up front.
-        assert!(
-            r.prompt_len.div_ceil(page_tokens) <= cfg.base.kv_pages,
-            "request {} prompt ({} tokens) exceeds a replica's KV capacity",
-            r.id,
-            r.prompt_len
-        );
-        assert!(
-            r.prompt_len <= cfg.base.max_step_tokens,
-            "request {} prompt ({} tokens) exceeds the per-step token budget",
-            r.id,
-            r.prompt_len
-        );
+        for c in cfg.replicas.iter().chain(cfg.prefill.iter()) {
+            // A request that cannot fit an *empty* replica would deadlock
+            // the fleet exactly as it would a single engine; reject up
+            // front against every replica it could be routed to.
+            assert!(
+                r.prompt_len.div_ceil(page_tokens) <= c.kv_pages,
+                "request {} prompt ({} tokens) exceeds a replica's KV capacity",
+                r.id,
+                r.prompt_len
+            );
+            assert!(
+                r.prompt_len <= c.max_step_tokens,
+                "request {} prompt ({} tokens) exceeds the per-step token budget",
+                r.id,
+                r.prompt_len
+            );
+        }
     }
     Sim::new(cfg, reqs).run()
 }
@@ -158,7 +194,7 @@ enum Ev {
     StepDone(usize),
     Handoff { replica: usize, req: usize },
     ScaleTick,
-    ReplicaUp,
+    ReplicaUp(PoolKind),
 }
 
 /// Load the router has committed for one request against one replica.
@@ -171,6 +207,11 @@ struct Commit {
 
 struct Replica {
     kind: PoolKind,
+    /// This replica's own engine config (spec + cost model + KV sizing).
+    cfg: ServeConfig,
+    /// Predicted decode-step seconds (probe through the cost model) — the
+    /// router's cost-awareness signal.
+    pred_step: f64,
     kv: PagedKv,
     batcher: Batcher,
     stepping: bool,
@@ -183,9 +224,17 @@ struct Replica {
     ingress: Server,
 }
 
+/// Probe the cost model with a canonical single-decode step: the relative
+/// ordering across replicas is what routing needs.
+fn predict_step(cfg: &ServeConfig) -> f64 {
+    let probe = StepBatch { prefills: vec![], decodes: vec![0], decode_ctx: vec![1024] };
+    cfg.step_time(&probe)
+}
+
 struct Sim<'a> {
     cfg: &'a FleetConfig,
     reqs: &'a [Request],
+    page_tokens: usize,
     q: EventQueue<Ev>,
     replicas: Vec<Replica>,
     router: Router,
@@ -201,6 +250,7 @@ struct Sim<'a> {
     commit_main: Vec<Option<Commit>>,
     last_done: f64,
     peak_replicas: usize,
+    peak_prefill: usize,
     handoffs: u64,
     handoff_bytes: u64,
 }
@@ -210,6 +260,7 @@ impl<'a> Sim<'a> {
         let mut sim = Sim {
             cfg,
             reqs,
+            page_tokens: cfg.replicas[0].kv_page_tokens.max(1),
             q: EventQueue::new(),
             replicas: Vec::new(),
             router: Router::new(0),
@@ -222,15 +273,16 @@ impl<'a> Sim<'a> {
             commit_main: vec![None; reqs.len()],
             last_done: 0.0,
             peak_replicas: 0,
+            peak_prefill: 0,
             handoffs: 0,
             handoff_bytes: 0,
         };
         let scalable = cfg.scalable_kind();
-        for _ in 0..cfg.replicas {
-            sim.push_replica(scalable);
+        for c in &cfg.replicas {
+            sim.push_replica(scalable, c.clone());
         }
-        for _ in 0..cfg.prefill_replicas {
-            sim.push_replica(PoolKind::Prefill);
+        for c in &cfg.prefill {
+            sim.push_replica(PoolKind::Prefill, c.clone());
         }
         for (i, r) in reqs.iter().enumerate() {
             sim.q.push(r.arrival, Ev::Arrival(i));
@@ -248,7 +300,7 @@ impl<'a> Sim<'a> {
                 Ev::StepDone(r) => self.on_step_done(r, now),
                 Ev::Handoff { replica, req } => self.on_handoff(replica, req),
                 Ev::ScaleTick => self.on_scale_tick(),
-                Ev::ReplicaUp => self.on_replica_up(),
+                Ev::ReplicaUp(kind) => self.on_replica_up(kind),
             }
         }
         // Conservation + allocator cleanliness: the fleet's contract.
@@ -264,12 +316,16 @@ impl<'a> Sim<'a> {
         if let Some(a) = &self.autoscaler {
             report.scale_ups = a.scale_ups;
             report.scale_downs = a.scale_downs;
+            report.prefill_scale_ups = a.prefill_scale_ups;
+            report.prefill_scale_downs = a.prefill_scale_downs;
         }
         report.peak_replicas = self.peak_replicas;
+        report.peak_prefill = self.peak_prefill;
         report.handoffs = self.handoffs;
         report.handoff_gb = self.handoff_bytes as f64 / (1u64 << 30) as f64;
         report.max_committed_pages = self.router.max_committed_pages;
         report.over_capacity_routes = self.router.over_capacity_routes;
+        report.routed = self.router.routed.clone();
         report
     }
 
@@ -363,7 +419,7 @@ impl<'a> Sim<'a> {
             self.router.route(self.cfg.policy, &views, self.session_of(req.id), pages, tokens);
         self.commit_main[i] = Some(Commit { replica: target, pages, tokens });
         let bytes = self.kv_handoff_bytes(req.prompt_len);
-        let link = self.cfg.base.topo.inter;
+        let link = self.cfg.replicas[0].topo.inter;
         let (_start, end) = self.replicas[target].ingress.book(now, bytes as f64 / link.beta);
         self.handoffs += 1;
         self.handoff_bytes += bytes;
@@ -382,8 +438,8 @@ impl<'a> Sim<'a> {
             self.start_handoff(req, now);
             return;
         }
-        let cap = self.cfg.base.max_concurrency;
         let rep = &mut self.replicas[replica];
+        let cap = rep.cfg.max_concurrency;
         if rep.batcher.running_len() < cap {
             match rep.batcher.submit_prefilled(self.reqs[req], &mut rep.kv) {
                 Ok(()) => {}
@@ -400,7 +456,22 @@ impl<'a> Sim<'a> {
         if self.metrics.completed() >= self.reqs.len() {
             return; // fleet drained; stop the control loop
         }
-        let kind = self.cfg.scalable_kind();
+        if self.autoscaler.is_some() {
+            self.scale_pool(self.cfg.scalable_kind());
+            if self.cfg.disaggregated_mode() {
+                self.scale_pool(PoolKind::Prefill);
+            }
+        }
+        let tick = self.autoscaler.as_ref().map(|a| a.cfg.tick).unwrap_or(0.0);
+        if tick > 0.0 {
+            self.q.push_in(tick, Ev::ScaleTick);
+        }
+    }
+
+    /// One control decision for one pool: the decode/monolithic pool runs
+    /// the combined (or TPOT-only) loop, the prefill pool its symmetric
+    /// TTFT-driven twin.
+    fn scale_pool(&mut self, kind: PoolKind) {
         let active = self
             .replicas
             .iter()
@@ -409,20 +480,25 @@ impl<'a> Sim<'a> {
         let queued: usize = self
             .replicas
             .iter()
+            .filter(|r| r.kind == kind)
             .map(|r| r.batcher.waiting_len() + r.pending.len())
             .sum();
-        let decision = match self.autoscaler.as_mut() {
-            Some(a) => a.decide(active, queued),
-            None => Decision::Hold,
+        let (decision, delay) = {
+            let a = self.autoscaler.as_mut().expect("checked by caller");
+            let d = match kind {
+                PoolKind::Prefill => a.decide_prefill(active, queued),
+                PoolKind::Decode => a.decide_decode(active, queued),
+                PoolKind::Monolithic => a.decide(active, queued),
+            };
+            (d, a.cfg.provision_delay)
         };
         match decision {
             Decision::Up => {
-                let delay = self.autoscaler.as_ref().expect("decided").cfg.provision_delay;
-                self.q.push_in(delay, Ev::ReplicaUp);
+                self.q.push_in(delay, Ev::ReplicaUp(kind));
             }
             Decision::Down => {
-                // Drain the highest-indexed active replica: no new routes,
-                // retire once its in-flight work drains.
+                // Drain the highest-indexed active replica of this pool:
+                // no new routes, retire once its in-flight work drains.
                 if let Some(victim) = (0..self.replicas.len()).rev().find(|&i| {
                     let r = &self.replicas[i];
                     r.kind == kind && !r.retired && !r.draining
@@ -434,30 +510,35 @@ impl<'a> Sim<'a> {
             }
             Decision::Hold => {}
         }
-        let tick = self.autoscaler.as_ref().map(|a| a.cfg.tick).unwrap_or(0.0);
-        if tick > 0.0 {
-            self.q.push_in(tick, Ev::ScaleTick);
-        }
     }
 
-    fn on_replica_up(&mut self) {
+    fn on_replica_up(&mut self, kind: PoolKind) {
         if let Some(a) = self.autoscaler.as_mut() {
-            a.replica_online();
+            match kind {
+                PoolKind::Prefill => a.prefill_online(),
+                _ => a.replica_online(),
+            }
         }
         if self.metrics.completed() >= self.reqs.len() {
             return; // capacity arrived after the rush ended
         }
-        self.push_replica(self.cfg.scalable_kind());
+        let template = match kind {
+            PoolKind::Prefill => self.cfg.prefill[0].clone(),
+            _ => self.cfg.replicas[0].clone(),
+        };
+        self.push_replica(kind, template);
     }
 
     // -- mechanics -----------------------------------------------------
 
-    fn push_replica(&mut self, kind: PoolKind) {
-        let b = &self.cfg.base;
+    fn push_replica(&mut self, kind: PoolKind, cfg: ServeConfig) {
+        let pred_step = predict_step(&cfg);
         self.replicas.push(Replica {
             kind,
-            kv: PagedKv::new(b.kv_pages, b.kv_page_tokens),
-            batcher: Batcher::new(b.max_concurrency, b.max_step_tokens),
+            kv: PagedKv::new(cfg.kv_pages, cfg.kv_page_tokens),
+            batcher: Batcher::new(cfg.max_concurrency, cfg.max_step_tokens),
+            cfg,
+            pred_step,
             stepping: false,
             current: None,
             draining: false,
@@ -468,6 +549,12 @@ impl<'a> Sim<'a> {
         self.router.grow(self.replicas.len());
         let live = self.replicas.iter().filter(|r| !r.retired).count();
         self.peak_replicas = self.peak_replicas.max(live);
+        let live_prefill = self
+            .replicas
+            .iter()
+            .filter(|r| r.kind == PoolKind::Prefill && !r.retired)
+            .count();
+        self.peak_prefill = self.peak_prefill.max(live_prefill);
     }
 
     /// Admit pending handoffs, then launch the next engine step if idle.
@@ -481,16 +568,17 @@ impl<'a> Sim<'a> {
         if step.is_empty() {
             return;
         }
-        let dur = step_time(&self.cfg.base, &step);
+        // Each replica prices the step with its own cost model.
+        let dur = rep.cfg.step_time(&step);
         rep.current = Some(step);
         rep.stepping = true;
         self.q.push_in(dur, Ev::StepDone(r));
     }
 
     fn try_admit_pending(&mut self, r: usize) {
-        let cap = self.cfg.base.max_concurrency;
         let reqs = self.reqs;
         let rep = &mut self.replicas[r];
+        let cap = rep.cfg.max_concurrency;
         while let Some(&i) = rep.pending.front() {
             if rep.batcher.running_len() >= cap
                 || rep.batcher.submit_prefilled(reqs[i], &mut rep.kv).is_err()
@@ -539,21 +627,22 @@ impl<'a> Sim<'a> {
             .map(|(id, r)| ReplicaView {
                 id,
                 accepting: !r.draining,
-                total_pages: self.cfg.base.kv_pages,
+                total_pages: r.cfg.kv_pages,
+                pred_step: r.pred_step,
             })
             .collect()
     }
 
     fn pages_for(&self, tokens: usize) -> usize {
-        tokens.max(1).div_ceil(self.cfg.base.kv_page_tokens.max(1))
+        tokens.max(1).div_ceil(self.page_tokens)
     }
 
     /// KV bytes that migrate on a prefill→decode handoff: the full prompt
     /// cache across all layers (the TP shards move in parallel over the
     /// per-node NICs; the aggregate bytes are what the fabric carries).
     fn kv_handoff_bytes(&self, prompt_len: usize) -> u64 {
-        (prompt_len * self.cfg.base.model.n_layers) as u64
-            * self.cfg.base.model.kv_bytes_per_token_layer()
+        let model = &self.cfg.replicas[0].model;
+        (prompt_len * model.n_layers) as u64 * model.kv_bytes_per_token_layer()
     }
 
     fn session_of(&self, id: u64) -> u64 {
@@ -565,7 +654,8 @@ impl<'a> Sim<'a> {
 mod tests {
     use super::*;
     use crate::collectives::AllReduceImpl;
-    use crate::serving::{fig9_config, Deployment};
+    use crate::parallel::ParallelSpec;
+    use crate::serving::fig9_config;
     use crate::trace::{LenDist, RateShape, TraceSpec};
     use crate::util::prop::{check, Gen};
 
@@ -582,9 +672,26 @@ mod tests {
     }
 
     fn base_cfg(concurrency: usize) -> ServeConfig {
-        let mut cfg =
-            fig9_config(Deployment::Tp(AllReduceImpl::NcclAuto), concurrency, "perlmutter", 16);
+        let mut cfg = fig9_config(
+            ParallelSpec::tp(16),
+            AllReduceImpl::NcclAuto,
+            concurrency,
+            "perlmutter",
+            16,
+        );
         cfg.kv_pages = 4096; // small enough that KV pressure is reachable
+        cfg
+    }
+
+    fn tp8_cfg(concurrency: usize) -> ServeConfig {
+        let mut cfg = fig9_config(
+            ParallelSpec::tp(8),
+            AllReduceImpl::NcclAuto,
+            concurrency,
+            "perlmutter",
+            8,
+        );
+        cfg.kv_pages = 4096;
         cfg
     }
 
@@ -645,6 +752,23 @@ mod tests {
     }
 
     #[test]
+    fn heterogeneous_fleet_prefers_faster_replicas() {
+        // 1×TP16 + 1×TP8: cost-aware least-tokens must send the TP16
+        // replica (lower predicted step time) more requests.
+        let reqs = small_spec(60, 8.0, 17).generate();
+        let cfg = FleetConfig::heterogeneous(vec![base_cfg(32), tp8_cfg(32)])
+            .with_policy(RoutePolicy::LeastOutstanding);
+        let rep = run_fleet(&cfg, &reqs);
+        assert_eq!(rep.completed, 60);
+        assert_eq!(rep.routed.len(), 2);
+        assert!(
+            rep.routed[0] > rep.routed[1],
+            "TP16 should absorb more load: {:?}",
+            rep.routed
+        );
+    }
+
+    #[test]
     fn property_fleet_conservation_random_configs() {
         check("fleet conserves requests", 12, |g: &mut Gen| {
             let n = g.usize(5, 40);
@@ -652,8 +776,13 @@ mod tests {
             let policy = *g.pick(&RoutePolicy::all());
             let replicas = g.usize(1, 5);
             let prefill = if g.bool() { g.usize(1, 2) } else { 0 };
-            let mut cfg =
-                FleetConfig::new(base_cfg(g.pow2(2, 6)), replicas).with_policy(policy);
+            let conc = g.pow2(2, 6);
+            // Mix TP16 and TP8 replicas at random: the invariants must
+            // hold for heterogeneous fleets too.
+            let pool: Vec<ServeConfig> = (0..replicas)
+                .map(|_| if g.bool() { base_cfg(conc) } else { tp8_cfg(conc) })
+                .collect();
+            let mut cfg = FleetConfig::heterogeneous(pool).with_policy(policy);
             if prefill > 0 {
                 cfg = cfg.disaggregated(prefill);
             }
@@ -702,6 +831,35 @@ mod tests {
         assert!(rep.scale_ups > 0, "ramp load must trigger scale-up");
         assert!(rep.peak_replicas > 1);
         assert_eq!(rep.completed, 120);
+    }
+
+    #[test]
+    fn prefill_bound_ramp_scales_the_prefill_pool() {
+        // Long prompts, near-single-token outputs: the prefill pool is the
+        // bottleneck, so TTFT breaches must grow *it*, not the decode pool.
+        let mut spec = small_spec(80, 4.0, 19);
+        spec.shape = RateShape::Ramp { from: 0.3, to: 5.0 };
+        spec.input = LenDist { median: 900.0, sigma: 0.3, min: 256, max: 2048 };
+        spec.output = LenDist { median: 2.0, sigma: 0.4, min: 2, max: 6 };
+        let reqs = spec.generate();
+        let slo = SloTargets { ttft: 0.4, tpot: 5.0 }; // TPOT never breaches
+        let auto = AutoscaleConfig {
+            tick: 2.0,
+            provision_delay: 4.0,
+            min_replicas: 1,
+            max_replicas: 6,
+            window: 24,
+            down_frac: 0.25,
+        };
+        let cfg = FleetConfig::new(base_cfg(8), 2)
+            .disaggregated(1)
+            .with_slo(slo)
+            .with_autoscale(auto);
+        let rep = run_fleet(&cfg, &reqs);
+        assert_eq!(rep.completed, 80);
+        assert!(rep.prefill_scale_ups > 0, "prefill-bound ramp must grow the prefill pool");
+        assert!(rep.peak_prefill > 1, "prefill pool must actually grow");
+        assert_eq!(rep.scale_ups, 0, "comfortable TPOT must not grow the decode pool");
     }
 
     #[test]

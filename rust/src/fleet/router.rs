@@ -12,6 +12,13 @@
 //! path places it on the least-committed replica, where it waits in the
 //! batcher queue — admission is still gated by the real allocator, so the
 //! replica itself can never over-allocate).
+//!
+//! **Cost-awareness for heterogeneous fleets**: every [`ReplicaView`]
+//! carries the replica's predicted decode-step time (from its own
+//! [`crate::parallel::StepCost`] model). `least-tokens` minimizes
+//! *predicted outstanding seconds* (`tokens × step`), not raw tokens, so a
+//! TP16 replica absorbs proportionally more load than a TP8 one;
+//! `kv-pressure` breaks page-fraction ties toward the faster replica.
 
 use std::collections::BTreeMap;
 
@@ -21,7 +28,8 @@ use std::collections::BTreeMap;
 pub enum RoutePolicy {
     /// Cycle through accepting replicas.
     RoundRobin,
-    /// Fewest outstanding (routed, incomplete) tokens.
+    /// Fewest predicted outstanding seconds (outstanding tokens × the
+    /// replica's predicted step time).
     LeastOutstanding,
     /// Lowest committed-KV-pages fraction; never knowingly over-commits.
     KvPressure,
@@ -71,6 +79,9 @@ pub struct ReplicaView {
     pub accepting: bool,
     /// KV pages its allocator owns in total.
     pub total_pages: usize,
+    /// Predicted decode-step seconds of this replica's engine — the
+    /// cost signal for heterogeneous fleets (lower = faster replica).
+    pub pred_step: f64,
 }
 
 /// The stateful router.
@@ -80,6 +91,10 @@ pub struct Router {
     committed_pages: Vec<usize>,
     outstanding_tokens: Vec<u64>,
     sessions: BTreeMap<u64, usize>,
+    /// Placements made against each replica (observability for the
+    /// heterogeneous-fleet tests and tables; a disaggregated request's
+    /// prefill and decode legs count separately).
+    pub routed: Vec<u64>,
     /// High-water mark of committed pages on any replica.
     pub max_committed_pages: usize,
     /// Placements that exceeded every accepting replica's capacity bound.
@@ -93,6 +108,7 @@ impl Router {
             committed_pages: vec![0; replicas],
             outstanding_tokens: vec![0; replicas],
             sessions: BTreeMap::new(),
+            routed: vec![0; replicas],
             max_committed_pages: 0,
             over_capacity_routes: 0,
         }
@@ -103,6 +119,7 @@ impl Router {
         while self.committed_pages.len() < replicas {
             self.committed_pages.push(0);
             self.outstanding_tokens.push(0);
+            self.routed.push(0);
         }
     }
 
@@ -150,15 +167,18 @@ impl Router {
                 self.rr_next = self.rr_next.wrapping_add(1);
                 pool[idx].id
             }
-            RoutePolicy::LeastOutstanding => self.least_tokens(&pool),
+            RoutePolicy::LeastOutstanding => self.least_cost(&pool),
             RoutePolicy::KvPressure => {
                 // Lowest committed/total fraction, compared exactly via
-                // cross-multiplication (deterministic, no float ties).
+                // cross-multiplication (deterministic, no float ties);
+                // equal fractions go to the faster replica.
                 pool.iter()
                     .min_by(|a, b| {
                         let la = self.committed_pages[a.id] * b.total_pages.max(1);
                         let lb = self.committed_pages[b.id] * a.total_pages.max(1);
-                        la.cmp(&lb).then(a.id.cmp(&b.id))
+                        la.cmp(&lb)
+                            .then(a.pred_step.total_cmp(&b.pred_step))
+                            .then(a.id.cmp(&b.id))
                     })
                     .expect("non-empty pool")
                     .id
@@ -168,7 +188,7 @@ impl Router {
                 match pinned {
                     Some(r) if pool.iter().any(|v| v.id == r) => r,
                     _ => {
-                        let r = self.least_tokens(&pool);
+                        let r = self.least_cost(&pool);
                         self.sessions.insert(session, r);
                         r
                     }
@@ -178,16 +198,20 @@ impl Router {
 
         self.committed_pages[chosen] += pages;
         self.outstanding_tokens[chosen] += tokens;
+        self.routed[chosen] += 1;
         self.max_committed_pages = self.max_committed_pages.max(self.committed_pages[chosen]);
         chosen
     }
 
-    fn least_tokens(&self, pool: &[&ReplicaView]) -> usize {
+    /// Fewest predicted outstanding seconds: outstanding tokens weighted by
+    /// the replica's predicted per-step cost, so faster (bigger-TP)
+    /// replicas absorb proportionally more of a heterogeneous fleet's load.
+    fn least_cost(&self, pool: &[&ReplicaView]) -> usize {
         pool.iter()
             .min_by(|a, b| {
-                self.outstanding_tokens[a.id]
-                    .cmp(&self.outstanding_tokens[b.id])
-                    .then(a.id.cmp(&b.id))
+                let la = self.outstanding_tokens[a.id] as f64 * a.pred_step;
+                let lb = self.outstanding_tokens[b.id] as f64 * b.pred_step;
+                la.total_cmp(&lb).then(a.id.cmp(&b.id))
             })
             .expect("non-empty pool")
             .id
@@ -213,7 +237,9 @@ mod tests {
     use super::*;
 
     fn views(n: usize, pages: usize) -> Vec<ReplicaView> {
-        (0..n).map(|id| ReplicaView { id, accepting: true, total_pages: pages }).collect()
+        (0..n)
+            .map(|id| ReplicaView { id, accepting: true, total_pages: pages, pred_step: 1.0 })
+            .collect()
     }
 
     #[test]
@@ -223,6 +249,7 @@ mod tests {
         let picks: Vec<usize> =
             (0..6).map(|_| r.route(RoutePolicy::RoundRobin, &v, 0, 1, 1)).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        assert_eq!(r.routed, vec![2, 2, 2]);
     }
 
     #[test]
@@ -234,6 +261,19 @@ mod tests {
         assert_eq!((a, b), (0, 1));
         r.complete(0, 1, 100);
         assert_eq!(r.route(RoutePolicy::LeastOutstanding, &v, 0, 1, 1), 0);
+    }
+
+    #[test]
+    fn least_outstanding_weighs_predicted_step_cost() {
+        // Replica 1 is twice as fast: equal token backlogs cost it half
+        // the seconds, so it absorbs more placements.
+        let mut r = Router::new(2);
+        let mut v = views(2, 1000);
+        v[1].pred_step = 0.5;
+        let picks: Vec<usize> =
+            (0..3).map(|_| r.route(RoutePolicy::LeastOutstanding, &v, 0, 1, 100)).collect();
+        // 0 (tie at zero), then 1 (0 s vs 100 s), then 1 again (50 s vs 100 s).
+        assert_eq!(picks, vec![0, 1, 1]);
     }
 
     #[test]
@@ -250,6 +290,14 @@ mod tests {
         // Fifth placement cannot fit anywhere: relief path, counted.
         r.route(RoutePolicy::KvPressure, &v, 0, 5, 10);
         assert_eq!(r.over_capacity_routes, 1);
+    }
+
+    #[test]
+    fn kv_pressure_breaks_fraction_ties_toward_faster_replica() {
+        let mut r = Router::new(2);
+        let mut v = views(2, 10);
+        v[1].pred_step = 0.5;
+        assert_eq!(r.route(RoutePolicy::KvPressure, &v, 0, 2, 1), 1);
     }
 
     #[test]

@@ -5,14 +5,17 @@
 //! three-layer Rust + JAX + Pallas stack:
 //!
 //! - **Layer 3 (this crate)** — the coordinator: the YALIS-style inference
-//!   engine ([`engine`]), the single-replica serving stack ([`serving`]),
-//!   the multi-replica SLO-aware serving fleet ([`fleet`]: router +
-//!   disaggregated prefill/decode pools + autoscaler), the cluster /
-//!   network simulation substrate ([`simnet`], [`cluster`]), the collective
-//!   algorithms ([`collectives`]) including the paper's NVRAR (both an
-//!   event-level simulation and a **real** shared-memory implementation over
-//!   the [`shmem`] PGAS substrate), and the PJRT [`runtime`] that executes
-//!   AOT-compiled model artifacts.
+//!   engine ([`engine`]), the composable parallelism/cost API
+//!   ([`parallel`]: `ParallelSpec` + `StepCost` — one vocabulary for pure
+//!   TP, hybrid TP×PP×DP, and MoE EP deployments), the single-replica
+//!   serving stack ([`serving`]), the multi-replica SLO-aware serving
+//!   fleet ([`fleet`]: cost-aware router + disaggregated prefill/decode
+//!   pools + dual-pool autoscaler, heterogeneous replica specs), the
+//!   cluster / network simulation substrate ([`simnet`], [`cluster`]), the
+//!   collective algorithms ([`collectives`]) including the paper's NVRAR
+//!   (both an event-level simulation and a **real** shared-memory
+//!   implementation over the [`shmem`] PGAS substrate), and the PJRT
+//!   [`runtime`] that executes AOT-compiled model artifacts.
 //! - **Layer 2** — JAX model graphs (`python/compile/model.py`), lowered
 //!   once to HLO text in `artifacts/`.
 //! - **Layer 1** — Pallas kernels (`python/compile/kernels/`), lowered into
@@ -29,6 +32,7 @@ pub mod fleet;
 pub mod metrics;
 pub mod models;
 pub mod moe;
+pub mod parallel;
 pub mod perfmodel;
 pub mod runtime;
 pub mod serving;

@@ -1,7 +1,9 @@
-//! MoE deployments (Fig 10): expert-parallel configurations for
+//! MoE step-cost model (Fig 10): expert-parallel configurations for
 //! Qwen3-235B-A22B on 16 GPUs, combining EP for the MoE layers with
 //! TP × DP (or PP) for the non-MoE layers, under NCCL or NVRAR.
 //!
+//! [`MoeCost`] is the [`StepCost`] implementation a `ep > 1`
+//! [`ParallelSpec`] dispatches to (via [`crate::parallel::cost_for`]).
 //! NVRAR targets the TP all-reduce, which remains on the critical path of
 //! the attention (non-MoE) part of every layer — so it composes with EP
 //! (the paper's §5.2.4 point) and the EP all-to-alls are untouched.
@@ -10,40 +12,20 @@ use crate::cluster::Topology;
 use crate::collectives::sim::{allreduce, CommConfig};
 use crate::collectives::AllReduceImpl;
 use crate::engine::batcher::StepBatch;
-use crate::engine::persona::Persona;
-use crate::models::ModelConfig;
-use crate::perfmodel::{self, GpuSpec};
+use crate::parallel::{ParallelSpec, StepCost};
+use crate::perfmodel;
+use crate::serving::ServeConfig;
 
-/// One Fig-10 deployment configuration.
-#[derive(Clone, Copy, Debug)]
-pub struct MoeDeployment {
-    pub label: &'static str,
-    /// TP degree of the non-MoE (attention) layers.
-    pub tp: usize,
-    /// Data-parallel replicas of the attention layers.
-    pub dp: usize,
-    /// Pipeline stages (1 = no PP).
-    pub pp: usize,
-    /// EP degree of the MoE layers (experts spread over this many GPUs).
-    pub ep: usize,
-    /// All-reduce implementation for the TP groups.
-    pub ar: AllReduceImpl,
-}
-
-impl MoeDeployment {
-    /// The four Fig-10 configurations on 16 GPUs.
-    pub fn fig10() -> Vec<MoeDeployment> {
-        vec![
-            MoeDeployment { label: "TP16-EP16 (NCCL)", tp: 16, dp: 1, pp: 1, ep: 16, ar: AllReduceImpl::NcclAuto },
-            MoeDeployment { label: "TP8xDP2-EP16 (NCCL)", tp: 8, dp: 2, pp: 1, ep: 16, ar: AllReduceImpl::NcclAuto },
-            MoeDeployment { label: "PP4xTP4 (NCCL)", tp: 4, dp: 1, pp: 4, ep: 4, ar: AllReduceImpl::NcclAuto },
-            MoeDeployment { label: "TP16-EP16 (NVRAR)", tp: 16, dp: 1, pp: 1, ep: 16, ar: AllReduceImpl::Nvrar },
-        ]
-    }
-
-    pub fn gpus(&self) -> usize {
-        self.tp * self.dp * self.pp
-    }
+/// The four Fig-10 deployments on 16 GPUs, as `(spec, all-reduce)` pairs —
+/// canonical labels `tp16-ep16/NCCL`, `tp8-dp2-ep16/NCCL`,
+/// `tp4-pp4-ep4/NCCL`, `tp16-ep16/NVRAR`.
+pub fn fig10_specs() -> Vec<(ParallelSpec, AllReduceImpl)> {
+    vec![
+        (ParallelSpec::moe(16, 1, 16), AllReduceImpl::NcclAuto),
+        (ParallelSpec::moe(8, 2, 16), AllReduceImpl::NcclAuto),
+        (ParallelSpec { tp: 4, pp: 4, dp: 1, ep: 4 }, AllReduceImpl::NcclAuto),
+        (ParallelSpec::moe(16, 1, 16), AllReduceImpl::Nvrar),
+    ]
 }
 
 /// All-to-all dispatch/combine time for routing `rows` token embeddings
@@ -60,104 +42,127 @@ pub fn all_to_all_time(topo: &Topology, comm: &CommConfig, rows: usize, d: usize
     alpha + bytes / link.beta
 }
 
-/// Per-step time of a MoE model under a deployment (decode-dominated
-/// serving step of `rows` token rows).
-pub fn moe_step_time(
-    model: &ModelConfig,
-    topo: &Topology,
-    gpu: &GpuSpec,
-    comm: &CommConfig,
-    persona: &Persona,
-    dep: &MoeDeployment,
-    step: &StepBatch,
-) -> f64 {
-    let moe = model.moe.expect("MoE model required");
-    let rows_total = step.token_rows().max(1);
-    // DP splits the batch across replicas. PP does NOT divide the work:
-    // one batch in flight traverses all stages (same no-interleave
-    // semantics as the dense serving path), so a PP deployment pays
-    // full-model depth at the smaller intra-stage TP degree.
-    let rows = rows_total.div_ceil(dep.dp).max(1);
-    let d = model.d_model;
-    let dt = model.dtype_bytes;
+/// Per-step cost of a MoE model under an EP deployment (decode-dominated
+/// serving step). Requires the [`ServeConfig`]'s model to be MoE.
+#[derive(Clone, Copy, Debug)]
+pub struct MoeCost {
+    spec: ParallelSpec,
+    ar: AllReduceImpl,
+}
 
-    // Attention part under TP (same as dense path, zero-FFN model).
-    let mut dense = model.clone();
-    dense.moe = None;
-    dense.ffn = 0;
-    let tp_topo = topo.with_gpus(dep.tp);
-    let lt_attn = perfmodel::layer_times(gpu, &dense, dep.tp, rows, 1024, rows);
-    let ar_msg = (rows * d * dt) as u64;
-    let ar_t = if dep.tp > 1 {
-        allreduce(dep.ar, &tp_topo, comm, ar_msg, lt_attn.total() / 2.0).total
-    } else {
-        0.0
-    };
-
-    // MoE part under EP: each GPU hosts n_experts/ep whole experts and
-    // runs one (gate+up, down) GEMM pair per resident expert over its
-    // routed token share. Lower EP means more experts (more weight bytes
-    // and more kernel floors) per GPU per layer — the mechanism that makes
-    // the PP4xTP4 configuration stream 4x the expert weights per wall-
-    // clock step.
-    let experts_per_gpu = (moe.n_experts / dep.ep).max(1);
-    let routed = (rows * moe.active_experts).div_ceil(dep.ep).max(1);
-    let rows_e = routed.div_ceil(experts_per_gpu).max(1);
-    let expert_gemm = experts_per_gpu as f64
-        * (perfmodel::gemm_time(gpu, rows_e, 2 * moe.expert_ffn, d, dt)
-            + perfmodel::gemm_time(gpu, rows_e, d, moe.expert_ffn, dt));
-    let a2a = 2.0 * all_to_all_time(topo, comm, rows, d, dt, dep.ep);
-
-    let mut per_layer = lt_attn.total() / persona.compute_efficiency + 2.0 * ar_t + expert_gemm + a2a;
-    // DP replicas batch independently but the EP all-to-all is a global
-    // rendezvous across the whole EP group: every MoE layer the replicas
-    // lock-step, and composition imbalance (plus vLLM's dummy-batch
-    // padding when a replica is idle) exposes straggler time. Modelled as
-    // a fractional penalty on the layer's critical path.
-    if dep.dp > 1 {
-        per_layer *= 1.0 + 0.45 * (1.0 - 1.0 / dep.dp as f64) * 2.0;
+impl MoeCost {
+    pub fn new(spec: ParallelSpec, ar: AllReduceImpl) -> Self {
+        assert!(spec.ep > 1, "MoeCost needs an expert-parallel spec");
+        MoeCost { spec, ar }
     }
-    let p2p = if dep.pp > 1 {
-        topo.inter.xfer_time((rows * d * dt) as u64) + persona.p2p_overhead
-    } else {
-        0.0
-    };
-    model.n_layers as f64 * per_layer + dep.pp as f64 * p2p + persona.step_overhead
+}
+
+impl StepCost for MoeCost {
+    fn step_time(&self, cfg: &ServeConfig, step: &StepBatch) -> f64 {
+        let s = self.spec;
+        let model = &cfg.model;
+        let moe = model.moe.expect("MoE model required");
+        let rows_total = step.token_rows().max(1);
+        // DP splits the batch across replicas. PP does NOT divide the work:
+        // one batch in flight traverses all stages (same no-interleave
+        // semantics as the dense serving path), so a PP deployment pays
+        // full-model depth at the smaller intra-stage TP degree.
+        let rows = rows_total.div_ceil(s.dp).max(1);
+        let d = model.d_model;
+        let dt = model.dtype_bytes;
+        let kv_len = step.mean_ctx();
+
+        // Attention part under TP (same as dense path, zero-FFN model).
+        let mut dense = model.clone();
+        dense.moe = None;
+        dense.ffn = 0;
+        let tp_topo = s.tp_topology(&cfg.topo);
+        let lt_attn = perfmodel::layer_times(&cfg.gpu, &dense, s.tp, rows, kv_len, rows);
+        let ar_msg = (rows * d * dt) as u64;
+        let ar_t = if s.tp > 1 {
+            allreduce(self.ar, &tp_topo, &cfg.comm, ar_msg, lt_attn.total() / 2.0).total
+        } else {
+            0.0
+        };
+
+        // MoE part under EP: each GPU hosts n_experts/ep whole experts and
+        // runs one (gate+up, down) GEMM pair per resident expert over its
+        // routed token share. Lower EP means more experts (more weight bytes
+        // and more kernel floors) per GPU per layer — the mechanism that makes
+        // the tp4-pp4-ep4 configuration stream 4x the expert weights per
+        // wall-clock step.
+        let experts_per_gpu = (moe.n_experts / s.ep).max(1);
+        let routed = (rows * moe.active_experts).div_ceil(s.ep).max(1);
+        let rows_e = routed.div_ceil(experts_per_gpu).max(1);
+        let expert_gemm = experts_per_gpu as f64
+            * (perfmodel::gemm_time(&cfg.gpu, rows_e, 2 * moe.expert_ffn, d, dt)
+                + perfmodel::gemm_time(&cfg.gpu, rows_e, d, moe.expert_ffn, dt));
+        let a2a = 2.0 * all_to_all_time(&cfg.topo, &cfg.comm, rows, d, dt, s.ep);
+
+        let mut per_layer =
+            lt_attn.total() / cfg.persona.compute_efficiency + 2.0 * ar_t + expert_gemm + a2a;
+        // DP replicas batch independently but the EP all-to-all is a global
+        // rendezvous across the whole EP group: every MoE layer the replicas
+        // lock-step, and composition imbalance (plus vLLM's dummy-batch
+        // padding when a replica is idle) exposes straggler time. Modelled as
+        // a fractional penalty on the layer's critical path.
+        if s.dp > 1 {
+            per_layer *= 1.0 + 0.45 * (1.0 - 1.0 / s.dp as f64) * 2.0;
+        }
+        let p2p = if s.pp > 1 {
+            s.stage_link(&cfg.topo).xfer_time((rows * d * dt) as u64) + cfg.persona.p2p_overhead
+        } else {
+            0.0
+        };
+        model.n_layers as f64 * per_layer + s.pp as f64 * p2p + cfg.persona.step_overhead
+    }
+
+    fn spec(&self) -> ParallelSpec {
+        self.spec
+    }
+
+    fn ar(&self) -> AllReduceImpl {
+        self.ar
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::presets;
+    use crate::models::ModelConfig;
+    use crate::serving::fig9_config;
 
-    fn setup() -> (ModelConfig, Topology, GpuSpec, CommConfig, Persona) {
-        (
-            ModelConfig::qwen3_235b_a22b(),
-            presets::perlmutter(4),
-            GpuSpec::a100(),
-            CommConfig::perlmutter(),
-            Persona::vllm_v1(),
-        )
+    fn qwen_cfg(spec: ParallelSpec, ar: AllReduceImpl) -> ServeConfig {
+        let mut cfg = fig9_config(spec, ar, 32, "perlmutter", 16);
+        cfg.model = ModelConfig::qwen3_235b_a22b();
+        cfg
     }
 
     fn step(rows: usize) -> StepBatch {
-        StepBatch { prefills: vec![], decodes: (0..rows as u64).collect() }
+        StepBatch {
+            prefills: vec![],
+            decodes: (0..rows as u64).collect(),
+            decode_ctx: vec![1024; rows],
+        }
     }
 
     #[test]
-    fn fig10_configs_all_16_gpus() {
-        for d in MoeDeployment::fig10() {
-            assert_eq!(d.gpus(), 16, "{}", d.label);
+    fn fig10_specs_all_16_gpus() {
+        for (s, _) in fig10_specs() {
+            assert_eq!(s.gpus(), 16, "{s}");
+            assert!(s.validate(&crate::cluster::presets::perlmutter(4)).is_ok(), "{s}");
         }
     }
 
     #[test]
     fn nvrar_fastest_among_fig10() {
         // §5.2.4: TP16-EP16 with NVRAR achieves the highest throughput.
-        let (m, t, g, c, p) = setup();
-        let times: Vec<(String, f64)> = MoeDeployment::fig10()
-            .iter()
-            .map(|d| (d.label.to_string(), moe_step_time(&m, &t, &g, &c, &p, d, &step(64))))
+        let times: Vec<(String, f64)> = fig10_specs()
+            .into_iter()
+            .map(|(s, ar)| {
+                let cfg = qwen_cfg(s, ar);
+                (cfg.deployment_label(), cfg.step_time(&step(64)))
+            })
             .collect();
         let nvrar = times.iter().find(|(l, _)| l.contains("NVRAR")).unwrap().1;
         for (l, tm) in &times {
@@ -169,20 +174,26 @@ mod tests {
 
     #[test]
     fn a2a_zero_for_single_gpu_ep() {
-        let (_, t, _, c, _) = setup();
+        let t = crate::cluster::presets::perlmutter(4);
+        let c = CommConfig::perlmutter();
         assert_eq!(all_to_all_time(&t, &c, 64, 4096, 2, 1), 0.0);
         assert!(all_to_all_time(&t, &c, 64, 4096, 2, 16) > 0.0);
     }
 
     #[test]
     fn dp_reduces_per_replica_rows() {
-        let (m, t, g, c, p) = setup();
-        let tp16 = MoeDeployment::fig10()[0];
-        let tp8dp2 = MoeDeployment::fig10()[1];
-        let t16 = moe_step_time(&m, &t, &g, &c, &p, &tp16, &step(256));
-        let t8 = moe_step_time(&m, &t, &g, &c, &p, &tp8dp2, &step(256));
+        let tp16 = qwen_cfg(ParallelSpec::moe(16, 1, 16), AllReduceImpl::NcclAuto);
+        let tp8dp2 = qwen_cfg(ParallelSpec::moe(8, 2, 16), AllReduceImpl::NcclAuto);
+        let t16 = tp16.step_time(&step(256));
+        let t8 = tp8dp2.step_time(&step(256));
         // Both should be the same order of magnitude; DP halves rows but
         // TP halves; crossover depends on comm. Just require sane values.
         assert!(t16 > 0.0 && t8 > 0.0 && t16.is_finite() && t8.is_finite());
+    }
+
+    #[test]
+    #[should_panic(expected = "expert-parallel")]
+    fn moe_cost_rejects_dense_spec() {
+        let _ = MoeCost::new(ParallelSpec::tp(16), AllReduceImpl::NcclAuto);
     }
 }

@@ -1,0 +1,487 @@
+//! Composable parallelism specs and per-step cost models — the single
+//! vocabulary every layer (serving, MoE, fleet, CLI, benches) uses to
+//! describe a deployment.
+//!
+//! The paper's central comparison is between model-parallel *schemes*
+//! (pure TP vs hybrid TP+PP, dense vs MoE EP layouts, §4–§5, Fig 10).
+//! [`ParallelSpec`] names a scheme as one `tp × pp × dp (× ep)` tuple,
+//! validated against the cluster [`Topology`] (node-boundary-aware
+//! placement); the [`StepCost`] trait turns a spec into a per-engine-step
+//! duration, with three first-class implementations:
+//!
+//! - [`DenseTp`] — pure tensor parallelism over every GPU (the paper's
+//!   YALIS-style deployment), one all-reduce pair per layer.
+//! - [`HybridTpPp`] — any TP×PP(×DP) split with configurable
+//!   micro-batching. Micro-batching cannot win back decode time because
+//!   decode GEMMs sit at the M-tile floor (Observation 2) — the roofline
+//!   in [`crate::perfmodel`] makes that emerge rather than being asserted.
+//! - [`crate::moe::MoeCost`] — expert-parallel MoE layers composed with
+//!   TP×DP(×PP) attention (Fig 10's deployments).
+//!
+//! [`cost_for`] dispatches a spec to the right implementation; everything
+//! downstream holds an `Arc<dyn StepCost>` inside
+//! [`crate::serving::ServeConfig`], so heterogeneous fleets mix replicas
+//! with different specs (and GPU counts) freely.
+
+use crate::cluster::{LinkParams, Topology};
+use crate::collectives::sim::allreduce;
+use crate::collectives::AllReduceImpl;
+use crate::engine::batcher::StepBatch;
+use crate::perfmodel;
+use crate::serving::ServeConfig;
+use std::fmt;
+use std::sync::Arc;
+
+/// One parallelism layout: `tp · pp · dp` GPUs, with `ep`-way expert
+/// parallelism for MoE layers (1 = dense / no EP).
+///
+/// Canonical string form (round-trips through [`ParallelSpec::by_name`]):
+/// `tp16`, `tp8-pp2`, `tp4-pp2-dp2`, `tp8-dp2-ep16` — dimensions equal to
+/// 1 are omitted (except `tp`, always printed).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ParallelSpec {
+    /// Tensor-parallel degree (K-split of every GEMM; one all-reduce pair
+    /// per layer).
+    pub tp: usize,
+    /// Pipeline stages (1 = no PP).
+    pub pp: usize,
+    /// Data-parallel replicas of the dense/attention layers.
+    pub dp: usize,
+    /// Expert-parallel degree of the MoE layers; may exceed `tp·pp` (the
+    /// EP group then spans DP replicas) but never `tp·pp·dp`.
+    pub ep: usize,
+}
+
+impl ParallelSpec {
+    /// Pure TP over `n` GPUs.
+    pub fn tp(n: usize) -> Self {
+        ParallelSpec { tp: n, pp: 1, dp: 1, ep: 1 }
+    }
+
+    /// Hybrid TP-within-stage, PP-across-stages.
+    pub fn tp_pp(tp: usize, pp: usize) -> Self {
+        ParallelSpec { tp, pp, dp: 1, ep: 1 }
+    }
+
+    /// MoE layout: TP×DP attention with `ep`-way expert parallelism.
+    pub fn moe(tp: usize, dp: usize, ep: usize) -> Self {
+        ParallelSpec { tp, pp: 1, dp, ep }
+    }
+
+    /// GPUs this spec occupies.
+    pub fn gpus(&self) -> usize {
+        self.tp * self.pp * self.dp
+    }
+
+    /// Canonical name, e.g. `tp8-pp2` (see type-level docs).
+    pub fn label(&self) -> String {
+        let mut s = format!("tp{}", self.tp);
+        if self.pp > 1 {
+            s.push_str(&format!("-pp{}", self.pp));
+        }
+        if self.dp > 1 {
+            s.push_str(&format!("-dp{}", self.dp));
+        }
+        if self.ep > 1 {
+            s.push_str(&format!("-ep{}", self.ep));
+        }
+        s
+    }
+
+    /// Parse a spec name: `-`-separated `tp<N>`/`pp<N>`/`dp<N>`/`ep<N>`
+    /// parts, `tp` mandatory, the rest defaulting to 1. As a convenience,
+    /// `ep` larger than the listed `tp·pp·dp` implies the missing DP
+    /// replicas (`tp8-ep16` ⇒ `tp8-dp2-ep16`, the Fig 10 convention);
+    /// an *explicit* `dp` is never overridden.
+    pub fn by_name(name: &str) -> anyhow::Result<Self> {
+        let lower = name.trim().to_ascii_lowercase();
+        let mut spec = ParallelSpec { tp: 0, pp: 1, dp: 1, ep: 1 };
+        let mut seen = [false; 4]; // tp, pp, dp, ep
+        let complain = || {
+            anyhow::anyhow!(
+                "bad parallel spec '{name}' (expected e.g. tp16, tp8-pp2, tp4-pp2-dp2, tp8-ep16)"
+            )
+        };
+        for part in lower.split('-') {
+            if part.len() < 3 || !part.is_char_boundary(2) {
+                return Err(complain());
+            }
+            let (key, digits) = part.split_at(2);
+            let n: usize = digits.parse().map_err(|_| complain())?;
+            if n == 0 {
+                anyhow::bail!("parallel spec '{name}': degree 0 in '{part}'");
+            }
+            let idx = match key {
+                "tp" => 0,
+                "pp" => 1,
+                "dp" => 2,
+                "ep" => 3,
+                _ => return Err(complain()),
+            };
+            if seen[idx] {
+                anyhow::bail!("parallel spec '{name}': duplicate '{key}'");
+            }
+            seen[idx] = true;
+            match idx {
+                0 => spec.tp = n,
+                1 => spec.pp = n,
+                2 => spec.dp = n,
+                _ => spec.ep = n,
+            }
+        }
+        if !seen[0] {
+            anyhow::bail!("parallel spec '{name}': missing mandatory 'tp<N>'");
+        }
+        if spec.ep > spec.gpus() {
+            let group = spec.tp * spec.pp;
+            if seen[2] || spec.ep % group != 0 {
+                anyhow::bail!(
+                    "parallel spec '{name}': ep{} exceeds tp·pp·dp = {}",
+                    spec.ep,
+                    spec.gpus()
+                );
+            }
+            spec.dp = spec.ep / group;
+        }
+        Ok(spec)
+    }
+
+    /// Validate the spec against a topology: the GPU grid must be fully
+    /// used (`tp·pp·dp == gpus`), TP groups must align to node boundaries
+    /// (within one node, or spanning whole nodes), and the EP group must
+    /// tile the GPU grid.
+    pub fn validate(&self, topo: &Topology) -> anyhow::Result<()> {
+        if self.tp == 0 || self.pp == 0 || self.dp == 0 || self.ep == 0 {
+            anyhow::bail!("parallel spec {self}: degrees must be >= 1");
+        }
+        let gpus = topo.total_gpus();
+        if self.gpus() != gpus {
+            anyhow::bail!(
+                "parallel spec {self} needs tp·pp·dp = {} GPUs but the topology has {gpus}",
+                self.gpus()
+            );
+        }
+        let gpn = topo.gpus_per_node.max(1);
+        if self.tp > gpn && self.tp % gpn != 0 {
+            anyhow::bail!(
+                "parallel spec {self}: tp{} straddles node boundaries ({} GPUs/node)",
+                self.tp,
+                gpn
+            );
+        }
+        if self.ep > self.gpus() || self.gpus() % self.ep != 0 {
+            anyhow::bail!(
+                "parallel spec {self}: ep{} must tile the {}-GPU grid",
+                self.ep,
+                self.gpus()
+            );
+        }
+        Ok(())
+    }
+
+    /// Sub-topology one TP group occupies (node-boundary-aware: a TP group
+    /// either fits inside a node or spans whole nodes — [`Self::validate`]
+    /// rejects anything else), which is what its all-reduce runs over.
+    pub fn tp_topology(&self, topo: &Topology) -> Topology {
+        topo.with_gpus(self.tp.max(1))
+    }
+
+    /// Link a PP stage boundary crosses: intra-node while one DP replica's
+    /// whole pipeline (`tp·pp` GPUs) fits in a node, inter-node otherwise.
+    pub fn stage_link(&self, topo: &Topology) -> LinkParams {
+        if self.tp * self.pp <= topo.gpus_per_node {
+            topo.intra
+        } else {
+            topo.inter
+        }
+    }
+
+    /// All power-of-two-factored specs for a GPU count (the
+    /// `sweep-parallel` grid). With `moe`, each dense layout is augmented
+    /// with its EP variants (`ep = gpus` and `ep = tp`, the Fig 10
+    /// shapes).
+    pub fn enumerate(gpus: usize, moe: bool) -> Vec<ParallelSpec> {
+        let mut out = Vec::new();
+        let mut push = |s: ParallelSpec| {
+            if !out.contains(&s) {
+                out.push(s);
+            }
+        };
+        let mut tp = 1;
+        while tp <= gpus {
+            if gpus % tp == 0 {
+                let rest = gpus / tp;
+                let mut pp = 1;
+                while pp <= rest {
+                    if rest % pp == 0 {
+                        let dp = rest / pp;
+                        let base = ParallelSpec { tp, pp, dp, ep: 1 };
+                        push(base);
+                        if moe {
+                            for ep in [gpus, tp] {
+                                if ep > 1 {
+                                    push(ParallelSpec { ep, ..base });
+                                }
+                            }
+                        }
+                    }
+                    pp *= 2;
+                }
+            }
+            tp *= 2;
+        }
+        out
+    }
+}
+
+impl fmt::Display for ParallelSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// Per-engine-step cost model of one deployment. Implementations read the
+/// machine/model/persona context from the [`ServeConfig`] at call time, so
+/// one cost object serves any model the config carries.
+pub trait StepCost: fmt::Debug + Send + Sync {
+    /// Duration (s) of one engine step executing `step` under `cfg`.
+    fn step_time(&self, cfg: &ServeConfig, step: &StepBatch) -> f64;
+
+    /// The parallelism layout this cost models.
+    fn spec(&self) -> ParallelSpec;
+
+    /// All-reduce implementation used for the TP groups.
+    fn ar(&self) -> AllReduceImpl;
+
+    /// Canonical deployment string, e.g. `tp8-pp2/NVRAR` — the label every
+    /// experiment table and `results/` CSV emits.
+    fn label(&self) -> String {
+        format!("{}/{}", self.spec(), self.ar().name())
+    }
+}
+
+/// Build the cost model for a spec: EP ⇒ [`crate::moe::MoeCost`], pure TP
+/// ⇒ [`DenseTp`], anything else ⇒ [`HybridTpPp`].
+pub fn cost_for(spec: ParallelSpec, ar: AllReduceImpl) -> Arc<dyn StepCost> {
+    if spec.ep > 1 {
+        Arc::new(crate::moe::MoeCost::new(spec, ar))
+    } else if spec.pp == 1 && spec.dp == 1 {
+        Arc::new(DenseTp::new(spec.tp, ar))
+    } else {
+        Arc::new(HybridTpPp::new(spec, ar))
+    }
+}
+
+/// Pure tensor parallelism over every GPU: each layer pays its GEMMs at
+/// `1/tp` K-width plus two all-reduces on the `rows × d_model` activation.
+#[derive(Clone, Copy, Debug)]
+pub struct DenseTp {
+    spec: ParallelSpec,
+    ar: AllReduceImpl,
+}
+
+impl DenseTp {
+    pub fn new(tp: usize, ar: AllReduceImpl) -> Self {
+        DenseTp { spec: ParallelSpec::tp(tp), ar }
+    }
+}
+
+impl StepCost for DenseTp {
+    fn step_time(&self, cfg: &ServeConfig, step: &StepBatch) -> f64 {
+        let tp = self.spec.tp;
+        let rows = step.token_rows().max(1);
+        let kv_len = step.mean_ctx();
+        let lt = perfmodel::layer_times(
+            &cfg.gpu,
+            &cfg.model,
+            tp,
+            rows,
+            kv_len,
+            step.decodes.len().max(1),
+        );
+        let msg = (rows * cfg.model.d_model * cfg.model.dtype_bytes) as u64;
+        let ar_t = if tp > 1 {
+            let tp_topo = self.spec.tp_topology(&cfg.topo);
+            allreduce(self.ar, &tp_topo, &cfg.comm, msg, lt.total() / 2.0).total
+        } else {
+            0.0
+        };
+        cfg.model.n_layers as f64 * (lt.total() / cfg.persona.compute_efficiency + 2.0 * ar_t)
+            + cfg.persona.step_overhead
+    }
+
+    fn spec(&self) -> ParallelSpec {
+        self.spec
+    }
+
+    fn ar(&self) -> AllReduceImpl {
+        self.ar
+    }
+}
+
+/// Hybrid TP×PP(×DP): `pp` pipeline stages of `tp`-way TP each, the batch
+/// split across `dp` replicas, with `micro_batches` batch slices in flight
+/// through the pipeline.
+///
+/// With `micro_batches = 1` (the default, what the paper's engines ran —
+/// vLLM PP, Fig 3's idle) a step traverses all stages sequentially:
+/// `T = L·layer + pp·(p2p + overhead)`, leaving `(pp-1)/pp` of every
+/// GPU-second as bubble. With `m > 1` the pipeline fills:
+/// `T = (pp + m - 1) · stage_time(rows/m)` — which helps prefill (GEMM
+/// rows shrink with the slice) but not decode, where the M-tile floor
+/// keeps `stage_time` constant and each slice re-streams the stage's
+/// weights (Observation 2).
+#[derive(Clone, Copy, Debug)]
+pub struct HybridTpPp {
+    spec: ParallelSpec,
+    ar: AllReduceImpl,
+    micro_batches: usize,
+}
+
+impl HybridTpPp {
+    pub fn new(spec: ParallelSpec, ar: AllReduceImpl) -> Self {
+        HybridTpPp { spec, ar, micro_batches: 1 }
+    }
+
+    /// Configure pipeline micro-batching (clamped to ≥ 1).
+    pub fn with_micro_batches(mut self, m: usize) -> Self {
+        self.micro_batches = m.max(1);
+        self
+    }
+}
+
+impl StepCost for HybridTpPp {
+    fn step_time(&self, cfg: &ServeConfig, step: &StepBatch) -> f64 {
+        let s = self.spec;
+        let rows_total = step.token_rows().max(1);
+        // DP splits the batch; PP does not divide per-token depth.
+        let rows = rows_total.div_ceil(s.dp).max(1);
+        let m = self.micro_batches.clamp(1, rows);
+        let mb_rows = rows.div_ceil(m).max(1);
+        let kv_len = step.mean_ctx();
+        let batch = step.decodes.len().max(1).div_ceil(s.dp).max(1);
+        let lt = perfmodel::layer_times(&cfg.gpu, &cfg.model, s.tp, mb_rows, kv_len, batch);
+        let msg = (mb_rows * cfg.model.d_model * cfg.model.dtype_bytes) as u64;
+        let ar_t = if s.tp > 1 {
+            let tp_topo = s.tp_topology(&cfg.topo);
+            allreduce(self.ar, &tp_topo, &cfg.comm, msg, lt.total() / 2.0).total
+        } else {
+            0.0
+        };
+        let layers_per_stage = cfg.model.n_layers.div_ceil(s.pp).max(1);
+        let p2p = if s.pp > 1 {
+            s.stage_link(&cfg.topo).xfer_time(msg) + cfg.persona.p2p_overhead
+        } else {
+            0.0
+        };
+        let stage_t = layers_per_stage as f64
+            * (lt.total() / cfg.persona.compute_efficiency + 2.0 * ar_t)
+            + p2p;
+        (s.pp + m - 1) as f64 * stage_t + cfg.persona.step_overhead
+    }
+
+    fn spec(&self) -> ParallelSpec {
+        self.spec
+    }
+
+    fn ar(&self) -> AllReduceImpl {
+        self.ar
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+
+    #[test]
+    fn by_name_parses_the_advertised_forms() {
+        assert_eq!(ParallelSpec::by_name("tp16").unwrap(), ParallelSpec::tp(16));
+        assert_eq!(ParallelSpec::by_name("tp8-pp2").unwrap(), ParallelSpec::tp_pp(8, 2));
+        assert_eq!(
+            ParallelSpec::by_name("tp4-pp2-dp2").unwrap(),
+            ParallelSpec { tp: 4, pp: 2, dp: 2, ep: 1 }
+        );
+        // ep beyond tp·pp·dp implies the missing DP replicas (Fig 10).
+        assert_eq!(ParallelSpec::by_name("tp8-ep16").unwrap(), ParallelSpec::moe(8, 2, 16));
+        assert_eq!(ParallelSpec::by_name("TP16-EP16").unwrap(), ParallelSpec::moe(16, 1, 16));
+    }
+
+    #[test]
+    fn by_name_round_trips_canonical_labels() {
+        for gpus in [4usize, 8, 16, 32] {
+            for moe in [false, true] {
+                for spec in ParallelSpec::enumerate(gpus, moe) {
+                    let back = ParallelSpec::by_name(&spec.label()).unwrap();
+                    assert_eq!(back, spec, "round-trip of {}", spec.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn by_name_rejects_with_usable_errors() {
+        for bad in ["", "hp", "tp", "tp0", "xx4", "tp8-tp2", "tp8-qq2", "tp-pp2"] {
+            let err = ParallelSpec::by_name(bad).unwrap_err().to_string();
+            assert!(err.contains("parallel spec") || err.contains("tp16"), "{bad}: {err}");
+        }
+        // Explicit dp is never silently overridden by a too-large ep.
+        assert!(ParallelSpec::by_name("tp8-dp1-ep16").is_err());
+        // ep not a multiple of the tp·pp group cannot be inferred.
+        assert!(ParallelSpec::by_name("tp3-ep16").is_err());
+    }
+
+    #[test]
+    fn validate_checks_gpu_count_and_node_boundaries() {
+        let topo16 = presets::perlmutter(4); // 4 nodes × 4 GPUs
+        assert!(ParallelSpec::tp(16).validate(&topo16).is_ok());
+        assert!(ParallelSpec::tp_pp(8, 2).validate(&topo16).is_ok()); // TP spans 2 whole nodes
+        assert!(ParallelSpec::tp_pp(4, 4).validate(&topo16).is_ok());
+        assert!(ParallelSpec::moe(8, 2, 16).validate(&topo16).is_ok());
+        // Wrong GPU totals.
+        assert!(ParallelSpec::tp(8).validate(&topo16).is_err());
+        assert!(ParallelSpec::tp_pp(8, 4).validate(&topo16).is_err());
+        // ep must tile the grid.
+        assert!(ParallelSpec { tp: 16, pp: 1, dp: 1, ep: 3 }.validate(&topo16).is_err());
+    }
+
+    #[test]
+    fn tp_topology_and_stage_link_are_node_aware() {
+        let topo = presets::perlmutter(4);
+        // TP4 fits one node: NVLink all-reduce.
+        let t4 = ParallelSpec::tp_pp(4, 4).tp_topology(&topo);
+        assert_eq!((t4.nodes, t4.gpus_per_node), (1, 4));
+        // TP8 spans two nodes.
+        let t8 = ParallelSpec::tp_pp(8, 2).tp_topology(&topo);
+        assert_eq!((t8.nodes, t8.gpus_per_node), (2, 4));
+        // Stage hops cross nodes whenever a replica's pipeline exceeds one.
+        let inter = ParallelSpec::tp_pp(4, 4).stage_link(&topo);
+        assert_eq!(inter.alpha, topo.inter.alpha);
+        let small = presets::perlmutter(1); // 1 node × 4 GPUs
+        let intra = ParallelSpec::tp_pp(2, 2).stage_link(&small);
+        assert_eq!(intra.alpha, small.intra.alpha);
+    }
+
+    #[test]
+    fn enumerate_covers_the_full_grid() {
+        let dense = ParallelSpec::enumerate(16, false);
+        assert!(dense.contains(&ParallelSpec::tp(16)));
+        assert!(dense.contains(&ParallelSpec::tp_pp(4, 4)));
+        assert!(dense.contains(&ParallelSpec { tp: 4, pp: 2, dp: 2, ep: 1 }));
+        assert!(dense.iter().all(|s| s.gpus() == 16 && s.ep == 1));
+        let moe = ParallelSpec::enumerate(16, true);
+        assert!(moe.contains(&ParallelSpec::moe(16, 1, 16)));
+        assert!(moe.contains(&ParallelSpec { tp: 4, pp: 4, dp: 1, ep: 4 }));
+        assert!(moe.len() > dense.len());
+    }
+
+    #[test]
+    fn cost_for_dispatches_by_spec_shape() {
+        let d = cost_for(ParallelSpec::tp(16), AllReduceImpl::Nvrar);
+        assert_eq!(d.label(), "tp16/NVRAR");
+        let h = cost_for(ParallelSpec::tp_pp(8, 2), AllReduceImpl::NcclAuto);
+        assert_eq!(h.label(), "tp8-pp2/NCCL");
+        let m = cost_for(ParallelSpec::moe(16, 1, 16), AllReduceImpl::Nvrar);
+        assert_eq!(m.label(), "tp16-ep16/NVRAR");
+    }
+}

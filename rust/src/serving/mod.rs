@@ -3,42 +3,30 @@
 //! event queue.
 //!
 //! The real scheduling machinery ([`crate::engine::batcher::Batcher`] and
-//! [`crate::engine::kv::PagedKv`]) makes the decisions; the α-β/roofline
-//! models supply step durations. Mixed prefill+decode batches, decode-only
+//! [`crate::engine::kv::PagedKv`]) makes the decisions; a
+//! [`crate::parallel::StepCost`] model (built from a
+//! [`crate::parallel::ParallelSpec`] by [`crate::parallel::cost_for`])
+//! supplies step durations. Mixed prefill+decode batches, decode-only
 //! batches at high concurrency, and KV-pressure effects all emerge from the
 //! real allocator — the paper's §5.2.3 explanation of why NVRAR's gains
 //! shrink at C=256 (bigger decode batches ⇒ bigger messages) is reproduced
 //! mechanically.
 
 use crate::cluster::Topology;
-use crate::collectives::sim::{allreduce, CommConfig};
+use crate::collectives::sim::CommConfig;
 use crate::collectives::AllReduceImpl;
 use crate::engine::batcher::{Batcher, Request, StepBatch};
 use crate::engine::kv::PagedKv;
 use crate::engine::persona::Persona;
 use crate::models::ModelConfig;
-use crate::perfmodel::{self, GpuSpec};
+use crate::parallel::{cost_for, ParallelSpec, StepCost};
+use crate::perfmodel::GpuSpec;
 use crate::simnet::EventQueue;
+use std::sync::Arc;
 
-/// Deployment shape for serving.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Deployment {
-    /// Pure TP over all GPUs with the given all-reduce implementation.
-    Tp(AllReduceImpl),
-    /// Hybrid: TP within a node, PP across nodes (NCCL).
-    Hp,
-}
-
-impl Deployment {
-    pub fn label(&self) -> String {
-        match self {
-            Deployment::Tp(ar) => format!("TP/{}", ar.name()),
-            Deployment::Hp => "HP".to_string(),
-        }
-    }
-}
-
-/// Serving configuration.
+/// Serving configuration: the machine/model context plus the deployment's
+/// [`StepCost`] model. Every replica of a fleet owns one of these, so
+/// heterogeneous fleets are just different `ServeConfig`s side by side.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     pub model: ModelConfig,
@@ -46,7 +34,8 @@ pub struct ServeConfig {
     pub gpu: GpuSpec,
     pub comm: CommConfig,
     pub persona: Persona,
-    pub deployment: Deployment,
+    /// Per-step cost model of the deployment (see [`crate::parallel`]).
+    pub cost: Arc<dyn StepCost>,
     /// Max request concurrency (the paper's C).
     pub max_concurrency: usize,
     /// Per-step token budget.
@@ -54,6 +43,18 @@ pub struct ServeConfig {
     /// KV pages (per TP group) and tokens per page.
     pub kv_pages: usize,
     pub kv_page_tokens: usize,
+}
+
+impl ServeConfig {
+    /// Duration of one engine step for `step` under this deployment.
+    pub fn step_time(&self, step: &StepBatch) -> f64 {
+        self.cost.step_time(self, step)
+    }
+
+    /// Canonical deployment string (e.g. `tp8-pp2/NVRAR`) for tables/CSVs.
+    pub fn deployment_label(&self) -> String {
+        self.cost.label()
+    }
 }
 
 /// Serving outcome metrics.
@@ -77,15 +78,6 @@ enum Ev {
 
 /// Run the trace through the deployment; returns serving metrics.
 pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
-    serve_with(cfg, reqs, |c, s| step_time(c, s))
-}
-
-/// [`serve`] with a custom step timer (the MoE deployments of Fig 10 plug
-/// their own per-step cost model in here).
-pub fn serve_with<F>(cfg: &ServeConfig, reqs: &[Request], step_timer: F) -> ServeReport
-where
-    F: Fn(&ServeConfig, &StepBatch) -> f64,
-{
     let mut q: EventQueue<Ev> = EventQueue::new();
     for (i, r) in reqs.iter().enumerate() {
         q.push(r.arrival, Ev::Arrival(i));
@@ -122,7 +114,7 @@ where
         if !stepping {
             let step = batcher.next_step(&mut kv);
             if !step.is_empty() {
-                let dur = step_timer(cfg, &step);
+                let dur = cfg.step_time(&step);
                 steps += 1;
                 if step.prefills.is_empty() {
                     decode_only += 1;
@@ -151,74 +143,27 @@ where
     }
 }
 
-/// Duration of one engine step for the given batch under the deployment.
-pub fn step_time(cfg: &ServeConfig, step: &StepBatch) -> f64 {
-    let rows = step.token_rows().max(1);
-    let kv_len = 1024; // mean context length during serving
-    match cfg.deployment {
-        Deployment::Tp(ar) => {
-            let tp = cfg.topo.total_gpus();
-            let lt =
-                perfmodel::layer_times(&cfg.gpu, &cfg.model, tp, rows, kv_len, step.decodes.len().max(1));
-            let msg = (rows * cfg.model.d_model * cfg.model.dtype_bytes) as u64;
-            let gap = lt.total() / 2.0;
-            let ar_t = if tp > 1 {
-                allreduce(ar, &cfg.topo, &cfg.comm, msg, gap).total
-            } else {
-                0.0
-            };
-            let l = cfg.model.n_layers as f64;
-            l * (lt.total() / cfg.persona.compute_efficiency + 2.0 * ar_t)
-                + cfg.persona.step_overhead
-        }
-        Deployment::Hp => {
-            // Decode-phase pipeline with ONE batch in flight — what the
-            // paper's engines actually did (vLLM PP; Fig 3 shows the
-            // resulting idle): a token's step traverses all S stages
-            // sequentially, so the full-batch step is S · stage_time(rows)
-            // = L · layer(tp_intra, rows) + S · (p2p + stage sync), and
-            // (S-1)/S of every GPU-second is pipeline bubble. Micro-batch
-            // interleaving cannot win back the weight-streaming: decode
-            // GEMMs sit at the M-tile floor (Observation 2), and each
-            // micro-batch re-streams the stage's weights.
-            let stages = cfg.topo.nodes.max(1);
-            let tp = cfg.topo.gpus_per_node;
-            let tp_topo = cfg.topo.with_gpus(tp);
-            let lt = perfmodel::layer_times(&cfg.gpu, &cfg.model, tp, rows, kv_len, step.decodes.len().max(1));
-            let msg = (rows * cfg.model.d_model * cfg.model.dtype_bytes) as u64;
-            let ar_t = if tp > 1 {
-                allreduce(AllReduceImpl::NcclAuto, &tp_topo, &cfg.comm, msg, lt.total() / 2.0).total
-            } else {
-                0.0
-            };
-            let p2p = cfg
-                .topo
-                .inter
-                .xfer_time((rows * cfg.model.d_model * cfg.model.dtype_bytes) as u64)
-                + cfg.persona.p2p_overhead;
-            cfg.model.n_layers as f64
-                * (lt.total() / cfg.persona.compute_efficiency + 2.0 * ar_t)
-                + stages as f64 * p2p
-                + cfg.persona.step_overhead
-        }
-    }
-}
-
-/// Standard config builder for the Fig 9/18 setups (70B on Perlmutter).
+/// Standard config builder for the Fig 9/18 setups (70B on `machine`).
+/// Panics if `spec` does not fit the `machine`×`gpus` topology — CLI paths
+/// should `validate` first for a usable error.
 pub fn fig9_config(
-    deployment: Deployment,
+    spec: ParallelSpec,
+    ar: AllReduceImpl,
     concurrency: usize,
     machine: &str,
     gpus: usize,
 ) -> ServeConfig {
     let topo = crate::cluster::presets::by_name(machine, 1).with_gpus(gpus);
+    if let Err(e) = spec.validate(&topo) {
+        panic!("fig9_config: {e}");
+    }
     ServeConfig {
         model: ModelConfig::llama31_70b(),
         topo,
         gpu: GpuSpec::for_machine(machine),
         comm: CommConfig::for_machine(machine),
         persona: Persona::vllm_v1(),
-        deployment,
+        cost: cost_for(spec, ar),
         max_concurrency: concurrency,
         max_step_tokens: 8192,
         kv_pages: 60_000,
@@ -229,7 +174,9 @@ pub fn fig9_config(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::parallel::HybridTpPp;
     use crate::trace::TraceSpec;
+    use crate::util::prop::{check, Gen};
 
     fn small_trace(n: usize) -> Vec<Request> {
         let mut spec = TraceSpec::burstgpt();
@@ -237,9 +184,13 @@ mod tests {
         spec.generate()
     }
 
+    fn tp16(ar: AllReduceImpl, concurrency: usize) -> ServeConfig {
+        fig9_config(ParallelSpec::tp(16), ar, concurrency, "perlmutter", 16)
+    }
+
     #[test]
     fn serve_completes_all_requests() {
-        let cfg = fig9_config(Deployment::Tp(AllReduceImpl::NcclAuto), 32, "perlmutter", 16);
+        let cfg = tp16(AllReduceImpl::NcclAuto, 32);
         let reqs = small_trace(40);
         let rep = serve(&cfg, &reqs);
         let expected: u64 = reqs.iter().map(|r| r.decode_len as u64).sum();
@@ -250,14 +201,8 @@ mod tests {
     #[test]
     fn nvrar_tp_beats_nccl_tp_throughput() {
         let reqs = small_trace(40);
-        let nccl = serve(
-            &fig9_config(Deployment::Tp(AllReduceImpl::NcclAuto), 32, "perlmutter", 16),
-            &reqs,
-        );
-        let nvrar = serve(
-            &fig9_config(Deployment::Tp(AllReduceImpl::Nvrar), 32, "perlmutter", 16),
-            &reqs,
-        );
+        let nccl = serve(&tp16(AllReduceImpl::NcclAuto, 32), &reqs);
+        let nvrar = serve(&tp16(AllReduceImpl::Nvrar, 32), &reqs);
         let gain = nvrar.output_throughput / nccl.output_throughput;
         assert!(gain > 1.02, "NVRAR throughput gain {gain}");
     }
@@ -267,8 +212,8 @@ mod tests {
         // §5.2.3: at higher C, prefills finish earlier -> decode-only
         // batches dominate.
         let reqs = small_trace(60);
-        let lo = serve(&fig9_config(Deployment::Tp(AllReduceImpl::NcclAuto), 4, "perlmutter", 16), &reqs);
-        let hi = serve(&fig9_config(Deployment::Tp(AllReduceImpl::NcclAuto), 64, "perlmutter", 16), &reqs);
+        let lo = serve(&tp16(AllReduceImpl::NcclAuto, 4), &reqs);
+        let hi = serve(&tp16(AllReduceImpl::NcclAuto, 64), &reqs);
         assert!(
             hi.decode_only_frac >= lo.decode_only_frac * 0.95,
             "lo {} hi {}",
@@ -280,16 +225,121 @@ mod tests {
     #[test]
     fn ttft_improves_with_concurrency() {
         let reqs = small_trace(50);
-        let lo = serve(&fig9_config(Deployment::Tp(AllReduceImpl::NcclAuto), 2, "perlmutter", 16), &reqs);
-        let hi = serve(&fig9_config(Deployment::Tp(AllReduceImpl::NcclAuto), 64, "perlmutter", 16), &reqs);
+        let lo = serve(&tp16(AllReduceImpl::NcclAuto, 2), &reqs);
+        let hi = serve(&tp16(AllReduceImpl::NcclAuto, 64), &reqs);
         assert!(hi.mean_ttft < lo.mean_ttft, "{} vs {}", lo.mean_ttft, hi.mean_ttft);
     }
 
     #[test]
-    fn hp_step_time_finite() {
-        let cfg = fig9_config(Deployment::Hp, 32, "perlmutter", 16);
+    fn hybrid_splits_run_including_ones_hp_could_not_express() {
         let reqs = small_trace(20);
-        let rep = serve(&cfg, &reqs);
-        assert!(rep.output_throughput.is_finite() && rep.output_throughput > 0.0);
+        // tp4-pp4 is the old HP shape on Perlmutter-16; tp8-pp2 (TP group
+        // spanning two nodes) and tp4-pp2-dp2 were inexpressible before.
+        for name in ["tp4-pp4", "tp8-pp2", "tp4-pp2-dp2", "tp2-pp8"] {
+            let spec = ParallelSpec::by_name(name).unwrap();
+            let cfg = fig9_config(spec, AllReduceImpl::NcclAuto, 32, "perlmutter", 16);
+            let rep = serve(&cfg, &reqs);
+            assert!(
+                rep.output_throughput.is_finite() && rep.output_throughput > 0.0,
+                "{name}: {rep:?}"
+            );
+            let expected: u64 = reqs.iter().map(|r| r.decode_len as u64).sum();
+            assert_eq!(rep.total_output_tokens, expected, "{name}");
+        }
+    }
+
+    #[test]
+    fn pure_tp_beats_one_in_flight_pipeline_on_decode() {
+        // The paper's headline comparison: TP (K-split keeps scaling decode
+        // GEMMs) beats the bubble-dominated hybrid on the same 16 GPUs.
+        let reqs = small_trace(30);
+        let tp = serve(&tp16(AllReduceImpl::NcclAuto, 32), &reqs);
+        let hp = serve(
+            &fig9_config(ParallelSpec::tp_pp(4, 4), AllReduceImpl::NcclAuto, 32, "perlmutter", 16),
+            &reqs,
+        );
+        assert!(
+            tp.output_throughput > hp.output_throughput,
+            "tp16 {} vs tp4-pp4 {}",
+            tp.output_throughput,
+            hp.output_throughput
+        );
+    }
+
+    #[test]
+    fn micro_batching_helps_prefill_but_not_decode() {
+        let base =
+            fig9_config(ParallelSpec::tp_pp(4, 4), AllReduceImpl::NcclAuto, 32, "perlmutter", 16);
+        let m1 = HybridTpPp::new(ParallelSpec::tp_pp(4, 4), AllReduceImpl::NcclAuto);
+        let m4 = m1.with_micro_batches(4);
+        let prefill = StepBatch {
+            prefills: vec![(0, 4096)],
+            decodes: vec![],
+            decode_ctx: vec![],
+        };
+        use crate::parallel::StepCost;
+        assert!(
+            m4.step_time(&base, &prefill) < m1.step_time(&base, &prefill),
+            "micro-batching must shrink the prefill pipeline bubble"
+        );
+        let decode = StepBatch {
+            prefills: vec![],
+            decodes: (0..32u64).collect(),
+            decode_ctx: vec![1024; 32],
+        };
+        // Observation 2: decode GEMMs sit at the M-tile floor, so slicing
+        // the batch re-streams weights without shrinking stage time.
+        assert!(
+            m4.step_time(&base, &decode) >= m1.step_time(&base, &decode) * 0.99,
+            "micro-batching must not help decode"
+        );
+    }
+
+    #[test]
+    fn step_cost_scales_with_real_kv_context() {
+        // Satellite of the redesign: the attention roofline reads the
+        // batch's actual context lengths, not a hardcoded 1024.
+        let cfg = tp16(AllReduceImpl::NcclAuto, 32);
+        let short = StepBatch {
+            prefills: vec![],
+            decodes: (0..32u64).collect(),
+            decode_ctx: vec![128; 32],
+        };
+        let long = StepBatch {
+            prefills: vec![],
+            decodes: (0..32u64).collect(),
+            decode_ctx: vec![8192; 32],
+        };
+        assert!(
+            cfg.step_time(&long) > cfg.step_time(&short),
+            "KV growth must slow the step: {} vs {}",
+            cfg.step_time(&long),
+            cfg.step_time(&short)
+        );
+    }
+
+    #[test]
+    fn property_valid_specs_conserve_tokens_and_are_deterministic() {
+        check("parallel specs conserve output tokens", 12, |g: &mut Gen| {
+            let gpus = *g.pick(&[4usize, 8, 16]);
+            let topo = crate::cluster::presets::perlmutter(1).with_gpus(gpus);
+            let specs: Vec<ParallelSpec> = ParallelSpec::enumerate(gpus, false)
+                .into_iter()
+                .filter(|s| s.validate(&topo).is_ok())
+                .collect();
+            let spec = *g.pick(&specs);
+            let ar = *g.pick(&AllReduceImpl::all());
+            let mut tspec = TraceSpec::burstgpt();
+            tspec.num_prompts = g.usize(8, 24);
+            tspec.seed = g.u64(1, 1 << 20);
+            let reqs = tspec.generate();
+            let cfg = fig9_config(spec, ar, 16, "perlmutter", gpus);
+            let a = serve(&cfg, &reqs);
+            let expected: u64 = reqs.iter().map(|r| r.decode_len as u64).sum();
+            assert_eq!(a.total_output_tokens, expected, "{spec} lost tokens");
+            let b = serve(&cfg, &reqs);
+            assert_eq!(a.total_output_tokens, b.total_output_tokens, "{spec}");
+            assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{spec} not deterministic");
+        });
     }
 }

@@ -179,6 +179,28 @@ impl Args {
         }
     }
 
+    /// Comma-separated list parsed element-wise with a fallible domain
+    /// parser (the list twin of [`Args::get_with`], e.g. for
+    /// `ParallelSpec::by_name` or `RoutePolicy::by_name`). A rejected
+    /// element exits with the parser's error message.
+    pub fn get_list_with<T, E: std::fmt::Display>(
+        &self,
+        name: &str,
+        parse: impl Fn(&str) -> Result<T, E>,
+    ) -> Vec<T> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| match parse(s.trim()) {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("error: --{name}: {e}");
+                    std::process::exit(2);
+                }
+            })
+            .collect()
+    }
+
     /// Comma-separated list of integers, e.g. `--gpus 4,8,16`.
     pub fn get_usize_list(&self, name: &str) -> Vec<usize> {
         self.get(name)
@@ -235,6 +257,13 @@ mod tests {
         let a = cli().parse_from(vec!["--gpus".into(), "12".into()]).unwrap();
         let doubled = a.get_with("gpus", |s| s.parse::<usize>().map(|v| v * 2));
         assert_eq!(doubled, 24);
+    }
+
+    #[test]
+    fn get_list_with_parses_each_element() {
+        let a = cli().parse_from(vec!["--sizes".into(), " 3, 5 ,7".into()]).unwrap();
+        let v = a.get_list_with("sizes", |s| s.parse::<usize>());
+        assert_eq!(v, vec![3, 5, 7]);
     }
 
     #[test]

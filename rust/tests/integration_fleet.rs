@@ -1,18 +1,25 @@
 //! Integration: the fleet layer's acceptance contract end-to-end — real
 //! paper traces through multi-replica fleets, disaggregation beating the
 //! monolithic pool on decode-heavy TTFT tails, NVRAR's per-replica gain
-//! surviving aggregation, determinism, and autoscaling under a ramp.
+//! surviving aggregation, determinism, autoscaling under a ramp, and a
+//! heterogeneous TP8/TP16 fleet routed cost-aware through the unified
+//! `ParallelSpec` + `StepCost` API.
 
 use yalis::collectives::AllReduceImpl;
 use yalis::fleet::autoscaler::AutoscaleConfig;
 use yalis::fleet::metrics::SloTargets;
 use yalis::fleet::router::RoutePolicy;
 use yalis::fleet::{run_fleet, FleetConfig};
-use yalis::serving::{fig9_config, Deployment, ServeConfig};
+use yalis::parallel::ParallelSpec;
+use yalis::serving::{fig9_config, ServeConfig};
 use yalis::trace::{RateShape, TraceSpec};
 
 fn replica_70b(ar: AllReduceImpl, concurrency: usize) -> ServeConfig {
-    fig9_config(Deployment::Tp(ar), concurrency, "perlmutter", 16)
+    fig9_config(ParallelSpec::tp(16), ar, concurrency, "perlmutter", 16)
+}
+
+fn replica_70b_tp8(ar: AllReduceImpl, concurrency: usize) -> ServeConfig {
+    fig9_config(ParallelSpec::tp(8), ar, concurrency, "perlmutter", 8)
 }
 
 /// The acceptance-criterion configuration: on the paper's decode-heavy
@@ -65,6 +72,53 @@ fn nvrar_fleet_outperforms_nccl_fleet_under_saturation() {
         nccl.throughput
     );
     assert!(nvrar.makespan < nccl.makespan);
+}
+
+/// The acceptance criterion of the ParallelSpec redesign: a mixed
+/// TP8/TP16 fleet (heterogeneous replica sizes, the ROADMAP item) runs
+/// through the same API, the cost-aware router sends the faster TP16
+/// replicas more work, and every invariant — request conservation (and
+/// KV-page leak freedom, asserted inside `run_fleet`) plus bit-determinism
+/// — holds.
+#[test]
+fn heterogeneous_tp8_tp16_fleet_routes_cost_aware_with_invariants() {
+    let mut spec = TraceSpec::burstgpt();
+    spec.num_prompts = 200;
+    spec.rate = 25.0;
+    let reqs = spec.generate();
+    let pool = vec![
+        replica_70b(AllReduceImpl::Nvrar, 64),
+        replica_70b(AllReduceImpl::Nvrar, 64),
+        replica_70b_tp8(AllReduceImpl::Nvrar, 64),
+        replica_70b_tp8(AllReduceImpl::Nvrar, 64),
+    ];
+    let cfg = FleetConfig::heterogeneous(pool).with_policy(RoutePolicy::LeastOutstanding);
+    let a = run_fleet(&cfg, &reqs);
+    assert_eq!(a.completed, 200);
+    // Cost-aware routing: the two TP16 replicas absorb more requests than
+    // the two TP8 ones.
+    assert_eq!(a.routed.len(), 4);
+    let tp16_load = a.routed[0] + a.routed[1];
+    let tp8_load = a.routed[2] + a.routed[3];
+    assert!(
+        tp16_load > tp8_load,
+        "TP16 replicas should absorb more load: {:?}",
+        a.routed
+    );
+    assert!(tp8_load > 0, "slower replicas must still serve: {:?}", a.routed);
+    // Bit-deterministic across runs.
+    let b = run_fleet(&cfg, &reqs);
+    assert_eq!(a, b, "heterogeneous fleet must be bit-deterministic");
+    // And the mixed fleet also works disaggregated, with kv-pressure
+    // routing, conserving the whole trace.
+    let disagg = FleetConfig::heterogeneous(vec![
+        replica_70b(AllReduceImpl::Nvrar, 64),
+        replica_70b_tp8(AllReduceImpl::Nvrar, 64),
+    ])
+    .with_policy(RoutePolicy::KvPressure)
+    .disaggregated(1);
+    let c = run_fleet(&disagg, &reqs);
+    assert_eq!(c.completed, 200);
 }
 
 /// Bit-identical results for a fixed seed, including the stateful paths
