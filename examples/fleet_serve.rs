@@ -10,8 +10,9 @@
 //! cost-aware router loads them in proportion to predicted step time.
 //!
 //! Usage: cargo run --release --example fleet_serve --
-//!        [--trace burstgpt|decode-heavy] [--prompts 100000] [--rate 40]
-//!        [--specs tp16:4] [--prefill 1] [--conc 256] [--allreduce nvrar]
+//!        [--trace burstgpt|decode-heavy|long-prompt] [--prompts 100000]
+//!        [--rate 40] [--specs tp16:4] [--prefill 1] [--conc 256]
+//!        [--allreduce nvrar] [--chunk-tokens 0]
 //!        [--policies round-robin,least-tokens,kv-pressure,session-affinity]
 //!        [--slo-ttft 5.0] [--slo-tpot 0.2] [--ramp 0] [--autoscale]
 
@@ -28,13 +29,14 @@ use yalis::util::tables::Table;
 
 fn main() {
     let mut cli = Cli::new("fleet_serve", "multi-replica SLO-aware fleet serving study");
-    cli.opt("trace", "burstgpt", "trace kind (burstgpt|decode-heavy)");
+    cli.opt("trace", "burstgpt", "trace kind (burstgpt|decode-heavy|long-prompt)");
     cli.opt("prompts", "100000", "number of requests");
     cli.opt("rate", "40", "mean arrival rate (req/s) across the fleet");
     cli.opt("seed", "0", "trace seed override (0 = trace default)");
     cli.opt("specs", "tp16:4", "replica specs with counts, e.g. tp16:2,tp8:2");
     cli.opt("prefill", "1", "prefill replicas for the disaggregated rows");
     cli.opt("conc", "256", "per-replica max concurrency");
+    cli.opt("chunk-tokens", "0", "per-replica prefill chunk cap (0 = budget-bounded chunks)");
     cli.opt("allreduce", "nvrar", "per-replica all-reduce (nccl|nccl-ring|nccl-tree|mpi|nvrar)");
     cli.opt("policies", "round-robin,least-tokens,kv-pressure,session-affinity", "routing policies to sweep");
     cli.opt("slo-ttft", "5.0", "TTFT SLO target (s)");
@@ -76,7 +78,8 @@ fn main() {
     let mut pool: Vec<ServeConfig> = Vec::new();
     let mut pool_label = Vec::new();
     for (spec, count) in entries {
-        let cfg = fig9_config(spec, ar, conc, "perlmutter", spec.gpus());
+        let mut cfg = fig9_config(spec, ar, conc, "perlmutter", spec.gpus());
+        cfg.chunk_tokens = args.get_usize("chunk-tokens");
         pool_label.push(format!("{}x{}", count, cfg.deployment_label()));
         for _ in 0..count {
             pool.push(cfg.clone());
@@ -91,8 +94,11 @@ fn main() {
     let mut spec = match args.get("trace") {
         "burstgpt" => TraceSpec::burstgpt(),
         "decode-heavy" => TraceSpec::decode_heavy(),
+        "long-prompt" => TraceSpec::long_prompt(),
         other => {
-            eprintln!("error: unknown trace '{other}' (expected burstgpt|decode-heavy)");
+            eprintln!(
+                "error: unknown trace '{other}' (expected burstgpt|decode-heavy|long-prompt)"
+            );
             std::process::exit(2);
         }
     };
@@ -126,7 +132,7 @@ fn main() {
         ),
         &[
             "policy", "pools", "tok/s", "goodput", "SLO %", "TTFT p50", "TTFT p95", "TTFT p99",
-            "TPOT p50", "TPOT p95", "TPOT p99", "peak rep", "handoff GB",
+            "TPOT p50", "TPOT p95", "TPOT p99", "peak rep", "handoff GB", "preempts", "rejects",
         ],
     );
     for &policy in &policies {
@@ -175,5 +181,7 @@ fn row_cells(policy: RoutePolicy, pools: &str, r: &FleetReport) -> Vec<String> {
         format!("{:.4}", r.tpot_p99),
         r.peak_replicas.to_string(),
         format!("{:.1}", r.handoff_gb),
+        r.preemptions.to_string(),
+        r.rejected.to_string(),
     ]
 }

@@ -3,8 +3,9 @@
 //! implementations and report output throughput.
 //!
 //! Usage: cargo run --release --example serve_trace --
-//!        [--trace burstgpt|decode-heavy] [--prompts 300] [--conc 32,256]
-//!        [--gpus 16] [--specs tp16,tp4-pp4] [--allreduce nccl,nvrar]
+//!        [--trace burstgpt|decode-heavy|long-prompt] [--prompts 300]
+//!        [--conc 32,256] [--gpus 16] [--specs tp16,tp4-pp4]
+//!        [--allreduce nccl,nvrar] [--chunk-tokens 0]
 
 use yalis::collectives::AllReduceImpl;
 use yalis::parallel::ParallelSpec;
@@ -15,17 +16,19 @@ use yalis::util::tables::Table;
 
 fn main() {
     let mut cli = Cli::new("serve_trace", "Fig 9/18 trace-driven serving");
-    cli.opt("trace", "burstgpt", "trace kind (burstgpt|decode-heavy)");
+    cli.opt("trace", "burstgpt", "trace kind (burstgpt|decode-heavy|long-prompt)");
     cli.opt("prompts", "300", "number of prompts");
     cli.opt("conc", "32,256", "concurrency settings");
     cli.opt("gpus", "16", "GPU count");
     cli.opt("specs", "tp16,tp4-pp4", "parallelism specs to sweep (e.g. tp16,tp8-pp2)");
     cli.opt("allreduce", "nccl,nvrar", "all-reduce impls to sweep");
+    cli.opt("chunk-tokens", "0", "prefill chunk cap (0 = budget-bounded chunks)");
     let args = cli.parse();
 
     let mut spec = match args.get("trace") {
         "burstgpt" => TraceSpec::burstgpt(),
         "decode-heavy" => TraceSpec::decode_heavy(),
+        "long-prompt" => TraceSpec::long_prompt(),
         other => panic!("unknown trace '{other}'"),
     };
     spec.num_prompts = args.get_usize("prompts");
@@ -56,7 +59,8 @@ fn main() {
     for c in args.get_usize_list("conc") {
         for &pspec in &pspecs {
             for &ar in &ars {
-                let cfg = fig9_config(pspec, ar, c, "perlmutter", gpus);
+                let mut cfg = fig9_config(pspec, ar, c, "perlmutter", gpus);
+                cfg.chunk_tokens = args.get_usize("chunk-tokens");
                 let rep = serve(&cfg, &reqs);
                 t.row(&[
                     cfg.deployment_label(),

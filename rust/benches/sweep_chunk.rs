@@ -1,0 +1,11 @@
+//! Regenerates the `yalis sweep-chunk` table: chunked vs whole-prompt
+//! prefill on the long-prompt-heavy trace (70B on Perlmutter-16) — TTFT
+//! p50/p99 tails, median TPOT and preemption counts per chunk size, with
+//! the whole-prompt monolithic-step admission as the baseline.
+use yalis::coordinator::experiments::sweep_chunk;
+
+fn main() {
+    let t = sweep_chunk("70b", "perlmutter", 16);
+    t.print();
+    t.write_csv("results/sweep_chunk.csv").unwrap();
+}

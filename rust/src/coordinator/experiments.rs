@@ -293,8 +293,14 @@ pub fn fig8_phase_breakdown() -> Table {
 }
 
 /// Figure 9: BurstGPT trace serving throughput (70B, Perlmutter, 16 GPUs).
-pub fn fig9_trace_serving() -> Table {
-    serving_table("Fig9 BurstGPT serving 70B/Perlmutter (16 GPUs)", TraceSpec::burstgpt(), &[32, 256])
+/// `chunk_tokens` caps prefill chunks (0 = budget-bounded chunks).
+pub fn fig9_trace_serving(chunk_tokens: usize) -> Table {
+    serving_table(
+        "Fig9 BurstGPT serving 70B/Perlmutter (16 GPUs)",
+        TraceSpec::burstgpt(),
+        &[32, 256],
+        chunk_tokens,
+    )
 }
 
 /// Figure 18: decode-heavy trace serving.
@@ -303,10 +309,16 @@ pub fn fig18_decode_trace_serving() -> Table {
         "Fig18 decode-heavy trace serving 70B/Perlmutter (16 GPUs)",
         TraceSpec::decode_heavy(),
         &[32, 256],
+        0,
     )
 }
 
-fn serving_table(title: &str, mut spec: TraceSpec, concurrencies: &[usize]) -> Table {
+fn serving_table(
+    title: &str,
+    mut spec: TraceSpec,
+    concurrencies: &[usize],
+    chunk_tokens: usize,
+) -> Table {
     // Scaled-down trace keeps bench wall-clock sane; rates and shapes keep
     // the paper's Table 6 proportions.
     spec.num_prompts = 200;
@@ -320,7 +332,8 @@ fn serving_table(title: &str, mut spec: TraceSpec, concurrencies: &[usize]) -> T
             (ParallelSpec::tp(16), AllReduceImpl::Nvrar),
             (ParallelSpec::tp_pp(4, 4), AllReduceImpl::NcclAuto),
         ] {
-            let cfg = fig9_config(pspec, ar, c, "perlmutter", 16);
+            let mut cfg = fig9_config(pspec, ar, c, "perlmutter", 16);
+            cfg.chunk_tokens = chunk_tokens;
             let rep = serve(&cfg, &reqs);
             t.row(&[
                 cfg.deployment_label(),
@@ -330,6 +343,53 @@ fn serving_table(title: &str, mut spec: TraceSpec, concurrencies: &[usize]) -> T
                 format!("{:.2}", rep.mean_ttft),
             ]);
         }
+    }
+    t
+}
+
+/// `yalis sweep-chunk`: chunked vs whole-prompt prefill on the
+/// long-prompt-heavy trace. The whole-prompt baseline raises the step
+/// budget until the longest prompt is admissible in one monolithic step
+/// (the only way the pre-chunking engine could serve it at all); every
+/// chunked row keeps the same budget so admission capacity is equal and
+/// only the slicing differs. The last row is the production shape: the
+/// default 8192-token budget with prompts 4x longer — unservable before
+/// chunked prefill existed.
+pub fn sweep_chunk(model_name: &str, machine: &str, gpus: usize) -> Table {
+    let model = ModelConfig::by_name(model_name);
+    let mut tspec = TraceSpec::long_prompt();
+    tspec.num_prompts = 150;
+    let reqs = tspec.generate();
+    let longest = reqs.iter().map(|r| r.prompt_len).max().unwrap_or(8192);
+    // Headroom above the longest prompt so in-flight decodes never force
+    // the "whole-prompt" baseline to split a prompt after all.
+    let budget = longest + 64;
+    let mut t = Table::new(
+        &format!(
+            "sweep-chunk {} on {machine} x{gpus} GPUs (long-prompt trace, max prompt {longest})",
+            model.name
+        ),
+        &["mode", "budget", "tok/s", "TTFT p50", "TTFT p99", "TPOT p50", "preempts"],
+    );
+    let rows: Vec<(String, usize, usize)> = std::iter::once(("whole-prompt".to_string(), budget, 0))
+        .chain([512usize, 1024, 2048, 4096].into_iter().map(|c| (format!("chunk {c}"), budget, c)))
+        .chain(std::iter::once(("chunk 2048".to_string(), 8192, 2048)))
+        .collect();
+    for (mode, budget, chunk) in rows {
+        let mut cfg = fig9_config(ParallelSpec::tp(gpus), AllReduceImpl::Nvrar, 64, machine, gpus);
+        cfg.model = model.clone();
+        cfg.max_step_tokens = budget;
+        cfg.chunk_tokens = chunk;
+        let rep = serve(&cfg, &reqs);
+        t.row(&[
+            mode,
+            budget.to_string(),
+            format!("{:.1}", rep.output_throughput),
+            format!("{:.2}", rep.ttft_p50),
+            format!("{:.2}", rep.ttft_p99),
+            format!("{:.4}", rep.tpot_p50),
+            rep.preemptions.to_string(),
+        ]);
     }
     t
 }
@@ -402,12 +462,13 @@ pub fn sweep_parallel(model_name: &str, machine: &str, gpus: usize) -> Table {
 /// Fleet: multi-replica SLO-aware serving — routing policies × pool modes
 /// on a scaled BurstGPT trace with the chosen per-replica all-reduce.
 /// (Beyond the paper: its serving experiments stop at one replica.)
-pub fn fleet_experiment(ar: AllReduceImpl) -> Table {
+pub fn fleet_experiment(ar: AllReduceImpl, chunk_tokens: usize) -> Table {
     let mut spec = TraceSpec::burstgpt();
     spec.num_prompts = 800;
     spec.rate = 12.0;
     let reqs = spec.generate();
-    let base = fig9_config(ParallelSpec::tp(16), ar, 64, "perlmutter", 16);
+    let mut base = fig9_config(ParallelSpec::tp(16), ar, 64, "perlmutter", 16);
+    base.chunk_tokens = chunk_tokens;
     let mut t = Table::new(
         &format!("Fleet serving, 4x(70B {}) replicas, BurstGPT x{}", base.deployment_label(), reqs.len()),
         &[
@@ -608,14 +669,15 @@ pub fn all_experiments() -> Vec<Table> {
     out.push(fig7_e2e_speedup("70b", "perlmutter"));
     out.push(fig7_e2e_speedup("405b", "perlmutter"));
     out.push(fig8_phase_breakdown());
-    out.push(fig9_trace_serving());
+    out.push(fig9_trace_serving(0));
     out.push(fig10_moe());
     out.push(fig13_sync_hiding());
     out.extend(fig14_fig15_nccl_variants());
     out.push(fig7_e2e_speedup("70b", "vista"));
     out.extend(fig17_fig18_traces());
     out.push(sweep_parallel("70b", "perlmutter", 16));
-    out.push(fleet_experiment(AllReduceImpl::Nvrar));
+    out.push(sweep_chunk("70b", "perlmutter", 16));
+    out.push(fleet_experiment(AllReduceImpl::Nvrar, 0));
     out.push(fleet_hetero_experiment(AllReduceImpl::Nvrar));
     out
 }
@@ -675,6 +737,36 @@ mod tests {
         // Rows carry canonical ParallelSpec strings.
         assert!(rows.iter().any(|r| r[0] == "tp8/NVRAR"), "{:?}", rows[0]);
         assert!(rows.iter().any(|r| r[0] == "tp4-pp2/NCCL"));
+    }
+
+    #[test]
+    fn sweep_chunk_shows_ttft_tail_win_without_tpot_regression() {
+        // The chunked-vs-whole-prompt acceptance claim: at equal admission
+        // budget, 2048-token chunks tighten the TTFT tail on the
+        // long-prompt trace without regressing median TPOT by >5%.
+        let t = sweep_chunk("70b", "perlmutter", 16);
+        let rows = t.rows();
+        let whole = rows.iter().find(|r| r[0] == "whole-prompt").expect("baseline row");
+        let chunked = rows
+            .iter()
+            .find(|r| r[0] == "chunk 2048" && r[1] == whole[1])
+            .expect("equal-budget chunked row");
+        let p99 = |r: &[String]| r[4].parse::<f64>().unwrap();
+        let tpot = |r: &[String]| r[5].parse::<f64>().unwrap();
+        assert!(
+            p99(chunked) < p99(whole),
+            "chunked TTFT p99 {} must beat whole-prompt {}",
+            p99(chunked),
+            p99(whole)
+        );
+        assert!(
+            tpot(chunked) < tpot(whole) * 1.05,
+            "TPOT p50 must not regress >5%: {} vs {}",
+            tpot(chunked),
+            tpot(whole)
+        );
+        // The production shape (8192 budget, 4x-longer prompts) serves.
+        assert!(rows.iter().any(|r| r[1] == "8192"));
     }
 
     #[test]

@@ -16,13 +16,14 @@ pub fn main() {
         "yalis",
         "multi-node LLM inference study + NVRAR all-reduce (paper reproduction).\n\
          Subcommand = first positional arg: scaling | breakdown | gemm | nccl-vs-mpi |\n\
-         micro | hyperparams | e2e | phase | serve | sweep-parallel | fleet |\n\
-         fleet-hetero | moe | sync | variants | traces | all",
+         micro | hyperparams | e2e | phase | serve | sweep-parallel | sweep-chunk |\n\
+         fleet | fleet-hetero | moe | sync | variants | traces | all",
     );
     cli.opt("machine", "perlmutter", "machine preset (perlmutter|vista)");
     cli.opt("model", "70b", "model (70b|405b|qwen3|tiny)");
-    cli.opt("gpus", "16", "GPU count for `sweep-parallel`");
+    cli.opt("gpus", "16", "GPU count for `sweep-parallel`/`sweep-chunk`");
     cli.opt("allreduce", "nvrar", "per-replica all-reduce for `fleet`/`fleet-hetero` (nccl|nccl-ring|nccl-tree|mpi|nvrar)");
+    cli.opt("chunk-tokens", "0", "prefill chunk cap for serve/fleet (0 = budget-bounded)");
     cli.opt("csv-dir", "", "write CSVs into this directory (empty = don't)");
     let args = cli.parse();
     let csv = if args.get("csv-dir").is_empty() { None } else { Some(args.get("csv-dir").to_string()) };
@@ -39,14 +40,17 @@ pub fn main() {
         "hyperparams" => vec![experiments::table5_hyperparams()],
         "e2e" => vec![experiments::fig7_e2e_speedup(model, machine)],
         "phase" => vec![experiments::fig8_phase_breakdown()],
-        "serve" => vec![experiments::fig9_trace_serving()],
+        "serve" => vec![experiments::fig9_trace_serving(args.get_usize("chunk-tokens"))],
         "sweep-parallel" => {
             vec![experiments::sweep_parallel(model, machine, args.get_usize("gpus"))]
+        }
+        "sweep-chunk" => {
+            vec![experiments::sweep_chunk(model, machine, args.get_usize("gpus"))]
         }
         "fleet" => {
             // Bad --allreduce values exit with a usable message, not a panic.
             let ar = args.get_with("allreduce", crate::collectives::AllReduceImpl::by_name);
-            vec![experiments::fleet_experiment(ar)]
+            vec![experiments::fleet_experiment(ar, args.get_usize("chunk-tokens"))]
         }
         "fleet-hetero" => {
             let ar = args.get_with("allreduce", crate::collectives::AllReduceImpl::by_name);

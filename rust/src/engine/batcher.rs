@@ -1,12 +1,20 @@
-//! Continuous-batching scheduler (Orca-style) — the real admission / step
-//! construction logic the serving simulator drives.
+//! Continuous-batching scheduler (Orca/Sarathi-style) — the real admission
+//! / step construction logic the serving simulator drives.
 //!
 //! Each engine step builds a batch from (a) running sequences needing one
-//! decode token each and (b) waiting prompts admitted under three caps:
-//! max concurrency, a per-step token budget (prefill chunks count their
-//! full prompt), and KV-page availability. The paper's §5.2.3 behaviour —
-//! mixed prefill/decode batches at low concurrency, decode-only batches at
-//! high concurrency — emerges from exactly these rules.
+//! decode token each, (b) in-flight **prefill chunks** of partially
+//! prefilled prompts, and (c) waiting prompts admitted under three caps:
+//! max concurrency, a per-step token budget, and KV-page availability.
+//!
+//! Prefill is **chunked**: a prompt longer than the per-step token budget
+//! (or the configured `chunk_tokens` slice) is admitted in bounded slices
+//! over successive steps, with KV pages allocated incrementally per chunk
+//! — so a long prompt can never head-of-line-block the queue, and the
+//! paper's §5.2.3 behaviour (mixed prefill/decode batches at low
+//! concurrency, decode-only batches at high concurrency) still emerges
+//! from exactly these rules. A sequence whose decode hits KV exhaustion is
+//! **preempted** (pages released, re-queued to re-prefill its context),
+//! never silently truncated: output tokens are conserved.
 
 use super::kv::{KvError, PagedKv, SeqId};
 use std::collections::VecDeque;
@@ -20,11 +28,27 @@ pub struct Request {
     pub arrival: f64,
 }
 
+/// One prefill chunk row of a step: `tokens` new prompt tokens fed to the
+/// GEMMs, attending a `ctx`-token prefix. Cost models price the chunk's
+/// GEMM rows against its *full* attended context, not just the chunk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PrefillChunk {
+    pub id: SeqId,
+    /// New prompt tokens processed this step (the GEMM rows).
+    pub tokens: usize,
+    /// Prompt tokens attended once this chunk completes (prefix + chunk).
+    pub ctx: usize,
+    /// This chunk finishes the prompt: its completion produces the
+    /// sequence's first output token (TTFT fires here).
+    pub last: bool,
+}
+
 /// What one engine step will execute.
 #[derive(Clone, Debug, Default)]
 pub struct StepBatch {
-    /// Sequences doing their prefill this step (id, prompt tokens).
-    pub prefills: Vec<(SeqId, usize)>,
+    /// Prefill chunk rows this step (whole prompts are a single chunk
+    /// with `last = true`).
+    pub prefills: Vec<PrefillChunk>,
     /// Sequences decoding one token this step.
     pub decodes: Vec<SeqId>,
     /// KV context length (prompt + tokens decoded so far) of each decode
@@ -41,7 +65,7 @@ impl StepBatch {
 
     /// Total token rows fed to the GEMMs this step.
     pub fn token_rows(&self) -> usize {
-        self.prefills.iter().map(|(_, t)| *t).sum::<usize>() + self.decodes.len()
+        self.prefills.iter().map(|c| c.tokens).sum::<usize>() + self.decodes.len()
     }
 
     /// Batch rows for the attention/all-reduce message (B of B×H).
@@ -49,18 +73,38 @@ impl StepBatch {
         self.token_rows()
     }
 
-    /// Mean KV context length the attention kernels read this step:
-    /// prefills contribute their prompt, decodes their current context.
-    /// Never 0 (an empty batch reports 1).
-    pub fn mean_ctx(&self) -> usize {
-        let n = self.prefills.len() + self.decodes.len();
-        if n == 0 {
-            return 1;
-        }
-        let total: usize = self.prefills.iter().map(|(_, t)| *t).sum::<usize>()
-            + self.decode_ctx.iter().sum::<usize>();
-        (total / n).max(1)
+    /// Sequences participating in this step (prefill chunks + decodes).
+    pub fn seqs(&self) -> usize {
+        self.prefills.len() + self.decodes.len()
     }
+
+    /// Mean KV context length the attention kernels read this step:
+    /// prefill chunks contribute their full attended prefix, decodes
+    /// their current context. Computed and returned in f64 so a batch of
+    /// many short contexts plus one long one is not truncated down a
+    /// whole token bucket. Never below 1 (an empty batch reports 1).
+    pub fn mean_ctx(&self) -> f64 {
+        let n = self.seqs();
+        if n == 0 {
+            return 1.0;
+        }
+        let total = self.prefills.iter().map(|c| c.ctx).sum::<usize>()
+            + self.decode_ctx.iter().sum::<usize>();
+        (total as f64 / n as f64).max(1.0)
+    }
+}
+
+/// What [`Batcher::complete_step`] did: produced tokens and any sequences
+/// preempted (KV exhaustion) back to the waiting queue this step.
+#[derive(Clone, Debug, Default)]
+pub struct StepOutcome {
+    /// Output tokens produced by this step: one per successful decode row
+    /// plus one per completed (last-chunk) prefill.
+    pub new_tokens: usize,
+    /// Decoding sequences whose KV append failed: their pending token was
+    /// discarded and they were re-queued to re-prefill their context, so
+    /// the token total is conserved (they will re-produce it).
+    pub preempted: Vec<SeqId>,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -69,15 +113,34 @@ struct Running {
     remaining_decode: usize,
 }
 
+/// A sequence between waiting and running: admitted, `done` of `total`
+/// prompt tokens prefilled. `decode_tokens` output tokens remain to be
+/// produced once the prefill completes (the last chunk produces the
+/// first of them) — carried here rather than looked up, so a preempted
+/// sequence resumes with its *remaining* decode, not the original.
+#[derive(Clone, Copy, Debug)]
+struct Prefilling {
+    id: SeqId,
+    total: usize,
+    done: usize,
+    decode_tokens: usize,
+}
+
 /// The continuous batcher.
 #[derive(Clone, Debug)]
 pub struct Batcher {
     pub max_concurrency: usize,
     /// Token budget per step (vLLM's max_num_batched_tokens analogue).
     pub max_step_tokens: usize,
+    /// Per-sequence prefill chunk cap (0 = bounded only by the step
+    /// budget and KV availability — Sarathi's "no chunking knob" mode).
+    pub chunk_tokens: usize,
     waiting: VecDeque<Request>,
+    prefilling: Vec<Prefilling>,
     running: Vec<Running>,
     finished: Vec<SeqId>,
+    rejected: Vec<SeqId>,
+    preemptions: u64,
 }
 
 impl Batcher {
@@ -85,10 +148,20 @@ impl Batcher {
         Batcher {
             max_concurrency,
             max_step_tokens,
+            chunk_tokens: 0,
             waiting: VecDeque::new(),
+            prefilling: Vec::new(),
             running: Vec::new(),
             finished: Vec::new(),
+            rejected: Vec::new(),
+            preemptions: 0,
         }
+    }
+
+    /// Cap prefill chunks at `tokens` per sequence per step (0 = uncapped).
+    pub fn with_chunk_tokens(mut self, tokens: usize) -> Self {
+        self.chunk_tokens = tokens;
+        self
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -103,8 +176,17 @@ impl Batcher {
         self.running.len()
     }
 
+    pub fn prefilling_len(&self) -> usize {
+        self.prefilling.len()
+    }
+
     pub fn idle(&self) -> bool {
-        self.waiting.is_empty() && self.running.is_empty()
+        self.waiting.is_empty() && self.prefilling.is_empty() && self.running.is_empty()
+    }
+
+    /// Preemptions so far (decode KV exhaustion + stuck-prefill victims).
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions
     }
 
     /// Drain the list of sequences that finished since the last call.
@@ -112,36 +194,118 @@ impl Batcher {
         std::mem::take(&mut self.finished)
     }
 
-    /// Build the next step: admit waiting prompts (FCFS) under the caps,
-    /// then add one decode token for every running sequence.
+    /// Drain the sequences rejected at admission since the last call: a
+    /// request whose *lifetime* KV footprint (prompt + decode context)
+    /// exceeds the whole allocator can never complete — admitting it
+    /// would preempt-loop forever, so it is dropped with a trace.
+    pub fn take_rejected(&mut self) -> Vec<SeqId> {
+        std::mem::take(&mut self.rejected)
+    }
+
+    fn chunk_cap(&self) -> usize {
+        if self.chunk_tokens == 0 {
+            usize::MAX
+        } else {
+            self.chunk_tokens
+        }
+    }
+
+    /// Build the next step: one decode row per running sequence, then the
+    /// next chunk of every in-flight prefill, then admit waiting prompts
+    /// (FCFS) under the caps — chunked, so admission can never stall on a
+    /// prompt longer than the step budget. If nothing is schedulable but
+    /// prefills are in flight (KV fully committed), the youngest prefill
+    /// is preempted to guarantee progress.
     pub fn next_step(&mut self, kv: &mut PagedKv) -> StepBatch {
-        let mut step = StepBatch::default();
-        let mut budget = self.max_step_tokens;
+        loop {
+            let mut step = StepBatch::default();
+            let mut budget = self.max_step_tokens;
 
-        // Decodes first: running sequences are never starved.
-        for r in &self.running {
-            if budget == 0 {
-                break;
+            // Decodes first: running sequences are never starved.
+            for r in &self.running {
+                if budget == 0 {
+                    break;
+                }
+                step.decodes.push(r.id);
+                step.decode_ctx.push(kv.seq_tokens(r.id).unwrap_or(1));
+                budget -= 1;
             }
-            step.decodes.push(r.id);
-            step.decode_ctx.push(kv.seq_tokens(r.id).unwrap_or(1));
-            budget -= 1;
-        }
 
-        // Admit new prompts while caps allow.
-        while let Some(req) = self.waiting.front().copied() {
-            if self.running.len() + step.prefills.len() >= self.max_concurrency
-                || req.prompt_len > budget
-                || !kv.can_admit(req.prompt_len)
-            {
-                break;
+            // Continue in-flight prefills (admission order): they already
+            // hold KV pages, so they outrank new admissions.
+            let cap = self.chunk_cap();
+            for p in &self.prefilling {
+                if budget == 0 {
+                    break;
+                }
+                let chunk = (p.total - p.done).min(cap).min(budget).min(kv.extend_capacity(p.id));
+                if chunk == 0 {
+                    continue; // KV-blocked; decodes/preemption will free pages
+                }
+                kv.extend(p.id, chunk).expect("extend_capacity checked");
+                step.prefills.push(PrefillChunk {
+                    id: p.id,
+                    tokens: chunk,
+                    ctx: p.done + chunk,
+                    last: p.done + chunk == p.total,
+                });
+                budget -= chunk;
             }
-            kv.admit(req.id, req.prompt_len).expect("can_admit checked");
-            step.prefills.push((req.id, req.prompt_len));
-            budget -= req.prompt_len;
-            self.waiting.pop_front();
+
+            // Admit new prompts while caps allow (FCFS: a blocked head
+            // keeps its place; an *infeasible* head is rejected).
+            while let Some(req) = self.waiting.front().copied() {
+                if kv.pages_needed(req.prompt_len + req.decode_len.saturating_sub(1))
+                    > kv.total_pages()
+                {
+                    self.rejected.push(req.id);
+                    self.waiting.pop_front();
+                    continue;
+                }
+                if self.running.len() + self.prefilling.len() >= self.max_concurrency
+                    || budget == 0
+                {
+                    break;
+                }
+                let chunk = req.prompt_len.min(cap).min(budget).min(kv.admit_capacity());
+                if chunk == 0 {
+                    break; // no KV room for even one token
+                }
+                kv.admit(req.id, chunk).expect("admit_capacity checked");
+                self.prefilling.push(Prefilling {
+                    id: req.id,
+                    total: req.prompt_len,
+                    done: 0,
+                    decode_tokens: req.decode_len,
+                });
+                step.prefills.push(PrefillChunk {
+                    id: req.id,
+                    tokens: chunk,
+                    ctx: chunk,
+                    last: chunk == req.prompt_len,
+                });
+                budget -= chunk;
+                self.waiting.pop_front();
+            }
+
+            if !step.is_empty() || self.prefilling.is_empty() {
+                return step;
+            }
+            // Stuck: prefills hold pages but none can extend and nothing
+            // else is schedulable. Preempt the youngest (LIFO victim) so
+            // the older ones can finish; no output tokens existed yet, so
+            // nothing is lost. The loop is safe to retry because an empty
+            // step implies this iteration made no KV allocations.
+            let victim = self.prefilling.pop().expect("checked non-empty");
+            kv.release(victim.id).expect("prefilling seq holds pages");
+            self.preemptions += 1;
+            self.waiting.push_front(Request {
+                id: victim.id,
+                prompt_len: victim.total,
+                decode_len: victim.decode_tokens,
+                arrival: 0.0,
+            });
         }
-        step
     }
 
     /// Admit a sequence whose prefill ran elsewhere (disaggregated
@@ -161,52 +325,67 @@ impl Batcher {
         Ok(())
     }
 
-    /// Account the completion of a step: append KV tokens, retire finished
-    /// sequences, move prefilled sequences into the running set.
-    pub fn complete_step(&mut self, step: &StepBatch, kv: &mut PagedKv, reqs: &[Request]) {
-        self.complete_step_by(step, kv, |id| {
-            *reqs.iter().find(|r| r.id == id).expect("request known")
-        })
-    }
+    /// Account the completion of a step: advance prefill chunks (a last
+    /// chunk produces the first output token and moves the sequence to
+    /// running), append one KV token per decode row, retire finished
+    /// sequences. A decode row whose KV append fails is **preempted**:
+    /// pages released, sequence re-queued to re-prefill its accumulated
+    /// context with its remaining decode intact — tokens are conserved,
+    /// never dropped.
+    pub fn complete_step(&mut self, step: &StepBatch, kv: &mut PagedKv) -> StepOutcome {
+        let mut outcome = StepOutcome::default();
 
-    /// [`Self::complete_step`] with a caller-supplied request lookup. The
-    /// fleet layer routes by dense request index, so its lookup is O(1)
-    /// where the slice search above is O(n) — the difference between a
-    /// 100k-request trace finishing and quadratic blow-up.
-    pub fn complete_step_by<F>(&mut self, step: &StepBatch, kv: &mut PagedKv, lookup: F)
-    where
-        F: Fn(SeqId) -> Request,
-    {
-        // Prefilled sequences start decoding (their first token was
-        // produced by the prefill itself).
-        for (id, _) in &step.prefills {
-            let req = lookup(*id);
-            let remaining = req.decode_len.saturating_sub(1);
-            if remaining == 0 {
-                kv.release(*id).unwrap();
-                self.finished.push(*id);
+        for c in &step.prefills {
+            let idx = self
+                .prefilling
+                .iter()
+                .position(|p| p.id == c.id)
+                .expect("chunk of a known prefilling sequence");
+            if c.last {
+                let p = self.prefilling.remove(idx);
+                debug_assert_eq!(p.done + c.tokens, p.total, "last chunk must finish the prompt");
+                outcome.new_tokens += 1; // the prefill's first output token
+                let remaining = p.decode_tokens.saturating_sub(1);
+                if remaining == 0 {
+                    kv.release(p.id).unwrap();
+                    self.finished.push(p.id);
+                } else {
+                    self.running.push(Running { id: p.id, remaining_decode: remaining });
+                }
             } else {
-                self.running.push(Running { id: *id, remaining_decode: remaining });
+                self.prefilling[idx].done += c.tokens;
             }
         }
-        // Decoded sequences: append a token, retire at their decode length.
-        // Set lookup: the O(B) `contains` scan per running sequence is
-        // quadratic per step, which the fleet's 100k-request traces turn
-        // into minutes of wall-clock.
+
+        // Decoded sequences: append a token, retire at their decode
+        // length. Set lookup keeps this O(B log B); a `contains` scan per
+        // running sequence is quadratic per step, which 100k-request
+        // traces turn into minutes of wall-clock.
         let decoded: std::collections::BTreeSet<SeqId> = step.decodes.iter().copied().collect();
         let mut still = Vec::with_capacity(self.running.len());
+        let mut requeue = Vec::new();
         for r in &self.running {
             if !decoded.contains(&r.id) {
                 still.push(*r);
                 continue;
             }
             if kv.append_token(r.id).is_err() {
-                // KV exhaustion: finish the sequence early (real engines
-                // would preempt; completion keeps the simulation total).
+                // KV exhaustion: preempt. The pending token was never
+                // stored, so it is re-produced after the re-prefill of
+                // the full accumulated context (prompt + outputs so far).
+                let ctx = kv.seq_tokens(r.id).expect("running seq holds KV");
                 kv.release(r.id).unwrap();
-                self.finished.push(r.id);
+                self.preemptions += 1;
+                outcome.preempted.push(r.id);
+                requeue.push(Request {
+                    id: r.id,
+                    prompt_len: ctx + 1,
+                    decode_len: r.remaining_decode,
+                    arrival: 0.0,
+                });
                 continue;
             }
+            outcome.new_tokens += 1;
             if r.remaining_decode <= 1 {
                 kv.release(r.id).unwrap();
                 self.finished.push(r.id);
@@ -215,6 +394,12 @@ impl Batcher {
             }
         }
         self.running = still;
+        // Preempted sequences re-queue at the front (they are the oldest
+        // work), keeping their relative order.
+        for rq in requeue.into_iter().rev() {
+            self.waiting.push_front(rq);
+        }
+        outcome
     }
 }
 
@@ -227,18 +412,30 @@ mod tests {
         Request { id, prompt_len: p, decode_len: d, arrival: 0.0 }
     }
 
-    fn drive_to_completion(reqs: Vec<Request>, conc: usize, pages: usize) -> usize {
+    fn drive(
+        reqs: Vec<Request>,
+        conc: usize,
+        pages: usize,
+        budget: usize,
+        chunk: usize,
+    ) -> (usize, usize) {
         let mut kv = PagedKv::new(pages, 16);
-        let mut b = Batcher::new(conc, 8192);
+        let mut b = Batcher::new(conc, budget).with_chunk_tokens(chunk);
         for r in &reqs {
             b.submit(*r);
         }
         let mut steps = 0;
         let mut done = 0;
+        let mut tokens = 0usize;
         while !b.idle() {
             let step = b.next_step(&mut kv);
             assert!(!step.is_empty(), "live batcher must make progress");
-            b.complete_step(&step, &mut kv, &reqs);
+            assert!(
+                step.token_rows() <= budget,
+                "step exceeded token budget: {} > {budget}",
+                step.token_rows()
+            );
+            tokens += b.complete_step(&step, &mut kv).new_tokens;
             done += b.take_finished().len();
             steps += 1;
             kv.check_invariants();
@@ -246,7 +443,13 @@ mod tests {
         }
         assert_eq!(done, reqs.len());
         assert_eq!(kv.used_pages(), 0);
-        steps
+        let expected: usize = reqs.iter().map(|r| r.decode_len).sum();
+        assert_eq!(tokens, expected, "output tokens must be conserved");
+        (steps, tokens)
+    }
+
+    fn drive_to_completion(reqs: Vec<Request>, conc: usize, pages: usize) -> usize {
+        drive(reqs, conc, pages, 8192, 0).0
     }
 
     #[test]
@@ -266,12 +469,14 @@ mod tests {
         }
         let step = b.next_step(&mut kv);
         assert_eq!(step.prefills.len(), 2);
-        b.complete_step(&step, &mut kv, &reqs);
+        b.complete_step(&step, &mut kv);
         assert_eq!(b.running_len(), 2);
     }
 
     #[test]
-    fn token_budget_limits_prefills() {
+    fn token_budget_chunks_prefills() {
+        // 100-token budget, four 60-token prompts: the first admits whole,
+        // the second gets the remaining 40 tokens as a partial chunk.
         let mut kv = PagedKv::new(1024, 16);
         let mut b = Batcher::new(64, 100);
         let reqs: Vec<Request> = (0..4).map(|i| req(i, 60, 2)).collect();
@@ -279,7 +484,64 @@ mod tests {
             b.submit(*r);
         }
         let step = b.next_step(&mut kv);
-        assert_eq!(step.prefills.len(), 1, "only one 60-token prompt fits in 100");
+        assert_eq!(step.prefills.len(), 2);
+        assert_eq!(step.token_rows(), 100);
+        assert_eq!(
+            step.prefills[0],
+            PrefillChunk { id: 0, tokens: 60, ctx: 60, last: true }
+        );
+        assert_eq!(
+            step.prefills[1],
+            PrefillChunk { id: 1, tokens: 40, ctx: 40, last: false }
+        );
+    }
+
+    #[test]
+    fn long_prompt_is_chunked_across_steps_and_never_stalls() {
+        // The bugfix: a prompt 4x the step budget used to be unadmittable
+        // (head-of-line stall forever). Now it runs as budget-bounded
+        // chunks; TTFT fires at the last chunk.
+        let mut kv = PagedKv::new(4096, 16);
+        let mut b = Batcher::new(8, 100);
+        let reqs = vec![req(0, 400, 3)];
+        b.submit(reqs[0]);
+        for i in 0..4 {
+            let step = b.next_step(&mut kv);
+            assert_eq!(step.prefills.len(), 1);
+            assert_eq!(step.prefills[0].tokens, 100);
+            assert_eq!(step.prefills[0].ctx, 100 * (i + 1));
+            assert_eq!(step.prefills[0].last, i == 3);
+            assert!(step.decodes.is_empty());
+            let out = b.complete_step(&step, &mut kv);
+            assert_eq!(out.new_tokens, usize::from(i == 3));
+        }
+        assert_eq!(b.running_len(), 1);
+        assert_eq!(kv.seq_tokens(0), Some(400));
+        // Remaining decode proceeds normally.
+        let step = b.next_step(&mut kv);
+        assert_eq!(step.decodes, vec![0]);
+        assert_eq!(step.decode_ctx, vec![400]);
+    }
+
+    #[test]
+    fn chunked_prefill_interleaves_with_decodes() {
+        // A short request decodes while a long prompt's chunks stream:
+        // the long prompt no longer blocks the short one's admission.
+        let mut kv = PagedKv::new(4096, 16);
+        let mut b = Batcher::new(8, 64).with_chunk_tokens(32);
+        let reqs = vec![req(0, 128, 4), req(1, 16, 4)];
+        b.submit(reqs[0]);
+        b.submit(reqs[1]);
+        let s1 = b.next_step(&mut kv);
+        // Chunk of 0 (32 tokens) + whole prompt of 1 (16 tokens).
+        assert_eq!(s1.prefills.len(), 2);
+        assert!(!s1.prefills[0].last && s1.prefills[1].last);
+        b.complete_step(&s1, &mut kv);
+        let s2 = b.next_step(&mut kv);
+        assert_eq!(s2.decodes, vec![1], "short request decodes");
+        assert_eq!(s2.prefills.len(), 1, "long prompt keeps chunking");
+        assert_eq!(s2.prefills[0].ctx, 64);
+        b.complete_step(&s2, &mut kv);
     }
 
     #[test]
@@ -291,11 +553,11 @@ mod tests {
         b.submit(reqs[0]);
         b.submit(reqs[1]);
         let s1 = b.next_step(&mut kv);
-        b.complete_step(&s1, &mut kv, &reqs);
+        b.complete_step(&s1, &mut kv);
         b.submit(reqs[2]);
         let s2 = b.next_step(&mut kv);
         assert!(!s2.decodes.is_empty() && !s2.prefills.is_empty(), "mixed batch expected");
-        b.complete_step(&s2, &mut kv, &reqs);
+        b.complete_step(&s2, &mut kv);
     }
 
     #[test]
@@ -304,18 +566,63 @@ mod tests {
         // be admitted, while the running sequence keeps decoding.
         let mut kv = PagedKv::new(2, 16);
         let mut b = Batcher::new(8, 100_000);
-        let reqs = vec![req(0, 32, 4), req(1, 8, 2)];
+        let reqs = vec![req(0, 31, 2), req(1, 8, 2)];
         b.submit(reqs[0]);
         b.submit(reqs[1]);
         let s1 = b.next_step(&mut kv);
         assert_eq!(s1.prefills.len(), 1, "only the 2-page prompt fits");
         assert_eq!(kv.free_pages(), 0);
-        b.complete_step(&s1, &mut kv, &reqs);
+        b.complete_step(&s1, &mut kv);
         // Zero free pages now: the next step must be decode-only.
         let s2 = b.next_step(&mut kv);
         assert!(s2.prefills.is_empty() && s2.decodes == vec![0]);
-        b.complete_step(&s2, &mut kv, &reqs);
+        b.complete_step(&s2, &mut kv);
         kv.check_invariants();
+    }
+
+    #[test]
+    fn decode_kv_exhaustion_preempts_and_conserves_tokens() {
+        // One page-pair of KV, a request whose decode crosses the page
+        // boundary while another sequence pins the remaining pages: the
+        // old code finished it early (silent token loss); now it preempts
+        // and every output token is still produced.
+        let reqs = vec![req(0, 30, 8), req(1, 30, 8)];
+        let mut kv = PagedKv::new(4, 16);
+        let mut b = Batcher::new(8, 8192);
+        for r in &reqs {
+            b.submit(*r);
+        }
+        let mut tokens = 0;
+        let mut done = 0;
+        let mut steps = 0;
+        while !b.idle() {
+            let step = b.next_step(&mut kv);
+            assert!(!step.is_empty());
+            tokens += b.complete_step(&step, &mut kv).new_tokens;
+            done += b.take_finished().len();
+            kv.check_invariants();
+            steps += 1;
+            assert!(steps < 10_000, "runaway");
+        }
+        assert_eq!(done, 2);
+        assert_eq!(tokens, 16, "all decode tokens produced despite preemption");
+        assert!(b.preemptions() > 0, "KV pressure must have preempted");
+        assert_eq!(kv.used_pages(), 0);
+    }
+
+    #[test]
+    fn infeasible_request_is_rejected_not_stalled() {
+        // Lifetime footprint (prompt + decode context) exceeds the whole
+        // allocator: admitting would preempt-loop forever, so reject.
+        let mut kv = PagedKv::new(2, 16);
+        let mut b = Batcher::new(8, 8192);
+        b.submit(req(7, 30, 20)); // 49-token context > 32
+        b.submit(req(8, 8, 2));
+        let step = b.next_step(&mut kv);
+        assert_eq!(b.take_rejected(), vec![7]);
+        assert_eq!(step.prefills.len(), 1, "queue keeps moving past the reject");
+        assert_eq!(step.prefills[0].id, 8);
+        b.complete_step(&step, &mut kv);
     }
 
     #[test]
@@ -332,8 +639,7 @@ mod tests {
     fn submit_prefilled_joins_running_without_prefill_step() {
         let mut kv = PagedKv::new(64, 16);
         let mut b = Batcher::new(8, 8192);
-        let reqs = vec![req(7, 40, 5)];
-        b.submit_prefilled(reqs[0], &mut kv).unwrap();
+        b.submit_prefilled(req(7, 40, 5), &mut kv).unwrap();
         assert_eq!(b.running_len(), 1);
         assert_eq!(kv.seq_pages(7), Some(3)); // ceil(40/16)
         let mut done = 0;
@@ -341,7 +647,7 @@ mod tests {
         while !b.idle() {
             let step = b.next_step(&mut kv);
             assert!(step.prefills.is_empty(), "prefill ran remotely");
-            b.complete_step(&step, &mut kv, &reqs);
+            b.complete_step(&step, &mut kv);
             done += b.take_finished().len();
             steps += 1;
         }
@@ -364,7 +670,10 @@ mod tests {
     fn submit_prefilled_out_of_pages_leaves_state_clean() {
         let mut kv = PagedKv::new(2, 16);
         let mut b = Batcher::new(8, 8192);
-        assert_eq!(b.submit_prefilled(req(1, 100, 8), &mut kv), Err(crate::engine::kv::KvError::OutOfPages));
+        assert_eq!(
+            b.submit_prefilled(req(1, 100, 8), &mut kv),
+            Err(crate::engine::kv::KvError::OutOfPages)
+        );
         assert_eq!(b.running_len(), 0);
         assert_eq!(kv.free_pages(), 2);
         kv.check_invariants();
@@ -374,19 +683,30 @@ mod tests {
     fn step_batches_carry_real_context_lengths() {
         let mut kv = PagedKv::new(64, 16);
         let mut b = Batcher::new(8, 8192);
-        let reqs = vec![req(0, 40, 4)];
-        b.submit(reqs[0]);
+        b.submit(req(0, 40, 4));
         let s1 = b.next_step(&mut kv); // prefill step
         assert!(s1.decode_ctx.is_empty());
-        assert_eq!(s1.mean_ctx(), 40);
-        b.complete_step(&s1, &mut kv, &reqs);
+        assert_eq!(s1.mean_ctx(), 40.0);
+        b.complete_step(&s1, &mut kv);
         let s2 = b.next_step(&mut kv); // first decode reads the prompt KV
         assert_eq!(s2.decode_ctx, vec![40]);
-        b.complete_step(&s2, &mut kv, &reqs);
+        b.complete_step(&s2, &mut kv);
         let s3 = b.next_step(&mut kv); // context grew by the decoded token
         assert_eq!(s3.decode_ctx, vec![41]);
-        assert_eq!(s3.mean_ctx(), 41);
-        b.complete_step(&s3, &mut kv, &reqs);
+        assert_eq!(s3.mean_ctx(), 41.0);
+        b.complete_step(&s3, &mut kv);
+    }
+
+    #[test]
+    fn mean_ctx_does_not_truncate_mixed_batches() {
+        // Many short + one long context: integer division used to eat a
+        // whole token bucket; f64 keeps the fraction.
+        let step = StepBatch {
+            prefills: vec![],
+            decodes: (0..4u64).collect(),
+            decode_ctx: vec![10, 10, 10, 8191],
+        };
+        assert!((step.mean_ctx() - 8221.0 / 4.0).abs() < 1e-9);
     }
 
     #[test]
@@ -399,6 +719,28 @@ mod tests {
             let conc = g.usize(1, 16);
             let pages = g.usize(8, 256);
             drive_to_completion(reqs, conc, pages);
+        });
+    }
+
+    #[test]
+    fn property_chunked_prefill_conserves_and_respects_budget() {
+        // For any chunk size and budget, chunked prefill conserves output
+        // tokens, never exceeds the per-step budget, is deterministic,
+        // and leaks no KV pages (drive asserts all four).
+        check("chunked prefill conserves tokens", 20, |g: &mut Gen| {
+            let n = g.usize(1, 20);
+            let budget = g.usize(16, 256);
+            let chunk = if g.bool() { 0 } else { g.usize(1, 128) };
+            // Prompts up to 4x the step budget: the old admission path
+            // would stall on these forever.
+            let reqs: Vec<Request> = (0..n as u64)
+                .map(|i| req(i, g.usize(1, 4 * budget), g.usize(1, 16)))
+                .collect();
+            let conc = g.usize(1, 12);
+            let pages = g.usize(80, 320); // >= ceil((4*256+16)/16)
+            let a = drive(reqs.clone(), conc, pages, budget, chunk);
+            let b = drive(reqs, conc, pages, budget, chunk);
+            assert_eq!(a, b, "chunked serving must be deterministic");
         });
     }
 }

@@ -65,8 +65,9 @@ impl PagedKv {
         self.pages_needed(tokens.max(1)) <= self.free.len()
     }
 
-    /// Admit a new sequence holding `tokens` (its prompt). Allocates
-    /// ceil(tokens/page) pages atomically (all or nothing).
+    /// Admit a new sequence holding `tokens` (its prompt, or the first
+    /// chunk of it under chunked prefill). Allocates ceil(tokens/page)
+    /// pages atomically (all or nothing).
     pub fn admit(&mut self, id: SeqId, tokens: usize) -> Result<(), KvError> {
         if self.seqs.contains_key(&id) {
             return Err(KvError::SeqExists);
@@ -78,6 +79,40 @@ impl PagedKv {
         let pages = self.free.split_off(self.free.len() - need);
         self.seqs.insert(id, SeqAlloc { pages, tokens: tokens.max(1) });
         Ok(())
+    }
+
+    /// Pages the allocator owns in total.
+    pub fn total_pages(&self) -> usize {
+        self.total_pages
+    }
+
+    /// Grow an admitted sequence by `tokens` prompt tokens (the next
+    /// prefill chunk): allocates the extra pages atomically (all or
+    /// nothing). The partial-prompt twin of [`PagedKv::admit`].
+    pub fn extend(&mut self, id: SeqId, tokens: usize) -> Result<(), KvError> {
+        let s = self.seqs.get(&id).ok_or(KvError::UnknownSeq)?;
+        let need = (s.tokens + tokens).div_ceil(self.page_tokens) - s.pages.len();
+        if need > self.free.len() {
+            return Err(KvError::OutOfPages);
+        }
+        let pages = self.free.split_off(self.free.len() - need);
+        let s = self.seqs.get_mut(&id).expect("checked above");
+        s.pages.extend(pages);
+        s.tokens += tokens;
+        Ok(())
+    }
+
+    /// Most tokens [`PagedKv::extend`] could append to `id` right now:
+    /// the slack in its last page plus every free page.
+    pub fn extend_capacity(&self, id: SeqId) -> usize {
+        let Some(s) = self.seqs.get(&id) else { return 0 };
+        let slack = s.pages.len() * self.page_tokens - s.tokens;
+        slack + self.free.len() * self.page_tokens
+    }
+
+    /// Most tokens [`PagedKv::admit`] could grant a new sequence right now.
+    pub fn admit_capacity(&self) -> usize {
+        self.free.len() * self.page_tokens
     }
 
     /// Append one decoded token; allocates a page at block boundaries.
@@ -190,6 +225,39 @@ mod tests {
     }
 
     #[test]
+    fn extend_grows_a_sequence_chunk_by_chunk() {
+        let mut kv = PagedKv::new(8, 16);
+        kv.admit(1, 10).unwrap(); // 1 page, 6 tokens of slack
+        assert_eq!(kv.extend_capacity(1), 6 + 7 * 16);
+        kv.extend(1, 6).unwrap(); // fills the page, no new allocation
+        assert_eq!(kv.seq_pages(1), Some(1));
+        kv.extend(1, 33).unwrap(); // 49 tokens -> 4 pages
+        assert_eq!((kv.seq_tokens(1), kv.seq_pages(1)), (Some(49), Some(4)));
+        kv.check_invariants();
+    }
+
+    #[test]
+    fn extend_is_atomic_and_checks_ids() {
+        let mut kv = PagedKv::new(3, 16);
+        kv.admit(1, 16).unwrap();
+        assert_eq!(kv.extend(9, 1), Err(KvError::UnknownSeq));
+        assert_eq!(kv.extend(1, 100), Err(KvError::OutOfPages));
+        assert_eq!((kv.seq_tokens(1), kv.free_pages()), (Some(16), 2)); // nothing leaked
+        assert_eq!(kv.extend_capacity(1), 2 * 16);
+        assert_eq!(kv.extend_capacity(9), 0);
+        kv.check_invariants();
+    }
+
+    #[test]
+    fn admit_capacity_tracks_free_pages() {
+        let mut kv = PagedKv::new(4, 8);
+        assert_eq!(kv.admit_capacity(), 32);
+        kv.admit(1, 17).unwrap(); // 3 pages
+        assert_eq!(kv.admit_capacity(), 8);
+        assert_eq!(kv.total_pages(), 4);
+    }
+
+    #[test]
     fn property_no_double_booking_under_random_ops() {
         check("paged kv invariants", 30, |g: &mut Gen| {
             let pages = g.usize(1, 64);
@@ -198,7 +266,7 @@ mod tests {
             let mut live: Vec<SeqId> = Vec::new();
             let mut next_id = 0u64;
             for _ in 0..g.usize(10, 200) {
-                match g.usize(0, 2) {
+                match g.usize(0, 3) {
                     0 => {
                         let toks = g.usize(1, 100);
                         if kv.admit(next_id, toks).is_ok() {
@@ -214,6 +282,10 @@ mod tests {
                         let i = g.usize(0, live.len() - 1);
                         let id = live.swap_remove(i);
                         kv.release(id).unwrap();
+                    }
+                    3 if !live.is_empty() => {
+                        let id = live[g.usize(0, live.len() - 1)];
+                        let _ = kv.extend(id, g.usize(1, 50));
                     }
                     _ => {}
                 }

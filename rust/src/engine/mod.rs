@@ -163,7 +163,8 @@ impl Engine {
 
         // ---- prefill: all prompt tokens in parallel.
         let m_tokens = b * w.prompt_len;
-        let lt_p = perfmodel::layer_times(&self.gpu, &self.model, tp, m_tokens, w.prompt_len, b);
+        let lt_p =
+            perfmodel::layer_times(&self.gpu, &self.model, tp, m_tokens, w.prompt_len as f64, b);
         let ar_bytes_p = (m_tokens * self.model.d_model * self.model.dtype_bytes) as u64;
         let gap_p = lt_p.total() / 2.0;
         let ar_p = self.ar(&topo, ar_bytes_p, gap_p);
@@ -173,7 +174,7 @@ impl Engine {
             prefill_compute + prefill_comm + self.persona.step_overhead + self.head_time(b);
 
         // ---- decode: token by token; KV grows — use the mean KV length.
-        let kv_mean = w.prompt_len + w.decode_len / 2;
+        let kv_mean = (w.prompt_len + w.decode_len / 2) as f64;
         let lt_d = perfmodel::layer_times(&self.gpu, &self.model, tp, b, kv_mean, b);
         let ar_bytes_d = self.model.tp_allreduce_bytes(b);
         let gap_d = lt_d.total() / 2.0;
@@ -230,7 +231,8 @@ impl Engine {
 
         // ---- prefill: micro-batches pipeline through stages.
         let rows_p = mb * w.prompt_len;
-        let lt_p = perfmodel::layer_times(&self.gpu, &self.model, tp, rows_p, w.prompt_len, mb);
+        let lt_p =
+            perfmodel::layer_times(&self.gpu, &self.model, tp, rows_p, w.prompt_len as f64, mb);
         let ar_p = self.ar(&topo_tp, (rows_p * self.model.d_model * self.model.dtype_bytes) as u64, lt_p.total() / 2.0);
         let stage_p = layers_per_stage as f64 * (lt_p.total() / eff + 2.0 * ar_p) + p2p(rows_p);
         // Pipeline fill-drain: (m + S - 1) stage slots.
@@ -240,7 +242,7 @@ impl Engine {
 
         // ---- decode: each token round, every micro-batch crosses all
         // stages; micro-batch j's next token waits for its previous one.
-        let kv_mean = w.prompt_len + w.decode_len / 2;
+        let kv_mean = (w.prompt_len + w.decode_len / 2) as f64;
         let lt_d = perfmodel::layer_times(&self.gpu, &self.model, tp, mb, kv_mean, mb);
         let ar_d = self.ar(&topo_tp, self.model.tp_allreduce_bytes(mb), lt_d.total() / 2.0);
         let stage_d = layers_per_stage as f64 * (lt_d.total() / eff + 2.0 * ar_d) + p2p(mb);

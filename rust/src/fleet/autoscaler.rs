@@ -70,6 +70,10 @@ pub struct Autoscaler {
     pub pending_prefill_up: bool,
     pub prefill_scale_ups: usize,
     pub prefill_scale_downs: usize,
+    /// Preemptions observed since the previous control tick: KV pressure.
+    /// Non-zero vetoes decode/monolithic scale-down — draining capacity
+    /// while sequences thrash in and out of KV would amplify the thrash.
+    recent_preemptions: u64,
 }
 
 impl Autoscaler {
@@ -85,7 +89,14 @@ impl Autoscaler {
             pending_prefill_up: false,
             prefill_scale_ups: 0,
             prefill_scale_downs: 0,
+            recent_preemptions: 0,
         }
+    }
+
+    /// Report the preemptions that occurred since the last control tick
+    /// (the fleet feeds the per-tick delta).
+    pub fn observe_preemptions(&mut self, n: u64) {
+        self.recent_preemptions = n;
     }
 
     /// Feed one completed request's latencies into the sliding window.
@@ -124,7 +135,8 @@ impl Autoscaler {
         let comfortable = !self.recent_ttft.is_empty()
             && ttft95 < self.cfg.down_frac * self.slo.ttft
             && tpot95 < self.slo.tpot
-            && queued == 0;
+            && queued == 0
+            && self.recent_preemptions == 0;
         // min is clamped to 1: draining the last replica would strand work.
         if comfortable && active > self.cfg.min_replicas.max(1) {
             self.scale_downs += 1;
@@ -167,6 +179,9 @@ impl Autoscaler {
     /// pool's product, so only it drives this loop (queueing in front of
     /// prefill replicas must not grow the decode pool).
     pub fn decide_decode(&mut self, active: usize, queued: usize) -> Decision {
+        // KV-pressure preemptions veto the comfortable path exactly like a
+        // non-empty queue: fold them into the queued signal.
+        let queued = queued + self.recent_preemptions as usize;
         Self::single_metric_loop(
             self.cfg,
             &self.recent_tpot,
@@ -243,6 +258,19 @@ mod tests {
         assert_eq!(a.decide(3, 50), Decision::Hold);
         // Floor respected.
         assert_eq!(a.decide(1, 0), Decision::Hold);
+    }
+
+    #[test]
+    fn preemption_pressure_vetoes_scale_down() {
+        let mut a = scaler(10.0);
+        for _ in 0..16 {
+            a.observe(0.5, 0.01); // comfortably under target
+        }
+        a.observe_preemptions(3);
+        assert_eq!(a.decide(3, 0), Decision::Hold, "KV thrash must block drain");
+        assert_eq!(a.decide_decode(3, 0), Decision::Hold);
+        a.observe_preemptions(0);
+        assert_eq!(a.decide(3, 0), Decision::Down);
     }
 
     #[test]

@@ -94,6 +94,8 @@ impl FleetMetrics {
             max_committed_pages: 0,
             over_capacity_routes: 0,
             routed: Vec::new(),
+            preemptions: 0,
+            rejected: 0,
         }
     }
 }
@@ -145,6 +147,12 @@ pub struct FleetReport {
     /// and its decode handoff separately, so the sum can exceed
     /// `completed`.
     pub routed: Vec<u64>,
+    /// Sequences preempted (KV exhaustion) and re-queued across all
+    /// replicas. Preemption re-produces work; it never drops tokens.
+    pub preemptions: u64,
+    /// Requests rejected up front because their lifetime KV footprint can
+    /// never fit a replica (`completed + rejected == trace length`).
+    pub rejected: u64,
 }
 
 #[cfg(test)]

@@ -36,7 +36,7 @@ pub mod autoscaler;
 pub mod metrics;
 pub mod router;
 
-use crate::engine::batcher::{Batcher, Request, StepBatch};
+use crate::engine::batcher::{Batcher, PrefillChunk, Request, StepBatch};
 use crate::engine::kv::{KvError, PagedKv};
 use crate::serving::ServeConfig;
 use crate::simnet::{EventQueue, Server};
@@ -164,25 +164,24 @@ pub fn run_fleet(cfg: &FleetConfig, reqs: &[Request]) -> FleetReport {
         // The simulation indexes per-request state by id, so ids must be
         // the dense 0..n the trace generator produces.
         assert_eq!(r.id, i as u64, "request ids must be dense 0..n in arrival order");
-        for c in cfg.replicas.iter().chain(cfg.prefill.iter()) {
-            // A request that cannot fit an *empty* replica would deadlock
-            // the fleet exactly as it would a single engine; reject up
-            // front against every replica it could be routed to.
-            assert!(
-                r.prompt_len.div_ceil(page_tokens) <= c.kv_pages,
-                "request {} prompt ({} tokens) exceeds a replica's KV capacity",
-                r.id,
-                r.prompt_len
-            );
-            assert!(
-                r.prompt_len <= c.max_step_tokens,
-                "request {} prompt ({} tokens) exceeds the per-step token budget",
-                r.id,
-                r.prompt_len
-            );
-        }
     }
+    // No per-prompt step-budget or KV asserts here any more: chunked
+    // prefill admits any prompt length, and a request whose lifetime KV
+    // footprint cannot fit a replica is *rejected* with a counter
+    // (`FleetReport::rejected`) instead of panicking on the whole trace.
     Sim::new(cfg, reqs).run()
+}
+
+/// Can request `r` ever complete on every replica of this fleet? The
+/// decode/monolithic pool must hold the full lifetime context (prompt +
+/// decoded tokens); a prefill-only replica just the prompt. Routing can
+/// place a request on *any* replica of a pool, so feasibility is required
+/// against all of them (the autoscaler only clones existing templates).
+fn feasible(cfg: &FleetConfig, page_tokens: usize, r: &Request) -> bool {
+    let lifetime = (r.prompt_len + r.decode_len.saturating_sub(1)).max(1).div_ceil(page_tokens);
+    let prompt = r.prompt_len.max(1).div_ceil(page_tokens);
+    cfg.replicas.iter().all(|c| lifetime <= c.kv_pages)
+        && cfg.prefill.iter().all(|c| prompt <= c.kv_pages)
 }
 
 // ---------------------------------------------------------------------
@@ -202,7 +201,7 @@ enum Ev {
 struct Commit {
     replica: usize,
     pages: usize,
-    tokens: u64,
+    secs: f64,
 }
 
 struct Replica {
@@ -212,6 +211,9 @@ struct Replica {
     /// Predicted decode-step seconds (probe through the cost model) — the
     /// router's cost-awareness signal.
     pred_step: f64,
+    /// Predicted seconds of one full prefill chunk step on this replica —
+    /// with `pred_step`, prices a request as remaining-chunk cost.
+    pred_chunk: f64,
     kv: PagedKv,
     batcher: Batcher,
     stepping: bool,
@@ -228,6 +230,18 @@ struct Replica {
 /// ordering across replicas is what routing needs.
 fn predict_step(cfg: &ServeConfig) -> f64 {
     let probe = StepBatch { prefills: vec![], decodes: vec![0], decode_ctx: vec![1024] };
+    cfg.step_time(&probe)
+}
+
+/// Probe the cost model with one full prefill chunk: the unit of the
+/// router's remaining-chunk prefill cost.
+fn predict_chunk(cfg: &ServeConfig) -> f64 {
+    let chunk = cfg.effective_chunk().max(1);
+    let probe = StepBatch {
+        prefills: vec![PrefillChunk { id: 0, tokens: chunk, ctx: chunk, last: true }],
+        decodes: vec![],
+        decode_ctx: vec![],
+    };
     cfg.step_time(&probe)
 }
 
@@ -253,6 +267,10 @@ struct Sim<'a> {
     peak_prefill: usize,
     handoffs: u64,
     handoff_bytes: u64,
+    /// Requests dropped up front because their KV footprint can never fit.
+    rejected: u64,
+    /// Fleet-wide preemption count at the last autoscaler tick.
+    preempt_snapshot: u64,
 }
 
 impl<'a> Sim<'a> {
@@ -276,6 +294,8 @@ impl<'a> Sim<'a> {
             peak_prefill: 0,
             handoffs: 0,
             handoff_bytes: 0,
+            rejected: 0,
+            preempt_snapshot: 0,
         };
         let scalable = cfg.scalable_kind();
         for c in &cfg.replicas {
@@ -285,6 +305,14 @@ impl<'a> Sim<'a> {
             sim.push_replica(PoolKind::Prefill, c.clone());
         }
         for (i, r) in reqs.iter().enumerate() {
+            if !feasible(cfg, sim.page_tokens, r) {
+                // Structured rejection instead of a trace-wide panic: the
+                // request is counted and skipped, the rest of the trace
+                // serves normally.
+                sim.rejected += 1;
+                sim.done[i] = true;
+                continue;
+            }
             sim.q.push(r.arrival, Ev::Arrival(i));
         }
         if let Some(a) = &sim.autoscaler {
@@ -303,8 +331,13 @@ impl<'a> Sim<'a> {
                 Ev::ReplicaUp(kind) => self.on_replica_up(kind),
             }
         }
-        // Conservation + allocator cleanliness: the fleet's contract.
-        assert_eq!(self.metrics.completed(), self.reqs.len(), "request conservation violated");
+        // Conservation + allocator cleanliness: the fleet's contract —
+        // every admitted request completes, every rejection is counted.
+        assert_eq!(
+            self.metrics.completed() as u64 + self.rejected,
+            self.reqs.len() as u64,
+            "request conservation violated"
+        );
         for (i, d) in self.done.iter().enumerate() {
             assert!(*d, "request {i} never completed");
         }
@@ -326,29 +359,47 @@ impl<'a> Sim<'a> {
         report.max_committed_pages = self.router.max_committed_pages;
         report.over_capacity_routes = self.router.over_capacity_routes;
         report.routed = self.router.routed.clone();
+        report.rejected = self.rejected;
+        report.preemptions = self.replicas.iter().map(|r| r.batcher.preemptions()).sum();
         report
     }
 
     // -- event handlers ------------------------------------------------
+
+    /// Predicted service seconds of one routing leg on replica `r`:
+    /// remaining prefill chunks × the replica's chunk-step probe, plus
+    /// decode tokens × its decode-step probe.
+    fn leg_cost(&self, r: usize, prompt: usize, decode: usize) -> f64 {
+        let rep = &self.replicas[r];
+        let chunk = rep.cfg.effective_chunk().max(1);
+        prompt.div_ceil(chunk) as f64 * rep.pred_chunk + decode as f64 * rep.pred_step
+    }
 
     fn on_arrival(&mut self, i: usize) {
         let req = self.reqs[i];
         let session = self.session_of(req.id);
         if self.cfg.disaggregated_mode() {
             let views = self.views(PoolKind::Prefill);
+            let costs: Vec<f64> =
+                views.iter().map(|v| self.leg_cost(v.id, req.prompt_len, 0)).collect();
             let pages = self.pages_for(req.prompt_len);
-            let tokens = req.prompt_len as u64;
-            let target =
-                self.router.route(RoutePolicy::LeastOutstanding, &views, session, pages, tokens);
-            self.commit_prefill[i] = Some(Commit { replica: target, pages, tokens });
-            self.replicas[target].batcher.submit(req);
+            let (target, secs) =
+                self.router.route(RoutePolicy::LeastOutstanding, &views, session, pages, &costs);
+            self.commit_prefill[i] = Some(Commit { replica: target, pages, secs });
+            // The prefill replica's product is exactly the first token:
+            // submit with a single-token decode so the sequence retires at
+            // last-chunk completion and its KV is freed for the handoff.
+            self.replicas[target].batcher.submit(Request { decode_len: 1, ..req });
             self.try_start(target);
         } else {
             let views = self.views(PoolKind::Monolithic);
+            let costs: Vec<f64> = views
+                .iter()
+                .map(|v| self.leg_cost(v.id, req.prompt_len, req.decode_len))
+                .collect();
             let pages = self.pages_for(req.prompt_len + req.decode_len);
-            let tokens = (req.prompt_len + req.decode_len) as u64;
-            let target = self.router.route(self.cfg.policy, &views, session, pages, tokens);
-            self.commit_main[i] = Some(Commit { replica: target, pages, tokens });
+            let (target, secs) = self.router.route(self.cfg.policy, &views, session, pages, &costs);
+            self.commit_main[i] = Some(Commit { replica: target, pages, secs });
             self.replicas[target].batcher.submit(req);
             self.try_start(target);
         }
@@ -360,35 +411,39 @@ impl<'a> Sim<'a> {
             rep.stepping = false;
             (rep.kind, rep.current.take().expect("step in flight"))
         };
-        // A prefill's completion IS the first token, in every pool kind.
-        for (id, _) in &step.prefills {
-            self.first_token[*id as usize] = now;
-            self.produced[*id as usize] += 1;
+        let (outcome, finished) = {
+            let rep = &mut self.replicas[r];
+            let outcome = rep.batcher.complete_step(&step, &mut rep.kv);
+            (outcome, rep.batcher.take_finished())
+        };
+        // A *last chunk's* completion IS the first token, in every pool
+        // kind — earlier chunks only build context. A preempted-and-
+        // resumed sequence re-runs its prefill, but its first token
+        // already happened: keep the original timestamp.
+        for c in &step.prefills {
+            if c.last {
+                let i = c.id as usize;
+                if self.first_token[i].is_nan() {
+                    self.first_token[i] = now;
+                }
+                self.produced[i] += 1;
+            }
         }
         for id in &step.decodes {
             self.produced[*id as usize] += 1;
         }
+        for id in &outcome.preempted {
+            // The preempted row's pending token was discarded; the resumed
+            // prefill re-produces it, so conservation holds.
+            self.produced[*id as usize] -= 1;
+        }
         let reqs = self.reqs;
-        let finished = {
-            let rep = &mut self.replicas[r];
-            let force_single = kind == PoolKind::Prefill;
-            rep.batcher.complete_step_by(&step, &mut rep.kv, move |id| {
-                let mut rq = reqs[id as usize];
-                if force_single {
-                    // Prefill replicas only produce the first token; the
-                    // rest of the decode happens after the KV handoff.
-                    rq.decode_len = 1;
-                }
-                rq
-            });
-            rep.batcher.take_finished()
-        };
         for id in finished {
             let i = id as usize;
             match kind {
                 PoolKind::Prefill => {
                     if let Some(c) = self.commit_prefill[i].take() {
-                        self.router.complete(c.replica, c.pages, c.tokens);
+                        self.router.complete(c.replica, c.pages, c.secs);
                     }
                     if reqs[i].decode_len <= 1 {
                         self.complete_request(i, now);
@@ -398,7 +453,7 @@ impl<'a> Sim<'a> {
                 }
                 PoolKind::Monolithic | PoolKind::Decode => {
                     if let Some(c) = self.commit_main[i].take() {
-                        self.router.complete(c.replica, c.pages, c.tokens);
+                        self.router.complete(c.replica, c.pages, c.secs);
                     }
                     self.complete_request(i, now);
                 }
@@ -409,15 +464,17 @@ impl<'a> Sim<'a> {
     }
 
     /// Ship request `i`'s prompt KV from its prefill replica to a decode
-    /// replica chosen by the configured policy.
+    /// replica chosen by the configured policy (priced by its remaining
+    /// decode cost — the prefill leg is already done).
     fn start_handoff(&mut self, i: usize, now: f64) {
         let req = self.reqs[i];
         let views = self.views(PoolKind::Decode);
+        let costs: Vec<f64> =
+            views.iter().map(|v| self.leg_cost(v.id, 0, req.decode_len)).collect();
         let pages = self.pages_for(req.prompt_len + req.decode_len);
-        let tokens = req.decode_len as u64;
-        let target =
-            self.router.route(self.cfg.policy, &views, self.session_of(req.id), pages, tokens);
-        self.commit_main[i] = Some(Commit { replica: target, pages, tokens });
+        let (target, secs) =
+            self.router.route(self.cfg.policy, &views, self.session_of(req.id), pages, &costs);
+        self.commit_main[i] = Some(Commit { replica: target, pages, secs });
         let bytes = self.kv_handoff_bytes(req.prompt_len);
         let link = self.cfg.replicas[0].topo.inter;
         let (_start, end) = self.replicas[target].ingress.book(now, bytes as f64 / link.beta);
@@ -432,7 +489,7 @@ impl<'a> Sim<'a> {
         // live decode replica (the pool always keeps ≥1 accepting).
         if self.replicas[replica].retired {
             if let Some(c) = self.commit_main[req].take() {
-                self.router.complete(c.replica, c.pages, c.tokens);
+                self.router.complete(c.replica, c.pages, c.secs);
             }
             let now = self.q.now();
             self.start_handoff(req, now);
@@ -453,10 +510,16 @@ impl<'a> Sim<'a> {
     }
 
     fn on_scale_tick(&mut self) {
-        if self.metrics.completed() >= self.reqs.len() {
+        if self.metrics.completed() as u64 + self.rejected >= self.reqs.len() as u64 {
             return; // fleet drained; stop the control loop
         }
         if self.autoscaler.is_some() {
+            // Preemptions since the last tick signal KV pressure: the
+            // controller must not drain capacity while work is thrashing.
+            let total: u64 = self.replicas.iter().map(|r| r.batcher.preemptions()).sum();
+            let delta = total - self.preempt_snapshot;
+            self.preempt_snapshot = total;
+            self.autoscaler.as_mut().expect("checked").observe_preemptions(delta);
             self.scale_pool(self.cfg.scalable_kind());
             if self.cfg.disaggregated_mode() {
                 self.scale_pool(PoolKind::Prefill);
@@ -519,7 +582,7 @@ impl<'a> Sim<'a> {
                 _ => a.replica_online(),
             }
         }
-        if self.metrics.completed() >= self.reqs.len() {
+        if self.metrics.completed() as u64 + self.rejected >= self.reqs.len() as u64 {
             return; // capacity arrived after the rush ended
         }
         let template = match kind {
@@ -533,12 +596,14 @@ impl<'a> Sim<'a> {
 
     fn push_replica(&mut self, kind: PoolKind, cfg: ServeConfig) {
         let pred_step = predict_step(&cfg);
+        let pred_chunk = predict_chunk(&cfg);
         self.replicas.push(Replica {
             kind,
             kv: PagedKv::new(cfg.kv_pages, cfg.kv_page_tokens),
-            batcher: Batcher::new(cfg.max_concurrency, cfg.max_step_tokens),
+            batcher: cfg.build_batcher(),
             cfg,
             pred_step,
+            pred_chunk,
             stepping: false,
             current: None,
             draining: false,
@@ -565,6 +630,12 @@ impl<'a> Sim<'a> {
             return;
         }
         let step = rep.batcher.next_step(&mut rep.kv);
+        // The fleet pre-rejects anything whose lifetime footprint cannot
+        // fit, so replica-level admission must never reject.
+        assert!(
+            rep.batcher.take_rejected().is_empty(),
+            "feasibility pre-check missed an infeasible request"
+        );
         if step.is_empty() {
             return;
         }

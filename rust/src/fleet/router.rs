@@ -2,21 +2,24 @@
 //! per-replica load and KV-commitment bookkeeping.
 //!
 //! The router is deliberately *stateful about its own decisions* only: it
-//! tracks the tokens and KV pages it has committed to each replica (and
-//! releases them on completion), rather than peeking inside replica
-//! internals on every arrival. That makes routing O(replicas) per request,
-//! keeps the decision deterministic, and gives the KV-capacity invariant a
-//! precise statement: under [`RoutePolicy::KvPressure`], the router never
-//! commits more pages against a replica than its allocator owns, as long
-//! as *some* replica can fit the request (otherwise the pressure-relief
-//! path places it on the least-committed replica, where it waits in the
-//! batcher queue — admission is still gated by the real allocator, so the
-//! replica itself can never over-allocate).
+//! tracks the predicted seconds and KV pages it has committed to each
+//! replica (and releases them on completion), rather than peeking inside
+//! replica internals on every arrival. That makes routing O(replicas) per
+//! request, keeps the decision deterministic, and gives the KV-capacity
+//! invariant a precise statement: under [`RoutePolicy::KvPressure`], the
+//! router never commits more pages against a replica than its allocator
+//! owns, as long as *some* replica can fit the request (otherwise the
+//! pressure-relief path places it on the least-committed replica, where it
+//! waits in the batcher queue — admission is still gated by the real
+//! allocator, so the replica itself can never over-allocate).
 //!
-//! **Cost-awareness for heterogeneous fleets**: every [`ReplicaView`]
-//! carries the replica's predicted decode-step time (from its own
-//! [`crate::parallel::StepCost`] model). `least-tokens` minimizes
-//! *predicted outstanding seconds* (`tokens × step`), not raw tokens, so a
+//! **Cost-awareness for heterogeneous fleets**: the caller prices each
+//! request *per candidate replica* (the `costs` slice aligned with
+//! `views`) through that replica's own [`crate::parallel::StepCost`]
+//! model — for a chunked prefill that is remaining-chunk-count × the
+//! replica's predicted chunk-step time, plus its predicted decode
+//! seconds. `least-tokens` greedily minimizes *predicted completion
+//! seconds* (outstanding + this request's cost on that replica), so a
 //! TP16 replica absorbs proportionally more load than a TP8 one;
 //! `kv-pressure` breaks page-fraction ties toward the faster replica.
 
@@ -28,8 +31,8 @@ use std::collections::BTreeMap;
 pub enum RoutePolicy {
     /// Cycle through accepting replicas.
     RoundRobin,
-    /// Fewest predicted outstanding seconds (outstanding tokens × the
-    /// replica's predicted step time).
+    /// Fewest predicted outstanding-plus-marginal seconds (each request
+    /// priced per replica through its own cost model).
     LeastOutstanding,
     /// Lowest committed-KV-pages fraction; never knowingly over-commits.
     KvPressure,
@@ -80,7 +83,7 @@ pub struct ReplicaView {
     /// KV pages its allocator owns in total.
     pub total_pages: usize,
     /// Predicted decode-step seconds of this replica's engine — the
-    /// cost signal for heterogeneous fleets (lower = faster replica).
+    /// tie-break cost signal for heterogeneous fleets (lower = faster).
     pub pred_step: f64,
 }
 
@@ -89,7 +92,7 @@ pub struct ReplicaView {
 pub struct Router {
     rr_next: usize,
     committed_pages: Vec<usize>,
-    outstanding_tokens: Vec<u64>,
+    outstanding_secs: Vec<f64>,
     sessions: BTreeMap<u64, usize>,
     /// Placements made against each replica (observability for the
     /// heterogeneous-fleet tests and tables; a disaggregated request's
@@ -106,7 +109,7 @@ impl Router {
         Router {
             rr_next: 0,
             committed_pages: vec![0; replicas],
-            outstanding_tokens: vec![0; replicas],
+            outstanding_secs: vec![0.0; replicas],
             sessions: BTreeMap::new(),
             routed: vec![0; replicas],
             max_committed_pages: 0,
@@ -118,7 +121,7 @@ impl Router {
     pub fn grow(&mut self, replicas: usize) {
         while self.committed_pages.len() < replicas {
             self.committed_pages.push(0);
-            self.outstanding_tokens.push(0);
+            self.outstanding_secs.push(0.0);
             self.routed.push(0);
         }
     }
@@ -127,102 +130,111 @@ impl Router {
         self.committed_pages[replica]
     }
 
-    pub fn outstanding_tokens(&self, replica: usize) -> u64 {
-        self.outstanding_tokens[replica]
+    pub fn outstanding_secs(&self, replica: usize) -> f64 {
+        self.outstanding_secs[replica]
     }
 
     /// Place a request on one of `views` under `policy`, committing
-    /// `pages`/`tokens` of load against the chosen replica until
-    /// [`Router::complete`] releases them. Panics if no view is accepting
-    /// (the fleet always keeps ≥1 accepting replica per pool).
+    /// `pages` and `costs[chosen]` predicted seconds of load against the
+    /// chosen replica until [`Router::complete`] releases them. `costs`
+    /// is aligned with `views`: the request's predicted service seconds
+    /// on each candidate. Panics if no view is accepting (the fleet
+    /// always keeps ≥1 accepting replica per pool).
     ///
-    /// Returns the chosen replica id.
+    /// Returns `(replica id, committed seconds)`.
     pub fn route(
         &mut self,
         policy: RoutePolicy,
         views: &[ReplicaView],
         session: u64,
         pages: usize,
-        tokens: u64,
-    ) -> usize {
-        let accepting: Vec<&ReplicaView> = views.iter().filter(|v| v.accepting).collect();
+        costs: &[f64],
+    ) -> (usize, f64) {
+        assert_eq!(views.len(), costs.len(), "one cost per candidate view");
+        let accepting: Vec<usize> =
+            (0..views.len()).filter(|&i| views[i].accepting).collect();
         assert!(!accepting.is_empty(), "router needs at least one accepting replica");
         // Capacity pre-filter: never knowingly commit past a replica's KV
         // allocator. If nothing fits, fall back to least-committed (the
         // request queues there) and record the relief placement.
-        let fits: Vec<&&ReplicaView> = accepting
+        let fits: Vec<usize> = accepting
             .iter()
-            .filter(|v| self.committed_pages[v.id] + pages <= v.total_pages)
+            .copied()
+            .filter(|&i| self.committed_pages[views[i].id] + pages <= views[i].total_pages)
             .collect();
-        let pool: Vec<&ReplicaView> = if fits.is_empty() {
+        let pool: Vec<usize> = if fits.is_empty() {
             self.over_capacity_routes += 1;
-            accepting.clone()
+            accepting
         } else {
-            fits.into_iter().copied().collect()
+            fits
         };
 
-        let chosen = match policy {
+        let chosen_idx = match policy {
             RoutePolicy::RoundRobin => {
                 let idx = self.rr_next % pool.len();
                 self.rr_next = self.rr_next.wrapping_add(1);
-                pool[idx].id
+                pool[idx]
             }
-            RoutePolicy::LeastOutstanding => self.least_cost(&pool),
+            RoutePolicy::LeastOutstanding => self.least_cost(views, costs, &pool),
             RoutePolicy::KvPressure => {
                 // Lowest committed/total fraction, compared exactly via
                 // cross-multiplication (deterministic, no float ties);
                 // equal fractions go to the faster replica.
                 pool.iter()
-                    .min_by(|a, b| {
-                        let la = self.committed_pages[a.id] * b.total_pages.max(1);
-                        let lb = self.committed_pages[b.id] * a.total_pages.max(1);
+                    .copied()
+                    .min_by(|&a, &b| {
+                        let (va, vb) = (&views[a], &views[b]);
+                        let la = self.committed_pages[va.id] * vb.total_pages.max(1);
+                        let lb = self.committed_pages[vb.id] * va.total_pages.max(1);
                         la.cmp(&lb)
-                            .then(a.pred_step.total_cmp(&b.pred_step))
-                            .then(a.id.cmp(&b.id))
+                            .then(va.pred_step.total_cmp(&vb.pred_step))
+                            .then(va.id.cmp(&vb.id))
                     })
                     .expect("non-empty pool")
-                    .id
             }
             RoutePolicy::SessionAffinity => {
                 let pinned = self.sessions.get(&session).copied();
-                match pinned {
-                    Some(r) if pool.iter().any(|v| v.id == r) => r,
-                    _ => {
-                        let r = self.least_cost(&pool);
-                        self.sessions.insert(session, r);
-                        r
+                match pinned.and_then(|r| pool.iter().copied().find(|&i| views[i].id == r)) {
+                    Some(i) => i,
+                    None => {
+                        let i = self.least_cost(views, costs, &pool);
+                        self.sessions.insert(session, views[i].id);
+                        i
                     }
                 }
             }
         };
 
+        let chosen = views[chosen_idx].id;
+        let secs = costs[chosen_idx];
         self.committed_pages[chosen] += pages;
-        self.outstanding_tokens[chosen] += tokens;
+        self.outstanding_secs[chosen] += secs;
         self.routed[chosen] += 1;
         self.max_committed_pages = self.max_committed_pages.max(self.committed_pages[chosen]);
-        chosen
+        (chosen, secs)
     }
 
-    /// Fewest predicted outstanding seconds: outstanding tokens weighted by
-    /// the replica's predicted per-step cost, so faster (bigger-TP)
-    /// replicas absorb proportionally more of a heterogeneous fleet's load.
-    fn least_cost(&self, pool: &[&ReplicaView]) -> usize {
+    /// Greedy shortest-predicted-completion: outstanding committed seconds
+    /// plus this request's own cost on that replica — so faster
+    /// (bigger-TP) replicas absorb proportionally more of a heterogeneous
+    /// fleet's load, and a replica whose chunked prefill would take many
+    /// chunk-steps is priced accordingly.
+    fn least_cost(&self, views: &[ReplicaView], costs: &[f64], pool: &[usize]) -> usize {
         pool.iter()
-            .min_by(|a, b| {
-                let la = self.outstanding_tokens[a.id] as f64 * a.pred_step;
-                let lb = self.outstanding_tokens[b.id] as f64 * b.pred_step;
-                la.total_cmp(&lb).then(a.id.cmp(&b.id))
+            .copied()
+            .min_by(|&a, &b| {
+                let la = self.outstanding_secs[views[a].id] + costs[a];
+                let lb = self.outstanding_secs[views[b].id] + costs[b];
+                la.total_cmp(&lb).then(views[a].id.cmp(&views[b].id))
             })
             .expect("non-empty pool")
-            .id
     }
 
     /// Release a prior commitment (request completed or handed off).
-    pub fn complete(&mut self, replica: usize, pages: usize, tokens: u64) {
+    pub fn complete(&mut self, replica: usize, pages: usize, secs: f64) {
         debug_assert!(self.committed_pages[replica] >= pages, "commitment underflow");
         self.committed_pages[replica] = self.committed_pages[replica].saturating_sub(pages);
-        self.outstanding_tokens[replica] =
-            self.outstanding_tokens[replica].saturating_sub(tokens);
+        self.outstanding_secs[replica] = (self.outstanding_secs[replica] - secs).max(0.0);
     }
 
     /// Drop session stickiness to a retiring replica so future requests
@@ -242,12 +254,17 @@ mod tests {
             .collect()
     }
 
+    fn flat(n: usize, cost: f64) -> Vec<f64> {
+        vec![cost; n]
+    }
+
     #[test]
     fn round_robin_cycles() {
         let mut r = Router::new(3);
         let v = views(3, 1000);
-        let picks: Vec<usize> =
-            (0..6).map(|_| r.route(RoutePolicy::RoundRobin, &v, 0, 1, 1)).collect();
+        let picks: Vec<usize> = (0..6)
+            .map(|_| r.route(RoutePolicy::RoundRobin, &v, 0, 1, &flat(3, 1.0)).0)
+            .collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
         assert_eq!(r.routed, vec![2, 2, 2]);
     }
@@ -256,24 +273,25 @@ mod tests {
     fn least_outstanding_prefers_idle_replica() {
         let mut r = Router::new(2);
         let v = views(2, 1000);
-        let a = r.route(RoutePolicy::LeastOutstanding, &v, 0, 1, 100);
-        let b = r.route(RoutePolicy::LeastOutstanding, &v, 0, 1, 1);
-        assert_eq!((a, b), (0, 1));
-        r.complete(0, 1, 100);
-        assert_eq!(r.route(RoutePolicy::LeastOutstanding, &v, 0, 1, 1), 0);
+        let (a, s) = r.route(RoutePolicy::LeastOutstanding, &v, 0, 1, &flat(2, 100.0));
+        let (b, _) = r.route(RoutePolicy::LeastOutstanding, &v, 0, 1, &flat(2, 1.0));
+        assert_eq!((a, b, s), (0, 1, 100.0));
+        r.complete(0, 1, 100.0);
+        assert_eq!(r.route(RoutePolicy::LeastOutstanding, &v, 0, 1, &flat(2, 1.0)).0, 0);
+        assert_eq!(r.outstanding_secs(0), 1.0);
     }
 
     #[test]
-    fn least_outstanding_weighs_predicted_step_cost() {
-        // Replica 1 is twice as fast: equal token backlogs cost it half
-        // the seconds, so it absorbs more placements.
+    fn least_outstanding_weighs_per_replica_cost() {
+        // Replica 1 is twice as fast: the same request costs it half the
+        // seconds, so greedy completion-time placement sends it more work.
         let mut r = Router::new(2);
-        let mut v = views(2, 1000);
-        v[1].pred_step = 0.5;
+        let v = views(2, 1000);
+        let costs = [100.0, 50.0];
         let picks: Vec<usize> =
-            (0..3).map(|_| r.route(RoutePolicy::LeastOutstanding, &v, 0, 1, 100)).collect();
-        // 0 (tie at zero), then 1 (0 s vs 100 s), then 1 again (50 s vs 100 s).
-        assert_eq!(picks, vec![0, 1, 1]);
+            (0..3).map(|_| r.route(RoutePolicy::LeastOutstanding, &v, 0, 1, &costs).0).collect();
+        // 1 (0+50 < 0+100), 0 (100 vs 50+50 tie -> lower id), 1 (200 vs 150).
+        assert_eq!(picks, vec![1, 0, 1]);
     }
 
     #[test]
@@ -281,14 +299,14 @@ mod tests {
         let mut r = Router::new(2);
         let v = views(2, 10);
         for _ in 0..4 {
-            r.route(RoutePolicy::KvPressure, &v, 0, 5, 10);
+            r.route(RoutePolicy::KvPressure, &v, 0, 5, &flat(2, 10.0));
         }
         assert_eq!(r.committed_pages(0), 10);
         assert_eq!(r.committed_pages(1), 10);
         assert_eq!(r.over_capacity_routes, 0);
         assert_eq!(r.max_committed_pages, 10);
         // Fifth placement cannot fit anywhere: relief path, counted.
-        r.route(RoutePolicy::KvPressure, &v, 0, 5, 10);
+        r.route(RoutePolicy::KvPressure, &v, 0, 5, &flat(2, 10.0));
         assert_eq!(r.over_capacity_routes, 1);
     }
 
@@ -297,25 +315,25 @@ mod tests {
         let mut r = Router::new(2);
         let mut v = views(2, 10);
         v[1].pred_step = 0.5;
-        assert_eq!(r.route(RoutePolicy::KvPressure, &v, 0, 2, 1), 1);
+        assert_eq!(r.route(RoutePolicy::KvPressure, &v, 0, 2, &flat(2, 1.0)).0, 1);
     }
 
     #[test]
     fn session_affinity_sticks_and_evicts() {
         let mut r = Router::new(3);
         let v = views(3, 1000);
-        let first = r.route(RoutePolicy::SessionAffinity, &v, 42, 1, 1000);
+        let first = r.route(RoutePolicy::SessionAffinity, &v, 42, 1, &flat(3, 1000.0)).0;
         // Same session goes back despite the load imbalance.
-        let second = r.route(RoutePolicy::SessionAffinity, &v, 42, 1, 1000);
+        let second = r.route(RoutePolicy::SessionAffinity, &v, 42, 1, &flat(3, 1000.0)).0;
         assert_eq!(first, second);
         // A different session balances away.
-        let other = r.route(RoutePolicy::SessionAffinity, &v, 7, 1, 1);
+        let other = r.route(RoutePolicy::SessionAffinity, &v, 7, 1, &flat(3, 1.0)).0;
         assert_ne!(other, first);
         // After eviction the session re-pins.
         r.evict_replica_sessions(first);
         let mut v2 = v.clone();
         v2[first].accepting = false;
-        let repinned = r.route(RoutePolicy::SessionAffinity, &v2, 42, 1, 1);
+        let repinned = r.route(RoutePolicy::SessionAffinity, &v2, 42, 1, &flat(3, 1.0)).0;
         assert_ne!(repinned, first);
     }
 
@@ -325,7 +343,7 @@ mod tests {
         let mut v = views(2, 100);
         v[0].accepting = false;
         for _ in 0..5 {
-            assert_eq!(r.route(RoutePolicy::RoundRobin, &v, 0, 1, 1), 1);
+            assert_eq!(r.route(RoutePolicy::RoundRobin, &v, 0, 1, &flat(2, 1.0)).0, 1);
         }
     }
 

@@ -77,7 +77,10 @@ impl StepCost for MoeCost {
         dense.moe = None;
         dense.ffn = 0;
         let tp_topo = s.tp_topology(&cfg.topo);
-        let lt_attn = perfmodel::layer_times(&cfg.gpu, &dense, s.tp, rows, kv_len, rows);
+        // Attention KV reads scale with *sequences* (one context per seq),
+        // not token rows — a prefill chunk's rows all share one prefix.
+        let batch = step.seqs().div_ceil(s.dp).max(1);
+        let lt_attn = perfmodel::layer_times(&cfg.gpu, &dense, s.tp, rows, kv_len, batch);
         let ar_msg = (rows * d * dt) as u64;
         let ar_t = if s.tp > 1 {
             allreduce(self.ar, &tp_topo, &cfg.comm, ar_msg, lt_attn.total() / 2.0).total

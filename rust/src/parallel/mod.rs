@@ -289,6 +289,9 @@ impl DenseTp {
 impl StepCost for DenseTp {
     fn step_time(&self, cfg: &ServeConfig, step: &StepBatch) -> f64 {
         let tp = self.spec.tp;
+        // GEMM rows are the *chunk* tokens fed this step; the attention
+        // context (`mean_ctx`) is each sequence's full attended prefix —
+        // a mid-prompt chunk re-reads everything written so far.
         let rows = step.token_rows().max(1);
         let kv_len = step.mean_ctx();
         let lt = perfmodel::layer_times(
@@ -297,7 +300,7 @@ impl StepCost for DenseTp {
             tp,
             rows,
             kv_len,
-            step.decodes.len().max(1),
+            step.seqs().max(1),
         );
         let msg = (rows * cfg.model.d_model * cfg.model.dtype_bytes) as u64;
         let ar_t = if tp > 1 {
@@ -359,7 +362,7 @@ impl StepCost for HybridTpPp {
         let m = self.micro_batches.clamp(1, rows);
         let mb_rows = rows.div_ceil(m).max(1);
         let kv_len = step.mean_ctx();
-        let batch = step.decodes.len().max(1).div_ceil(s.dp).max(1);
+        let batch = step.seqs().max(1).div_ceil(s.dp).max(1);
         let lt = perfmodel::layer_times(&cfg.gpu, &cfg.model, s.tp, mb_rows, kv_len, batch);
         let msg = (mb_rows * cfg.model.d_model * cfg.model.dtype_bytes) as u64;
         let ar_t = if s.tp > 1 {

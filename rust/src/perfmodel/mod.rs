@@ -112,13 +112,16 @@ impl LayerTimes {
 
 /// One transformer layer (attention + MLP) on a single GPU of a TP group.
 /// `m_tokens` = rows fed to the GEMMs (batch × seqlen for prefill, batch
-/// for decode); `kv_tokens` = KV-cache length read by attention.
+/// for decode); `kv_tokens` = mean KV-cache length read by attention —
+/// f64 so a mixed batch's fractional mean (see
+/// [`crate::engine::batcher::StepBatch::mean_ctx`]) is not truncated down
+/// a token bucket.
 pub fn layer_times(
     g: &GpuSpec,
     cfg: &ModelConfig,
     tp: usize,
     m_tokens: usize,
-    kv_tokens: usize,
+    kv_tokens: f64,
     batch: usize,
 ) -> LayerTimes {
     let d = cfg.d_model;
@@ -153,14 +156,14 @@ pub fn layer_times(
     // Attention score/AV compute + KV-cache traffic: memory-bound in
     // decode; flash-style compute in prefill.
     let kv_heads_here = (cfg.n_kv_heads / tp).max(1);
-    let kv_bytes = (batch * kv_tokens * kv_heads_here * cfg.head_dim * 2 * dt) as u64;
+    let kv_bytes = batch as f64 * kv_tokens * (kv_heads_here * cfg.head_dim * 2 * dt) as f64;
     let attn_flops = 4.0
         * (m_tokens as f64)
-        * (kv_tokens as f64)
+        * kv_tokens
         * (cfg.n_heads / tp) as f64
         * cfg.head_dim as f64;
     let attn_time = (attn_flops / (g.flops * g.mxu_efficiency * 0.5))
-        .max(kv_bytes as f64 / g.mem_bw)
+        .max(kv_bytes / g.mem_bw)
         .max(g.kernel_floor);
     // Norms/rope/residuals: stream the activations a few times.
     let act_bytes = (6 * m_tokens * d * dt) as u64;
@@ -249,8 +252,8 @@ mod tests {
     fn layer_times_decode_vs_prefill() {
         let g = GpuSpec::a100();
         let cfg = crate::models::ModelConfig::llama31_70b();
-        let prefill = layer_times(&g, &cfg, 8, 8 * 2363, 2363, 8);
-        let decode = layer_times(&g, &cfg, 8, 8, 1426, 8);
+        let prefill = layer_times(&g, &cfg, 8, 8 * 2363, 2363.0, 8);
+        let decode = layer_times(&g, &cfg, 8, 8, 1426.0, 8);
         assert!(prefill.matmul > 50.0 * decode.matmul);
     }
 
@@ -258,8 +261,8 @@ mod tests {
     fn tp_reduces_decode_matmul() {
         let g = GpuSpec::a100();
         let cfg = crate::models::ModelConfig::llama31_70b();
-        let t4 = layer_times(&g, &cfg, 4, 8, 1426, 8);
-        let t16 = layer_times(&g, &cfg, 16, 8, 1426, 8);
+        let t4 = layer_times(&g, &cfg, 4, 8, 1426.0, 8);
+        let t16 = layer_times(&g, &cfg, 16, 8, 1426.0, 8);
         // K-split: decode matmul keeps scaling with TP (Observation 2).
         assert!(t16.matmul < 0.5 * t4.matmul, "{} vs {}", t16.matmul, t4.matmul);
     }
@@ -280,7 +283,7 @@ mod tests {
     fn moe_layer_cheaper_than_dense_equivalent() {
         let g = GpuSpec::a100();
         let qwen = crate::models::ModelConfig::qwen3_235b_a22b();
-        let t = layer_times(&g, &qwen, 4, 8, 1024, 8);
+        let t = layer_times(&g, &qwen, 4, 8, 1024.0, 8);
         assert!(t.matmul > 0.0 && t.matmul < 0.01);
     }
 }

@@ -22,6 +22,7 @@ use crate::models::ModelConfig;
 use crate::parallel::{cost_for, ParallelSpec, StepCost};
 use crate::perfmodel::GpuSpec;
 use crate::simnet::EventQueue;
+use crate::util::stats::Summary;
 use std::sync::Arc;
 
 /// Serving configuration: the machine/model context plus the deployment's
@@ -40,6 +41,9 @@ pub struct ServeConfig {
     pub max_concurrency: usize,
     /// Per-step token budget.
     pub max_step_tokens: usize,
+    /// Per-sequence prefill chunk cap (0 = chunks bounded only by the
+    /// step budget and KV availability). See [`crate::engine::batcher`].
+    pub chunk_tokens: usize,
     /// KV pages (per TP group) and tokens per page.
     pub kv_pages: usize,
     pub kv_page_tokens: usize,
@@ -55,9 +59,26 @@ impl ServeConfig {
     pub fn deployment_label(&self) -> String {
         self.cost.label()
     }
+
+    /// Effective prefill chunk size: the configured cap, bounded by the
+    /// step budget (0 = budget-bounded chunks).
+    pub fn effective_chunk(&self) -> usize {
+        if self.chunk_tokens == 0 {
+            self.max_step_tokens
+        } else {
+            self.chunk_tokens.min(self.max_step_tokens)
+        }
+    }
+
+    pub(crate) fn build_batcher(&self) -> Batcher {
+        Batcher::new(self.max_concurrency, self.max_step_tokens)
+            .with_chunk_tokens(self.chunk_tokens)
+    }
 }
 
-/// Serving outcome metrics.
+/// Serving outcome metrics. TTFT is recorded at **last-chunk completion**:
+/// under chunked prefill the first output token exists only once the whole
+/// prompt has been processed, however many steps that took.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
     /// Output tokens per second — the Fig 9/10/18 Y-axis.
@@ -67,8 +88,20 @@ pub struct ServeReport {
     pub steps: u64,
     /// Mean time-to-first-token.
     pub mean_ttft: f64,
+    /// TTFT percentiles across completed requests.
+    pub ttft_p50: f64,
+    pub ttft_p99: f64,
+    /// Median time per output token (completion − first token over
+    /// produced − 1; single-token requests contribute 0).
+    pub tpot_p50: f64,
     /// Fraction of steps that were decode-only (no prefill mixed in).
     pub decode_only_frac: f64,
+    /// Sequences preempted (KV exhaustion / stuck prefill) and re-queued.
+    /// Preemption re-produces work; it never drops tokens.
+    pub preemptions: u64,
+    /// Requests rejected at admission because their lifetime KV footprint
+    /// exceeds the allocator (they could never complete).
+    pub rejected: u64,
 }
 
 enum Ev {
@@ -83,13 +116,17 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
         q.push(r.arrival, Ev::Arrival(i));
     }
     let mut kv = PagedKv::new(cfg.kv_pages, cfg.kv_page_tokens);
-    let mut batcher = Batcher::new(cfg.max_concurrency, cfg.max_step_tokens);
+    let mut batcher = cfg.build_batcher();
     let mut stepping = false;
     let mut current: Option<StepBatch> = None;
     let mut steps = 0u64;
     let mut decode_only = 0u64;
     let mut out_tokens = 0u64;
+    let mut rejected = 0u64;
     let mut first_token: Vec<Option<f64>> = vec![None; reqs.len()];
+    let mut produced: Vec<u32> = vec![0; reqs.len()];
+    let mut ttft = Summary::new();
+    let mut tpot = Summary::new();
     let mut last_done = 0.0f64;
 
     while let Some((now, ev)) = q.pop() {
@@ -100,19 +137,41 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
             Ev::StepDone => {
                 stepping = false;
                 let step = current.take().expect("step in flight");
-                // Account produced tokens: one per decode + one per prefill
-                // (its first output token).
-                out_tokens += (step.decodes.len() + step.prefills.len()) as u64;
-                for (id, _) in &step.prefills {
-                    first_token[*id as usize] = Some(now);
+                let outcome = batcher.complete_step(&step, &mut kv);
+                out_tokens += outcome.new_tokens as u64;
+                // TTFT at last-chunk completion — only the first time (a
+                // preempted sequence re-prefills, but its first token
+                // already happened).
+                for c in &step.prefills {
+                    if c.last {
+                        let i = c.id as usize;
+                        if first_token[i].is_none() {
+                            first_token[i] = Some(now);
+                        }
+                        produced[i] += 1;
+                    }
                 }
-                batcher.complete_step(&step, &mut kv, reqs);
-                batcher.take_finished();
+                for id in &step.decodes {
+                    produced[*id as usize] += 1;
+                }
+                for id in &outcome.preempted {
+                    // The preempted row's pending token was discarded; it
+                    // will be re-produced after the re-prefill.
+                    produced[*id as usize] -= 1;
+                }
+                for id in batcher.take_finished() {
+                    let i = id as usize;
+                    let ft = first_token[i].expect("finished request has a first token");
+                    ttft.add(ft - reqs[i].arrival);
+                    let toks = produced[i].max(1);
+                    tpot.add(if toks > 1 { (now - ft) / (toks - 1) as f64 } else { 0.0 });
+                }
                 last_done = now;
             }
         }
         if !stepping {
             let step = batcher.next_step(&mut kv);
+            rejected += batcher.take_rejected().len() as u64;
             if !step.is_empty() {
                 let dur = cfg.step_time(&step);
                 steps += 1;
@@ -126,20 +185,19 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
         }
     }
 
-    let ttfts: Vec<f64> = reqs
-        .iter()
-        .zip(&first_token)
-        .filter_map(|(r, ft)| ft.map(|t| t - r.arrival))
-        .collect();
-    let mean_ttft =
-        if ttfts.is_empty() { 0.0 } else { ttfts.iter().sum::<f64>() / ttfts.len() as f64 };
+    let pct = |s: &Summary, q: f64| if s.n() == 0 { 0.0 } else { s.percentile(q) };
     ServeReport {
         output_throughput: out_tokens as f64 / last_done.max(1e-9),
         total_output_tokens: out_tokens,
         makespan: last_done,
         steps,
-        mean_ttft,
+        mean_ttft: if ttft.n() == 0 { 0.0 } else { ttft.mean() },
+        ttft_p50: pct(&ttft, 50.0),
+        ttft_p99: pct(&ttft, 99.0),
+        tpot_p50: pct(&tpot, 50.0),
         decode_only_frac: if steps == 0 { 0.0 } else { decode_only as f64 / steps as f64 },
+        preemptions: batcher.preemptions(),
+        rejected,
     }
 }
 
@@ -166,6 +224,7 @@ pub fn fig9_config(
         cost: cost_for(spec, ar),
         max_concurrency: concurrency,
         max_step_tokens: 8192,
+        chunk_tokens: 0,
         kv_pages: 60_000,
         kv_page_tokens: 16,
     }
@@ -273,7 +332,12 @@ mod tests {
         let m1 = HybridTpPp::new(ParallelSpec::tp_pp(4, 4), AllReduceImpl::NcclAuto);
         let m4 = m1.with_micro_batches(4);
         let prefill = StepBatch {
-            prefills: vec![(0, 4096)],
+            prefills: vec![crate::engine::batcher::PrefillChunk {
+                id: 0,
+                tokens: 4096,
+                ctx: 4096,
+                last: true,
+            }],
             decodes: vec![],
             decode_ctx: vec![],
         };
@@ -315,6 +379,59 @@ mod tests {
             "KV growth must slow the step: {} vs {}",
             cfg.step_time(&long),
             cfg.step_time(&short)
+        );
+    }
+
+    #[test]
+    fn serve_terminates_on_prompts_longer_than_the_step_budget() {
+        // Regression for the admission bug: a prompt > max_step_tokens
+        // used to be unadmittable — `serve` head-of-line-stalled and the
+        // request (plus everything queued behind it) was silently dropped.
+        let cfg = tp16(AllReduceImpl::NcclAuto, 16);
+        assert_eq!(cfg.max_step_tokens, 8192);
+        let mut reqs = small_trace(20);
+        // Four prompts up to 4x the step budget, interleaved with the rest.
+        for (i, len) in [(3usize, 32_768usize), (7, 20_000), (11, 9000), (15, 16_384)] {
+            reqs[i].prompt_len = len;
+        }
+        let rep = serve(&cfg, &reqs);
+        let expected: u64 = reqs.iter().map(|r| r.decode_len as u64).sum();
+        assert_eq!(rep.total_output_tokens, expected, "zero lost tokens");
+        assert_eq!(rep.rejected, 0);
+        assert!(rep.ttft_p50 <= rep.ttft_p99);
+        assert!(rep.tpot_p50 >= 0.0);
+    }
+
+    #[test]
+    fn chunking_tightens_ttft_tail_on_long_prompt_trace() {
+        // Whole-prompt admission (budget large enough to swallow the
+        // longest prompt) runs monolithic multi-10k-token prefill steps
+        // that block every decode; bounded chunks interleave, so the TTFT
+        // tail of the requests queued behind the monsters tightens while
+        // median TPOT stays within noise.
+        let mut spec = TraceSpec::long_prompt();
+        spec.num_prompts = 80;
+        let reqs = spec.generate();
+        let mut whole = tp16(AllReduceImpl::NcclAuto, 32);
+        whole.max_step_tokens = 40_960; // the longest prompt fits whole
+        let mut chunked = whole.clone();
+        chunked.chunk_tokens = 2048;
+        let w = serve(&whole, &reqs);
+        let c = serve(&chunked, &reqs);
+        let expected: u64 = reqs.iter().map(|r| r.decode_len as u64).sum();
+        assert_eq!(w.total_output_tokens, expected);
+        assert_eq!(c.total_output_tokens, expected);
+        assert!(
+            c.ttft_p99 < w.ttft_p99,
+            "chunked TTFT p99 {} must beat whole-prompt {}",
+            c.ttft_p99,
+            w.ttft_p99
+        );
+        assert!(
+            c.tpot_p50 < w.tpot_p50 * 1.05,
+            "chunking must not regress TPOT p50 by >5%: {} vs {}",
+            c.tpot_p50,
+            w.tpot_p50
         );
     }
 

@@ -111,6 +111,23 @@ impl TraceSpec {
         }
     }
 
+    /// Long-prompt-heavy trace (chunked-prefill stimulus): a wide
+    /// log-normal whose tail reaches 4x the default 8192-token step
+    /// budget, with short-to-moderate outputs — the workload where
+    /// whole-prompt admission either stalls or blocks every decode behind
+    /// multi-10k-token prefill steps.
+    pub fn long_prompt() -> Self {
+        TraceSpec {
+            num_prompts: 1000,
+            rate: 4.0,
+            burstiness: 2.0,
+            shape: RateShape::Flat,
+            input: LenDist { median: 3000.0, sigma: 1.1, min: 64, max: 32_768 },
+            output: LenDist { median: 120.0, sigma: 0.6, min: 8, max: 1024 },
+            seed: 0x10F6,
+        }
+    }
+
     /// Generate the request list (sorted by arrival time).
     pub fn generate(&self) -> Vec<Request> {
         let mut rng = Rng::new(self.seed);
@@ -205,6 +222,15 @@ mod tests {
         let mo = reqs.iter().map(|r| r.decode_len).sum::<usize>() as f64 / reqs.len() as f64;
         assert!((mi - 1024.0).abs() < 150.0, "mean input {mi}");
         assert!((mo - 4096.0).abs() < 500.0, "mean output {mo}");
+    }
+
+    #[test]
+    fn long_prompt_trace_reaches_past_the_step_budget() {
+        let reqs = TraceSpec::long_prompt().generate();
+        let longest = reqs.iter().map(|r| r.prompt_len).max().unwrap();
+        assert!(longest > 8192, "tail must exceed the default step budget: {longest}");
+        assert!(longest <= 32_768);
+        assert!(reqs.iter().filter(|r| r.prompt_len > 8192).count() >= 10);
     }
 
     #[test]

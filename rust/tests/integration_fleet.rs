@@ -12,7 +12,7 @@ use yalis::fleet::router::RoutePolicy;
 use yalis::fleet::{run_fleet, FleetConfig};
 use yalis::parallel::ParallelSpec;
 use yalis::serving::{fig9_config, ServeConfig};
-use yalis::trace::{RateShape, TraceSpec};
+use yalis::trace::{LenDist, RateShape, TraceSpec};
 
 fn replica_70b(ar: AllReduceImpl, concurrency: usize) -> ServeConfig {
     fig9_config(ParallelSpec::tp(16), ar, concurrency, "perlmutter", 16)
@@ -119,6 +119,60 @@ fn heterogeneous_tp8_tp16_fleet_routes_cost_aware_with_invariants() {
     .disaggregated(1);
     let c = run_fleet(&disagg, &reqs);
     assert_eq!(c.completed, 200);
+}
+
+/// The chunked-prefill acceptance criterion at fleet level: a decode-heavy
+/// trace whose prompts reach 4x the per-step token budget completes under
+/// both pool modes with zero lost tokens — the configuration the fleet
+/// used to reject outright with a `prompt_len <= max_step_tokens` assert.
+#[test]
+fn long_prompts_complete_across_the_fleet_with_zero_lost_tokens() {
+    let mut spec = TraceSpec::decode_heavy();
+    spec.num_prompts = 60;
+    spec.rate = 6.0;
+    spec.input = LenDist { median: 4000.0, sigma: 1.0, min: 256, max: 32_768 };
+    let mut reqs = spec.generate();
+    let budget = replica_70b(AllReduceImpl::Nvrar, 32).max_step_tokens;
+    // Pin prompts at 4x and 2x the budget so the chunked path is
+    // exercised regardless of what the log-normal tail sampled.
+    reqs[4].prompt_len = 4 * budget;
+    reqs[23].prompt_len = 2 * budget;
+    let expected_check: usize = reqs.iter().filter(|r| r.prompt_len > budget).count();
+    assert!(expected_check >= 2);
+    let expected: u64 = reqs.iter().map(|r| r.decode_len as u64).sum();
+    for prefill in [0usize, 1] {
+        let mut cfg = FleetConfig::new(replica_70b(AllReduceImpl::Nvrar, 32), 3)
+            .with_policy(RoutePolicy::LeastOutstanding);
+        if prefill > 0 {
+            cfg = cfg.disaggregated(prefill);
+        }
+        let rep = run_fleet(&cfg, &reqs);
+        assert_eq!(rep.completed, 60, "prefill={prefill}");
+        assert_eq!(rep.rejected, 0);
+        assert_eq!(rep.output_tokens, expected, "zero lost tokens (prefill={prefill})");
+    }
+}
+
+/// A request whose lifetime KV footprint can never fit any replica is
+/// rejected with a counter — not a panic, and not a silent stall — while
+/// the rest of the trace serves normally.
+#[test]
+fn infeasible_requests_are_counted_not_fatal() {
+    let mut spec = TraceSpec::burstgpt();
+    spec.num_prompts = 30;
+    spec.rate = 10.0;
+    // Keep every organic request's lifetime footprint well under the
+    // shrunken KV so exactly the two doctored ones are infeasible.
+    spec.input = LenDist { median: 400.0, sigma: 0.6, min: 32, max: 2048 };
+    spec.output = LenDist { median: 100.0, sigma: 0.5, min: 8, max: 512 };
+    let mut reqs = spec.generate();
+    let mut base = replica_70b(AllReduceImpl::Nvrar, 32);
+    base.kv_pages = 512; // 8192 tokens of KV per replica
+    reqs[5].prompt_len = 9000; // lifetime footprint > 8192 tokens
+    reqs[17].decode_len = 9000;
+    let rep = run_fleet(&FleetConfig::new(base, 2), &reqs);
+    assert_eq!(rep.rejected, 2);
+    assert_eq!(rep.completed, 28);
 }
 
 /// Bit-identical results for a fixed seed, including the stateful paths
