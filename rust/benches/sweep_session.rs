@@ -1,0 +1,13 @@
+//! `cargo bench --bench sweep_session` — multi-turn session serving:
+//! turns × shared-prefix length × routing policy on a 3-replica fleet,
+//! showing where prefix-cache-aware session affinity wins TTFT and hit
+//! rate over content-blind least-outstanding. CSV into results/.
+
+use yalis::coordinator::experiments;
+
+fn main() {
+    let t = experiments::sweep_session("70b", "perlmutter", 16);
+    t.print();
+    t.write_csv("results/sweep_session.csv").unwrap();
+    println!("-> results/sweep_session.csv");
+}

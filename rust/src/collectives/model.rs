@@ -9,6 +9,15 @@
 
 use crate::cluster::Topology;
 
+/// Exchange rounds of a recursive-doubling / binary-tree collective over
+/// `n` participants: `ceil(log2 n)`. Non-power-of-two counts pay **whole**
+/// rounds (N=6 runs 3 steps, not log2(6) ≈ 2.58 — the fractional-step bug
+/// this replaces), matching the dissemination-style handling real
+/// implementations use for ragged participant counts.
+fn log2_steps(n: f64) -> f64 {
+    n.log2().ceil().max(0.0)
+}
+
 /// Eq. (1) — NCCL Ring all-reduce: reduce-scatter + all-gather over a flat
 /// ring; inter-node links dominate.
 ///
@@ -25,7 +34,7 @@ pub fn ring(t: &Topology, bytes: u64) -> f64 {
 pub fn tree(t: &Topology, bytes: u64) -> f64 {
     let (n, g) = (t.nodes as f64, t.gpus_per_node as f64);
     2.0 * (g - 1.0) * t.intra.alpha
-        + 2.0 * n.log2() * t.inter.alpha
+        + 2.0 * log2_steps(n) * t.inter.alpha
         + 2.0 * ((n - 1.0) / n) * (bytes as f64 / t.inter.beta)
 }
 
@@ -34,7 +43,7 @@ pub fn tree(t: &Topology, bytes: u64) -> f64 {
 /// each exchanging the full message with the XOR peer.
 pub fn recursive_doubling_flat(t: &Topology, bytes: u64) -> f64 {
     let p = t.total_gpus() as f64;
-    let steps = p.log2();
+    let steps = log2_steps(p);
     steps * (t.inter.alpha + bytes as f64 / t.inter.beta)
 }
 
@@ -52,7 +61,7 @@ pub fn nvrar_reduce_scatter(t: &Topology, bytes: u64) -> f64 {
 /// `T_RD = log2(N)·α_inter + ((N-1)/N)·(η|M| / (G·β_inter))`
 pub fn nvrar_recursive_doubling(t: &Topology, bytes: u64, eta: f64) -> f64 {
     let (n, g) = (t.nodes as f64, t.gpus_per_node as f64);
-    n.log2() * t.inter.alpha + ((n - 1.0) / n) * (eta * bytes as f64 / (g * t.inter.beta))
+    log2_steps(n) * t.inter.alpha + ((n - 1.0) / n) * (eta * bytes as f64 / (g * t.inter.beta))
 }
 
 /// Eq. (5) — NVRAR phase 3: intra-node ring all-gather (same cost as RS).
@@ -75,8 +84,8 @@ pub fn nvrar(t: &Topology, bytes: u64, eta: f64) -> f64 {
 pub fn latency_terms(t: &Topology) -> (f64, f64, f64) {
     let (n, g) = (t.nodes as f64, t.gpus_per_node as f64);
     let ring = 2.0 * (n * g - 1.0) * t.inter.alpha;
-    let tree = 2.0 * (g - 1.0) * t.intra.alpha + 2.0 * n.log2() * t.inter.alpha;
-    let nvrar = 2.0 * (g - 1.0) * t.intra.alpha + n.log2() * t.inter.alpha;
+    let tree = 2.0 * (g - 1.0) * t.intra.alpha + 2.0 * log2_steps(n) * t.inter.alpha;
+    let nvrar = 2.0 * (g - 1.0) * t.intra.alpha + log2_steps(n) * t.inter.alpha;
     (ring, tree, nvrar)
 }
 
@@ -130,6 +139,44 @@ mod tests {
         let expected =
             ((t.nodes as f64 - 1.0) / t.nodes as f64) * (b as f64 / (t.gpus_per_node as f64 * t.inter.beta));
         assert!((hi - lo - expected).abs() / expected < 1e-9);
+    }
+
+    #[test]
+    fn non_power_of_two_node_counts_pay_whole_exchange_rounds() {
+        // The fractional-step bug: N=6 used to pay log2(6) ≈ 2.58 inter
+        // hops. Recursive doubling and trees run whole rounds: N=6 → 3,
+        // N=12 → 4. Pin the closed forms exactly.
+        let bytes = 256 * 1024u64;
+        for (nodes, steps) in [(6usize, 3.0f64), (12, 4.0)] {
+            let t = presets::perlmutter(nodes);
+            let n = nodes as f64;
+            let g = t.gpus_per_node as f64;
+            let tree_expected = 2.0 * (g - 1.0) * t.intra.alpha
+                + 2.0 * steps * t.inter.alpha
+                + 2.0 * ((n - 1.0) / n) * (bytes as f64 / t.inter.beta);
+            assert!(
+                (tree(&t, bytes) - tree_expected).abs() < 1e-15,
+                "tree N={nodes}"
+            );
+            let rd_expected = steps * t.inter.alpha
+                + ((n - 1.0) / n) * (2.0 * bytes as f64 / (g * t.inter.beta));
+            assert!(
+                (nvrar_recursive_doubling(&t, bytes, 2.0) - rd_expected).abs() < 1e-15,
+                "nvrar RD N={nodes}"
+            );
+        }
+        // Flat RD counts GPUs: 6 nodes × 4 GPUs = 24 → ceil(log2 24) = 5.
+        let t6 = presets::perlmutter(6);
+        let rd_flat_expected =
+            5.0 * (t6.inter.alpha + bytes as f64 / t6.inter.beta);
+        assert!((recursive_doubling_flat(&t6, bytes) - rd_flat_expected).abs() < 1e-15);
+        // Monotonic in whole steps: N=6 pays the same latency rounds as
+        // N=8, strictly more than N=4.
+        let a4 = latency_terms(&presets::perlmutter(4)).2;
+        let a6 = latency_terms(&presets::perlmutter(6)).2;
+        let a8 = latency_terms(&presets::perlmutter(8)).2;
+        assert!(a6 > a4);
+        assert!((a6 - a8).abs() < 1e-15);
     }
 
     #[test]

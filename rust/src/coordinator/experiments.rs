@@ -12,7 +12,7 @@ use crate::models::ModelConfig;
 use crate::parallel::ParallelSpec;
 use crate::perfmodel::{gemm_time, GpuSpec};
 use crate::serving::{fig9_config, serve};
-use crate::trace::TraceSpec;
+use crate::trace::{LenDist, SessionSpec, TraceSpec};
 use crate::util::tables::{fmt_speedup, Table};
 
 fn fmt_s(x: f64) -> String {
@@ -394,6 +394,51 @@ pub fn sweep_chunk(model_name: &str, machine: &str, gpus: usize) -> Table {
     t
 }
 
+/// `yalis sweep-session`: multi-turn session serving — turns × shared-
+/// prefix length × routing policy on a 3-replica fleet. Session-affinity
+/// routing is prefix-cache-aware (expected per-replica hits discount its
+/// placement costs), so on conversational workloads it reports a high hit
+/// rate and a tighter TTFT than content-blind least-outstanding; with one
+/// turn per session there is nothing to share and the policies converge.
+pub fn sweep_session(model_name: &str, machine: &str, gpus: usize) -> Table {
+    let model = ModelConfig::by_name(model_name);
+    let mut t = Table::new(
+        &format!("sweep-session {} on {machine} x{gpus} GPUs, 3 replicas", model.name),
+        &["turns", "prefix", "policy", "tok/s", "TTFT p50", "TTFT p99", "hit %", "saved tok"],
+    );
+    for &turns in &[1usize, 4, 8] {
+        for &prefix in &[512usize, 2048] {
+            // Comparable request counts across rows: fewer, longer
+            // sessions as the turn count grows.
+            let mut sspec = SessionSpec::standard();
+            sspec.sessions = 240 / turns.max(1);
+            sspec.turns = turns;
+            sspec.think = 15.0; // enough overlap that blind routing scatters
+            sspec.first_prompt =
+                LenDist { median: prefix as f64, sigma: 0.4, min: 64, max: 16_384 };
+            let reqs = sspec.generate();
+            for policy in [RoutePolicy::LeastOutstanding, RoutePolicy::SessionAffinity] {
+                let mut base =
+                    fig9_config(ParallelSpec::tp(gpus), AllReduceImpl::Nvrar, 64, machine, gpus);
+                base.model = model.clone();
+                let cfg = FleetConfig::new(base, 3).with_policy(policy);
+                let rep = run_fleet(&cfg, &reqs);
+                t.row(&[
+                    turns.to_string(),
+                    prefix.to_string(),
+                    policy.name().to_string(),
+                    format!("{:.1}", rep.throughput),
+                    format!("{:.3}", rep.ttft_p50),
+                    format!("{:.3}", rep.ttft_p99),
+                    format!("{:.0}%", rep.cache_hit_rate * 100.0),
+                    rep.cached_tokens.to_string(),
+                ]);
+            }
+        }
+    }
+    t
+}
+
 /// Figure 10: Qwen3-235B-A22B MoE deployments on 16 GPUs.
 pub fn fig10_moe() -> Table {
     let model = ModelConfig::qwen3_235b_a22b();
@@ -677,6 +722,7 @@ pub fn all_experiments() -> Vec<Table> {
     out.extend(fig17_fig18_traces());
     out.push(sweep_parallel("70b", "perlmutter", 16));
     out.push(sweep_chunk("70b", "perlmutter", 16));
+    out.push(sweep_session("70b", "perlmutter", 16));
     out.push(fleet_experiment(AllReduceImpl::Nvrar, 0));
     out.push(fleet_hetero_experiment(AllReduceImpl::Nvrar));
     out
@@ -767,6 +813,32 @@ mod tests {
         );
         // The production shape (8192 budget, 4x-longer prompts) serves.
         assert!(rows.iter().any(|r| r[1] == "8192"));
+    }
+
+    #[test]
+    fn sweep_session_affinity_wins_hits_on_multi_turn_rows() {
+        let t = sweep_session("70b", "perlmutter", 8);
+        let rows = t.rows();
+        assert_eq!(rows.len(), 3 * 2 * 2, "turns x prefix x policy grid");
+        let hit = |r: &[String]| r[6].trim_end_matches('%').parse::<f64>().unwrap();
+        // Single-turn rows share nothing: both policies report 0% hits.
+        for r in rows.iter().filter(|r| r[0] == "1") {
+            assert_eq!(hit(r), 0.0, "{r:?}");
+        }
+        // On the 8-turn rows, session affinity's hit rate beats
+        // least-outstanding's for every prefix length.
+        for prefix in ["512", "2048"] {
+            let sa = rows
+                .iter()
+                .find(|r| r[0] == "8" && r[1] == prefix && r[2] == "session-affinity")
+                .unwrap();
+            let lo = rows
+                .iter()
+                .find(|r| r[0] == "8" && r[1] == prefix && r[2] == "least-tokens")
+                .unwrap();
+            assert!(hit(sa) > 0.0, "{sa:?}");
+            assert!(hit(sa) > hit(lo), "affinity {sa:?} vs least-tokens {lo:?}");
+        }
     }
 
     #[test]

@@ -17,11 +17,11 @@ pub fn main() {
         "multi-node LLM inference study + NVRAR all-reduce (paper reproduction).\n\
          Subcommand = first positional arg: scaling | breakdown | gemm | nccl-vs-mpi |\n\
          micro | hyperparams | e2e | phase | serve | sweep-parallel | sweep-chunk |\n\
-         fleet | fleet-hetero | moe | sync | variants | traces | all",
+         sweep-session | fleet | fleet-hetero | moe | sync | variants | traces | all",
     );
     cli.opt("machine", "perlmutter", "machine preset (perlmutter|vista)");
     cli.opt("model", "70b", "model (70b|405b|qwen3|tiny)");
-    cli.opt("gpus", "16", "GPU count for `sweep-parallel`/`sweep-chunk`");
+    cli.opt("gpus", "16", "GPU count for `sweep-parallel`/`sweep-chunk`/`sweep-session`");
     cli.opt("allreduce", "nvrar", "per-replica all-reduce for `fleet`/`fleet-hetero` (nccl|nccl-ring|nccl-tree|mpi|nvrar)");
     cli.opt("chunk-tokens", "0", "prefill chunk cap for serve/fleet (0 = budget-bounded)");
     cli.opt("csv-dir", "", "write CSVs into this directory (empty = don't)");
@@ -46,6 +46,9 @@ pub fn main() {
         }
         "sweep-chunk" => {
             vec![experiments::sweep_chunk(model, machine, args.get_usize("gpus"))]
+        }
+        "sweep-session" => {
+            vec![experiments::sweep_session(model, machine, args.get_usize("gpus"))]
         }
         "fleet" => {
             // Bad --allreduce values exit with a usable message, not a panic.

@@ -15,8 +15,15 @@
 //! from exactly these rules. A sequence whose decode hits KV exhaustion is
 //! **preempted** (pages released, re-queued to re-prefill its context),
 //! never silently truncated: output tokens are conserved.
+//!
+//! Admission is **prefix-cache-aware**: a request's prompt is matched
+//! against its session's cached page-aligned prefix
+//! ([`PagedKv::lookup_prefix`]); hit pages are *shared* (refcounted), the
+//! prefill state machine starts at `done = cached`, and only the uncached
+//! suffix tokens ever become GEMM rows — while each chunk's `ctx` still
+//! covers the full attended context, cached prefix included.
 
-use super::kv::{KvError, PagedKv, SeqId};
+use super::kv::{KvError, PagedKv, SeqId, SessionId};
 use std::collections::VecDeque;
 
 /// One client request.
@@ -26,6 +33,21 @@ pub struct Request {
     pub prompt_len: usize,
     pub decode_len: usize,
     pub arrival: f64,
+    /// Conversation the prompt's content belongs to (prefix-cache
+    /// identity): turns of one chat share it, unrelated requests use
+    /// [`Request::solo_session`].
+    pub session: SessionId,
+}
+
+impl Request {
+    /// A session id no other request shares — the zero-sharing default
+    /// for single-shot workloads. The high bit marks it solo (see
+    /// [`crate::engine::kv::is_solo`]): the allocator never indexes or
+    /// matches solo content, so these workloads keep the exclusive
+    /// allocator's behavior exactly.
+    pub fn solo_session(id: SeqId) -> SessionId {
+        (1 << 63) | id
+    }
 }
 
 /// One prefill chunk row of a step: `tokens` new prompt tokens fed to the
@@ -111,6 +133,30 @@ pub struct StepOutcome {
 struct Running {
     id: SeqId,
     remaining_decode: usize,
+    session: SessionId,
+}
+
+/// One in-flight decode sequence torn out of a draining engine for KV
+/// migration: its accumulated context (`ctx` tokens of KV) ships to a
+/// peer, where `remaining_decode` output tokens are still to be produced.
+#[derive(Clone, Copy, Debug)]
+pub struct MigratedSeq {
+    pub id: SeqId,
+    pub ctx: usize,
+    pub remaining_decode: usize,
+    pub session: SessionId,
+}
+
+/// Everything a draining engine sheds via [`Batcher::drain_for_migration`].
+#[derive(Clone, Debug)]
+pub struct DrainedWork {
+    /// Not-yet-admitted requests: re-route them, nothing to transfer.
+    pub waiting: Vec<Request>,
+    /// Partially-prefilled prompts: pages released, restarted elsewhere
+    /// (counted as preemptions — their chunks are recomputed).
+    pub restarts: Vec<Request>,
+    /// Running decodes whose KV migrates to a peer.
+    pub migrations: Vec<MigratedSeq>,
 }
 
 /// A sequence between waiting and running: admitted, `done` of `total`
@@ -124,6 +170,7 @@ struct Prefilling {
     total: usize,
     done: usize,
     decode_tokens: usize,
+    session: SessionId,
 }
 
 /// The continuous batcher.
@@ -267,22 +314,33 @@ impl Batcher {
                 {
                     break;
                 }
-                let chunk = req.prompt_len.min(cap).min(budget).min(kv.admit_capacity());
+                // Prefix-cache hit: the cached page-aligned prefix is
+                // shared (pinned), not recomputed — only the uncached
+                // suffix is charged to the prefill state machine. The
+                // probe's suffix capacity excludes idle hit pages (the
+                // admission pins them out of the allocatable pool first).
+                let (cached, capacity) = kv.probe_prefix(req.session, req.prompt_len);
+                let remaining = req.prompt_len - cached;
+                let chunk = remaining.min(cap).min(budget).min(capacity);
                 if chunk == 0 {
-                    break; // no KV room for even one token
+                    break; // no KV room for even one suffix token
                 }
-                kv.admit(req.id, chunk).expect("admit_capacity checked");
+                let granted = kv
+                    .admit_prefix(req.id, req.session, req.prompt_len, chunk)
+                    .expect("probe_prefix capacity checked");
+                debug_assert_eq!(granted, cached, "probe/admit prefix drift");
                 self.prefilling.push(Prefilling {
                     id: req.id,
                     total: req.prompt_len,
-                    done: 0,
+                    done: cached,
                     decode_tokens: req.decode_len,
+                    session: req.session,
                 });
                 step.prefills.push(PrefillChunk {
                     id: req.id,
                     tokens: chunk,
-                    ctx: chunk,
-                    last: chunk == req.prompt_len,
+                    ctx: cached + chunk,
+                    last: cached + chunk == req.prompt_len,
                 });
                 budget -= chunk;
                 self.waiting.pop_front();
@@ -304,6 +362,7 @@ impl Batcher {
                 prompt_len: victim.total,
                 decode_len: victim.decode_tokens,
                 arrival: 0.0,
+                session: victim.session,
             });
         }
     }
@@ -320,9 +379,49 @@ impl Batcher {
             kv.release(req.id).expect("just admitted");
             self.finished.push(req.id);
         } else {
-            self.running.push(Running { id: req.id, remaining_decode: remaining });
+            self.running.push(Running {
+                id: req.id,
+                remaining_decode: remaining,
+                session: req.session,
+            });
         }
         Ok(())
+    }
+
+    /// Tear every queued and in-flight sequence out of the batcher so a
+    /// draining replica can hand its work to peers: waiting requests move
+    /// untouched, partially-prefilled prompts are preempted (pages
+    /// released, restarted elsewhere — possibly against *their* prefix
+    /// cache), and running decodes release their pages here and migrate
+    /// their accumulated KV context. Must not be called with a step in
+    /// flight (the caller owns the step lifecycle); leaves the batcher
+    /// idle.
+    pub fn drain_for_migration(&mut self, kv: &mut PagedKv) -> DrainedWork {
+        let waiting: Vec<Request> = std::mem::take(&mut self.waiting).into_iter().collect();
+        let mut restarts = Vec::new();
+        for p in std::mem::take(&mut self.prefilling) {
+            kv.release(p.id).expect("prefilling seq holds pages");
+            self.preemptions += 1;
+            restarts.push(Request {
+                id: p.id,
+                prompt_len: p.total,
+                decode_len: p.decode_tokens,
+                arrival: 0.0,
+                session: p.session,
+            });
+        }
+        let mut migrations = Vec::new();
+        for r in std::mem::take(&mut self.running) {
+            let ctx = kv.seq_tokens(r.id).expect("running seq holds KV");
+            kv.release(r.id).expect("running seq holds pages");
+            migrations.push(MigratedSeq {
+                id: r.id,
+                ctx,
+                remaining_decode: r.remaining_decode,
+                session: r.session,
+            });
+        }
+        DrainedWork { waiting, restarts, migrations }
     }
 
     /// Account the completion of a step: advance prefill chunks (a last
@@ -347,10 +446,14 @@ impl Batcher {
                 outcome.new_tokens += 1; // the prefill's first output token
                 let remaining = p.decode_tokens.saturating_sub(1);
                 if remaining == 0 {
-                    kv.release(p.id).unwrap();
+                    kv.release_cached(p.id).unwrap();
                     self.finished.push(p.id);
                 } else {
-                    self.running.push(Running { id: p.id, remaining_decode: remaining });
+                    self.running.push(Running {
+                        id: p.id,
+                        remaining_decode: remaining,
+                        session: p.session,
+                    });
                 }
             } else {
                 self.prefilling[idx].done += c.tokens;
@@ -382,15 +485,23 @@ impl Batcher {
                     prompt_len: ctx + 1,
                     decode_len: r.remaining_decode,
                     arrival: 0.0,
+                    session: r.session,
                 });
                 continue;
             }
             outcome.new_tokens += 1;
             if r.remaining_decode <= 1 {
-                kv.release(r.id).unwrap();
+                // Completion promotes the sequence's full pages into the
+                // prefix cache: the conversation's next turn re-sends this
+                // whole context.
+                kv.release_cached(r.id).unwrap();
                 self.finished.push(r.id);
             } else {
-                still.push(Running { id: r.id, remaining_decode: r.remaining_decode - 1 });
+                still.push(Running {
+                    id: r.id,
+                    remaining_decode: r.remaining_decode - 1,
+                    session: r.session,
+                });
             }
         }
         self.running = still;
@@ -409,7 +520,17 @@ mod tests {
     use crate::util::prop::{check, Gen};
 
     fn req(id: u64, p: usize, d: usize) -> Request {
-        Request { id, prompt_len: p, decode_len: d, arrival: 0.0 }
+        Request {
+            id,
+            prompt_len: p,
+            decode_len: d,
+            arrival: 0.0,
+            session: Request::solo_session(id),
+        }
+    }
+
+    fn sreq(id: u64, session: u64, p: usize, d: usize) -> Request {
+        Request { session, ..req(id, p, d) }
     }
 
     fn drive(
@@ -719,6 +840,188 @@ mod tests {
             let conc = g.usize(1, 16);
             let pages = g.usize(8, 256);
             drive_to_completion(reqs, conc, pages);
+        });
+    }
+
+    #[test]
+    fn shared_prefix_admission_skips_cached_tokens() {
+        let mut kv = PagedKv::new(64, 16);
+        let mut b = Batcher::new(8, 8192);
+        // Turn 1 of session 7: 64-token prompt, 2 output tokens.
+        b.submit(sreq(0, 7, 64, 2));
+        while !b.idle() {
+            let step = b.next_step(&mut kv);
+            b.complete_step(&step, &mut kv);
+        }
+        assert_eq!(b.take_finished(), vec![0]);
+        assert!(kv.cached_pages() > 0, "completion must promote pages");
+        // Turn 2 re-sends the 66-token context + 14 fresh tokens: exactly
+        // four full pages (64 tokens) are cached and shared, so the
+        // prefill runs as a single 16-row chunk attending all 80 tokens.
+        b.submit(sreq(1, 7, 80, 3));
+        let step = b.next_step(&mut kv);
+        assert_eq!(
+            step.prefills,
+            vec![PrefillChunk { id: 1, tokens: 16, ctx: 80, last: true }]
+        );
+        assert_eq!(step.token_rows(), 16, "cached tokens are not GEMM rows");
+        b.complete_step(&step, &mut kv);
+        assert_eq!(kv.seq_tokens(1), Some(80), "attention still sees the full context");
+        let s = kv.stats();
+        assert_eq!(s.hit_tokens, 64);
+        // An unrelated request shares nothing.
+        b.submit(req(2, 80, 1));
+        let step = b.next_step(&mut kv);
+        let row = step.prefills.iter().find(|c| c.id == 2).unwrap();
+        assert_eq!((row.tokens, row.ctx), (80, 80));
+        b.complete_step(&step, &mut kv);
+        while !b.idle() {
+            let step = b.next_step(&mut kv);
+            b.complete_step(&step, &mut kv);
+        }
+        assert_eq!(kv.used_pages(), 0);
+        kv.check_invariants();
+    }
+
+    #[test]
+    fn fully_cached_prompt_still_computes_one_chunk() {
+        let mut kv = PagedKv::new(64, 16);
+        let mut b = Batcher::new(8, 8192);
+        b.submit(sreq(0, 3, 32, 1)); // completes with exactly 32+...
+        while !b.idle() {
+            let step = b.next_step(&mut kv);
+            b.complete_step(&step, &mut kv);
+        }
+        // A turn that re-sends exactly the cached 32 tokens: the hit is
+        // capped one token short, so one suffix token still runs.
+        b.submit(sreq(1, 3, 32, 1));
+        let step = b.next_step(&mut kv);
+        assert_eq!(
+            step.prefills,
+            vec![PrefillChunk { id: 1, tokens: 16, ctx: 32, last: true }]
+        );
+        b.complete_step(&step, &mut kv);
+        assert_eq!(kv.used_pages(), 0);
+    }
+
+    #[test]
+    fn prefix_admission_under_kv_pressure_shrinks_the_chunk_not_panics() {
+        // Regression: the suffix chunk used to be capped by the naive
+        // admit_capacity, which counts the idle cached hit pages the
+        // admission itself is about to pin — under KV pressure the
+        // capacity re-check inside admit_prefix then failed and the
+        // `expect` aborted. The chunk must instead shrink to the real
+        // suffix room and the prompt continue chunk by chunk.
+        let mut kv = PagedKv::new(8, 16);
+        let mut b = Batcher::new(8, 8192);
+        let mut tokens = 0usize;
+        // Turn 1 of session 7 caches a 64-token prefix (4 of 8 pages).
+        b.submit(sreq(0, 7, 64, 1));
+        while !b.idle() {
+            let step = b.next_step(&mut kv);
+            tokens += b.complete_step(&step, &mut kv).new_tokens;
+        }
+        // A live private sequence pins 3 more pages: 1 page truly free.
+        b.submit(req(1, 48, 8));
+        let s = b.next_step(&mut kv);
+        tokens += b.complete_step(&s, &mut kv).new_tokens;
+        assert_eq!(b.running_len(), 1);
+        // Turn 2 re-sends 96 tokens: 64 cached + 32 suffix, but only one
+        // page of suffix room exists right now.
+        b.submit(sreq(2, 7, 96, 1));
+        let s = b.next_step(&mut kv);
+        let row = s.prefills.iter().find(|c| c.id == 2).expect("admitted, not panicked");
+        assert_eq!((row.tokens, row.ctx, row.last), (16, 80, false));
+        tokens += b.complete_step(&s, &mut kv).new_tokens;
+        // Everything still completes and conserves tokens (the pinned
+        // decode may preempt and re-produce under this pressure).
+        let mut steps = 0;
+        while !b.idle() {
+            let step = b.next_step(&mut kv);
+            assert!(!step.is_empty());
+            tokens += b.complete_step(&step, &mut kv).new_tokens;
+            kv.check_invariants();
+            steps += 1;
+            assert!(steps < 10_000, "runaway");
+        }
+        assert_eq!(tokens, 1 + 8 + 1, "all output tokens produced");
+        assert_eq!(kv.used_pages(), 0);
+    }
+
+    #[test]
+    fn drain_for_migration_empties_the_batcher_and_conserves_kv() {
+        let mut kv = PagedKv::new(64, 16);
+        let mut b = Batcher::new(2, 100).with_chunk_tokens(32);
+        b.submit(req(0, 16, 8)); // will be running
+        b.submit(req(1, 200, 4)); // will be mid-prefill
+        b.submit(req(2, 64, 2)); // stays waiting (concurrency cap)
+        let s1 = b.next_step(&mut kv);
+        b.complete_step(&s1, &mut kv);
+        let s2 = b.next_step(&mut kv);
+        b.complete_step(&s2, &mut kv);
+        assert_eq!(b.running_len(), 1);
+        assert_eq!(b.prefilling_len(), 1);
+        let work = b.drain_for_migration(&mut kv);
+        assert!(b.idle(), "drained batcher must be empty");
+        assert_eq!(kv.used_pages(), 0, "every page released");
+        assert_eq!(work.migrations.len(), 1);
+        let m = work.migrations[0];
+        assert_eq!(m.id, 0);
+        // Migration ships exactly the *stored* KV: prompt (16) plus the one
+        // decode that was appended. (The newest produced token is never in
+        // KV until the next append — unlike preemption, nothing was
+        // discarded, so there is no +1 to re-produce.)
+        assert_eq!(m.ctx, 16 + 1, "stored context migrates");
+        assert_eq!(m.remaining_decode, 8 - 2, "two tokens already produced");
+        assert_eq!(work.restarts.len(), 1);
+        assert_eq!((work.restarts[0].id, work.restarts[0].prompt_len), (1, 200));
+        assert_eq!(work.waiting.len(), 1);
+        assert_eq!(work.waiting[0].id, 2);
+        assert!(b.preemptions() >= 1, "restarted prefills count as preemptions");
+        kv.check_invariants();
+    }
+
+    #[test]
+    fn property_session_turns_share_and_conserve() {
+        // Multi-turn sessions through the full batcher loop: output tokens
+        // are conserved regardless of sharing, and at least some admission
+        // hits the cache when turns extend one another.
+        check("session turns conserve tokens", 15, |g: &mut Gen| {
+            let sessions = g.usize(1, 4);
+            let turns = g.usize(2, 4);
+            let mut reqs = Vec::new();
+            let mut id = 0u64;
+            for s in 0..sessions as u64 {
+                let mut context = 0usize;
+                for _ in 0..turns {
+                    let fresh = g.usize(1, 40);
+                    let out = g.usize(1, 8);
+                    reqs.push(sreq(id, s, context + fresh, out));
+                    context += fresh + out;
+                    id += 1;
+                }
+            }
+            // Interleave sessions round-robin (ids stay dense per submit
+            // order is irrelevant to the batcher).
+            let mut kv = PagedKv::new(g.usize(64, 256), g.usize(4, 16));
+            let mut b = Batcher::new(g.usize(2, 8), g.usize(32, 128));
+            for r in &reqs {
+                b.submit(*r);
+            }
+            let mut tokens = 0usize;
+            let mut steps = 0;
+            while !b.idle() {
+                let step = b.next_step(&mut kv);
+                assert!(!step.is_empty(), "live batcher must make progress");
+                tokens += b.complete_step(&step, &mut kv).new_tokens;
+                b.take_finished();
+                kv.check_invariants();
+                steps += 1;
+                assert!(steps < 1_000_000, "runaway");
+            }
+            let expected: usize = reqs.iter().map(|r| r.decode_len).sum();
+            assert_eq!(tokens, expected, "output tokens conserved with sharing");
+            assert_eq!(kv.used_pages(), 0);
         });
     }
 

@@ -1,18 +1,48 @@
-//! Paged KV-cache manager — a real block allocator with PagedAttention's
-//! invariants.
+//! Paged KV-cache manager — a **refcounted, content-addressed shared-page
+//! allocator** with a radix-style prefix index (PagedAttention block
+//! allocation + RadixAttention-style prefix caching).
 //!
-//! The serving stack admits a request only if its KV pages fit; decode
-//! steps append tokens and allocate pages on block-boundary crossings;
-//! completion frees the pages. Invariants (property-tested):
+//! A prompt's content is identified by the conversation it belongs to: a
+//! [`SessionId`] names a token stream, and block `b` of that stream is the
+//! page key `(session, b)`. Admission matches a request's prompt against
+//! cached page-aligned prefixes of its session ([`PagedKv::admit_prefix`]),
+//! *shares* the hit pages by bumping their refcount, and charges only the
+//! uncached suffix to the prefill state machine; the partially-filled tail
+//! page of a hit is recomputed into a private copy (a COW fork — shared
+//! pages are immutable full blocks, so decode never writes into one).
+//! Completion promotes a sequence's full pages into the prefix index
+//! ([`PagedKv::release_cached`]); unreferenced cached pages form an LRU
+//! pool that is evicted on demand, so caching never costs capacity.
 //!
-//! 1. a physical page is owned by at most one sequence at a time,
-//! 2. allocated + free == total, always,
-//! 3. a sequence's page count == ceil(tokens / page_size).
+//! Invariants (property-tested):
+//!
+//! 1. a page's refcount equals the number of live sequences holding it,
+//! 2. every page is in exactly one of {free list, referenced, cached-idle},
+//!    so `used + free == total` always (free counts cached-idle pages:
+//!    they are reclaimable at zero cost),
+//! 3. no page is ever freed or evicted while referenced,
+//! 4. a sequence's page count == ceil(tokens / page_size), shared prefix
+//!    included.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Sequence identifier.
 pub type SeqId = u64;
+
+/// Conversation identity of a prompt's token stream. Two requests share
+/// cached prefix pages iff they carry the same session id (turn k+1 of a
+/// chat re-sends turn k's whole context). Requests without sharing use a
+/// unique id per request (see `Request::solo_session`).
+pub type SessionId = u64;
+
+/// Session ids with the high bit set are **solo**: single-shot content no
+/// other request will ever re-send. Solo sequences are never indexed or
+/// matched, so zero-sharing workloads keep the exclusive allocator's
+/// behavior exactly — plain free-list pops, no eviction churn, clean
+/// stats.
+pub fn is_solo(session: SessionId) -> bool {
+    session & (1 << 63) != 0
+}
 
 /// Errors from the allocator.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -22,19 +52,53 @@ pub enum KvError {
     SeqExists,
 }
 
-/// A paged KV-cache block allocator.
+/// Cumulative prefix-cache counters (monotonic over the allocator's life).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvStats {
+    /// Prompt tokens admitted through [`PagedKv::admit_prefix`] (the
+    /// hit-rate denominator; re-prefills after preemption count again).
+    pub prompt_tokens: u64,
+    /// Prompt tokens served by sharing cached pages instead of recompute.
+    pub hit_tokens: u64,
+    /// Cached-idle pages reclaimed under allocation pressure (LRU).
+    pub evictions: u64,
+    /// Admissions whose cached prefix ended mid-page (or was capped at
+    /// `prompt_len - 1`): the tail is copied, not shared.
+    pub cow_forks: u64,
+    /// Full pages promoted into the prefix index at completion.
+    pub promotions: u64,
+}
+
+/// A paged KV-cache block allocator with refcounted shared pages.
 #[derive(Clone, Debug)]
 pub struct PagedKv {
     page_tokens: usize,
-    free: Vec<u32>,
-    seqs: BTreeMap<SeqId, SeqAlloc>,
     total_pages: usize,
+    free: Vec<u32>,
+    /// Live-sequence references per page.
+    refcount: Vec<u32>,
+    /// Prefix-index key a page is registered under, if any.
+    key_of: Vec<Option<(SessionId, u32)>>,
+    /// The radix-style prefix index: `(session, block#) -> page`.
+    index: BTreeMap<(SessionId, u32), u32>,
+    /// Cached pages no live sequence references, in LRU order
+    /// `(idle-tick, page)` — the eviction pool.
+    evictable: BTreeSet<(u64, u32)>,
+    /// Tick at which a page last became unreferenced (locates its
+    /// `evictable` entry when it is re-pinned).
+    idle_since: Vec<u64>,
+    tick: u64,
+    seqs: BTreeMap<SeqId, SeqAlloc>,
+    stats: KvStats,
 }
 
 #[derive(Clone, Debug)]
 struct SeqAlloc {
     pages: Vec<u32>,
     tokens: usize,
+    /// Content identity for promotion at completion; `None` for sequences
+    /// admitted without one (e.g. KV received over the wire).
+    session: Option<SessionId>,
 }
 
 impl PagedKv {
@@ -42,18 +106,38 @@ impl PagedKv {
         assert!(page_tokens > 0 && total_pages > 0);
         PagedKv {
             page_tokens,
-            free: (0..total_pages as u32).rev().collect(),
-            seqs: BTreeMap::new(),
             total_pages,
+            free: (0..total_pages as u32).rev().collect(),
+            refcount: vec![0; total_pages],
+            key_of: vec![None; total_pages],
+            index: BTreeMap::new(),
+            evictable: BTreeSet::new(),
+            idle_since: vec![0; total_pages],
+            tick: 0,
+            seqs: BTreeMap::new(),
+            stats: KvStats::default(),
         }
     }
 
+    /// Pages allocatable right now: the free list plus every cached page
+    /// no live sequence references (evictable at zero cost).
     pub fn free_pages(&self) -> usize {
-        self.free.len()
+        self.free.len() + self.evictable.len()
     }
 
+    /// Pages referenced by live sequences.
     pub fn used_pages(&self) -> usize {
-        self.total_pages - self.free.len()
+        self.total_pages - self.free_pages()
+    }
+
+    /// Cached-idle pages (prefix-cache contents the LRU can evict).
+    pub fn cached_pages(&self) -> usize {
+        self.evictable.len()
+    }
+
+    /// Pages the allocator owns in total.
+    pub fn total_pages(&self) -> usize {
+        self.total_pages
     }
 
     pub fn pages_needed(&self, tokens: usize) -> usize {
@@ -62,71 +146,247 @@ impl PagedKv {
 
     /// Can a sequence of `tokens` be admitted right now?
     pub fn can_admit(&self, tokens: usize) -> bool {
-        self.pages_needed(tokens.max(1)) <= self.free.len()
+        self.pages_needed(tokens.max(1)) <= self.free_pages()
     }
 
-    /// Admit a new sequence holding `tokens` (its prompt, or the first
-    /// chunk of it under chunked prefill). Allocates ceil(tokens/page)
-    /// pages atomically (all or nothing).
+    /// Cumulative prefix-cache counters.
+    pub fn stats(&self) -> KvStats {
+        self.stats
+    }
+
+    // -- page lifecycle -------------------------------------------------
+
+    /// Take one allocatable page, evicting the LRU cached-idle page if the
+    /// free list is empty. `None` only when every page is referenced.
+    fn acquire(&mut self) -> Option<u32> {
+        if let Some(p) = self.free.pop() {
+            return Some(p);
+        }
+        let &(t, p) = self.evictable.iter().next()?;
+        self.evictable.remove(&(t, p));
+        let key = self.key_of[p as usize].take().expect("evictable page is indexed");
+        self.index.remove(&key);
+        self.stats.evictions += 1;
+        Some(p)
+    }
+
+    /// Reference a page (pulling it out of the eviction pool if cached).
+    fn pin(&mut self, p: u32) {
+        let i = p as usize;
+        if self.refcount[i] == 0 && self.key_of[i].is_some() {
+            let was = self.evictable.remove(&(self.idle_since[i], p));
+            debug_assert!(was, "unreferenced cached page must be evictable");
+        }
+        self.refcount[i] += 1;
+    }
+
+    /// Drop one reference; an unreferenced page returns to the eviction
+    /// pool if it is still indexed, else to the free list.
+    fn unpin(&mut self, p: u32) {
+        let i = p as usize;
+        debug_assert!(self.refcount[i] > 0, "unpin of unreferenced page");
+        self.refcount[i] -= 1;
+        if self.refcount[i] == 0 {
+            if self.key_of[i].is_some() {
+                self.tick += 1;
+                self.idle_since[i] = self.tick;
+                self.evictable.insert((self.tick, p));
+            } else {
+                self.free.push(p);
+            }
+        }
+    }
+
+    // -- admission ------------------------------------------------------
+
+    /// Admit a new sequence holding `tokens` with no content identity
+    /// (e.g. KV received over the wire from a prefill replica): its pages
+    /// are private — never shared, never promoted. Atomic (all or
+    /// nothing).
     pub fn admit(&mut self, id: SeqId, tokens: usize) -> Result<(), KvError> {
         if self.seqs.contains_key(&id) {
             return Err(KvError::SeqExists);
         }
-        let need = self.pages_needed(tokens.max(1));
-        if need > self.free.len() {
+        let tokens = tokens.max(1);
+        let need = self.pages_needed(tokens);
+        if need > self.free_pages() {
             return Err(KvError::OutOfPages);
         }
-        let pages = self.free.split_off(self.free.len() - need);
-        self.seqs.insert(id, SeqAlloc { pages, tokens: tokens.max(1) });
+        let mut pages = Vec::with_capacity(need);
+        for _ in 0..need {
+            let p = self.acquire().expect("capacity checked");
+            self.pin(p);
+            pages.push(p);
+        }
+        self.seqs.insert(id, SeqAlloc { pages, tokens, session: None });
         Ok(())
     }
 
-    /// Pages the allocator owns in total.
-    pub fn total_pages(&self) -> usize {
-        self.total_pages
+    /// Longest cached page-aligned prefix of `session`'s stream a
+    /// `prompt_len`-token prompt could share, in tokens. Capped one token
+    /// short of the prompt: at least one suffix token must run through the
+    /// model to produce the first logits.
+    pub fn lookup_prefix(&self, session: SessionId, prompt_len: usize) -> usize {
+        if is_solo(session) {
+            return 0;
+        }
+        let max_pages = prompt_len.saturating_sub(1) / self.page_tokens;
+        let mut hits = 0usize;
+        while hits < max_pages && self.index.contains_key(&(session, hits as u32)) {
+            hits += 1;
+        }
+        hits * self.page_tokens
     }
+
+    /// One index walk answering both admission questions at once:
+    /// `(cached_tokens, suffix_capacity_tokens)` — what
+    /// [`PagedKv::admit_prefix`] would share, and the most uncached suffix
+    /// tokens it could materialize right now. The capacity is tighter
+    /// than [`PagedKv::admit_capacity`]: the admission pins the cached
+    /// hit pages first, so hit pages currently sitting idle in the
+    /// eviction pool are *not* allocatable suffix room — counting them
+    /// (the naive bound) would overshoot and fail the admission's own
+    /// capacity check under pressure.
+    pub fn probe_prefix(&self, session: SessionId, prompt_len: usize) -> (usize, usize) {
+        if is_solo(session) {
+            return (0, self.admit_capacity());
+        }
+        let max_pages = prompt_len.saturating_sub(1) / self.page_tokens;
+        let mut hits = 0usize;
+        let mut idle_hits = 0usize;
+        while hits < max_pages {
+            match self.index.get(&(session, hits as u32)) {
+                Some(&p) => {
+                    if self.refcount[p as usize] == 0 {
+                        idle_hits += 1;
+                    }
+                    hits += 1;
+                }
+                None => break,
+            }
+        }
+        (hits * self.page_tokens, (self.free_pages() - idle_hits) * self.page_tokens)
+    }
+
+    /// Admit a new sequence whose prompt is `session`'s stream: the cached
+    /// page-aligned prefix is **shared** (refcounts bumped — no recompute,
+    /// no new pages), and only `chunk` uncached suffix tokens are
+    /// materialized now (the first prefill chunk; the batcher extends the
+    /// rest chunk by chunk). Returns the cached token count actually
+    /// reused. Atomic: on `OutOfPages` nothing is pinned or allocated.
+    pub fn admit_prefix(
+        &mut self,
+        id: SeqId,
+        session: SessionId,
+        prompt_len: usize,
+        chunk: usize,
+    ) -> Result<usize, KvError> {
+        if self.seqs.contains_key(&id) {
+            return Err(KvError::SeqExists);
+        }
+        let chunk = chunk.max(1);
+        let max_pages =
+            if is_solo(session) { 0 } else { prompt_len.saturating_sub(1) / self.page_tokens };
+        let mut pages: Vec<u32> = Vec::new();
+        while pages.len() < max_pages {
+            match self.index.get(&(session, pages.len() as u32)) {
+                Some(&p) => pages.push(p),
+                None => break,
+            }
+        }
+        // Pin the hits before sizing the suffix allocation so eviction
+        // cannot reclaim them from under this admission.
+        for &p in &pages {
+            self.pin(p);
+        }
+        let cached = pages.len() * self.page_tokens;
+        let tokens = cached + chunk;
+        let need = self.pages_needed(tokens) - pages.len();
+        if need > self.free_pages() {
+            for &p in pages.iter().rev() {
+                self.unpin(p);
+            }
+            return Err(KvError::OutOfPages);
+        }
+        // A cached continuation that ends mid-page (or was capped at
+        // `prompt_len - 1`) cannot be shared at page granularity: the tail
+        // page is recomputed into a private copy — a COW fork.
+        if self.index.contains_key(&(session, pages.len() as u32)) {
+            self.stats.cow_forks += 1;
+        }
+        for _ in 0..need {
+            let p = self.acquire().expect("capacity checked");
+            self.pin(p);
+            pages.push(p);
+        }
+        self.stats.prompt_tokens += prompt_len as u64;
+        self.stats.hit_tokens += cached as u64;
+        self.seqs.insert(id, SeqAlloc { pages, tokens, session: Some(session) });
+        Ok(cached)
+    }
+
+    // -- growth ---------------------------------------------------------
 
     /// Grow an admitted sequence by `tokens` prompt tokens (the next
     /// prefill chunk): allocates the extra pages atomically (all or
-    /// nothing). The partial-prompt twin of [`PagedKv::admit`].
+    /// nothing). The partial-prompt twin of [`PagedKv::admit_prefix`].
     pub fn extend(&mut self, id: SeqId, tokens: usize) -> Result<(), KvError> {
-        let s = self.seqs.get(&id).ok_or(KvError::UnknownSeq)?;
-        let need = (s.tokens + tokens).div_ceil(self.page_tokens) - s.pages.len();
-        if need > self.free.len() {
+        let (cur_tokens, cur_pages) = {
+            let s = self.seqs.get(&id).ok_or(KvError::UnknownSeq)?;
+            (s.tokens, s.pages.len())
+        };
+        let need = (cur_tokens + tokens).div_ceil(self.page_tokens) - cur_pages;
+        if need > self.free_pages() {
             return Err(KvError::OutOfPages);
         }
-        let pages = self.free.split_off(self.free.len() - need);
+        let mut fresh = Vec::with_capacity(need);
+        for _ in 0..need {
+            let p = self.acquire().expect("capacity checked");
+            self.pin(p);
+            fresh.push(p);
+        }
         let s = self.seqs.get_mut(&id).expect("checked above");
-        s.pages.extend(pages);
+        s.pages.extend(fresh);
         s.tokens += tokens;
         Ok(())
     }
 
     /// Most tokens [`PagedKv::extend`] could append to `id` right now:
-    /// the slack in its last page plus every free page.
+    /// the slack in its last page plus every allocatable page.
     pub fn extend_capacity(&self, id: SeqId) -> usize {
         let Some(s) = self.seqs.get(&id) else { return 0 };
         let slack = s.pages.len() * self.page_tokens - s.tokens;
-        slack + self.free.len() * self.page_tokens
+        slack + self.free_pages() * self.page_tokens
     }
 
-    /// Most tokens [`PagedKv::admit`] could grant a new sequence right now.
+    /// Most tokens a *private* admission ([`PagedKv::admit`]) could
+    /// materialize now. Prefix-aware admissions must use the tighter
+    /// [`PagedKv::probe_prefix`] capacity instead: this bound counts idle
+    /// cached hit pages the shared admission would pin, not allocate.
     pub fn admit_capacity(&self) -> usize {
-        self.free.len() * self.page_tokens
+        self.free_pages() * self.page_tokens
     }
 
-    /// Append one decoded token; allocates a page at block boundaries.
+    /// Append one decoded token; allocates a page at block boundaries
+    /// (evicting the LRU cached-idle page under pressure). Decode always
+    /// writes into a private page: shared pages are full blocks, and the
+    /// tail of a shared admission is a COW copy.
     pub fn append_token(&mut self, id: SeqId) -> Result<(), KvError> {
-        // Two-phase to satisfy the borrow checker AND keep atomicity:
-        // check first, then mutate.
         let need_page = {
             let s = self.seqs.get(&id).ok_or(KvError::UnknownSeq)?;
             s.tokens % self.page_tokens == 0
         };
-        if need_page && self.free.is_empty() {
-            return Err(KvError::OutOfPages);
-        }
-        let page = if need_page { self.free.pop() } else { None };
+        let page = if need_page {
+            match self.acquire() {
+                Some(p) => {
+                    self.pin(p);
+                    Some(p)
+                }
+                None => return Err(KvError::OutOfPages),
+            }
+        } else {
+            None
+        };
         let s = self.seqs.get_mut(&id).expect("checked above");
         if let Some(p) = page {
             s.pages.push(p);
@@ -135,12 +395,46 @@ impl PagedKv {
         Ok(())
     }
 
-    /// Release a finished sequence's pages.
+    // -- release --------------------------------------------------------
+
+    /// Release a sequence's references **without** caching its content
+    /// (preemption / cancellation: the tokens will be re-produced, so the
+    /// pages hold no trusted stream content to advertise).
     pub fn release(&mut self, id: SeqId) -> Result<(), KvError> {
         let s = self.seqs.remove(&id).ok_or(KvError::UnknownSeq)?;
-        self.free.extend(s.pages);
+        for p in s.pages {
+            self.unpin(p);
+        }
         Ok(())
     }
+
+    /// Release a **completed** sequence, promoting its full pages into the
+    /// prefix index under `(session, block#)` keys so future turns of the
+    /// conversation can share them (decoded tokens are part of the stream:
+    /// turn k+1's prompt re-sends turn k's response). Partial tail pages,
+    /// sessionless sequences, and blocks whose key is already cached are
+    /// simply unreferenced.
+    pub fn release_cached(&mut self, id: SeqId) -> Result<(), KvError> {
+        let s = self.seqs.remove(&id).ok_or(KvError::UnknownSeq)?;
+        if let Some(session) = s.session.filter(|&sid| !is_solo(sid)) {
+            let full = s.tokens / self.page_tokens;
+            for (b, &p) in s.pages.iter().enumerate().take(full) {
+                let key = (session, b as u32);
+                let i = p as usize;
+                if self.key_of[i].is_none() && !self.index.contains_key(&key) {
+                    self.index.insert(key, p);
+                    self.key_of[i] = Some(key);
+                    self.stats.promotions += 1;
+                }
+            }
+        }
+        for p in s.pages {
+            self.unpin(p);
+        }
+        Ok(())
+    }
+
+    // -- introspection --------------------------------------------------
 
     pub fn seq_tokens(&self, id: SeqId) -> Option<usize> {
         self.seqs.get(&id).map(|s| s.tokens)
@@ -156,21 +450,44 @@ impl PagedKv {
 
     /// Check invariants (used by property tests).
     pub fn check_invariants(&self) {
-        let mut seen = std::collections::BTreeSet::new();
-        for p in &self.free {
-            assert!(seen.insert(*p), "page {p} duplicated in free list");
-        }
+        let mut refs = vec![0u32; self.total_pages];
         for (id, s) in &self.seqs {
             assert_eq!(
                 s.pages.len(),
                 s.tokens.div_ceil(self.page_tokens),
                 "seq {id}: page count mismatch"
             );
-            for p in &s.pages {
-                assert!(seen.insert(*p), "page {p} double-owned (seq {id})");
+            for &p in &s.pages {
+                refs[p as usize] += 1;
             }
         }
-        assert_eq!(seen.len(), self.total_pages, "page conservation violated");
+        let mut pooled = BTreeSet::new();
+        for p in &self.free {
+            assert_eq!(refs[*p as usize], 0, "page {p} freed while referenced");
+            assert!(self.key_of[*p as usize].is_none(), "free page {p} still indexed");
+            assert!(pooled.insert(*p), "page {p} duplicated in free list");
+        }
+        for &(t, p) in &self.evictable {
+            assert_eq!(refs[p as usize], 0, "page {p} evictable while referenced");
+            assert_eq!(self.idle_since[p as usize], t, "evictable tick mismatch for page {p}");
+            assert!(self.key_of[p as usize].is_some(), "evictable page {p} not indexed");
+            assert!(pooled.insert(p), "page {p} in two pools");
+        }
+        for (p, &rc) in self.refcount.iter().enumerate() {
+            assert_eq!(rc, refs[p], "page {p}: refcount {rc} != {} live references", refs[p]);
+            if rc > 0 {
+                assert!(pooled.insert(p as u32), "page {p} pooled while referenced");
+            }
+        }
+        assert_eq!(pooled.len(), self.total_pages, "page conservation violated");
+        for (key, &p) in &self.index {
+            assert_eq!(self.key_of[p as usize], Some(*key), "index/key_of disagree on page {p}");
+        }
+        assert_eq!(
+            self.index.len(),
+            self.key_of.iter().filter(|k| k.is_some()).count(),
+            "orphaned key_of entries"
+        );
     }
 }
 
@@ -211,7 +528,9 @@ mod tests {
         let mut kv = PagedKv::new(4, 8);
         kv.admit(1, 8).unwrap();
         assert_eq!(kv.admit(1, 8), Err(KvError::SeqExists));
+        assert_eq!(kv.admit_prefix(1, 9, 8, 8), Err(KvError::SeqExists));
         assert_eq!(kv.release(9), Err(KvError::UnknownSeq));
+        assert_eq!(kv.release_cached(9), Err(KvError::UnknownSeq));
         assert_eq!(kv.append_token(9), Err(KvError::UnknownSeq));
     }
 
@@ -258,39 +577,251 @@ mod tests {
     }
 
     #[test]
-    fn property_no_double_booking_under_random_ops() {
-        check("paged kv invariants", 30, |g: &mut Gen| {
+    fn completion_promotes_full_pages_and_next_turn_shares_them() {
+        let mut kv = PagedKv::new(16, 16);
+        // Turn 1 of session 7: 30-token prompt + 4 decoded tokens = 34
+        // tokens = 2 full pages + a partial.
+        assert_eq!(kv.admit_prefix(1, 7, 30, 30).unwrap(), 0);
+        for _ in 0..4 {
+            kv.append_token(1).unwrap();
+        }
+        kv.release_cached(1).unwrap();
+        assert_eq!(kv.cached_pages(), 2, "two full pages promoted, partial freed");
+        assert_eq!(kv.stats().promotions, 2);
+        assert_eq!(kv.used_pages(), 0);
+        // Turn 2 re-sends the whole 34-token context + 30 fresh tokens.
+        assert_eq!(kv.lookup_prefix(7, 64), 32);
+        let cached = kv.admit_prefix(2, 7, 64, 32).unwrap();
+        assert_eq!(cached, 32, "both full pages shared");
+        assert_eq!(kv.seq_tokens(2), Some(64));
+        assert_eq!(kv.seq_pages(2), Some(4)); // 2 shared + 2 private
+        assert_eq!(kv.stats().hit_tokens, 32);
+        // The COW fork: block 2's cached copy did not exist, so no fork
+        // counted here; a third fork over the same prefix shares again.
+        let cached = kv.admit_prefix(3, 7, 40, 7).unwrap();
+        assert_eq!(cached, 32);
+        assert_eq!(kv.used_pages(), 2 + 2 + 1, "shared pages counted once");
+        kv.check_invariants();
+        kv.release(2).unwrap();
+        kv.release(3).unwrap();
+        assert_eq!(kv.used_pages(), 0);
+        kv.check_invariants();
+    }
+
+    #[test]
+    fn lookup_is_capped_one_token_short_of_the_prompt() {
+        let mut kv = PagedKv::new(8, 16);
+        kv.admit_prefix(1, 3, 32, 32).unwrap();
+        kv.release_cached(1).unwrap(); // blocks 0 and 1 cached
+        // A 32-token prompt fully covered by cache must still recompute
+        // its last token: only block 0 is shareable.
+        assert_eq!(kv.lookup_prefix(3, 32), 16);
+        assert_eq!(kv.lookup_prefix(3, 33), 32);
+        assert_eq!(kv.lookup_prefix(3, 16), 0);
+        assert_eq!(kv.lookup_prefix(99, 64), 0);
+        // The capped admission counts a COW fork: block 1 was cached but
+        // the tail must be recomputed privately.
+        let cached = kv.admit_prefix(2, 3, 32, 16).unwrap();
+        assert_eq!(cached, 16);
+        assert_eq!(kv.stats().cow_forks, 1);
+        kv.check_invariants();
+    }
+
+    #[test]
+    fn lru_eviction_reclaims_cached_pages_under_pressure() {
+        let mut kv = PagedKv::new(4, 16);
+        // Session 1 caches 2 pages, session 2 caches 1 (younger).
+        kv.admit_prefix(1, 1, 33, 33).unwrap(); // 3 pages, 2 full
+        kv.release_cached(1).unwrap();
+        kv.admit_prefix(2, 2, 17, 17).unwrap(); // 2 pages, 1 full
+        kv.release_cached(2).unwrap();
+        assert_eq!(kv.cached_pages(), 3);
+        assert_eq!(kv.free_pages(), 4);
+        // A 4-page private admission must evict all three cached pages.
+        kv.admit(3, 64).unwrap();
+        assert_eq!(kv.stats().evictions, 3);
+        assert_eq!(kv.lookup_prefix(1, 1000), 0, "session 1 evicted");
+        assert_eq!(kv.lookup_prefix(2, 1000), 0, "session 2 evicted");
+        kv.check_invariants();
+        kv.release(3).unwrap();
+        // LRU order: pin session 1's surviving... all evicted; re-prime and
+        // check the oldest goes first.
+        kv.admit_prefix(4, 1, 17, 17).unwrap();
+        kv.release_cached(4).unwrap(); // session 1 block 0 cached (older)
+        kv.admit_prefix(5, 2, 17, 17).unwrap();
+        kv.release_cached(5).unwrap(); // session 2 block 0 cached (younger)
+        kv.admit(6, 48).unwrap(); // needs 3 pages: 2 free + one eviction
+        assert_eq!(kv.lookup_prefix(1, 1000), 0, "older entry evicted first");
+        assert_eq!(kv.lookup_prefix(2, 17), 16, "younger entry survives");
+        kv.check_invariants();
+    }
+
+    #[test]
+    fn shared_pages_are_never_freed_while_referenced() {
+        let mut kv = PagedKv::new(4, 16);
+        kv.admit_prefix(1, 5, 17, 17).unwrap();
+        kv.release_cached(1).unwrap(); // block 0 cached
+        let cached = kv.admit_prefix(2, 5, 32, 16).unwrap();
+        assert_eq!(cached, 16);
+        // The shared page is pinned: filling the rest of the allocator
+        // cannot evict it.
+        kv.admit(3, 32).unwrap(); // takes the remaining 2 pages
+        assert_eq!(kv.admit(4, 16), Err(KvError::OutOfPages));
+        assert_eq!(kv.lookup_prefix(5, 17), 16, "pinned page still indexed");
+        kv.check_invariants();
+        // Releasing the sharer returns it to the cache, not the free list.
+        kv.release(2).unwrap();
+        assert_eq!(kv.cached_pages(), 1);
+        kv.admit(4, 32).unwrap(); // 2 pages: drains the free list + evicts it
+        assert_eq!(kv.lookup_prefix(5, 17), 0);
+        kv.check_invariants();
+    }
+
+    #[test]
+    fn probe_prefix_capacity_excludes_idle_hit_pages() {
+        // 8 pages: 4 cached hits of session 7 (idle), 3 pinned privately,
+        // 1 free. The naive admit_capacity counts the hits as allocatable
+        // (5 pages), but an admit_prefix for session 7 pins them first —
+        // only 1 page of suffix room actually exists.
+        let mut kv = PagedKv::new(8, 16);
+        kv.admit_prefix(1, 7, 64, 64).unwrap();
+        kv.release_cached(1).unwrap(); // 4 full pages cached
+        kv.admit(2, 48).unwrap(); // 3 private pages pinned
+        assert_eq!(kv.admit_capacity(), 5 * 16);
+        assert_eq!(kv.probe_prefix(7, 96), (64, 16));
+        // Unrelated sessions see the full pool (their hits are empty).
+        assert_eq!(kv.probe_prefix(99, 96), (0, 5 * 16));
+        // A chunk within the tight bound admits; the naive bound fails
+        // (this admission needs 2 pages with only 1 allocatable).
+        assert_eq!(kv.admit_prefix(3, 7, 96, 32), Err(KvError::OutOfPages));
+        let cached = kv.admit_prefix(3, 7, 96, 16).unwrap();
+        assert_eq!(cached, 64);
+        kv.check_invariants();
+    }
+
+    #[test]
+    fn solo_sessions_never_index_or_evict() {
+        // The zero-sharing fast path: solo completions promote nothing, so
+        // single-shot workloads keep plain free-list behavior (no eviction
+        // churn, clean stats).
+        let mut kv = PagedKv::new(8, 16);
+        let solo = (1 << 63) | 42u64;
+        assert!(is_solo(solo));
+        kv.admit_prefix(1, solo, 64, 64).unwrap();
+        kv.release_cached(1).unwrap();
+        assert_eq!(kv.cached_pages(), 0, "solo pages go straight to the free list");
+        assert_eq!(kv.stats().promotions, 0);
+        assert_eq!(kv.lookup_prefix(solo, 64), 0);
+        assert_eq!(kv.probe_prefix(solo, 64), (0, kv.admit_capacity()));
+        kv.admit(2, 8 * 16).unwrap(); // whole pool, zero evictions
+        assert_eq!(kv.stats().evictions, 0);
+        kv.check_invariants();
+    }
+
+    #[test]
+    fn preempt_release_does_not_promote() {
+        let mut kv = PagedKv::new(8, 16);
+        kv.admit_prefix(1, 9, 40, 40).unwrap();
+        kv.release(1).unwrap(); // preemption path
+        assert_eq!(kv.cached_pages(), 0);
+        assert_eq!(kv.stats().promotions, 0);
+        assert_eq!(kv.lookup_prefix(9, 40), 0);
+        assert_eq!(kv.free_pages(), 8);
+        kv.check_invariants();
+    }
+
+    #[test]
+    fn admit_prefix_is_atomic_under_pressure() {
+        let mut kv = PagedKv::new(3, 16);
+        kv.admit_prefix(1, 4, 17, 17).unwrap();
+        kv.release_cached(1).unwrap(); // block 0 cached, 3 allocatable
+        kv.admit(2, 33).unwrap(); // 3 pages: evicts the cached block too
+        // Hit would have been 0 pages now; a too-big chunk fails cleanly.
+        assert_eq!(kv.admit_prefix(3, 4, 64, 48), Err(KvError::OutOfPages));
+        assert_eq!(kv.free_pages(), 0);
+        assert_eq!(kv.active_seqs(), 1);
+        kv.check_invariants();
+    }
+
+    #[test]
+    fn property_shared_allocator_invariants_under_random_ops() {
+        check("refcounted paged kv invariants", 30, |g: &mut Gen| {
             let pages = g.usize(1, 64);
             let page_tokens = g.usize(1, 32);
             let mut kv = PagedKv::new(pages, page_tokens);
             let mut live: Vec<SeqId> = Vec::new();
+            let mut expect_tokens: std::collections::BTreeMap<SeqId, usize> =
+                std::collections::BTreeMap::new();
             let mut next_id = 0u64;
             for _ in 0..g.usize(10, 200) {
-                match g.usize(0, 3) {
+                match g.usize(0, 5) {
+                    // Shared-prefix admission from a small session pool
+                    // (collisions likely) or a unique session.
                     0 => {
-                        let toks = g.usize(1, 100);
-                        if kv.admit(next_id, toks).is_ok() {
+                        let session =
+                            if g.bool() { g.u64(0, 3) } else { (1 << 62) + next_id };
+                        let prompt = g.usize(1, 100);
+                        let chunk = g.usize(1, prompt);
+                        if let Ok(cached) = kv.admit_prefix(next_id, session, prompt, chunk) {
+                            assert!(cached < prompt, "at least one token recomputed");
+                            assert_eq!(cached % page_tokens, 0, "hits are page-aligned");
                             live.push(next_id);
+                            expect_tokens.insert(next_id, cached + chunk.max(1));
                         }
                         next_id += 1;
                     }
-                    1 if !live.is_empty() => {
-                        let id = live[g.usize(0, live.len() - 1)];
-                        let _ = kv.append_token(id);
+                    // Private admission (the handoff path).
+                    1 => {
+                        let toks = g.usize(1, 80);
+                        if kv.admit(next_id, toks).is_ok() {
+                            live.push(next_id);
+                            expect_tokens.insert(next_id, toks);
+                        }
+                        next_id += 1;
                     }
                     2 if !live.is_empty() => {
-                        let i = g.usize(0, live.len() - 1);
-                        let id = live.swap_remove(i);
-                        kv.release(id).unwrap();
+                        let id = live[g.usize(0, live.len() - 1)];
+                        if kv.append_token(id).is_ok() {
+                            *expect_tokens.get_mut(&id).unwrap() += 1;
+                        }
                     }
                     3 if !live.is_empty() => {
                         let id = live[g.usize(0, live.len() - 1)];
-                        let _ = kv.extend(id, g.usize(1, 50));
+                        let grow = g.usize(1, 50);
+                        if kv.extend(id, grow).is_ok() {
+                            *expect_tokens.get_mut(&id).unwrap() += grow;
+                        }
+                    }
+                    // Completion: promote into the cache.
+                    4 if !live.is_empty() => {
+                        let i = g.usize(0, live.len() - 1);
+                        let id = live.swap_remove(i);
+                        kv.release_cached(id).unwrap();
+                        expect_tokens.remove(&id);
+                    }
+                    // Preemption: free without promoting.
+                    5 if !live.is_empty() => {
+                        let i = g.usize(0, live.len() - 1);
+                        let id = live.swap_remove(i);
+                        kv.release(id).unwrap();
+                        expect_tokens.remove(&id);
                     }
                     _ => {}
                 }
+                // Token conservation: the allocator's view of every live
+                // sequence matches the operations applied to it.
+                for (id, toks) in &expect_tokens {
+                    assert_eq!(kv.seq_tokens(*id), Some(*toks), "seq {id} token drift");
+                }
+                let s = kv.stats();
+                assert!(s.hit_tokens <= s.prompt_tokens, "hits exceed admitted prompts");
                 kv.check_invariants();
             }
+            for id in live {
+                kv.release_cached(id).unwrap();
+            }
+            assert_eq!(kv.used_pages(), 0, "no pages leaked");
+            kv.check_invariants();
         });
     }
 }

@@ -96,6 +96,13 @@ impl FleetMetrics {
             routed: Vec::new(),
             preemptions: 0,
             rejected: 0,
+            cache_hit_rate: 0.0,
+            cached_tokens: 0,
+            migrations: 0,
+            migration_gb: 0.0,
+            drains: 0,
+            drain_secs: 0.0,
+            retunes: 0,
         }
     }
 }
@@ -153,6 +160,23 @@ pub struct FleetReport {
     /// Requests rejected up front because their lifetime KV footprint can
     /// never fit a replica (`completed + rejected == trace length`).
     pub rejected: u64,
+    /// Fleet-wide fraction of admitted prompt tokens served from the
+    /// shared-prefix KV caches (0 on workloads without sessions).
+    pub cache_hit_rate: f64,
+    /// Fleet-wide prompt tokens the prefix caches saved.
+    pub cached_tokens: u64,
+    /// In-flight sequences whose KV migrated off a draining replica.
+    pub migrations: u64,
+    /// Total KV bytes moved by drain migrations, in GB.
+    pub migration_gb: f64,
+    /// Replicas that entered draining (autoscaler or scripted).
+    pub drains: u64,
+    /// Total seconds from drain decision to retirement, summed over
+    /// drains that completed (migration shrinks this).
+    pub drain_secs: f64,
+    /// NVRAR tuned-table rebuilds triggered by pool resizes (the
+    /// fleet-level re-tune hook; 0 for non-NVRAR replicas).
+    pub retunes: u64,
 }
 
 #[cfg(test)]

@@ -15,17 +15,31 @@
 //! - [`router`] — pluggable placement policies (round-robin,
 //!   least-outstanding-tokens, KV-pressure-aware, session-affinity) with
 //!   per-replica KV-commitment bookkeeping, made **cost-aware** through
-//!   each replica's predicted step time.
+//!   each replica's predicted step time. Session affinity is
+//!   **prefix-cache-aware**: arrivals probe each replica's shared-prefix
+//!   KV cache ([`crate::engine::kv::PagedKv::lookup_prefix`]) and the
+//!   expected hit discounts that replica's predicted cost, so sessions
+//!   re-land where their KV lives — and measurably win TTFT on
+//!   multi-turn [`crate::trace::SessionSpec`] workloads.
 //! - **Disaggregated prefill/decode pools** — prefill replicas produce the
 //!   first token, then the prompt's KV pages migrate to a decode replica
 //!   as a real network transfer over [`crate::cluster::Topology`]'s
 //!   inter-node link (FIFO-serialized per target NIC).
+//! - **KV migration on drain** — a draining replica does not pin its
+//!   hardware until its decodes finish: its waiting work re-routes, its
+//!   partial prefills restart elsewhere, and its running decodes ship
+//!   their accumulated KV context to peers over the same α-β-priced
+//!   inter-node path the prefill→decode handoff uses, so the replica
+//!   retires as soon as its current step completes.
 //! - [`autoscaler`] — scales the decode/monolithic pool on p95 TTFT/TPOT
 //!   breaches and (disaggregated) the prefill pool symmetrically on p95
-//!   TTFT; drains replicas (no new work; retire when idle) when
-//!   comfortable.
+//!   TTFT; drains replicas when comfortable. Pool resizes trigger the
+//!   **NVRAR re-tune hook**: each surviving NVRAR replica rebuilds its
+//!   [`crate::collectives::tuner::TunedTable`] and re-applies the B_s ×
+//!   C_s entry for the new batch regime's all-reduce message size.
 //! - [`metrics`] — p50/p95/p99 TTFT, TPOT, SLO attainment and goodput via
-//!   [`crate::util::stats`].
+//!   [`crate::util::stats`], plus cache hit-rate, migration and re-tune
+//!   counters.
 //!
 //! Invariants enforced at the end of every run (and property-tested):
 //! every admitted request completes exactly once across the fleet, no
@@ -36,7 +50,10 @@ pub mod autoscaler;
 pub mod metrics;
 pub mod router;
 
-use crate::engine::batcher::{Batcher, PrefillChunk, Request, StepBatch};
+use crate::collectives::sim::CommConfig;
+use crate::collectives::tuner::TunedTable;
+use crate::collectives::AllReduceImpl;
+use crate::engine::batcher::{Batcher, MigratedSeq, PrefillChunk, Request, StepBatch};
 use crate::engine::kv::{KvError, PagedKv};
 use crate::serving::ServeConfig;
 use crate::simnet::{EventQueue, Server};
@@ -70,14 +87,21 @@ pub struct FleetConfig {
     /// autoscaler provisions clones of `prefill[0]`.
     pub prefill: Vec<ServeConfig>,
     /// Routing policy for the monolithic pool (or, when disaggregated,
-    /// for prefill→decode placement; prefill placement is always
-    /// least-outstanding).
+    /// for prefill→decode placement; prefill placement is
+    /// least-outstanding, except under session affinity where the prefill
+    /// pool is routed prefix-cache-aware too — that pool is where the
+    /// cache pays).
     pub policy: RoutePolicy,
     pub slo: SloTargets,
     /// SLO-driven scaling; `None` = fixed fleet.
     pub autoscale: Option<AutoscaleConfig>,
-    /// Session key space for [`RoutePolicy::SessionAffinity`].
-    pub sessions: u64,
+    /// Migrate a draining replica's in-flight KV to peers instead of
+    /// letting it decode to idle in place.
+    pub migrate_on_drain: bool,
+    /// Scripted drains `(time, replica index)` — exercises the drain /
+    /// migration path deterministically without an autoscaler. A drain of
+    /// the last accepting replica of a pool is skipped.
+    pub drain_at: Vec<(f64, usize)>,
 }
 
 impl FleetConfig {
@@ -94,7 +118,8 @@ impl FleetConfig {
             policy: RoutePolicy::LeastOutstanding,
             slo: SloTargets::default(),
             autoscale: None,
-            sessions: 64,
+            migrate_on_drain: true,
+            drain_at: Vec::new(),
         }
     }
 
@@ -124,6 +149,18 @@ impl FleetConfig {
 
     pub fn with_autoscale(mut self, cfg: AutoscaleConfig) -> Self {
         self.autoscale = Some(cfg);
+        self
+    }
+
+    /// Enable/disable KV migration on drain (on by default).
+    pub fn with_migration(mut self, on: bool) -> Self {
+        self.migrate_on_drain = on;
+        self
+    }
+
+    /// Schedule a scripted drain of replica `replica` at time `t`.
+    pub fn with_drain_at(mut self, t: f64, replica: usize) -> Self {
+        self.drain_at.push((t, replica));
         self
     }
 
@@ -162,13 +199,9 @@ pub fn run_fleet(cfg: &FleetConfig, reqs: &[Request]) -> FleetReport {
     }
     for (i, r) in reqs.iter().enumerate() {
         // The simulation indexes per-request state by id, so ids must be
-        // the dense 0..n the trace generator produces.
+        // the dense 0..n the trace generators produce.
         assert_eq!(r.id, i as u64, "request ids must be dense 0..n in arrival order");
     }
-    // No per-prompt step-budget or KV asserts here any more: chunked
-    // prefill admits any prompt length, and a request whose lifetime KV
-    // footprint cannot fit a replica is *rejected* with a counter
-    // (`FleetReport::rejected`) instead of panicking on the whole trace.
     Sim::new(cfg, reqs).run()
 }
 
@@ -177,6 +210,8 @@ pub fn run_fleet(cfg: &FleetConfig, reqs: &[Request]) -> FleetReport {
 /// decoded tokens); a prefill-only replica just the prompt. Routing can
 /// place a request on *any* replica of a pool, so feasibility is required
 /// against all of them (the autoscaler only clones existing templates).
+/// Conservative under prefix sharing: a cached prefix would shrink the
+/// real footprint, but cache contents are not admission guarantees.
 fn feasible(cfg: &FleetConfig, page_tokens: usize, r: &Request) -> bool {
     let lifetime = (r.prompt_len + r.decode_len.saturating_sub(1)).max(1).div_ceil(page_tokens);
     let prompt = r.prompt_len.max(1).div_ceil(page_tokens);
@@ -191,9 +226,14 @@ fn feasible(cfg: &FleetConfig, page_tokens: usize, r: &Request) -> bool {
 enum Ev {
     Arrival(usize),
     StepDone(usize),
-    Handoff { replica: usize, req: usize },
+    /// KV landed at `replica` — a prefill→decode handoff or a drain
+    /// migration. `req` is the sequence to admit via the prefilled path
+    /// (`prompt_len` = context tokens held in KV, `decode_len - 1` =
+    /// tokens still to decode).
+    Handoff { replica: usize, req: Request },
     ScaleTick,
     ReplicaUp(PoolKind),
+    DrainAt(usize),
 }
 
 /// Load the router has committed for one request against one replica.
@@ -208,6 +248,9 @@ struct Replica {
     kind: PoolKind,
     /// This replica's own engine config (spec + cost model + KV sizing).
     cfg: ServeConfig,
+    /// The comm config the replica was provisioned with — the base the
+    /// NVRAR re-tune hook re-applies tuned parameters onto.
+    base_comm: CommConfig,
     /// Predicted decode-step seconds (probe through the cost model) — the
     /// router's cost-awareness signal.
     pred_step: f64,
@@ -219,10 +262,12 @@ struct Replica {
     stepping: bool,
     current: Option<StepBatch>,
     draining: bool,
+    /// When the drain decision was taken (drain-duration metric).
+    drain_start: Option<f64>,
     retired: bool,
-    /// Handed-off requests waiting for concurrency/KV admission.
-    pending: VecDeque<usize>,
-    /// Ingress NIC serializing KV handoffs into this replica.
+    /// Handed-off/migrated sequences waiting for concurrency/KV admission.
+    pending: VecDeque<Request>,
+    /// Ingress NIC serializing KV transfers into this replica.
     ingress: Server,
 }
 
@@ -256,8 +301,7 @@ struct Sim<'a> {
     metrics: FleetMetrics,
     first_token: Vec<f64>,
     /// Tokens actually produced per request (prefill's first token + one
-    /// per decode-step participation) — differs from the nominal
-    /// `decode_len` only when KV exhaustion truncated a decode.
+    /// per decode-step participation).
     produced: Vec<u32>,
     done: Vec<bool>,
     commit_prefill: Vec<Option<Commit>>,
@@ -267,6 +311,12 @@ struct Sim<'a> {
     peak_prefill: usize,
     handoffs: u64,
     handoff_bytes: u64,
+    /// In-flight sequences shipped off draining replicas.
+    migrations: u64,
+    migration_bytes: u64,
+    drains: u64,
+    drain_secs: f64,
+    retunes: u64,
     /// Requests dropped up front because their KV footprint can never fit.
     rejected: u64,
     /// Fleet-wide preemption count at the last autoscaler tick.
@@ -294,6 +344,11 @@ impl<'a> Sim<'a> {
             peak_prefill: 0,
             handoffs: 0,
             handoff_bytes: 0,
+            migrations: 0,
+            migration_bytes: 0,
+            drains: 0,
+            drain_secs: 0.0,
+            retunes: 0,
             rejected: 0,
             preempt_snapshot: 0,
         };
@@ -318,6 +373,9 @@ impl<'a> Sim<'a> {
         if let Some(a) = &sim.autoscaler {
             sim.q.push(a.cfg.tick, Ev::ScaleTick);
         }
+        for &(t, r) in &cfg.drain_at {
+            sim.q.push(t, Ev::DrainAt(r));
+        }
         sim
     }
 
@@ -329,6 +387,7 @@ impl<'a> Sim<'a> {
                 Ev::Handoff { replica, req } => self.on_handoff(replica, req),
                 Ev::ScaleTick => self.on_scale_tick(),
                 Ev::ReplicaUp(kind) => self.on_replica_up(kind),
+                Ev::DrainAt(r) => self.on_drain_at(r),
             }
         }
         // Conservation + allocator cleanliness: the fleet's contract —
@@ -356,11 +415,22 @@ impl<'a> Sim<'a> {
         report.peak_prefill = self.peak_prefill;
         report.handoffs = self.handoffs;
         report.handoff_gb = self.handoff_bytes as f64 / (1u64 << 30) as f64;
+        report.migrations = self.migrations;
+        report.migration_gb = self.migration_bytes as f64 / (1u64 << 30) as f64;
+        report.drains = self.drains;
+        report.drain_secs = self.drain_secs;
+        report.retunes = self.retunes;
         report.max_committed_pages = self.router.max_committed_pages;
         report.over_capacity_routes = self.router.over_capacity_routes;
         report.routed = self.router.routed.clone();
         report.rejected = self.rejected;
         report.preemptions = self.replicas.iter().map(|r| r.batcher.preemptions()).sum();
+        let (hit, prompt) = self.replicas.iter().fold((0u64, 0u64), |(h, p), r| {
+            let s = r.kv.stats();
+            (h + s.hit_tokens, p + s.prompt_tokens)
+        });
+        report.cached_tokens = hit;
+        report.cache_hit_rate = if prompt == 0 { 0.0 } else { hit as f64 / prompt as f64 };
         report
     }
 
@@ -375,34 +445,82 @@ impl<'a> Sim<'a> {
         prompt.div_ceil(chunk) as f64 * rep.pred_chunk + decode as f64 * rep.pred_step
     }
 
+    /// Expected cached-prefix tokens per candidate replica — the router's
+    /// prefix-affinity signal. Only the session-affinity policy probes the
+    /// allocators; every other policy stays content-blind (and with solo
+    /// sessions the probe returns zeros anyway).
+    fn hit_views(&self, views: &[ReplicaView], req: &Request) -> Vec<usize> {
+        if self.cfg.policy != RoutePolicy::SessionAffinity {
+            return vec![0; views.len()];
+        }
+        views
+            .iter()
+            .map(|v| self.replicas[v.id].kv.lookup_prefix(req.session, req.prompt_len))
+            .collect()
+    }
+
     fn on_arrival(&mut self, i: usize) {
         let req = self.reqs[i];
-        let session = self.session_of(req.id);
         if self.cfg.disaggregated_mode() {
-            let views = self.views(PoolKind::Prefill);
-            let costs: Vec<f64> =
-                views.iter().map(|v| self.leg_cost(v.id, req.prompt_len, 0)).collect();
-            let pages = self.pages_for(req.prompt_len);
-            let (target, secs) =
-                self.router.route(RoutePolicy::LeastOutstanding, &views, session, pages, &costs);
-            self.commit_prefill[i] = Some(Commit { replica: target, pages, secs });
             // The prefill replica's product is exactly the first token:
             // submit with a single-token decode so the sequence retires at
             // last-chunk completion and its KV is freed for the handoff.
-            self.replicas[target].batcher.submit(Request { decode_len: 1, ..req });
-            self.try_start(target);
+            self.route_queued(PoolKind::Prefill, Request { decode_len: 1, ..req });
         } else {
-            let views = self.views(PoolKind::Monolithic);
-            let costs: Vec<f64> = views
-                .iter()
-                .map(|v| self.leg_cost(v.id, req.prompt_len, req.decode_len))
-                .collect();
-            let pages = self.pages_for(req.prompt_len + req.decode_len);
-            let (target, secs) = self.router.route(self.cfg.policy, &views, session, pages, &costs);
-            self.commit_main[i] = Some(Commit { replica: target, pages, secs });
-            self.replicas[target].batcher.submit(req);
-            self.try_start(target);
+            self.route_queued(PoolKind::Monolithic, req);
         }
+    }
+
+    /// Place (or re-place, after a drain) a request that holds no KV yet:
+    /// prefill legs commit against `commit_prefill`, full-lifecycle legs
+    /// against `commit_main`. Session-affinity placements are discounted
+    /// by each candidate's expected prefix-cache hit.
+    fn route_queued(&mut self, kind: PoolKind, req: Request) {
+        let i = req.id as usize;
+        let views = self.views(kind);
+        let hits = self.hit_views(&views, &req);
+        let (pages, costs, policy): (usize, Vec<f64>, RoutePolicy) = match kind {
+            PoolKind::Prefill => (
+                self.pages_for(req.prompt_len),
+                views
+                    .iter()
+                    .zip(&hits)
+                    .map(|(v, &h)| self.leg_cost(v.id, req.prompt_len - h, 0))
+                    .collect(),
+                // Prefill placement is least-outstanding, except under
+                // session affinity: the prefill pool is where the prefix
+                // cache actually pays.
+                if self.cfg.policy == RoutePolicy::SessionAffinity {
+                    RoutePolicy::SessionAffinity
+                } else {
+                    RoutePolicy::LeastOutstanding
+                },
+            ),
+            PoolKind::Monolithic | PoolKind::Decode => (
+                self.pages_for(req.prompt_len + req.decode_len),
+                views
+                    .iter()
+                    .zip(&hits)
+                    .map(|(v, &h)| self.leg_cost(v.id, req.prompt_len - h, req.decode_len))
+                    .collect(),
+                self.cfg.policy,
+            ),
+        };
+        let old = match kind {
+            PoolKind::Prefill => self.commit_prefill[i].take(),
+            _ => self.commit_main[i].take(),
+        };
+        if let Some(c) = old {
+            self.router.complete(c.replica, c.pages, c.secs);
+        }
+        let (target, secs) = self.router.route(policy, &views, req.session, pages, &costs, &hits);
+        let commit = Some(Commit { replica: target, pages, secs });
+        match kind {
+            PoolKind::Prefill => self.commit_prefill[i] = commit,
+            _ => self.commit_main[i] = commit,
+        }
+        self.replicas[target].batcher.submit(req);
+        self.try_start(target);
     }
 
     fn on_step_done(&mut self, r: usize, now: f64) {
@@ -459,8 +577,15 @@ impl<'a> Sim<'a> {
                 }
             }
         }
-        self.try_start(r);
-        self.maybe_retire(r);
+        if self.replicas[r].draining && self.cfg.migrate_on_drain {
+            // The step that was in flight at drain time has completed:
+            // everything left (including rows it just decoded) migrates
+            // now instead of starting another step.
+            self.try_migrate(r, now);
+        } else {
+            self.try_start(r);
+        }
+        self.maybe_retire(r, now);
     }
 
     /// Ship request `i`'s prompt KV from its prefill replica to a decode
@@ -471,34 +596,120 @@ impl<'a> Sim<'a> {
         let views = self.views(PoolKind::Decode);
         let costs: Vec<f64> =
             views.iter().map(|v| self.leg_cost(v.id, 0, req.decode_len)).collect();
+        let no_hits = vec![0usize; views.len()];
         let pages = self.pages_for(req.prompt_len + req.decode_len);
         let (target, secs) =
-            self.router.route(self.cfg.policy, &views, self.session_of(req.id), pages, &costs);
+            self.router.route(self.cfg.policy, &views, req.session, pages, &costs, &no_hits);
         self.commit_main[i] = Some(Commit { replica: target, pages, secs });
-        let bytes = self.kv_handoff_bytes(req.prompt_len);
+        let bytes = self.kv_context_bytes(req.prompt_len);
         let link = self.cfg.replicas[0].topo.inter;
         let (_start, end) = self.replicas[target].ingress.book(now, bytes as f64 / link.beta);
         self.handoffs += 1;
         self.handoff_bytes += bytes;
-        self.q.push(end + link.alpha, Ev::Handoff { replica: target, req: i });
+        self.q.push(end + link.alpha, Ev::Handoff { replica: target, req });
     }
 
-    fn on_handoff(&mut self, replica: usize, req: usize) {
-        // The transfer raced a scale-down: if the target retired while the
-        // KV was in flight, release the stale commitment and re-ship to a
-        // live decode replica (the pool always keeps ≥1 accepting).
-        if self.replicas[replica].retired {
-            if let Some(c) = self.commit_main[req].take() {
-                self.router.complete(c.replica, c.pages, c.secs);
-            }
+    /// Price and ship one migrating sequence's KV context to a peer of
+    /// `pool`: the router commitment moves to the target, the bytes flow
+    /// α-β over the inter-node link (FIFO per target NIC — the same path
+    /// a prefill→decode handoff takes), and the sequence resumes through
+    /// the prefilled-admission path when the transfer lands.
+    fn ship_migration(&mut self, pool: PoolKind, m: MigratedSeq, now: f64) {
+        let i = m.id as usize;
+        if let Some(c) = self.commit_main[i].take() {
+            self.router.complete(c.replica, c.pages, c.secs);
+        }
+        let views = self.views(pool);
+        let costs: Vec<f64> =
+            views.iter().map(|v| self.leg_cost(v.id, 0, m.remaining_decode)).collect();
+        let no_hits = vec![0usize; views.len()];
+        let pages = self.pages_for(m.ctx + m.remaining_decode);
+        let (target, secs) =
+            self.router.route(self.cfg.policy, &views, m.session, pages, &costs, &no_hits);
+        self.commit_main[i] = Some(Commit { replica: target, pages, secs });
+        let bytes = self.kv_context_bytes(m.ctx);
+        let link = self.cfg.replicas[0].topo.inter;
+        let (_start, end) = self.replicas[target].ingress.book(now, bytes as f64 / link.beta);
+        self.migrations += 1;
+        self.migration_bytes += bytes;
+        let synthetic = Request {
+            id: m.id,
+            prompt_len: m.ctx,
+            decode_len: m.remaining_decode + 1,
+            arrival: self.reqs[i].arrival,
+            session: m.session,
+        };
+        self.q.push(end + link.alpha, Ev::Handoff { replica: target, req: synthetic });
+    }
+
+    /// Move a draining replica's work to peers. Waiting and restarted
+    /// prompts re-route (nothing to ship); running decodes and parked
+    /// handoffs ship their KV context. Defers while a step is in flight —
+    /// `on_step_done` calls back.
+    fn try_migrate(&mut self, victim: usize, now: f64) {
+        if self.replicas[victim].stepping {
+            return;
+        }
+        let kind = self.replicas[victim].kind;
+        let parked: Vec<Request> =
+            std::mem::take(&mut self.replicas[victim].pending).into_iter().collect();
+        let work = {
+            let rep = &mut self.replicas[victim];
+            rep.batcher.drain_for_migration(&mut rep.kv)
+        };
+        for req in work.waiting.into_iter().chain(work.restarts) {
+            self.route_queued(kind, req);
+        }
+        for m in work.migrations {
+            self.ship_migration(kind, m, now);
+        }
+        for req in parked {
+            // Already-shipped KV that was never admitted: ship it again.
+            let m = MigratedSeq {
+                id: req.id,
+                ctx: req.prompt_len,
+                remaining_decode: req.decode_len.saturating_sub(1),
+                session: req.session,
+            };
+            self.ship_migration(kind, m, now);
+        }
+    }
+
+    fn on_handoff(&mut self, replica: usize, req: Request) {
+        // The transfer raced a scale-down: if the target retired (or is
+        // itself drain-migrating) while the KV was in flight, re-ship to
+        // a live peer (the pool always keeps ≥1 accepting).
+        let reship = {
+            let r = &self.replicas[replica];
+            r.retired || (r.draining && self.cfg.migrate_on_drain)
+        };
+        if reship {
             let now = self.q.now();
-            self.start_handoff(req, now);
+            if self.cfg.migrate_on_drain {
+                let kind = self.replicas[replica].kind;
+                let m = MigratedSeq {
+                    id: req.id,
+                    ctx: req.prompt_len,
+                    remaining_decode: req.decode_len.saturating_sub(1),
+                    session: req.session,
+                };
+                self.ship_migration(kind, m, now);
+            } else {
+                // Migration disabled: the target retired while the KV was
+                // in flight. Release the stale commitment and re-ship the
+                // original handoff — counted as handoff traffic, so
+                // `migrations` stays 0 when the feature is off.
+                if let Some(c) = self.commit_main[req.id as usize].take() {
+                    self.router.complete(c.replica, c.pages, c.secs);
+                }
+                self.start_handoff(req.id as usize, now);
+            }
             return;
         }
         let rep = &mut self.replicas[replica];
         let cap = rep.cfg.max_concurrency;
         if rep.batcher.running_len() < cap {
-            match rep.batcher.submit_prefilled(self.reqs[req], &mut rep.kv) {
+            match rep.batcher.submit_prefilled(req, &mut rep.kv) {
                 Ok(()) => {}
                 Err(KvError::OutOfPages) => rep.pending.push_back(req),
                 Err(e) => panic!("handoff admission failed: {e:?}"),
@@ -561,18 +772,55 @@ impl<'a> Sim<'a> {
             }
             Decision::Down => {
                 // Drain the highest-indexed active replica of this pool:
-                // no new routes, retire once its in-flight work drains.
+                // no new routes; with migration, its work leaves now.
                 if let Some(victim) = (0..self.replicas.len()).rev().find(|&i| {
                     let r = &self.replicas[i];
                     r.kind == kind && !r.retired && !r.draining
                 }) {
-                    self.replicas[victim].draining = true;
-                    self.router.evict_replica_sessions(victim);
-                    self.maybe_retire(victim);
+                    self.drain_replica(victim);
                 }
             }
             Decision::Hold => {}
         }
+    }
+
+    /// Start draining `victim`: no new routes; with migration enabled its
+    /// queued and in-flight work moves to peers immediately (so it retires
+    /// as soon as its current step completes), otherwise it serves its
+    /// in-flight sequences to completion in place. Either way the pool
+    /// shrank for the survivors: re-tune their NVRAR tables.
+    fn drain_replica(&mut self, victim: usize) {
+        if self.replicas[victim].retired || self.replicas[victim].draining {
+            return;
+        }
+        let now = self.q.now();
+        let kind = self.replicas[victim].kind;
+        self.replicas[victim].draining = true;
+        self.replicas[victim].drain_start = Some(now);
+        self.drains += 1;
+        self.router.evict_replica_sessions(victim);
+        self.retune_pool(kind);
+        if self.cfg.migrate_on_drain {
+            self.try_migrate(victim, now);
+        }
+        self.maybe_retire(victim, now);
+    }
+
+    fn on_drain_at(&mut self, r: usize) {
+        if r >= self.replicas.len() {
+            return;
+        }
+        let kind = self.replicas[r].kind;
+        let peers = self
+            .replicas
+            .iter()
+            .enumerate()
+            .filter(|(i, p)| *i != r && p.kind == kind && !p.retired && !p.draining)
+            .count();
+        if peers == 0 {
+            return; // never drain the last accepting replica of a pool
+        }
+        self.drain_replica(r);
     }
 
     fn on_replica_up(&mut self, kind: PoolKind) {
@@ -590,6 +838,7 @@ impl<'a> Sim<'a> {
             _ => self.cfg.replicas[0].clone(),
         };
         self.push_replica(kind, template);
+        self.retune_pool(kind);
     }
 
     // -- mechanics -----------------------------------------------------
@@ -597,16 +846,19 @@ impl<'a> Sim<'a> {
     fn push_replica(&mut self, kind: PoolKind, cfg: ServeConfig) {
         let pred_step = predict_step(&cfg);
         let pred_chunk = predict_chunk(&cfg);
+        let base_comm = cfg.comm;
         self.replicas.push(Replica {
             kind,
             kv: PagedKv::new(cfg.kv_pages, cfg.kv_page_tokens),
             batcher: cfg.build_batcher(),
             cfg,
+            base_comm,
             pred_step,
             pred_chunk,
             stepping: false,
             current: None,
             draining: false,
+            drain_start: None,
             retired: false,
             pending: VecDeque::new(),
             ingress: Server::new(),
@@ -620,6 +872,53 @@ impl<'a> Sim<'a> {
             .filter(|r| r.kind == PoolKind::Prefill && !r.retired)
             .count();
         self.peak_prefill = self.peak_prefill.max(live_prefill);
+    }
+
+    /// Fleet-level NVRAR re-tune hook (ROADMAP): when a pool resizes, each
+    /// surviving NVRAR replica's share of the load — and so its decode
+    /// batch, and so its all-reduce message size — changes regime. Rebuild
+    /// the tuned B_s × C_s table against the replica's TP-group topology
+    /// and re-apply the entry for the new regime's message size; the
+    /// routing probes refresh with it.
+    fn retune_pool(&mut self, kind: PoolKind) {
+        let members: Vec<usize> = self
+            .replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| {
+                r.kind == kind
+                    && !r.retired
+                    && !r.draining
+                    && r.cfg.cost.ar() == AllReduceImpl::Nvrar
+            })
+            .map(|(i, _)| i)
+            .collect();
+        if members.is_empty() {
+            return;
+        }
+        let active = members.len();
+        let load: usize = self
+            .replicas
+            .iter()
+            .filter(|r| r.kind == kind && !r.retired)
+            .map(|r| {
+                r.batcher.running_len()
+                    + r.batcher.prefilling_len()
+                    + r.batcher.waiting_len()
+                    + r.pending.len()
+            })
+            .sum();
+        for i in members {
+            let rep = &mut self.replicas[i];
+            let rows = (load / active).clamp(1, rep.cfg.max_concurrency);
+            let msg = (rows * rep.cfg.model.d_model * rep.cfg.model.dtype_bytes) as u64;
+            let tp_topo = rep.cfg.cost.spec().tp_topology(&rep.cfg.topo);
+            let table = TunedTable::build(&tp_topo, &rep.base_comm);
+            rep.cfg.comm = table.apply(&rep.base_comm, msg);
+            rep.pred_step = predict_step(&rep.cfg);
+            rep.pred_chunk = predict_chunk(&rep.cfg);
+            self.retunes += 1;
+        }
     }
 
     /// Admit pending handoffs, then launch the next engine step if idle.
@@ -647,12 +946,11 @@ impl<'a> Sim<'a> {
     }
 
     fn try_admit_pending(&mut self, r: usize) {
-        let reqs = self.reqs;
         let rep = &mut self.replicas[r];
         let cap = rep.cfg.max_concurrency;
-        while let Some(&i) = rep.pending.front() {
+        while let Some(&req) = rep.pending.front() {
             if rep.batcher.running_len() >= cap
-                || rep.batcher.submit_prefilled(reqs[i], &mut rep.kv).is_err()
+                || rep.batcher.submit_prefilled(req, &mut rep.kv).is_err()
             {
                 break;
             }
@@ -660,7 +958,7 @@ impl<'a> Sim<'a> {
         }
     }
 
-    fn maybe_retire(&mut self, r: usize) {
+    fn maybe_retire(&mut self, r: usize, now: f64) {
         let rep = &mut self.replicas[r];
         if rep.draining
             && !rep.retired
@@ -669,6 +967,9 @@ impl<'a> Sim<'a> {
             && rep.pending.is_empty()
         {
             rep.retired = true;
+            if let Some(t0) = rep.drain_start.take() {
+                self.drain_secs += now - t0;
+            }
         }
     }
 
@@ -708,16 +1009,13 @@ impl<'a> Sim<'a> {
         tokens.max(1).div_ceil(self.page_tokens)
     }
 
-    /// KV bytes that migrate on a prefill→decode handoff: the full prompt
+    /// KV bytes that migrate when `tokens` of context move between
+    /// replicas (prefill→decode handoff, or drain migration): the full
     /// cache across all layers (the TP shards move in parallel over the
     /// per-node NICs; the aggregate bytes are what the fabric carries).
-    fn kv_handoff_bytes(&self, prompt_len: usize) -> u64 {
+    fn kv_context_bytes(&self, tokens: usize) -> u64 {
         let model = &self.cfg.replicas[0].model;
-        (prompt_len * model.n_layers) as u64 * model.kv_bytes_per_token_layer()
-    }
-
-    fn session_of(&self, id: u64) -> u64 {
-        (id.wrapping_mul(0x9E3779B97F4A7C15) >> 33) % self.cfg.sessions.max(1)
+        (tokens * model.n_layers) as u64 * model.kv_bytes_per_token_layer()
     }
 }
 
@@ -727,7 +1025,7 @@ mod tests {
     use crate::collectives::AllReduceImpl;
     use crate::parallel::ParallelSpec;
     use crate::serving::fig9_config;
-    use crate::trace::{LenDist, RateShape, TraceSpec};
+    use crate::trace::{LenDist, RateShape, SessionSpec, TraceSpec};
     use crate::util::prop::{check, Gen};
 
     fn small_spec(n: usize, rate: f64, seed: u64) -> TraceSpec {
@@ -857,9 +1155,33 @@ mod tests {
             if prefill > 0 {
                 cfg = cfg.disaggregated(prefill);
             }
-            cfg.sessions = g.u64(1, 16);
+            // Random scripted drains stress the migration path; the guard
+            // keeps the last replica of a pool serving.
+            if g.bool() {
+                cfg = cfg.with_drain_at(g.f64(0.5, 10.0), g.usize(0, replicas - 1));
+            }
+            cfg.migrate_on_drain = g.bool();
             let rep = run_fleet(&cfg, &reqs);
             assert_eq!(rep.completed, n);
+        });
+    }
+
+    #[test]
+    fn property_fleet_conserves_session_traces() {
+        check("fleet conserves session traces", 8, |g: &mut Gen| {
+            let mut sspec = SessionSpec::standard();
+            sspec.sessions = g.usize(3, 12);
+            sspec.turns = g.usize(2, 5);
+            sspec.think = g.f64(1.0, 20.0);
+            sspec.seed = g.u64(1, 1 << 20);
+            sspec.first_prompt = LenDist { median: 300.0, sigma: 0.5, min: 32, max: 1024 };
+            let reqs = sspec.generate();
+            let n = reqs.len();
+            let policy = *g.pick(&RoutePolicy::all());
+            let cfg = FleetConfig::new(base_cfg(32), g.usize(2, 4)).with_policy(policy);
+            let rep = run_fleet(&cfg, &reqs);
+            assert_eq!(rep.completed, n, "{policy:?}");
+            assert!(rep.cache_hit_rate >= 0.0 && rep.cache_hit_rate <= 1.0);
         });
     }
 
@@ -934,12 +1256,94 @@ mod tests {
     }
 
     #[test]
-    fn session_affinity_pins_sessions() {
-        let reqs = small_spec(40, 6.0, 13).generate();
-        let mut cfg =
-            FleetConfig::new(base_cfg(32), 4).with_policy(RoutePolicy::SessionAffinity);
-        cfg.sessions = 4;
+    fn session_affinity_concentrates_cache_hits() {
+        // Multi-turn sessions across a 4-replica fleet: affinity routing
+        // lands turns where their prefix cache lives, so its fleet-wide
+        // hit rate beats content-blind least-outstanding's.
+        let mut sspec = SessionSpec::standard();
+        sspec.sessions = 40;
+        sspec.turns = 4;
+        sspec.rate = 4.0; // enough overlap that blind routing scatters turns
+        let reqs = sspec.generate();
+        let n = reqs.len();
+        let lo = run_fleet(
+            &FleetConfig::new(base_cfg(32), 4).with_policy(RoutePolicy::LeastOutstanding),
+            &reqs,
+        );
+        let sa = run_fleet(
+            &FleetConfig::new(base_cfg(32), 4).with_policy(RoutePolicy::SessionAffinity),
+            &reqs,
+        );
+        assert_eq!((lo.completed, sa.completed), (n, n));
+        assert!(sa.cache_hit_rate > 0.0, "affinity must produce hits");
+        assert!(
+            sa.cache_hit_rate > lo.cache_hit_rate,
+            "affinity hit rate {} must beat least-outstanding's {}",
+            sa.cache_hit_rate,
+            lo.cache_hit_rate
+        );
+        assert!(sa.cached_tokens > 0);
+    }
+
+    #[test]
+    fn scripted_drain_migrates_and_retires_early() {
+        // Long decodes in flight when replica 2 drains: with migration the
+        // replica retires after its current step; without, it must stream
+        // every remaining token first.
+        let mut spec = small_spec(40, 6.0, 41);
+        spec.output = LenDist { median: 400.0, sigma: 0.2, min: 128, max: 800 };
+        let reqs = spec.generate();
+        let base = FleetConfig::new(base_cfg(16), 3).with_drain_at(5.0, 2);
+        let with = run_fleet(&base.clone().with_migration(true), &reqs);
+        let without = run_fleet(&base.with_migration(false), &reqs);
+        assert_eq!((with.completed, without.completed), (40, 40));
+        assert_eq!((with.drains, without.drains), (1, 1));
+        assert!(with.migrations > 0, "in-flight decodes must migrate");
+        assert!(with.migration_gb > 0.0);
+        assert_eq!(without.migrations, 0);
+        assert!(
+            with.drain_secs < without.drain_secs,
+            "migration must retire the replica earlier: {} vs {}",
+            with.drain_secs,
+            without.drain_secs
+        );
+    }
+
+    #[test]
+    fn nvrar_pool_resize_retunes_tables() {
+        // An autoscaling NVRAR fleet: every pool resize re-tunes the
+        // surviving replicas' B_s × C_s tables.
+        let mut spec = small_spec(100, 3.0, 29);
+        spec.shape = RateShape::Ramp { from: 0.3, to: 5.0 };
+        let reqs = spec.generate();
+        let mut base = fig9_config(
+            ParallelSpec::tp(16),
+            AllReduceImpl::Nvrar,
+            8,
+            "perlmutter",
+            16,
+        );
+        base.kv_pages = 4096;
+        let auto = AutoscaleConfig {
+            tick: 2.0,
+            provision_delay: 4.0,
+            min_replicas: 1,
+            max_replicas: 6,
+            window: 32,
+            down_frac: 0.25,
+        };
+        let cfg = FleetConfig::new(base, 1)
+            .with_slo(SloTargets { ttft: 0.5, tpot: 0.2 })
+            .with_autoscale(auto);
         let rep = run_fleet(&cfg, &reqs);
-        assert_eq!(rep.completed, 40);
+        assert_eq!(rep.completed, 100);
+        assert!(rep.scale_ups > 0);
+        assert!(rep.retunes > 0, "pool resizes must re-tune NVRAR tables");
+        // An NCCL fleet on the same trace never re-tunes.
+        let nccl = FleetConfig::new(base_cfg(8), 1)
+            .with_slo(SloTargets { ttft: 0.5, tpot: 0.2 })
+            .with_autoscale(auto);
+        let rep = run_fleet(&nccl, &reqs);
+        assert_eq!(rep.retunes, 0);
     }
 }

@@ -36,8 +36,14 @@ pub enum RoutePolicy {
     LeastOutstanding,
     /// Lowest committed-KV-pages fraction; never knowingly over-commits.
     KvPressure,
-    /// Sticky session→replica mapping (prefix-cache affinity); falls back
-    /// to least-outstanding for new or orphaned sessions.
+    /// Prefix-cache-aware affinity: the caller probes each replica's
+    /// expected cached-prefix hit for the session (`hits`) and discounts
+    /// the per-replica costs accordingly, so placement greedily minimizes
+    /// *predicted completion seconds including the cache win* — the
+    /// session re-lands where its KV lives unless that replica is
+    /// overloaded. With no cache signal anywhere (first turn, evicted),
+    /// falls back to a sticky session→replica pin so later turns still
+    /// co-locate.
     SessionAffinity,
 }
 
@@ -138,8 +144,10 @@ impl Router {
     /// `pages` and `costs[chosen]` predicted seconds of load against the
     /// chosen replica until [`Router::complete`] releases them. `costs`
     /// is aligned with `views`: the request's predicted service seconds
-    /// on each candidate. Panics if no view is accepting (the fleet
-    /// always keeps ≥1 accepting replica per pool).
+    /// on each candidate (already discounted by `hits` — the expected
+    /// cached-prefix tokens per candidate — for the session-affinity
+    /// policy; zeros elsewhere). Panics if no view is accepting (the
+    /// fleet always keeps ≥1 accepting replica per pool).
     ///
     /// Returns `(replica id, committed seconds)`.
     pub fn route(
@@ -149,8 +157,10 @@ impl Router {
         session: u64,
         pages: usize,
         costs: &[f64],
+        hits: &[usize],
     ) -> (usize, f64) {
         assert_eq!(views.len(), costs.len(), "one cost per candidate view");
+        assert_eq!(views.len(), hits.len(), "one hit estimate per candidate view");
         let accepting: Vec<usize> =
             (0..views.len()).filter(|&i| views[i].accepting).collect();
         assert!(!accepting.is_empty(), "router needs at least one accepting replica");
@@ -193,15 +203,34 @@ impl Router {
                     .expect("non-empty pool")
             }
             RoutePolicy::SessionAffinity => {
-                let pinned = self.sessions.get(&session).copied();
-                match pinned.and_then(|r| pool.iter().copied().find(|&i| views[i].id == r)) {
-                    Some(i) => i,
-                    None => {
-                        let i = self.least_cost(views, costs, &pool);
-                        self.sessions.insert(session, views[i].id);
-                        i
+                let chosen = if hits.iter().any(|&h| h > 0) {
+                    // Cost-aware: costs arrive hit-discounted, so greedy
+                    // predicted-completion placement naturally re-lands
+                    // the session where its cache lives — unless that
+                    // replica is so loaded the recompute elsewhere is
+                    // cheaper. Ties break toward the bigger hit.
+                    pool.iter()
+                        .copied()
+                        .min_by(|&a, &b| {
+                            let la = self.outstanding_secs[views[a].id] + costs[a];
+                            let lb = self.outstanding_secs[views[b].id] + costs[b];
+                            la.total_cmp(&lb)
+                                .then(hits[b].cmp(&hits[a]))
+                                .then(views[a].id.cmp(&views[b].id))
+                        })
+                        .expect("non-empty pool")
+                } else {
+                    // No cache signal anywhere: sticky pin (the warm
+                    // prior — the prior turn may still be in flight and
+                    // will promote its pages there), else least-cost.
+                    let pinned = self.sessions.get(&session).copied();
+                    match pinned.and_then(|r| pool.iter().copied().find(|&i| views[i].id == r)) {
+                        Some(i) => i,
+                        None => self.least_cost(views, costs, &pool),
                     }
-                }
+                };
+                self.sessions.insert(session, views[chosen].id);
+                chosen
             }
         };
 
@@ -258,12 +287,16 @@ mod tests {
         vec![cost; n]
     }
 
+    fn no_hits(n: usize) -> Vec<usize> {
+        vec![0; n]
+    }
+
     #[test]
     fn round_robin_cycles() {
         let mut r = Router::new(3);
         let v = views(3, 1000);
         let picks: Vec<usize> = (0..6)
-            .map(|_| r.route(RoutePolicy::RoundRobin, &v, 0, 1, &flat(3, 1.0)).0)
+            .map(|_| r.route(RoutePolicy::RoundRobin, &v, 0, 1, &flat(3, 1.0), &no_hits(3)).0)
             .collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
         assert_eq!(r.routed, vec![2, 2, 2]);
@@ -273,11 +306,15 @@ mod tests {
     fn least_outstanding_prefers_idle_replica() {
         let mut r = Router::new(2);
         let v = views(2, 1000);
-        let (a, s) = r.route(RoutePolicy::LeastOutstanding, &v, 0, 1, &flat(2, 100.0));
-        let (b, _) = r.route(RoutePolicy::LeastOutstanding, &v, 0, 1, &flat(2, 1.0));
+        let (a, s) =
+            r.route(RoutePolicy::LeastOutstanding, &v, 0, 1, &flat(2, 100.0), &no_hits(2));
+        let (b, _) = r.route(RoutePolicy::LeastOutstanding, &v, 0, 1, &flat(2, 1.0), &no_hits(2));
         assert_eq!((a, b, s), (0, 1, 100.0));
         r.complete(0, 1, 100.0);
-        assert_eq!(r.route(RoutePolicy::LeastOutstanding, &v, 0, 1, &flat(2, 1.0)).0, 0);
+        assert_eq!(
+            r.route(RoutePolicy::LeastOutstanding, &v, 0, 1, &flat(2, 1.0), &no_hits(2)).0,
+            0
+        );
         assert_eq!(r.outstanding_secs(0), 1.0);
     }
 
@@ -288,8 +325,9 @@ mod tests {
         let mut r = Router::new(2);
         let v = views(2, 1000);
         let costs = [100.0, 50.0];
-        let picks: Vec<usize> =
-            (0..3).map(|_| r.route(RoutePolicy::LeastOutstanding, &v, 0, 1, &costs).0).collect();
+        let picks: Vec<usize> = (0..3)
+            .map(|_| r.route(RoutePolicy::LeastOutstanding, &v, 0, 1, &costs, &no_hits(2)).0)
+            .collect();
         // 1 (0+50 < 0+100), 0 (100 vs 50+50 tie -> lower id), 1 (200 vs 150).
         assert_eq!(picks, vec![1, 0, 1]);
     }
@@ -299,14 +337,14 @@ mod tests {
         let mut r = Router::new(2);
         let v = views(2, 10);
         for _ in 0..4 {
-            r.route(RoutePolicy::KvPressure, &v, 0, 5, &flat(2, 10.0));
+            r.route(RoutePolicy::KvPressure, &v, 0, 5, &flat(2, 10.0), &no_hits(2));
         }
         assert_eq!(r.committed_pages(0), 10);
         assert_eq!(r.committed_pages(1), 10);
         assert_eq!(r.over_capacity_routes, 0);
         assert_eq!(r.max_committed_pages, 10);
         // Fifth placement cannot fit anywhere: relief path, counted.
-        r.route(RoutePolicy::KvPressure, &v, 0, 5, &flat(2, 10.0));
+        r.route(RoutePolicy::KvPressure, &v, 0, 5, &flat(2, 10.0), &no_hits(2));
         assert_eq!(r.over_capacity_routes, 1);
     }
 
@@ -315,26 +353,56 @@ mod tests {
         let mut r = Router::new(2);
         let mut v = views(2, 10);
         v[1].pred_step = 0.5;
-        assert_eq!(r.route(RoutePolicy::KvPressure, &v, 0, 2, &flat(2, 1.0)).0, 1);
+        assert_eq!(r.route(RoutePolicy::KvPressure, &v, 0, 2, &flat(2, 1.0), &no_hits(2)).0, 1);
     }
 
     #[test]
     fn session_affinity_sticks_and_evicts() {
         let mut r = Router::new(3);
         let v = views(3, 1000);
-        let first = r.route(RoutePolicy::SessionAffinity, &v, 42, 1, &flat(3, 1000.0)).0;
-        // Same session goes back despite the load imbalance.
-        let second = r.route(RoutePolicy::SessionAffinity, &v, 42, 1, &flat(3, 1000.0)).0;
+        let first =
+            r.route(RoutePolicy::SessionAffinity, &v, 42, 1, &flat(3, 1000.0), &no_hits(3)).0;
+        // Same session goes back despite the load imbalance (no cache
+        // signal: the sticky pin is the only prior).
+        let second =
+            r.route(RoutePolicy::SessionAffinity, &v, 42, 1, &flat(3, 1000.0), &no_hits(3)).0;
         assert_eq!(first, second);
         // A different session balances away.
-        let other = r.route(RoutePolicy::SessionAffinity, &v, 7, 1, &flat(3, 1.0)).0;
+        let other = r.route(RoutePolicy::SessionAffinity, &v, 7, 1, &flat(3, 1.0), &no_hits(3)).0;
         assert_ne!(other, first);
         // After eviction the session re-pins.
         r.evict_replica_sessions(first);
         let mut v2 = v.clone();
         v2[first].accepting = false;
-        let repinned = r.route(RoutePolicy::SessionAffinity, &v2, 42, 1, &flat(3, 1.0)).0;
+        let repinned =
+            r.route(RoutePolicy::SessionAffinity, &v2, 42, 1, &flat(3, 1.0), &no_hits(3)).0;
         assert_ne!(repinned, first);
+    }
+
+    #[test]
+    fn session_affinity_follows_the_cache_but_yields_under_load() {
+        let mut r = Router::new(3);
+        let v = views(3, 1000);
+        // Replica 2 holds 900 cached tokens of this session's prefix: its
+        // discounted cost wins even though the pin points at replica 0.
+        let costs = [10.0, 10.0, 1.0];
+        let hits = [0usize, 0, 900];
+        let picked = r.route(RoutePolicy::SessionAffinity, &v, 42, 1, &costs, &hits).0;
+        assert_eq!(picked, 2, "placement follows the cached prefix");
+        r.complete(2, 1, 1.0);
+        // Same session, but replica 2 is now drowning in outstanding work:
+        // recomputing elsewhere is predicted faster, so affinity yields.
+        for _ in 0..50 {
+            r.route(RoutePolicy::LeastOutstanding, &v, 1, 1, &[100.0, 100.0, 1.0], &no_hits(3));
+        }
+        assert_eq!(r.outstanding_secs(2), 50.0);
+        let picked = r.route(RoutePolicy::SessionAffinity, &v, 42, 1, &[3.0, 3.0, 1.0], &hits).0;
+        assert_eq!(picked, 0, "overload beats the cache win");
+        // And with the cache gone cold everywhere, the sticky pin (updated
+        // to the last placement) takes over.
+        let picked =
+            r.route(RoutePolicy::SessionAffinity, &v, 42, 1, &flat(3, 1.0), &no_hits(3)).0;
+        assert_eq!(picked, 0, "pin remembers the last placement");
     }
 
     #[test]
@@ -343,7 +411,7 @@ mod tests {
         let mut v = views(2, 100);
         v[0].accepting = false;
         for _ in 0..5 {
-            assert_eq!(r.route(RoutePolicy::RoundRobin, &v, 0, 1, &flat(2, 1.0)).0, 1);
+            assert_eq!(r.route(RoutePolicy::RoundRobin, &v, 0, 1, &flat(2, 1.0), &no_hits(2)).0, 1);
         }
     }
 

@@ -5,12 +5,14 @@
 //! three-layer Rust + JAX + Pallas stack:
 //!
 //! - **Layer 3 (this crate)** — the coordinator: the YALIS-style inference
-//!   engine ([`engine`]), the composable parallelism/cost API
+//!   engine ([`engine`]: continuous batcher over a refcounted
+//!   shared-prefix paged KV cache), the composable parallelism/cost API
 //!   ([`parallel`]: `ParallelSpec` + `StepCost` — one vocabulary for pure
 //!   TP, hybrid TP×PP×DP, and MoE EP deployments), the single-replica
 //!   serving stack ([`serving`]), the multi-replica SLO-aware serving
-//!   fleet ([`fleet`]: cost-aware router + disaggregated prefill/decode
-//!   pools + dual-pool autoscaler, heterogeneous replica specs), the
+//!   fleet ([`fleet`]: cost-aware + prefix-cache-aware router,
+//!   disaggregated prefill/decode pools, KV migration on drain, dual-pool
+//!   autoscaler with NVRAR re-tuning, heterogeneous replica specs), the
 //!   cluster / network simulation substrate ([`simnet`], [`cluster`]), the
 //!   collective algorithms ([`collectives`]) including the paper's NVRAR
 //!   (both an event-level simulation and a **real** shared-memory

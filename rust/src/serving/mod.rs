@@ -102,6 +102,11 @@ pub struct ServeReport {
     /// Requests rejected at admission because their lifetime KV footprint
     /// exceeds the allocator (they could never complete).
     pub rejected: u64,
+    /// Fraction of admitted prompt tokens served from the shared-prefix
+    /// KV cache instead of recomputed (0 on workloads without sessions).
+    pub cache_hit_rate: f64,
+    /// Prompt tokens the prefix cache saved (GEMM rows never priced).
+    pub cached_tokens: u64,
 }
 
 enum Ev {
@@ -186,6 +191,7 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
     }
 
     let pct = |s: &Summary, q: f64| if s.n() == 0 { 0.0 } else { s.percentile(q) };
+    let kvs = kv.stats();
     ServeReport {
         output_throughput: out_tokens as f64 / last_done.max(1e-9),
         total_output_tokens: out_tokens,
@@ -198,6 +204,12 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
         decode_only_frac: if steps == 0 { 0.0 } else { decode_only as f64 / steps as f64 },
         preemptions: batcher.preemptions(),
         rejected,
+        cache_hit_rate: if kvs.prompt_tokens == 0 {
+            0.0
+        } else {
+            kvs.hit_tokens as f64 / kvs.prompt_tokens as f64
+        },
+        cached_tokens: kvs.hit_tokens,
     }
 }
 
@@ -432,6 +444,53 @@ mod tests {
             "chunking must not regress TPOT p50 by >5%: {} vs {}",
             c.tpot_p50,
             w.tpot_p50
+        );
+    }
+
+    #[test]
+    fn unshared_trace_reports_zero_cache_hits_and_unchanged_totals() {
+        // The zero-sharing contract of the shared-prefix refactor: on a
+        // trace of solo sessions the allocator behaves exactly like the
+        // exclusive-ownership one — nothing cached is ever hit, and every
+        // pre-refactor total (tokens, steps, determinism) holds.
+        let cfg = tp16(AllReduceImpl::NcclAuto, 32);
+        let reqs = small_trace(40);
+        let a = serve(&cfg, &reqs);
+        assert_eq!(a.cache_hit_rate, 0.0);
+        assert_eq!(a.cached_tokens, 0);
+        let expected: u64 = reqs.iter().map(|r| r.decode_len as u64).sum();
+        assert_eq!(a.total_output_tokens, expected);
+        let b = serve(&cfg, &reqs);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    }
+
+    #[test]
+    fn session_trace_hits_the_prefix_cache_and_tightens_ttft() {
+        // Multi-turn sessions: later turns share the growing conversation
+        // prefix, so prefill work shrinks and TTFT drops vs the identical
+        // trace with sharing stripped (every request a solo session).
+        let mut sspec = crate::trace::SessionSpec::standard();
+        sspec.sessions = 20;
+        sspec.turns = 5;
+        let shared = sspec.generate();
+        let mut solo = shared.clone();
+        for r in &mut solo {
+            r.session = crate::engine::batcher::Request::solo_session(r.id);
+        }
+        let cfg = tp16(AllReduceImpl::NcclAuto, 32);
+        let s = serve(&cfg, &shared);
+        let u = serve(&cfg, &solo);
+        let expected: u64 = shared.iter().map(|r| r.decode_len as u64).sum();
+        assert_eq!(s.total_output_tokens, expected, "sharing must not lose tokens");
+        assert_eq!(u.total_output_tokens, expected);
+        assert!(s.cache_hit_rate > 0.3, "hit rate {}", s.cache_hit_rate);
+        assert!(s.cached_tokens > 0);
+        assert_eq!(u.cache_hit_rate, 0.0);
+        assert!(
+            s.ttft_p50 < u.ttft_p50,
+            "cached prefills must cut TTFT p50: {} vs {}",
+            s.ttft_p50,
+            u.ttft_p50
         );
     }
 

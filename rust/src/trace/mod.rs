@@ -146,6 +146,9 @@ impl TraceSpec {
                 prompt_len: self.input.sample(&mut rng),
                 decode_len: self.output.sample(&mut rng),
                 arrival: t,
+                // Single-shot prompts share nothing: each gets a session
+                // of its own, so the prefix cache stays cold.
+                session: Request::solo_session(id),
             });
         }
         out
@@ -166,6 +169,110 @@ impl TraceSpec {
 
 fn bucket_of(v: usize, buckets: &[usize]) -> usize {
     buckets.iter().position(|&b| v <= b).unwrap_or(buckets.len())
+}
+
+/// Multi-turn conversation workload: `sessions` independent chats, each
+/// running `turns` request turns. Turn k's prompt **is the whole
+/// conversation so far** — turn k-1's prompt, its response, and fresh
+/// `followup` user tokens — so consecutive turns of one session share a
+/// growing page-aligned prefix. This is the workload where the
+/// shared-prefix KV cache and session-affinity routing have something to
+/// win; on `TraceSpec`'s single-shot traces every hit rate is zero by
+/// construction.
+#[derive(Clone, Copy, Debug)]
+pub struct SessionSpec {
+    /// Concurrent conversations.
+    pub sessions: usize,
+    /// Request turns per conversation.
+    pub turns: usize,
+    /// Opening prompt (system prompt + first user message) — the shared
+    /// prefix every later turn of the session re-sends.
+    pub first_prompt: LenDist,
+    /// Fresh user tokens appended per later turn.
+    pub followup: LenDist,
+    /// Response length per turn.
+    pub output: LenDist,
+    /// Session arrival rate (sessions/s), Gamma inter-arrivals.
+    pub rate: f64,
+    /// Burstiness of session arrivals (Gamma CV²; 1.0 = Poisson).
+    pub burstiness: f64,
+    /// Mean think time between consecutive turns of a session
+    /// (exponential). Set well above a turn's service time so the next
+    /// turn usually arrives after the previous completed — i.e. after its
+    /// pages were promoted into the prefix cache.
+    pub think: f64,
+    pub seed: u64,
+}
+
+impl SessionSpec {
+    /// A chat-assistant-shaped default: ~1.5k-token openings, short
+    /// follow-ups, six turns, 30 s of think time.
+    pub fn standard() -> Self {
+        SessionSpec {
+            sessions: 100,
+            turns: 6,
+            first_prompt: LenDist { median: 1500.0, sigma: 0.6, min: 64, max: 8192 },
+            followup: LenDist { median: 80.0, sigma: 0.6, min: 8, max: 512 },
+            output: LenDist { median: 150.0, sigma: 0.5, min: 8, max: 512 },
+            rate: 2.0,
+            burstiness: 2.0,
+            think: 30.0,
+            seed: 0x5E55,
+        }
+    }
+
+    /// Generate the multi-turn trace: globally sorted by arrival with
+    /// dense ids 0..n (the fleet's indexing contract), each request
+    /// carrying its session id.
+    pub fn generate(&self) -> Vec<Request> {
+        let mut rng = Rng::new(self.seed);
+        let shape = 1.0 / self.burstiness;
+        let scale = (1.0 / self.rate.max(1e-9)) / shape;
+        let mut out = Vec::with_capacity(self.sessions * self.turns);
+        let mut start = 0.0f64;
+        for s in 0..self.sessions as u64 {
+            start += rng.gamma(shape, scale);
+            let mut t = start;
+            let mut context = 0usize; // conversation tokens so far
+            for turn in 0..self.turns {
+                let fresh = if turn == 0 {
+                    self.first_prompt.sample(&mut rng)
+                } else {
+                    self.followup.sample(&mut rng)
+                };
+                let prompt_len = context + fresh;
+                let decode_len = self.output.sample(&mut rng);
+                out.push(Request { id: 0, prompt_len, decode_len, arrival: t, session: s });
+                context = prompt_len + decode_len;
+                t += rng.exp(self.think);
+            }
+        }
+        out.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+        for (i, r) in out.iter_mut().enumerate() {
+            r.id = i as u64;
+        }
+        out
+    }
+
+}
+
+/// Fraction of all prompt tokens in `reqs` (any generator's output, in
+/// arrival order) that are conversation re-sends — the upper bound on
+/// what prefix caching can save on the trace.
+pub fn resend_fraction(reqs: &[Request]) -> f64 {
+    let mut last_ctx: std::collections::BTreeMap<u64, usize> = std::collections::BTreeMap::new();
+    let mut total = 0usize;
+    let mut resend = 0usize;
+    for r in reqs {
+        total += r.prompt_len;
+        resend += last_ctx.get(&r.session).copied().unwrap_or(0).min(r.prompt_len);
+        last_ctx.insert(r.session, r.prompt_len + r.decode_len);
+    }
+    if total == 0 {
+        0.0
+    } else {
+        resend as f64 / total as f64
+    }
 }
 
 #[cfg(test)]
@@ -295,6 +402,61 @@ mod tests {
             assert!(s.multiplier(0.0, i as f64 * 0.1) >= 0.05);
         }
         assert_eq!(RateShape::Flat.multiplier(0.3, 42.0), 1.0);
+    }
+
+    #[test]
+    fn session_trace_prompts_grow_within_a_session() {
+        let mut spec = SessionSpec::standard();
+        spec.sessions = 12;
+        spec.turns = 5;
+        let reqs = spec.generate();
+        assert_eq!(reqs.len(), 12 * 5);
+        // Dense ids in arrival order, arrivals sorted.
+        for (i, w) in reqs.windows(2).enumerate() {
+            assert!(w[1].arrival >= w[0].arrival);
+            assert_eq!(w[0].id, i as u64);
+        }
+        // Per session: turn k's prompt strictly extends turn k-1's whole
+        // context (prompt + response), in arrival order.
+        for s in 0..12u64 {
+            let turns: Vec<&Request> = reqs.iter().filter(|r| r.session == s).collect();
+            assert_eq!(turns.len(), 5);
+            for w in turns.windows(2) {
+                assert!(w[1].arrival > w[0].arrival, "turns arrive in order");
+                // The next prompt re-sends the whole prior context plus at
+                // least the followup distribution's minimum fresh tokens.
+                assert!(
+                    w[1].prompt_len >= w[0].prompt_len + w[0].decode_len + 8,
+                    "prompt must be the growing conversation: {} then {}",
+                    w[0].prompt_len,
+                    w[1].prompt_len
+                );
+            }
+        }
+        // The workload has something for a prefix cache to win.
+        assert!(resend_fraction(&reqs) > 0.5, "{}", resend_fraction(&reqs));
+        // Solo single-shot traces have nothing to re-send.
+        assert_eq!(resend_fraction(&TraceSpec::burstgpt().generate()), 0.0);
+    }
+
+    #[test]
+    fn session_trace_deterministic_and_solo_sessions_distinct() {
+        let spec = SessionSpec::standard();
+        let a = spec.generate();
+        let b = spec.generate();
+        assert!(a.iter().zip(&b).all(|(x, y)| {
+            x.arrival == y.arrival
+                && x.prompt_len == y.prompt_len
+                && x.decode_len == y.decode_len
+                && x.session == y.session
+        }));
+        // Solo sessions from TraceSpec never collide with chat sessions.
+        let solo = TraceSpec::burstgpt().generate();
+        for r in solo.iter().take(50) {
+            assert_eq!(r.session, Request::solo_session(r.id));
+            assert!(r.session >= (1 << 63));
+        }
+        assert!(a.iter().all(|r| r.session < (1 << 63)));
     }
 
     #[test]

@@ -12,7 +12,7 @@ use yalis::fleet::router::RoutePolicy;
 use yalis::fleet::{run_fleet, FleetConfig};
 use yalis::parallel::ParallelSpec;
 use yalis::serving::{fig9_config, ServeConfig};
-use yalis::trace::{LenDist, RateShape, TraceSpec};
+use yalis::trace::{LenDist, RateShape, SessionSpec, TraceSpec};
 
 fn replica_70b(ar: AllReduceImpl, concurrency: usize) -> ServeConfig {
     fig9_config(ParallelSpec::tp(16), ar, concurrency, "perlmutter", 16)
@@ -228,6 +228,95 @@ fn autoscaler_grows_fleet_under_ramping_load() {
     assert_eq!(rep.completed, 250);
     assert!(rep.scale_ups > 0, "ramp must trigger scale-ups");
     assert!(rep.peak_replicas > 1, "fleet must actually grow");
+}
+
+/// The shared-prefix acceptance criterion: on a multi-turn `SessionSpec`
+/// trace, prefix-cache-aware `session-affinity` routing beats
+/// content-blind `least-outstanding` on TTFT p50 with a nonzero reported
+/// cache hit rate — the policy finally *wins* something (ROADMAP:
+/// "Prefix-cache hit modeling for session affinity").
+#[test]
+fn session_affinity_beats_least_outstanding_on_session_trace() {
+    let mut sspec = SessionSpec::standard();
+    sspec.sessions = 60;
+    sspec.turns = 5;
+    sspec.rate = 3.0;
+    let reqs = sspec.generate();
+    let n = reqs.len();
+    let base = replica_70b(AllReduceImpl::Nvrar, 32);
+    let lo = run_fleet(
+        &FleetConfig::new(base.clone(), 4).with_policy(RoutePolicy::LeastOutstanding),
+        &reqs,
+    );
+    let sa = run_fleet(
+        &FleetConfig::new(base, 4).with_policy(RoutePolicy::SessionAffinity),
+        &reqs,
+    );
+    assert_eq!((lo.completed, sa.completed), (n, n));
+    assert!(sa.cache_hit_rate > 0.0, "affinity must report a nonzero hit rate");
+    assert!(sa.cached_tokens > 0);
+    assert!(
+        sa.cache_hit_rate > lo.cache_hit_rate,
+        "affinity must concentrate hits: {} vs {}",
+        sa.cache_hit_rate,
+        lo.cache_hit_rate
+    );
+    assert!(
+        sa.ttft_p50 < lo.ttft_p50,
+        "session-affinity TTFT p50 {:.3}s must beat least-outstanding {:.3}s",
+        sa.ttft_p50,
+        lo.ttft_p50
+    );
+    // Output tokens agree: sharing changes work done, never tokens owed.
+    assert_eq!(sa.output_tokens, lo.output_tokens);
+}
+
+/// The drain-migration acceptance criterion: a drained replica retires
+/// strictly earlier with KV migration than without (ROADMAP: "KV
+/// migration on drain"), with the migrated bytes priced over the
+/// inter-node link, and the workload conserved either way.
+#[test]
+fn drained_replica_retires_strictly_earlier_with_kv_migration() {
+    let mut spec = TraceSpec::decode_heavy();
+    spec.num_prompts = 60;
+    spec.rate = 4.0;
+    let reqs = spec.generate();
+    let base = FleetConfig::new(replica_70b(AllReduceImpl::Nvrar, 16), 3)
+        .with_policy(RoutePolicy::LeastOutstanding)
+        .with_drain_at(20.0, 2);
+    let with = run_fleet(&base.clone().with_migration(true), &reqs);
+    let without = run_fleet(&base.with_migration(false), &reqs);
+    assert_eq!((with.completed, without.completed), (60, 60));
+    assert_eq!((with.drains, without.drains), (1, 1), "both runs drained replica 2");
+    assert!(with.migrations > 0, "in-flight decodes must migrate");
+    assert!(with.migration_gb > 0.0, "migrated KV bytes are real traffic");
+    assert_eq!(without.migrations, 0);
+    assert!(
+        with.drain_secs < without.drain_secs,
+        "migration must retire the drained replica strictly earlier: {:.2}s vs {:.2}s",
+        with.drain_secs,
+        without.drain_secs
+    );
+    let expected: u64 = reqs.iter().map(|r| r.decode_len as u64).sum();
+    assert_eq!(with.output_tokens, expected, "migration loses no tokens");
+    assert_eq!(without.output_tokens, expected);
+}
+
+/// Zero-sharing contract at fleet level: on a single-shot trace the
+/// shared-prefix allocator changes nothing observable — hit rate is zero
+/// and throughput metrics stay deterministic.
+#[test]
+fn single_shot_traces_report_zero_cache_hits() {
+    let mut spec = TraceSpec::burstgpt();
+    spec.num_prompts = 80;
+    spec.rate = 20.0;
+    let reqs = spec.generate();
+    let rep = run_fleet(&FleetConfig::new(replica_70b(AllReduceImpl::Nvrar, 32), 2), &reqs);
+    assert_eq!(rep.completed, 80);
+    assert_eq!(rep.cache_hit_rate, 0.0);
+    assert_eq!(rep.cached_tokens, 0);
+    assert_eq!(rep.migrations, 0);
+    assert_eq!(rep.drains, 0);
 }
 
 /// Routing-policy sweep over the same trace: every policy conserves the
