@@ -1,0 +1,97 @@
+//! Shared-interconnect contention study: what concurrent KV traffic does
+//! to decode latency when every byte rides the same fabric.
+//!
+//! A disaggregated fleet generates continuous prefill→decode KV handoffs;
+//! with `FleetConfig::contention` those transfers book the same per-node
+//! inter-node NICs the decode all-reduces occupy, so TTFT/TPOT inflate and
+//! the fleet report carries per-link utilization plus a congestion-delay
+//! histogram. The closed-form baseline (contention off) prices the same
+//! trace with every transfer pretending it has the interconnect to itself.
+//!
+//! Usage: cargo run --release --example contention_study --
+//!        [--prompts 400] [--rate 10] [--replicas 3] [--prefill 1]
+//!        [--conc 32] [--allreduce nvrar] [--drain-at 0]
+
+use yalis::collectives::AllReduceImpl;
+use yalis::fleet::{run_fleet, FleetConfig};
+use yalis::parallel::ParallelSpec;
+use yalis::serving::fig9_config;
+use yalis::simnet::CongestionStats;
+use yalis::trace::TraceSpec;
+use yalis::util::cli::Cli;
+use yalis::util::tables::Table;
+
+fn main() {
+    let mut cli = Cli::new("contention_study", "shared-fabric contention vs closed-form serving");
+    cli.opt("prompts", "400", "trace length");
+    cli.opt("rate", "10", "arrival rate (req/s)");
+    cli.opt("replicas", "3", "decode/monolithic replicas (70B tp16 each)");
+    cli.opt("prefill", "1", "prefill-only replicas (0 = monolithic, no handoff traffic)");
+    cli.opt("conc", "32", "per-replica max concurrency");
+    cli.opt("allreduce", "nvrar", "per-replica all-reduce (nccl|nccl-ring|nccl-tree|mpi|nvrar)");
+    cli.opt("drain-at", "0", "also drain replica 0 at this time (0 = no scripted drain)");
+    let args = cli.parse();
+
+    let mut spec = TraceSpec::burstgpt();
+    spec.num_prompts = args.get_usize("prompts");
+    spec.rate = args.get_f64("rate");
+    let reqs = spec.generate();
+    let ar = args.get_with("allreduce", AllReduceImpl::by_name);
+    let base = fig9_config(ParallelSpec::tp(16), ar, args.get_usize("conc"), "perlmutter", 16);
+    let build = |contention: bool| {
+        let mut cfg = FleetConfig::new(base.clone(), args.get_usize("replicas"))
+            .with_contention(contention);
+        let prefill = args.get_usize("prefill");
+        if prefill > 0 {
+            cfg = cfg.disaggregated(prefill);
+        }
+        let drain = args.get_f64("drain-at");
+        if drain > 0.0 {
+            cfg = cfg.with_drain_at(drain, 0);
+        }
+        cfg
+    };
+
+    let off = run_fleet(&build(false), &reqs);
+    let on = run_fleet(&build(true), &reqs);
+
+    let mut t = Table::new(
+        &format!(
+            "contention study: {} requests, {} replicas + {} prefill, {}",
+            reqs.len(),
+            args.get_usize("replicas"),
+            args.get_usize("prefill"),
+            base.deployment_label()
+        ),
+        &[
+            "fabric", "tok/s", "TTFT p50", "TTFT p99", "TPOT p50", "handoff GB",
+            "delayed flows", "delay total (s)", "NIC util",
+        ],
+    );
+    for (name, rep) in [("closed-form (off)", &off), ("shared links (on)", &on)] {
+        t.row(&[
+            name.to_string(),
+            format!("{:.1}", rep.throughput),
+            format!("{:.3}", rep.ttft_p50),
+            format!("{:.3}", rep.ttft_p99),
+            format!("{:.4}", rep.tpot_p50),
+            format!("{:.2}", rep.handoff_gb),
+            rep.congestion.delayed.to_string(),
+            format!("{:.3}", rep.congestion.total_delay),
+            format!("{:.1}%", rep.net_util_inter * 100.0),
+        ]);
+    }
+    t.print();
+
+    let mut h = Table::new(
+        "congestion delay histogram (shared links)",
+        &["bucket", "flows"],
+    );
+    for (label, count) in CongestionStats::bucket_labels().iter().zip(on.congestion.hist.iter()) {
+        h.row(&[label.to_string(), count.to_string()]);
+    }
+    h.print();
+
+    println!("microbench sweep (migration rate x message size x fabric):\n");
+    yalis::coordinator::experiments::sweep_contention(16).print();
+}

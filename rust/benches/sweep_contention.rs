@@ -1,0 +1,14 @@
+//! `cargo bench --bench sweep_contention` — shared-interconnect
+//! contention: concurrent drain-migration-sized transfers × all-reduce
+//! message size × fabric (Slingshot vs InfiniBand), showing decode
+//! all-reduce inflation the closed-form α-β models cannot represent.
+//! CSV into results/.
+
+use yalis::coordinator::experiments;
+
+fn main() {
+    let t = experiments::sweep_contention(16);
+    t.print();
+    t.write_csv("results/sweep_contention.csv").unwrap();
+    println!("-> results/sweep_contention.csv");
+}

@@ -1,0 +1,333 @@
+//! Flow-level all-reduce path over the shared [`crate::simnet::Interconnect`].
+//!
+//! Where [`super::sim`] models the *internals* of one collective (chunk
+//! pipelining, launch/proxy overheads, protocol selection) on a private
+//! fabric, this module models the collective's *footprint on a shared
+//! fabric*: each phase books its byte volume onto the per-node links it
+//! actually occupies, so concurrent traffic — KV handoffs, drain
+//! migrations, another step's collective — inflates it, and it inflates
+//! them. Phase decomposition mirrors the closed forms (Eqs 1–6,
+//! [`super::model`]) exactly:
+//!
+//! | impl | phases booked |
+//! |------|---------------|
+//! | Ring (Eq 1) | one inter-node phase: `2(P-1)·α` + `2(P-1)/P·M` bytes |
+//! | Tree (Eq 2) | intra latency `2(G-1)·α`; inter `2⌈log2 N⌉·α` + `2(N-1)/N·M` bytes |
+//! | MPI RD | inter `⌈log2 P⌉·α` + `⌈log2 P⌉·M` bytes |
+//! | NVRAR (Eqs 3–6) | intra RS → inter RD (`η`-inflated `M/G` share) → intra AG, each a distinct booking |
+//!
+//! **Parity guarantee** (pinned in `tests/integration_contention.rs`): on
+//! an idle fabric [`allreduce_flow`] with `count = 1.0` returns
+//! `alpha_beta` equal to the matching closed form within 1e-9 and
+//! `delay == 0.0`, so enabling the contention layer without concurrent
+//! traffic reproduces the standalone numbers.
+
+use crate::cluster::Topology;
+// `log2_steps` is shared with `model`, not duplicated: the 1e-9 parity
+// contract depends on counting exchange rounds exactly as the closed
+// forms do.
+use crate::collectives::model::log2_steps;
+use crate::collectives::sim::{CommConfig, NVRAR_FALLBACK_BYTES};
+use crate::collectives::{model, AllReduceImpl};
+use crate::simnet::{Interconnect, LinkId, LinkKind};
+
+/// One fabric call: the per-collective message size, how many back-to-back
+/// collectives to aggregate into the booking (one engine step runs
+/// `2·layers` of them; aggregating keeps the fabric cheap to simulate),
+/// which link scope to book on, and the fabric start time.
+#[derive(Clone, Copy, Debug)]
+pub struct FlowSpec {
+    /// Per-collective message bytes |M| (also drives algorithm selection).
+    pub bytes: u64,
+    /// Collectives aggregated into this booking (> 0; may be fractional
+    /// when a step cost caps its booked volume at its wire-time budget).
+    pub count: f64,
+    /// Link scope (a replica's / TP group's slice of the fabric).
+    pub scope: usize,
+    /// Fabric time the first phase may start.
+    pub at: f64,
+}
+
+/// Outcome of routing one collective's bytes through the shared fabric.
+#[derive(Clone, Copy, Debug)]
+pub struct FlowTiming {
+    /// Pure per-collective α-β seconds — the matching closed form on an
+    /// idle fabric, independent of `count`.
+    pub alpha_beta: f64,
+    /// Aggregate queueing delay from link contention (0.0 when idle).
+    pub delay: f64,
+    /// Fabric time when the last phase's bytes have moved.
+    pub end: f64,
+}
+
+impl FlowTiming {
+    /// Per-collective wall-clock seconds under the observed contention.
+    pub fn total(&self) -> f64 {
+        self.alpha_beta + self.delay
+    }
+}
+
+/// One sequential phase of a collective on the fabric: `latency` α-seconds
+/// plus `bytes` booked on every node link of `kind` in the scope (the
+/// phases of one collective run on all of its nodes' links symmetrically;
+/// a phase completes when its slowest link does).
+struct Phase {
+    kind: LinkKind,
+    latency: f64,
+    bytes: f64,
+}
+
+fn run_phases(phases: &[Phase], t: &Topology, s: FlowSpec, net: &mut Interconnect) -> FlowTiming {
+    let mut cursor = s.at;
+    let mut alpha_beta = 0.0;
+    let mut delay = 0.0;
+    let count = if s.count > 0.0 { s.count } else { 1.0 };
+    for p in phases {
+        let mut ideal = 0.0;
+        if p.bytes > 0.0 {
+            let mut phase_end = cursor;
+            for node in 0..t.nodes.max(1) {
+                let f = net.book(
+                    LinkId { scope: s.scope, node, kind: p.kind },
+                    cursor,
+                    count * p.bytes,
+                );
+                ideal = f.ideal;
+                phase_end = phase_end.max(f.end);
+            }
+            delay += phase_end - cursor - ideal;
+            cursor = phase_end;
+        }
+        // `alpha_beta` reports the per-collective closed form: latency is
+        // per-call already, the booked bandwidth term is aggregate.
+        alpha_beta += p.latency + ideal / count;
+        cursor += p.latency;
+    }
+    FlowTiming { alpha_beta, delay, end: cursor }
+}
+
+/// Book one (or `count` aggregated) all-reduce(s) through the shared
+/// fabric. Algorithm selection (NCCL auto's ring-vs-tree pick, NVRAR's
+/// NCCL fallback above [`NVRAR_FALLBACK_BYTES`]) uses the per-call
+/// `spec.bytes`, mirroring [`super::sim::allreduce`].
+pub fn allreduce_flow(
+    which: AllReduceImpl,
+    t: &Topology,
+    c: &CommConfig,
+    spec: FlowSpec,
+    net: &mut Interconnect,
+) -> FlowTiming {
+    use AllReduceImpl::*;
+    match which {
+        NcclRing => ring_flow(t, spec, net),
+        NcclTree => tree_flow(t, spec, net),
+        NcclAuto => {
+            // Pick by the closed forms, then book only the winner.
+            if model::ring(t, spec.bytes) <= model::tree(t, spec.bytes) {
+                ring_flow(t, spec, net)
+            } else {
+                tree_flow(t, spec, net)
+            }
+        }
+        Mpi => rd_flat_flow(t, spec, net),
+        Nvrar => {
+            if spec.bytes > NVRAR_FALLBACK_BYTES {
+                allreduce_flow(NcclAuto, t, c, spec, net)
+            } else {
+                nvrar_flow(t, c, spec, net)
+            }
+        }
+    }
+}
+
+/// Eq. (1): flat ring, gated by the inter-node hops.
+fn ring_flow(t: &Topology, s: FlowSpec, net: &mut Interconnect) -> FlowTiming {
+    let p = t.total_gpus() as f64;
+    let phases = [Phase {
+        kind: LinkKind::Inter,
+        latency: 2.0 * (p - 1.0) * t.inter.alpha,
+        bytes: 2.0 * ((p - 1.0) / p) * s.bytes as f64,
+    }];
+    run_phases(&phases, t, s, net)
+}
+
+/// Eq. (2): intra chain (latency-only in the closed form) + inter tree.
+fn tree_flow(t: &Topology, s: FlowSpec, net: &mut Interconnect) -> FlowTiming {
+    let (n, g) = (t.nodes as f64, t.gpus_per_node as f64);
+    let phases = [
+        Phase { kind: LinkKind::Intra, latency: 2.0 * (g - 1.0) * t.intra.alpha, bytes: 0.0 },
+        Phase {
+            kind: LinkKind::Inter,
+            latency: 2.0 * log2_steps(n) * t.inter.alpha,
+            bytes: 2.0 * ((n - 1.0) / n) * s.bytes as f64,
+        },
+    ];
+    run_phases(&phases, t, s, net)
+}
+
+/// Flat recursive doubling: ⌈log2 P⌉ full-message inter exchanges.
+fn rd_flat_flow(t: &Topology, s: FlowSpec, net: &mut Interconnect) -> FlowTiming {
+    let steps = log2_steps(t.total_gpus() as f64);
+    let phases = [Phase {
+        kind: LinkKind::Inter,
+        latency: steps * t.inter.alpha,
+        bytes: steps * s.bytes as f64,
+    }];
+    run_phases(&phases, t, s, net)
+}
+
+/// Eqs. (3)–(6): NVRAR's three phases as three distinct link bookings.
+fn nvrar_flow(t: &Topology, c: &CommConfig, s: FlowSpec, net: &mut Interconnect) -> FlowTiming {
+    let (n, g) = (t.nodes as f64, t.gpus_per_node as f64);
+    let ring_bytes = ((g - 1.0) / g) * s.bytes as f64; // per intra ring phase
+    let rd_bytes = if t.nodes > 1 {
+        ((n - 1.0) / n) * (c.eta * s.bytes as f64 / g)
+    } else {
+        0.0
+    };
+    let phases = [
+        Phase { kind: LinkKind::Intra, latency: (g - 1.0) * t.intra.alpha, bytes: ring_bytes },
+        Phase { kind: LinkKind::Inter, latency: log2_steps(n) * t.inter.alpha, bytes: rd_bytes },
+        Phase { kind: LinkKind::Intra, latency: (g - 1.0) * t.intra.alpha, bytes: ring_bytes },
+    ];
+    run_phases(&phases, t, s, net)
+}
+
+/// Closed-form per-collective α-β seconds for `which` — the idle-fabric
+/// `alpha_beta` an [`allreduce_flow`] booking reports — without touching
+/// any fabric. Step costs use it to cap the volume they book at their
+/// step's wire-time capacity (a step cannot occupy more link-seconds than
+/// its own duration).
+pub fn alpha_beta_time(which: AllReduceImpl, t: &Topology, c: &CommConfig, bytes: u64) -> f64 {
+    use AllReduceImpl::*;
+    match which {
+        NcclRing => model::ring(t, bytes),
+        NcclTree => model::tree(t, bytes),
+        NcclAuto => model::ring(t, bytes).min(model::tree(t, bytes)),
+        Mpi => model::recursive_doubling_flat(t, bytes),
+        Nvrar => {
+            if bytes > NVRAR_FALLBACK_BYTES {
+                alpha_beta_time(NcclAuto, t, c, bytes)
+            } else {
+                model::nvrar(t, bytes, c.eta)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+
+    fn fabric_for(t: &Topology) -> Interconnect {
+        let mut net = Interconnect::new();
+        net.add_scope(0, t.nodes, t.intra.beta, t.inter.beta);
+        net
+    }
+
+    fn spec(bytes: u64) -> FlowSpec {
+        FlowSpec { bytes, count: 1.0, scope: 0, at: 0.0 }
+    }
+
+    #[test]
+    fn idle_fabric_matches_closed_forms() {
+        let c = CommConfig::perlmutter();
+        for nodes in [1usize, 2, 4, 8] {
+            let t = presets::perlmutter(nodes);
+            for kb in [128u64, 512, 2048] {
+                let bytes = kb * 1024;
+                let mut net = fabric_for(&t);
+                let ring = ring_flow(&t, spec(bytes), &mut net);
+                assert!((ring.alpha_beta - model::ring(&t, bytes)).abs() < 1e-9);
+                assert_eq!(ring.delay, 0.0);
+                let mut net = fabric_for(&t);
+                let tree = tree_flow(&t, spec(bytes), &mut net);
+                assert!((tree.alpha_beta - model::tree(&t, bytes)).abs() < 1e-9);
+                let mut net = fabric_for(&t);
+                let rd = rd_flat_flow(&t, spec(bytes), &mut net);
+                assert!((rd.alpha_beta - model::recursive_doubling_flat(&t, bytes)).abs() < 1e-9);
+                let mut net = fabric_for(&t);
+                let nv = nvrar_flow(&t, &c, spec(bytes), &mut net);
+                assert!(
+                    (nv.alpha_beta - model::nvrar(&t, bytes, c.eta)).abs() < 1e-9,
+                    "N={nodes} {kb}KB: {} vs {}",
+                    nv.alpha_beta,
+                    model::nvrar(&t, bytes, c.eta)
+                );
+                assert_eq!(nv.delay, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn auto_picks_the_cheaper_closed_form() {
+        let t = presets::perlmutter(8);
+        let c = CommConfig::perlmutter();
+        let mut net = fabric_for(&t);
+        let small = allreduce_flow(AllReduceImpl::NcclAuto, &t, &c, spec(64 * 1024), &mut net);
+        let expect = model::ring(&t, 64 * 1024).min(model::tree(&t, 64 * 1024));
+        assert!((small.alpha_beta - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nvrar_falls_back_to_nccl_above_the_size_gate() {
+        let t = presets::perlmutter(4);
+        let c = CommConfig::perlmutter();
+        let big = NVRAR_FALLBACK_BYTES + 1;
+        let mut net = fabric_for(&t);
+        let nv = allreduce_flow(AllReduceImpl::Nvrar, &t, &c, spec(big), &mut net);
+        let mut net = fabric_for(&t);
+        let auto = allreduce_flow(AllReduceImpl::NcclAuto, &t, &c, spec(big), &mut net);
+        assert_eq!(nv.alpha_beta, auto.alpha_beta);
+    }
+
+    #[test]
+    fn concurrent_transfer_inflates_only_the_contended_run() {
+        let t = presets::perlmutter(4);
+        let c = CommConfig::perlmutter();
+        let bytes = 512 * 1024;
+        let mut idle = fabric_for(&t);
+        let base = nvrar_flow(&t, &c, spec(bytes), &mut idle);
+        // A drain-migration-sized transfer parked on the node-0 NIC.
+        let mut busy = fabric_for(&t);
+        busy.book(
+            LinkId { scope: 0, node: 0, kind: LinkKind::Inter },
+            0.0,
+            256.0 * 1024.0 * 1024.0,
+        );
+        let contended = nvrar_flow(&t, &c, spec(bytes), &mut busy);
+        assert_eq!(contended.alpha_beta, base.alpha_beta, "α-β part is load-independent");
+        assert!(contended.delay > 0.0, "sharing the NIC must delay the RD phase");
+        assert!(contended.total() > base.total());
+    }
+
+    #[test]
+    fn count_aggregates_volume_but_not_alpha_beta() {
+        let t = presets::perlmutter(4);
+        let c = CommConfig::perlmutter();
+        let bytes = 256 * 1024;
+        let mut net = fabric_for(&t);
+        let one = nvrar_flow(&t, &c, spec(bytes), &mut net);
+        let mut net = fabric_for(&t);
+        let many =
+            nvrar_flow(&t, &c, FlowSpec { count: 160.0, ..spec(bytes) }, &mut net);
+        assert!((one.alpha_beta - many.alpha_beta).abs() < 1e-12);
+        assert_eq!(many.delay, 0.0, "an idle fabric never delays, whatever the volume");
+        let heavy = net.bytes_carried(LinkKind::Inter);
+        let mut net = fabric_for(&t);
+        nvrar_flow(&t, &c, spec(bytes), &mut net);
+        let light = net.bytes_carried(LinkKind::Inter);
+        assert!((heavy / light - 160.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vista_single_gpu_nodes_book_no_intra_bytes() {
+        let t = presets::vista(8);
+        let c = CommConfig::vista();
+        let mut net = fabric_for(&t);
+        let f = nvrar_flow(&t, &c, spec(512 * 1024), &mut net);
+        assert_eq!(net.bytes_carried(LinkKind::Intra), 0.0);
+        assert!((f.alpha_beta - model::nvrar(&t, 512 * 1024, c.eta)).abs() < 1e-9);
+    }
+}

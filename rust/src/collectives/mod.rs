@@ -12,7 +12,13 @@
 //!   all-reduces with fused 8-byte data+flag payloads.
 //! - [`tuner`] — B_s × C_s auto-tuning (the paper's Appendix C.1 future
 //!   work), cached per message-size bucket.
+//! - [`flows`] — the same closed forms as **flows on a shared fabric**
+//!   ([`crate::simnet::Interconnect`]): each phase books its bytes on the
+//!   per-node links it occupies, so concurrent KV handoffs / drain
+//!   migrations inflate the collective (and vice versa), while an idle
+//!   fabric reproduces the closed-form numbers exactly.
 
+pub mod flows;
 pub mod model;
 pub mod real;
 pub mod sim;

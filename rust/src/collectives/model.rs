@@ -14,7 +14,7 @@ use crate::cluster::Topology;
 /// rounds (N=6 runs 3 steps, not log2(6) ≈ 2.58 — the fractional-step bug
 /// this replaces), matching the dissemination-style handling real
 /// implementations use for ragged participant counts.
-fn log2_steps(n: f64) -> f64 {
+pub(crate) fn log2_steps(n: f64) -> f64 {
     n.log2().ceil().max(0.0)
 }
 

@@ -1,0 +1,538 @@
+//! `yalis bench-suite` / `yalis bench-check` — the CI perf-regression
+//! gate.
+//!
+//! The simulation stack is deterministic, so "performance" here means the
+//! *modeled* numbers: a cost-model change that silently moves NVRAR
+//! latency or fleet goodput by >10% should fail CI, not ship unnoticed.
+//! `bench-suite` emits a small flat-JSON metric file; `bench-check`
+//! compares it against the committed `bench/baseline.json` with a
+//! per-metric direction (lower-better latencies, higher-better
+//! throughputs) and a configurable tolerance, exiting non-zero on any
+//! worse-direction move beyond it.
+//!
+//! A baseline containing `"bootstrap": true` disarms the gate (exit 0
+//! with a warning): it lets the workflow land before a real baseline has
+//! been generated. Arm it with
+//! `cargo run --release -- bench-suite --json --out bench/baseline.json`
+//! and commit the result.
+
+use crate::cluster::presets;
+use crate::collectives::flows::{allreduce_flow, FlowSpec};
+use crate::collectives::sim::{self, CommConfig};
+use crate::collectives::AllReduceImpl;
+use crate::fleet::{run_fleet, FleetConfig};
+use crate::parallel::ParallelSpec;
+use crate::serving::{fig9_config, serve};
+use crate::simnet::{Interconnect, LinkId, LinkKind};
+use crate::trace::TraceSpec;
+use crate::util::tables::Table;
+use std::collections::BTreeMap;
+
+/// Which direction is a regression for a metric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Better {
+    /// Smaller is better (latencies): a rise beyond tolerance regresses.
+    Lower,
+    /// Bigger is better (throughput): a drop beyond tolerance regresses.
+    Higher,
+    /// A modeling constant: any move beyond tolerance regresses.
+    Either,
+}
+
+/// One tracked metric.
+#[derive(Clone, Debug)]
+pub struct Metric {
+    pub key: &'static str,
+    pub value: f64,
+    pub better: Better,
+}
+
+/// Static key → direction registry, so `bench-check` can judge a metric
+/// file without re-running the simulations that produced it. A unit test
+/// pins this to exactly the keys (and directions) [`suite`] emits.
+pub fn directions() -> BTreeMap<&'static str, Better> {
+    [
+        ("nvrar_us_128kb", Better::Lower),
+        ("nccl_us_128kb", Better::Lower),
+        ("nvrar_us_512kb", Better::Lower),
+        ("nccl_us_512kb", Better::Lower),
+        ("nvrar_us_2048kb", Better::Lower),
+        ("nccl_us_2048kb", Better::Lower),
+        ("serve_ttft_p50_ms", Better::Lower),
+        ("serve_tpot_p50_ms", Better::Lower),
+        ("serve_tok_per_s", Better::Higher),
+        ("fleet_goodput_tok_per_s", Better::Higher),
+        ("fleet_ttft_p99_ms", Better::Lower),
+        ("contention_rd_delay_us", Better::Either),
+    ]
+    .into()
+}
+
+/// Compute the tracked metric set. Small and deterministic: one run takes
+/// seconds, and two runs of the same build emit identical JSON.
+pub fn suite() -> Vec<Metric> {
+    let mut out = Vec::new();
+
+    // NVRAR vs NCCL microbench latency, 128 KB – 2 MB on 16 GPUs.
+    let topo = presets::perlmutter(4);
+    let comm = CommConfig::perlmutter();
+    for (kb, nv_key, nccl_key) in [
+        (128u64, "nvrar_us_128kb", "nccl_us_128kb"),
+        (512, "nvrar_us_512kb", "nccl_us_512kb"),
+        (2048, "nvrar_us_2048kb", "nccl_us_2048kb"),
+    ] {
+        let bytes = kb * 1024;
+        out.push(Metric {
+            key: nv_key,
+            value: sim::nvrar(&topo, &comm, bytes, 0.0).total * 1e6,
+            better: Better::Lower,
+        });
+        out.push(Metric {
+            key: nccl_key,
+            value: sim::nccl_auto(&topo, &comm, bytes).total * 1e6,
+            better: Better::Lower,
+        });
+    }
+
+    // Single-replica serving on a short BurstGPT trace.
+    let mut tspec = TraceSpec::burstgpt();
+    tspec.num_prompts = 80;
+    let reqs = tspec.generate();
+    let cfg = fig9_config(ParallelSpec::tp(16), AllReduceImpl::Nvrar, 32, "perlmutter", 16);
+    let rep = serve(&cfg, &reqs);
+    out.push(Metric { key: "serve_ttft_p50_ms", value: rep.ttft_p50 * 1e3, better: Better::Lower });
+    out.push(Metric { key: "serve_tpot_p50_ms", value: rep.tpot_p50 * 1e3, better: Better::Lower });
+    out.push(Metric {
+        key: "serve_tok_per_s",
+        value: rep.output_throughput,
+        better: Better::Higher,
+    });
+
+    // Fleet goodput on a 3-replica pool.
+    let mut fspec = TraceSpec::burstgpt();
+    fspec.num_prompts = 150;
+    fspec.rate = 12.0;
+    let freqs = fspec.generate();
+    let base = fig9_config(ParallelSpec::tp(16), AllReduceImpl::Nvrar, 64, "perlmutter", 16);
+    let frep = run_fleet(&FleetConfig::new(base, 3), &freqs);
+    out.push(Metric {
+        key: "fleet_goodput_tok_per_s",
+        value: frep.goodput,
+        better: Better::Higher,
+    });
+    out.push(Metric {
+        key: "fleet_ttft_p99_ms",
+        value: frep.ttft_p99 * 1e3,
+        better: Better::Lower,
+    });
+
+    // Contention model constant: the delay one 256 MB migration inflicts
+    // on an overlapping 512 KB NVRAR all-reduce.
+    let mut net = Interconnect::new();
+    net.add_scope(0, topo.nodes, topo.intra.beta, topo.inter.beta);
+    net.book(LinkId { scope: 0, node: 0, kind: LinkKind::Inter }, 0.0, 256.0 * 1024.0 * 1024.0);
+    let flow = allreduce_flow(
+        AllReduceImpl::Nvrar,
+        &topo,
+        &comm,
+        FlowSpec { bytes: 512 * 1024, count: 1.0, scope: 0, at: 0.0 },
+        &mut net,
+    );
+    out.push(Metric {
+        key: "contention_rd_delay_us",
+        value: flow.delay * 1e6,
+        better: Better::Either,
+    });
+
+    out
+}
+
+// ---------------------------------------------------------------------
+// Flat JSON (the vendored crate set has no serde)
+// ---------------------------------------------------------------------
+
+/// A flat-JSON value: numbers for metrics, booleans for flags.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonVal {
+    Num(f64),
+    Bool(bool),
+}
+
+/// Render the metric set as a flat JSON object (sorted by key emission
+/// order = suite order; stable across runs).
+pub fn to_json(metrics: &[Metric]) -> String {
+    let mut s = String::from("{\n  \"schema\": 1");
+    for m in metrics {
+        s.push_str(&format!(",\n  \"{}\": {:.6}", m.key, m.value));
+    }
+    s.push_str("\n}\n");
+    s
+}
+
+/// Parse a flat JSON object of string keys → number/bool values. Rejects
+/// nesting — the metric files are deliberately flat.
+pub fn parse_flat(text: &str) -> Result<BTreeMap<String, JsonVal>, String> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut i = 0usize;
+    let mut out = BTreeMap::new();
+    fn skip_ws(chars: &[char], i: &mut usize) {
+        while *i < chars.len() && chars[*i].is_whitespace() {
+            *i += 1;
+        }
+    }
+    skip_ws(&chars, &mut i);
+    if chars.get(i) != Some(&'{') {
+        return Err("expected '{'".into());
+    }
+    i += 1;
+    loop {
+        skip_ws(&chars, &mut i);
+        match chars.get(i) {
+            Some('}') => {
+                i += 1;
+                break;
+            }
+            Some('"') => {}
+            other => return Err(format!("expected key or '}}', got {other:?}")),
+        }
+        i += 1; // opening quote
+        let mut key = String::new();
+        while i < chars.len() && chars[i] != '"' {
+            key.push(chars[i]);
+            i += 1;
+        }
+        if i >= chars.len() {
+            return Err(format!("unterminated key '{key}'"));
+        }
+        i += 1; // closing quote
+        skip_ws(&chars, &mut i);
+        if chars.get(i) != Some(&':') {
+            return Err(format!("expected ':' after key '{key}'"));
+        }
+        i += 1;
+        skip_ws(&chars, &mut i);
+        let mut token = String::new();
+        while i < chars.len() && !chars[i].is_whitespace() && chars[i] != ',' && chars[i] != '}' {
+            token.push(chars[i]);
+            i += 1;
+        }
+        let val = match token.as_str() {
+            "true" => JsonVal::Bool(true),
+            "false" => JsonVal::Bool(false),
+            t => JsonVal::Num(
+                t.parse::<f64>().map_err(|_| format!("bad value '{t}' for key '{key}'"))?,
+            ),
+        };
+        out.insert(key, val);
+        skip_ws(&chars, &mut i);
+        match chars.get(i) {
+            Some(',') => {
+                i += 1;
+                continue;
+            }
+            Some('}') => {
+                i += 1;
+                break;
+            }
+            other => return Err(format!("expected ',' or '}}', got {other:?}")),
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// The gate
+// ---------------------------------------------------------------------
+
+/// One comparison outcome.
+#[derive(Clone, Debug)]
+pub struct Verdict {
+    pub key: String,
+    pub baseline: f64,
+    pub current: Option<f64>,
+    /// Signed relative change (current − baseline) / |baseline|.
+    pub delta: f64,
+    pub regressed: bool,
+}
+
+/// Compare `current` against `baseline` (both flat metric maps) with a
+/// worse-direction tolerance. `directions` maps known metric keys to
+/// their regression direction; unknown keys regress on any move.
+pub fn check_maps(
+    baseline: &BTreeMap<String, JsonVal>,
+    current: &BTreeMap<String, JsonVal>,
+    tol: f64,
+    directions: &BTreeMap<&str, Better>,
+) -> Vec<Verdict> {
+    let mut out = Vec::new();
+    for (key, val) in baseline {
+        if key == "schema" || key == "bootstrap" {
+            continue;
+        }
+        let JsonVal::Num(base) = val else { continue };
+        let cur = match current.get(key) {
+            Some(JsonVal::Num(c)) => *c,
+            _ => {
+                // A tracked metric vanished: the suite changed without a
+                // baseline regeneration — fail loudly.
+                out.push(Verdict {
+                    key: key.clone(),
+                    baseline: *base,
+                    current: None,
+                    delta: 0.0,
+                    regressed: true,
+                });
+                continue;
+            }
+        };
+        // A zero baseline has no meaningful relative scale: report any
+        // appearance as a loud ±100% so a worse-direction move fails the
+        // gate and forces a deliberate baseline regeneration, instead of
+        // comparing a raw unit-dependent difference against a fraction.
+        let delta = if base.abs() > 1e-9 {
+            (cur - base) / base.abs()
+        } else if cur.abs() > 1e-9 {
+            if cur > 0.0 { 1.0 } else { -1.0 }
+        } else {
+            0.0
+        };
+        let regressed = match directions.get(key.as_str()).copied().unwrap_or(Better::Either) {
+            Better::Lower => delta > tol,
+            Better::Higher => delta < -tol,
+            Better::Either => delta.abs() > tol,
+        };
+        out.push(Verdict {
+            key: key.clone(),
+            baseline: *base,
+            current: Some(cur),
+            delta,
+            regressed,
+        });
+    }
+    out
+}
+
+/// `yalis bench-suite`: compute the metrics, print them (table or JSON),
+/// optionally write the JSON to `out`.
+pub fn run_suite(json: bool, out: &str) {
+    let metrics = suite();
+    let rendered = to_json(&metrics);
+    if json {
+        print!("{rendered}");
+    } else {
+        let mut t = Table::new("bench-suite metrics", &["metric", "value", "regresses when"]);
+        for m in &metrics {
+            t.row(&[
+                m.key.to_string(),
+                format!("{:.3}", m.value),
+                match m.better {
+                    Better::Lower => "rises",
+                    Better::Higher => "drops",
+                    Better::Either => "moves",
+                }
+                .to_string(),
+            ]);
+        }
+        t.print();
+    }
+    if !out.is_empty() {
+        if let Some(dir) = std::path::Path::new(out).parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        match std::fs::write(out, &rendered) {
+            Ok(()) => eprintln!("-> {out}"),
+            Err(e) => {
+                eprintln!("error: writing {out}: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+/// `yalis bench-check`: true = gate passes. Prints the per-metric table
+/// and a verdict line either way.
+pub fn run_check(baseline_path: &str, current_path: &str, tol: f64) -> bool {
+    let read = |path: &str| -> Result<BTreeMap<String, JsonVal>, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+        parse_flat(&text).map_err(|e| format!("parsing {path}: {e}"))
+    };
+    let baseline = match read(baseline_path) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return false;
+        }
+    };
+    if baseline.get("bootstrap") == Some(&JsonVal::Bool(true)) {
+        println!(
+            "bench-check: baseline {baseline_path} is a bootstrap placeholder — gate \
+             disarmed.\nArm it: cargo run --release -- bench-suite --json --out \
+             {baseline_path}  (and commit)"
+        );
+        return true;
+    }
+    if current_path.is_empty() {
+        eprintln!("error: bench-check needs --current <metrics.json>");
+        return false;
+    }
+    let current = match read(current_path) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return false;
+        }
+    };
+    let verdicts = check_maps(&baseline, &current, tol, &directions());
+    let mut t = Table::new(
+        &format!("bench-check vs {baseline_path} (tolerance {:.0}%)", tol * 100.0),
+        &["metric", "baseline", "current", "delta", "verdict"],
+    );
+    for v in &verdicts {
+        t.row(&[
+            v.key.clone(),
+            format!("{:.3}", v.baseline),
+            v.current.map_or("MISSING".to_string(), |c| format!("{c:.3}")),
+            format!("{:+.1}%", v.delta * 100.0),
+            (if v.regressed { "REGRESSED" } else { "ok" }).to_string(),
+        ]);
+    }
+    t.print();
+    let failures: Vec<&Verdict> = verdicts.iter().filter(|v| v.regressed).collect();
+    if failures.is_empty() {
+        println!("bench-check: {} metrics within tolerance", verdicts.len());
+        true
+    } else {
+        println!("bench-check: {} regression(s):", failures.len());
+        for v in failures {
+            println!(
+                "  {}: {:.3} -> {:?} ({:+.1}%)",
+                v.key,
+                v.baseline,
+                v.current,
+                v.delta * 100.0
+            );
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_is_deterministic_and_nonempty() {
+        let a = suite();
+        let b = suite();
+        assert!(a.len() >= 10, "suite should track a real metric set");
+        assert_eq!(to_json(&a), to_json(&b), "two runs must emit identical JSON");
+        for m in &a {
+            assert!(m.value.is_finite() && m.value >= 0.0, "{}: {}", m.key, m.value);
+        }
+        // The gate's named metrics are present.
+        let keys: Vec<&str> = a.iter().map(|m| m.key).collect();
+        for k in [
+            "nvrar_us_128kb",
+            "nccl_us_2048kb",
+            "serve_ttft_p50_ms",
+            "serve_tpot_p50_ms",
+            "fleet_goodput_tok_per_s",
+        ] {
+            assert!(keys.contains(&k), "missing {k}");
+        }
+    }
+
+    #[test]
+    fn directions_registry_matches_the_suite_exactly() {
+        // bench-check judges with the static registry; it must cover
+        // every emitted metric with the same direction, nothing more.
+        let dirs = directions();
+        let metrics = suite();
+        assert_eq!(dirs.len(), metrics.len());
+        for m in &metrics {
+            assert_eq!(dirs.get(m.key), Some(&m.better), "{}", m.key);
+        }
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let metrics = vec![
+            Metric { key: "a_us", value: 12.5, better: Better::Lower },
+            Metric { key: "b_tok", value: 3400.0, better: Better::Higher },
+        ];
+        let text = to_json(&metrics);
+        let map = parse_flat(&text).unwrap();
+        assert_eq!(map.get("schema"), Some(&JsonVal::Num(1.0)));
+        assert_eq!(map.get("a_us"), Some(&JsonVal::Num(12.5)));
+        assert_eq!(map.get("b_tok"), Some(&JsonVal::Num(3400.0)));
+        assert!(parse_flat("{ \"bootstrap\": true }").unwrap().get("bootstrap")
+            == Some(&JsonVal::Bool(true)));
+        assert!(parse_flat("not json").is_err());
+        assert!(parse_flat("{ \"k\": oops }").is_err());
+    }
+
+    #[test]
+    fn check_maps_directions_and_tolerance() {
+        let mut directions = BTreeMap::new();
+        directions.insert("lat_us", Better::Lower);
+        directions.insert("thr", Better::Higher);
+        let base: BTreeMap<String, JsonVal> = [
+            ("lat_us".to_string(), JsonVal::Num(100.0)),
+            ("thr".to_string(), JsonVal::Num(1000.0)),
+            ("schema".to_string(), JsonVal::Num(1.0)),
+        ]
+        .into();
+        // Within tolerance: +5% latency, -5% throughput.
+        let ok: BTreeMap<String, JsonVal> = [
+            ("lat_us".to_string(), JsonVal::Num(105.0)),
+            ("thr".to_string(), JsonVal::Num(950.0)),
+        ]
+        .into();
+        assert!(check_maps(&base, &ok, 0.10, &directions).iter().all(|v| !v.regressed));
+        // Latency up 20% regresses; throughput up 20% does not.
+        let bad: BTreeMap<String, JsonVal> = [
+            ("lat_us".to_string(), JsonVal::Num(120.0)),
+            ("thr".to_string(), JsonVal::Num(1200.0)),
+        ]
+        .into();
+        let verdicts = check_maps(&base, &bad, 0.10, &directions);
+        assert!(verdicts.iter().find(|v| v.key == "lat_us").unwrap().regressed);
+        assert!(!verdicts.iter().find(|v| v.key == "thr").unwrap().regressed);
+        // Improvements in the good direction never regress.
+        let better: BTreeMap<String, JsonVal> = [
+            ("lat_us".to_string(), JsonVal::Num(50.0)),
+            ("thr".to_string(), JsonVal::Num(2000.0)),
+        ]
+        .into();
+        assert!(check_maps(&base, &better, 0.10, &directions).iter().all(|v| !v.regressed));
+        // A vanished metric fails loudly.
+        let missing: BTreeMap<String, JsonVal> =
+            [("thr".to_string(), JsonVal::Num(1000.0))].into();
+        let verdicts = check_maps(&base, &missing, 0.10, &directions);
+        let lat = verdicts.iter().find(|v| v.key == "lat_us").unwrap();
+        assert!(lat.regressed && lat.current.is_none());
+        // A zero baseline: staying zero is fine; any worse-direction
+        // appearance is a loud ±100% regression (no unit guessing).
+        let zbase: BTreeMap<String, JsonVal> =
+            [("lat_us".to_string(), JsonVal::Num(0.0))].into();
+        let still: BTreeMap<String, JsonVal> =
+            [("lat_us".to_string(), JsonVal::Num(0.0))].into();
+        assert!(check_maps(&zbase, &still, 0.10, &directions).iter().all(|v| !v.regressed));
+        let appeared: BTreeMap<String, JsonVal> =
+            [("lat_us".to_string(), JsonVal::Num(0.2))].into();
+        let v = check_maps(&zbase, &appeared, 0.10, &directions);
+        assert!(v[0].regressed && (v[0].delta - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bootstrap_baseline_disarms_the_gate() {
+        let dir = std::env::temp_dir().join("yalis_benchsuite_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bootstrap.json");
+        std::fs::write(&path, "{ \"bootstrap\": true }\n").unwrap();
+        assert!(run_check(path.to_str().unwrap(), "", 0.10));
+        // A missing baseline file fails the gate.
+        assert!(!run_check(dir.join("nope.json").to_str().unwrap(), "", 0.10));
+    }
+}

@@ -2,6 +2,7 @@
 //! index; EXPERIMENTS.md records paper-vs-measured for each.
 
 use crate::cluster::presets;
+use crate::collectives::flows::{allreduce_flow, FlowSpec};
 use crate::collectives::sim::{self, CommConfig};
 use crate::collectives::AllReduceImpl;
 use crate::engine::persona::Persona;
@@ -439,6 +440,75 @@ pub fn sweep_session(model_name: &str, machine: &str, gpus: usize) -> Table {
     t
 }
 
+/// `yalis sweep-contention`: shared-interconnect contention — concurrent
+/// drain-migration-sized background transfers × all-reduce message size ×
+/// fabric (Slingshot-11 Perlmutter vs InfiniBand Vista). For each cell,
+/// a fresh [`crate::simnet::Interconnect`] carries `mig/s` background KV
+/// transfers on the node-0 NIC while decode all-reduces sample the fabric
+/// across a 1-second horizon; the closed-form α-β models price every cell
+/// identically regardless of load — the *inflate* column is exactly the
+/// scenario class they cannot represent. Deterministic (no RNG).
+pub fn sweep_contention(gpus: usize) -> Table {
+    const MIG_BYTES: f64 = 256.0 * 1024.0 * 1024.0; // one migrating context
+    const HORIZON: f64 = 1.0;
+    const SAMPLES: usize = 200;
+    let mut t = Table::new(
+        &format!("sweep-contention NVRAR on shared links, {gpus} GPUs (1s horizon)"),
+        &["fabric", "msg", "mig/s", "idle us", "mean us", "p99 us", "inflate", "NIC util"],
+    );
+    for machine in ["perlmutter", "vista"] {
+        let topo = presets::by_name(machine, 1).with_gpus(gpus);
+        if topo.nodes > 1 && !topo.nodes.is_power_of_two() {
+            continue;
+        }
+        let c = CommConfig::for_machine(machine);
+        for kb in [128u64, 512, 2048] {
+            for rate in [0usize, 2, 8, 32] {
+                let mut net = crate::simnet::Interconnect::new();
+                net.add_scope(0, topo.nodes, topo.intra.beta, topo.inter.beta);
+                let nic = crate::simnet::LinkId {
+                    scope: 0,
+                    node: 0,
+                    kind: crate::simnet::LinkKind::Inter,
+                };
+                for k in 0..rate {
+                    let at = HORIZON * (k as f64 + 0.5) / rate as f64;
+                    net.book(nic, at, MIG_BYTES);
+                }
+                let mut s = crate::util::stats::Summary::new();
+                let mut idle = 0.0;
+                for i in 0..SAMPLES {
+                    let at = HORIZON * i as f64 / SAMPLES as f64;
+                    let f = allreduce_flow(
+                        AllReduceImpl::Nvrar,
+                        &topo,
+                        &c,
+                        FlowSpec { bytes: kb * 1024, count: 1.0, scope: 0, at },
+                        &mut net,
+                    );
+                    idle = f.alpha_beta;
+                    s.add(f.total());
+                }
+                let mean = s.mean();
+                t.row(&[
+                    machine.to_string(),
+                    format!("{kb} KB"),
+                    rate.to_string(),
+                    fmt_us(idle),
+                    fmt_us(mean),
+                    fmt_us(s.percentile(99.0)),
+                    format!("{:.2}x", mean / idle),
+                    format!(
+                        "{:.0}%",
+                        net.utilization(crate::simnet::LinkKind::Inter, HORIZON) * 100.0
+                    ),
+                ]);
+            }
+        }
+    }
+    t
+}
+
 /// Figure 10: Qwen3-235B-A22B MoE deployments on 16 GPUs.
 pub fn fig10_moe() -> Table {
     let model = ModelConfig::qwen3_235b_a22b();
@@ -723,6 +793,7 @@ pub fn all_experiments() -> Vec<Table> {
     out.push(sweep_parallel("70b", "perlmutter", 16));
     out.push(sweep_chunk("70b", "perlmutter", 16));
     out.push(sweep_session("70b", "perlmutter", 16));
+    out.push(sweep_contention(16));
     out.push(fleet_experiment(AllReduceImpl::Nvrar, 0));
     out.push(fleet_hetero_experiment(AllReduceImpl::Nvrar));
     out
@@ -838,6 +909,34 @@ mod tests {
                 .unwrap();
             assert!(hit(sa) > 0.0, "{sa:?}");
             assert!(hit(sa) > hit(lo), "affinity {sa:?} vs least-tokens {lo:?}");
+        }
+    }
+
+    #[test]
+    fn sweep_contention_inflation_is_monotone_in_migration_rate() {
+        let t = sweep_contention(16);
+        let rows = t.rows();
+        assert!(rows.iter().any(|r| r[0] == "perlmutter"));
+        assert!(rows.iter().any(|r| r[0] == "vista"));
+        let inflate = |r: &[String]| r[6].trim_end_matches('x').parse::<f64>().unwrap();
+        for machine in ["perlmutter", "vista"] {
+            for msg in ["128 KB", "512 KB", "2048 KB"] {
+                let cells: Vec<f64> = rows
+                    .iter()
+                    .filter(|r| r[0] == machine && r[1] == msg)
+                    .map(|r| inflate(r))
+                    .collect();
+                assert_eq!(cells.len(), 4, "{machine} {msg}: mig-rate sweep rows");
+                // No background -> exactly the closed form.
+                assert!((cells[0] - 1.0).abs() < 0.005, "{machine} {msg}: {cells:?}");
+                // More concurrent migrations never deflate the all-reduce.
+                for w in cells.windows(2) {
+                    assert!(w[1] >= w[0] - 1e-9, "{machine} {msg}: {cells:?}");
+                }
+                // The heaviest rate visibly inflates it.
+                assert!(cells[3] > 1.005, "{machine} {msg}: {cells:?}");
+                assert!(cells[3] > cells[0], "{machine} {msg}: {cells:?}");
+            }
         }
     }
 

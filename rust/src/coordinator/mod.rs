@@ -6,6 +6,7 @@
 //! harnesses in `rust/benches/` are thin wrappers over these, so the CLI,
 //! the benches, and the integration tests all exercise identical code.
 
+pub mod benchsuite;
 pub mod experiments;
 
 use crate::util::cli::Cli;
@@ -17,19 +18,40 @@ pub fn main() {
         "multi-node LLM inference study + NVRAR all-reduce (paper reproduction).\n\
          Subcommand = first positional arg: scaling | breakdown | gemm | nccl-vs-mpi |\n\
          micro | hyperparams | e2e | phase | serve | sweep-parallel | sweep-chunk |\n\
-         sweep-session | fleet | fleet-hetero | moe | sync | variants | traces | all",
+         sweep-session | sweep-contention | fleet | fleet-hetero | moe | sync |\n\
+         variants | traces | bench-suite | bench-check | all",
     );
     cli.opt("machine", "perlmutter", "machine preset (perlmutter|vista)");
     cli.opt("model", "70b", "model (70b|405b|qwen3|tiny)");
-    cli.opt("gpus", "16", "GPU count for `sweep-parallel`/`sweep-chunk`/`sweep-session`");
+    cli.opt("gpus", "16", "GPU count for the `sweep-*` subcommands");
     cli.opt("allreduce", "nvrar", "per-replica all-reduce for `fleet`/`fleet-hetero` (nccl|nccl-ring|nccl-tree|mpi|nvrar)");
     cli.opt("chunk-tokens", "0", "prefill chunk cap for serve/fleet (0 = budget-bounded)");
     cli.opt("csv-dir", "", "write CSVs into this directory (empty = don't)");
+    cli.flag("json", "`bench-suite`: print the metrics as flat JSON on stdout");
+    cli.opt("out", "", "`bench-suite`: also write the metrics JSON to this path");
+    cli.opt("baseline", "bench/baseline.json", "`bench-check`: committed baseline metrics");
+    cli.opt("current", "", "`bench-check`: freshly generated metrics to compare");
+    cli.opt("tol", "0.10", "`bench-check`: allowed worse-direction fraction per metric");
     let args = cli.parse();
     let csv = if args.get("csv-dir").is_empty() { None } else { Some(args.get("csv-dir").to_string()) };
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
     let machine = args.get("machine");
     let model = args.get("model");
+
+    // The perf-gate subcommands exit directly (bench-check's exit code IS
+    // the CI gate); everything below the match prints tables.
+    if cmd == "bench-suite" {
+        benchsuite::run_suite(args.get_flag("json"), args.get("out"));
+        return;
+    }
+    if cmd == "bench-check" {
+        let ok = benchsuite::run_check(
+            args.get("baseline"),
+            args.get("current"),
+            args.get_f64("tol"),
+        );
+        std::process::exit(if ok { 0 } else { 1 });
+    }
 
     let tables = match cmd {
         "scaling" => experiments::fig1_fig2_scaling(model),
@@ -50,6 +72,7 @@ pub fn main() {
         "sweep-session" => {
             vec![experiments::sweep_session(model, machine, args.get_usize("gpus"))]
         }
+        "sweep-contention" => vec![experiments::sweep_contention(args.get_usize("gpus"))],
         "fleet" => {
             // Bad --allreduce values exit with a usable message, not a panic.
             let ar = args.get_with("allreduce", crate::collectives::AllReduceImpl::by_name);

@@ -11,6 +11,7 @@
 //!   targets; **goodput**: output tokens of SLO-meeting requests per
 //!   second of makespan — the "useful" half of raw throughput.
 
+use crate::simnet::CongestionStats;
 use crate::util::stats::Summary;
 
 /// Latency targets a request must meet to count toward goodput.
@@ -103,6 +104,9 @@ impl FleetMetrics {
             drains: 0,
             drain_secs: 0.0,
             retunes: 0,
+            net_util_intra: 0.0,
+            net_util_inter: 0.0,
+            congestion: CongestionStats::default(),
         }
     }
 }
@@ -177,6 +181,15 @@ pub struct FleetReport {
     /// NVRAR tuned-table rebuilds triggered by pool resizes (the
     /// fleet-level re-tune hook; 0 for non-NVRAR replicas).
     pub retunes: u64,
+    /// Mean intra-node link utilization of the shared fabric over the
+    /// makespan (0 with contention disabled — `FleetConfig::contention`).
+    pub net_util_intra: f64,
+    /// Mean inter-node link (NIC) utilization of the shared fabric.
+    pub net_util_inter: f64,
+    /// Congestion-delay accounting across every fabric booking —
+    /// collective flows, KV handoffs, drain migrations (all-zero with
+    /// contention disabled).
+    pub congestion: CongestionStats,
 }
 
 #[cfg(test)]

@@ -55,8 +55,8 @@ use crate::collectives::tuner::TunedTable;
 use crate::collectives::AllReduceImpl;
 use crate::engine::batcher::{Batcher, MigratedSeq, PrefillChunk, Request, StepBatch};
 use crate::engine::kv::{KvError, PagedKv};
-use crate::serving::ServeConfig;
-use crate::simnet::{EventQueue, Server};
+use crate::serving::{Fabric, ServeConfig};
+use crate::simnet::{EventQueue, Interconnect, LinkId, LinkKind, Server};
 use autoscaler::{AutoscaleConfig, Autoscaler, Decision};
 use metrics::{FleetMetrics, FleetReport, SloTargets};
 use router::{ReplicaView, RoutePolicy, Router};
@@ -102,6 +102,14 @@ pub struct FleetConfig {
     /// migration path deterministically without an autoscaler. A drain of
     /// the last accepting replica of a pool is skipped.
     pub drain_at: Vec<(f64, usize)>,
+    /// Shared-interconnect contention (off by default, preserving every
+    /// pre-contention fleet number bit for bit). When on, one
+    /// [`Fabric`] spans the fleet — every replica books its collective
+    /// bytes on its own per-node links, and KV handoffs / drain
+    /// migrations book the source's **and** target's inter-node NICs
+    /// instead of the standalone α-β path, so concurrent transfers and
+    /// decode all-reduces inflate each other.
+    pub contention: bool,
 }
 
 impl FleetConfig {
@@ -120,6 +128,7 @@ impl FleetConfig {
             autoscale: None,
             migrate_on_drain: true,
             drain_at: Vec::new(),
+            contention: false,
         }
     }
 
@@ -161,6 +170,12 @@ impl FleetConfig {
     /// Schedule a scripted drain of replica `replica` at time `t`.
     pub fn with_drain_at(mut self, t: f64, replica: usize) -> Self {
         self.drain_at.push((t, replica));
+        self
+    }
+
+    /// Enable/disable shared-interconnect contention (off by default).
+    pub fn with_contention(mut self, on: bool) -> Self {
+        self.contention = on;
         self
     }
 
@@ -321,6 +336,9 @@ struct Sim<'a> {
     rejected: u64,
     /// Fleet-wide preemption count at the last autoscaler tick.
     preempt_snapshot: u64,
+    /// Shared interconnect (contention mode); every replica's scope is its
+    /// index, registered at push time.
+    fabric: Option<Fabric>,
 }
 
 impl<'a> Sim<'a> {
@@ -351,6 +369,11 @@ impl<'a> Sim<'a> {
             retunes: 0,
             rejected: 0,
             preempt_snapshot: 0,
+            fabric: if cfg.contention {
+                Some(std::sync::Arc::new(std::sync::Mutex::new(Interconnect::new())))
+            } else {
+                None
+            },
         };
         let scalable = cfg.scalable_kind();
         for c in &cfg.replicas {
@@ -425,6 +448,12 @@ impl<'a> Sim<'a> {
         report.routed = self.router.routed.clone();
         report.rejected = self.rejected;
         report.preemptions = self.replicas.iter().map(|r| r.batcher.preemptions()).sum();
+        if let Some(fab) = &self.fabric {
+            let net = fab.lock().expect("interconnect lock poisoned");
+            report.net_util_intra = net.utilization(LinkKind::Intra, self.last_done);
+            report.net_util_inter = net.utilization(LinkKind::Inter, self.last_done);
+            report.congestion = net.stats().clone();
+        }
         let (hit, prompt) = self.replicas.iter().fold((0u64, 0u64), |(h, p), r| {
             let s = r.kv.stats();
             (h + s.hit_tokens, p + s.prompt_tokens)
@@ -566,7 +595,7 @@ impl<'a> Sim<'a> {
                     if reqs[i].decode_len <= 1 {
                         self.complete_request(i, now);
                     } else {
-                        self.start_handoff(i, now);
+                        self.start_handoff(i, r, now);
                     }
                 }
                 PoolKind::Monolithic | PoolKind::Decode => {
@@ -588,10 +617,33 @@ impl<'a> Sim<'a> {
         self.maybe_retire(r, now);
     }
 
-    /// Ship request `i`'s prompt KV from its prefill replica to a decode
-    /// replica chosen by the configured policy (priced by its remaining
-    /// decode cost — the prefill leg is already done).
-    fn start_handoff(&mut self, i: usize, now: f64) {
+    /// Ship `bytes` of KV context from replica `from` into replica `to`
+    /// starting at `now`; returns the landing time (link α included).
+    /// Under contention the transfer books the source's and the target's
+    /// node-0 inter-node NICs on the shared fabric — the same links the
+    /// decode all-reduces occupy, so each slows the other; otherwise it
+    /// takes the pre-contention path (target ingress [`Server`] at full
+    /// β), preserving those runs bit for bit.
+    fn kv_transfer(&mut self, from: usize, to: usize, bytes: u64, now: f64) -> f64 {
+        let link = self.cfg.replicas[0].topo.inter;
+        if let Some(fab) = &self.fabric {
+            let mut net = fab.lock().expect("interconnect lock poisoned");
+            net.advance(now);
+            let eg =
+                net.book(LinkId { scope: from, node: 0, kind: LinkKind::Inter }, now, bytes as f64);
+            let ing =
+                net.book(LinkId { scope: to, node: 0, kind: LinkKind::Inter }, now, bytes as f64);
+            eg.end.max(ing.end) + link.alpha
+        } else {
+            let (_start, end) = self.replicas[to].ingress.book(now, bytes as f64 / link.beta);
+            end + link.alpha
+        }
+    }
+
+    /// Ship request `i`'s prompt KV from its prefill replica `from` to a
+    /// decode replica chosen by the configured policy (priced by its
+    /// remaining decode cost — the prefill leg is already done).
+    fn start_handoff(&mut self, i: usize, from: usize, now: f64) {
         let req = self.reqs[i];
         let views = self.views(PoolKind::Decode);
         let costs: Vec<f64> =
@@ -602,19 +654,19 @@ impl<'a> Sim<'a> {
             self.router.route(self.cfg.policy, &views, req.session, pages, &costs, &no_hits);
         self.commit_main[i] = Some(Commit { replica: target, pages, secs });
         let bytes = self.kv_context_bytes(req.prompt_len);
-        let link = self.cfg.replicas[0].topo.inter;
-        let (_start, end) = self.replicas[target].ingress.book(now, bytes as f64 / link.beta);
+        let landed = self.kv_transfer(from, target, bytes, now);
         self.handoffs += 1;
         self.handoff_bytes += bytes;
-        self.q.push(end + link.alpha, Ev::Handoff { replica: target, req });
+        self.q.push(landed, Ev::Handoff { replica: target, req });
     }
 
-    /// Price and ship one migrating sequence's KV context to a peer of
-    /// `pool`: the router commitment moves to the target, the bytes flow
-    /// α-β over the inter-node link (FIFO per target NIC — the same path
-    /// a prefill→decode handoff takes), and the sequence resumes through
-    /// the prefilled-admission path when the transfer lands.
-    fn ship_migration(&mut self, pool: PoolKind, m: MigratedSeq, now: f64) {
+    /// Price and ship one migrating sequence's KV context from replica
+    /// `from` to a peer of `pool`: the router commitment moves to the
+    /// target, the bytes flow over the inter-node path (the same one a
+    /// prefill→decode handoff takes — under contention, the shared
+    /// fabric's NICs), and the sequence resumes through the
+    /// prefilled-admission path when the transfer lands.
+    fn ship_migration(&mut self, pool: PoolKind, from: usize, m: MigratedSeq, now: f64) {
         let i = m.id as usize;
         if let Some(c) = self.commit_main[i].take() {
             self.router.complete(c.replica, c.pages, c.secs);
@@ -628,8 +680,7 @@ impl<'a> Sim<'a> {
             self.router.route(self.cfg.policy, &views, m.session, pages, &costs, &no_hits);
         self.commit_main[i] = Some(Commit { replica: target, pages, secs });
         let bytes = self.kv_context_bytes(m.ctx);
-        let link = self.cfg.replicas[0].topo.inter;
-        let (_start, end) = self.replicas[target].ingress.book(now, bytes as f64 / link.beta);
+        let landed = self.kv_transfer(from, target, bytes, now);
         self.migrations += 1;
         self.migration_bytes += bytes;
         let synthetic = Request {
@@ -639,7 +690,7 @@ impl<'a> Sim<'a> {
             arrival: self.reqs[i].arrival,
             session: m.session,
         };
-        self.q.push(end + link.alpha, Ev::Handoff { replica: target, req: synthetic });
+        self.q.push(landed, Ev::Handoff { replica: target, req: synthetic });
     }
 
     /// Move a draining replica's work to peers. Waiting and restarted
@@ -661,7 +712,7 @@ impl<'a> Sim<'a> {
             self.route_queued(kind, req);
         }
         for m in work.migrations {
-            self.ship_migration(kind, m, now);
+            self.ship_migration(kind, victim, m, now);
         }
         for req in parked {
             // Already-shipped KV that was never admitted: ship it again.
@@ -671,7 +722,7 @@ impl<'a> Sim<'a> {
                 remaining_decode: req.decode_len.saturating_sub(1),
                 session: req.session,
             };
-            self.ship_migration(kind, m, now);
+            self.ship_migration(kind, victim, m, now);
         }
     }
 
@@ -693,7 +744,7 @@ impl<'a> Sim<'a> {
                     remaining_decode: req.decode_len.saturating_sub(1),
                     session: req.session,
                 };
-                self.ship_migration(kind, m, now);
+                self.ship_migration(kind, replica, m, now);
             } else {
                 // Migration disabled: the target retired while the KV was
                 // in flight. Release the stale commitment and re-ship the
@@ -702,7 +753,7 @@ impl<'a> Sim<'a> {
                 if let Some(c) = self.commit_main[req.id as usize].take() {
                     self.router.complete(c.replica, c.pages, c.secs);
                 }
-                self.start_handoff(req.id as usize, now);
+                self.start_handoff(req.id as usize, replica, now);
             }
             return;
         }
@@ -843,7 +894,18 @@ impl<'a> Sim<'a> {
 
     // -- mechanics -----------------------------------------------------
 
-    fn push_replica(&mut self, kind: PoolKind, cfg: ServeConfig) {
+    fn push_replica(&mut self, kind: PoolKind, mut cfg: ServeConfig) {
+        if let Some(fab) = &self.fabric {
+            // One link scope per replica (its index, stable for life);
+            // collective bytes book here, transfers book inter links of
+            // the source's and target's scopes.
+            let scope = self.replicas.len();
+            fab.lock()
+                .expect("interconnect lock poisoned")
+                .add_scope(scope, cfg.topo.nodes, cfg.topo.intra.beta, cfg.topo.inter.beta);
+            cfg.net = Some(fab.clone());
+            cfg.net_scope = scope;
+        }
         let pred_step = predict_step(&cfg);
         let pred_chunk = predict_chunk(&cfg);
         let base_comm = cfg.comm;
@@ -924,6 +986,7 @@ impl<'a> Sim<'a> {
     /// Admit pending handoffs, then launch the next engine step if idle.
     fn try_start(&mut self, r: usize) {
         self.try_admit_pending(r);
+        let now = self.q.now();
         let rep = &mut self.replicas[r];
         if rep.stepping {
             return;
@@ -938,8 +1001,9 @@ impl<'a> Sim<'a> {
         if step.is_empty() {
             return;
         }
-        // Each replica prices the step with its own cost model.
-        let dur = rep.cfg.step_time(&step);
+        // Each replica prices the step with its own cost model; under
+        // contention the booking inflates it when its links are busy.
+        let dur = rep.cfg.step_time_at(&step, now);
         rep.current = Some(step);
         rep.stepping = true;
         self.q.push_in(dur, Ev::StepDone(r));
@@ -1161,6 +1225,9 @@ mod tests {
                 cfg = cfg.with_drain_at(g.f64(0.5, 10.0), g.usize(0, replicas - 1));
             }
             cfg.migrate_on_drain = g.bool();
+            // Conservation/KV invariants must also hold with the shared
+            // fabric slowing steps and transfers.
+            cfg.contention = g.bool();
             let rep = run_fleet(&cfg, &reqs);
             assert_eq!(rep.completed, n);
         });

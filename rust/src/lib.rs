@@ -13,11 +13,15 @@
 //!   fleet ([`fleet`]: cost-aware + prefix-cache-aware router,
 //!   disaggregated prefill/decode pools, KV migration on drain, dual-pool
 //!   autoscaler with NVRAR re-tuning, heterogeneous replica specs), the
-//!   cluster / network simulation substrate ([`simnet`], [`cluster`]), the
+//!   cluster / network simulation substrate ([`simnet`], [`cluster`] —
+//!   including the shared-interconnect fair-share fabric
+//!   [`simnet::Interconnect`] that makes link contention between
+//!   collectives and KV transfers a first-class simulated resource), the
 //!   collective algorithms ([`collectives`]) including the paper's NVRAR
-//!   (both an event-level simulation and a **real** shared-memory
-//!   implementation over the [`shmem`] PGAS substrate), and the PJRT
-//!   [`runtime`] that executes AOT-compiled model artifacts.
+//!   (an event-level simulation, a flow-level shared-fabric path
+//!   [`collectives::flows`], and a **real** shared-memory implementation
+//!   over the [`shmem`] PGAS substrate), and the PJRT [`runtime`] that
+//!   executes AOT-compiled model artifacts.
 //! - **Layer 2** — JAX model graphs (`python/compile/model.py`), lowered
 //!   once to HLO text in `artifacts/`.
 //! - **Layer 1** — Pallas kernels (`python/compile/kernels/`), lowered into

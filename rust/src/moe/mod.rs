@@ -120,6 +120,15 @@ impl StepCost for MoeCost {
         model.n_layers as f64 * per_layer + s.pp as f64 * p2p + cfg.persona.step_overhead
     }
 
+    fn step_collective_bytes(&self, cfg: &ServeConfig, step: &StepBatch) -> (u64, f64) {
+        // The TP all-reduces of the attention part are what share the
+        // fabric; EP all-to-alls stay un-booked for now (they are mostly
+        // intra-node for the Fig-10 shapes — a noted follow-on).
+        let rows = step.token_rows().max(1).div_ceil(self.spec.dp).max(1);
+        let msg = (rows * cfg.model.d_model * cfg.model.dtype_bytes) as u64;
+        (msg, 2.0 * cfg.model.n_layers as f64)
+    }
+
     fn spec(&self) -> ParallelSpec {
         self.spec
     }

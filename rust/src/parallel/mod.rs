@@ -244,7 +244,10 @@ impl fmt::Display for ParallelSpec {
 /// machine/model/persona context from the [`ServeConfig`] at call time, so
 /// one cost object serves any model the config carries.
 pub trait StepCost: fmt::Debug + Send + Sync {
-    /// Duration (s) of one engine step executing `step` under `cfg`.
+    /// Duration (s) of one engine step executing `step` under `cfg`,
+    /// assuming the deployment has the interconnect to itself (the
+    /// closed-form/simulated path — also what routing predictions use, so
+    /// probing a cost never perturbs the shared fabric).
     fn step_time(&self, cfg: &ServeConfig, step: &StepBatch) -> f64;
 
     /// The parallelism layout this cost models.
@@ -252,6 +255,64 @@ pub trait StepCost: fmt::Debug + Send + Sync {
 
     /// All-reduce implementation used for the TP groups.
     fn ar(&self) -> AllReduceImpl;
+
+    /// Aggregate all-reduce message bytes one step moves through the TP
+    /// group — the volume [`StepCost::step_time_at`] books on the shared
+    /// fabric. The default is the dense accounting (two all-reduces per
+    /// layer on the step's token rows); implementations with different
+    /// per-step message math override it.
+    fn step_collective_bytes(&self, cfg: &ServeConfig, step: &StepBatch) -> (u64, f64) {
+        let msg = (step.token_rows().max(1) * cfg.model.d_model * cfg.model.dtype_bytes) as u64;
+        (msg, 2.0 * cfg.model.n_layers as f64)
+    }
+
+    /// Duration of one engine step *launched at fabric time `at`*: the
+    /// private-fabric [`StepCost::step_time`] plus the queueing delay of
+    /// booking the step's collective bytes on the shared
+    /// [`crate::simnet::Interconnect`] in [`ServeConfig::net`]. With no
+    /// fabric configured — or an idle one — this is exactly `step_time`
+    /// (closed-form parity).
+    fn step_time_at(&self, cfg: &ServeConfig, step: &StepBatch, at: f64) -> f64 {
+        let base = self.step_time(cfg, step);
+        let Some(net) = &cfg.net else { return base };
+        let spec = self.spec();
+        if spec.tp <= 1 {
+            return base;
+        }
+        let (msg, count) = self.step_collective_bytes(cfg, step);
+        if msg == 0 || count <= 0.0 {
+            return base;
+        }
+        let tp_topo = spec.tp_topology(&cfg.topo);
+        // A step cannot occupy more link-seconds than its own duration:
+        // the event-level sim's pipelined collectives beat the α-β closed
+        // forms on big messages, so cap the booked volume at the step's
+        // wire-time capacity. This keeps back-to-back steps from
+        // overlapping their *own* flows — an idle fabric stays exactly
+        // idle — while contention from *other* traffic still lands.
+        let per = crate::collectives::flows::alpha_beta_time(self.ar(), &tp_topo, &cfg.comm, msg);
+        let count = if per > 0.0 {
+            count.min(base / per)
+        } else {
+            count
+        };
+        if count <= 0.0 {
+            return base;
+        }
+        let mut net = net.lock().expect("interconnect lock poisoned");
+        // The engine's clock only moves forward: let the fabric prune
+        // intervals that ended before this step (pre-booked background
+        // traffic stays intact until the run reaches it).
+        net.advance(at);
+        let flow = crate::collectives::flows::allreduce_flow(
+            self.ar(),
+            &tp_topo,
+            &cfg.comm,
+            crate::collectives::flows::FlowSpec { bytes: msg, count, scope: cfg.net_scope, at },
+            &mut net,
+        );
+        base + flow.delay
+    }
 
     /// Canonical deployment string, e.g. `tp8-pp2/NVRAR` — the label every
     /// experiment table and `results/` CSV emits.
@@ -381,6 +442,16 @@ impl StepCost for HybridTpPp {
             * (lt.total() / cfg.persona.compute_efficiency + 2.0 * ar_t)
             + p2p;
         (s.pp + m - 1) as f64 * stage_t + cfg.persona.step_overhead
+    }
+
+    fn step_collective_bytes(&self, cfg: &ServeConfig, step: &StepBatch) -> (u64, f64) {
+        let s = self.spec;
+        let rows = step.token_rows().max(1).div_ceil(s.dp).max(1);
+        let m = self.micro_batches.clamp(1, rows);
+        let mb_rows = rows.div_ceil(m).max(1);
+        let msg = (mb_rows * cfg.model.d_model * cfg.model.dtype_bytes) as u64;
+        let layers = (cfg.model.n_layers.div_ceil(s.pp).max(1) * s.pp) as f64;
+        (msg, 2.0 * layers * m as f64)
     }
 
     fn spec(&self) -> ParallelSpec {

@@ -21,9 +21,22 @@ use crate::engine::persona::Persona;
 use crate::models::ModelConfig;
 use crate::parallel::{cost_for, ParallelSpec, StepCost};
 use crate::perfmodel::GpuSpec;
-use crate::simnet::EventQueue;
+use crate::simnet::{CongestionStats, EventQueue, Interconnect, LinkKind};
 use crate::util::stats::Summary;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+
+/// Shared-fabric handle: one [`Interconnect`] shared by every replica (and
+/// every transfer) of a simulation. `Arc<Mutex<…>>` so cloned
+/// [`ServeConfig`]s reference the *same* fabric — the sharing is the
+/// point.
+pub type Fabric = Arc<Mutex<Interconnect>>;
+
+/// Build a fabric pre-registered with one scope's links for `topo`.
+pub fn fabric_for(scope: usize, topo: &Topology) -> Fabric {
+    let mut net = Interconnect::new();
+    net.add_scope(scope, topo.nodes, topo.intra.beta, topo.inter.beta);
+    Arc::new(Mutex::new(net))
+}
 
 /// Serving configuration: the machine/model context plus the deployment's
 /// [`StepCost`] model. Every replica of a fleet owns one of these, so
@@ -47,12 +60,41 @@ pub struct ServeConfig {
     /// KV pages (per TP group) and tokens per page.
     pub kv_pages: usize,
     pub kv_page_tokens: usize,
+    /// Shared interconnect fabric. `None` (the default) prices every
+    /// collective/transfer as if it had the fabric to itself — the
+    /// closed-form behavior every pre-contention sweep pins. `Some`
+    /// routes the step's collective bytes through per-link fair-share
+    /// occupancy: step times inflate when the links are busy.
+    pub net: Option<Fabric>,
+    /// Link scope this deployment's nodes occupy on the fabric (a fleet
+    /// assigns one scope per replica; standalone `serve` uses 0).
+    pub net_scope: usize,
 }
 
 impl ServeConfig {
-    /// Duration of one engine step for `step` under this deployment.
+    /// Duration of one engine step for `step` under this deployment,
+    /// ignoring fabric contention (also the routing-prediction path —
+    /// never books bytes).
     pub fn step_time(&self, step: &StepBatch) -> f64 {
         self.cost.step_time(self, step)
+    }
+
+    /// Duration of one engine step launched at fabric time `at`: books the
+    /// step's collective bytes on the shared fabric and adds the queueing
+    /// delay. Identical to [`ServeConfig::step_time`] when `net` is `None`
+    /// or the fabric is idle.
+    pub fn step_time_at(&self, step: &StepBatch, at: f64) -> f64 {
+        self.cost.step_time_at(self, step, at)
+    }
+
+    /// Enable the shared-interconnect contention layer with a fresh
+    /// single-scope fabric for this deployment's topology. The fabric is
+    /// consumed by one simulation run (callers may pre-book background
+    /// traffic on it first — that is the contention experiments' lever).
+    pub fn with_contention(mut self) -> Self {
+        self.net = Some(fabric_for(0, &self.topo));
+        self.net_scope = 0;
+        self
     }
 
     /// Canonical deployment string (e.g. `tp8-pp2/NVRAR`) for tables/CSVs.
@@ -107,6 +149,14 @@ pub struct ServeReport {
     pub cache_hit_rate: f64,
     /// Prompt tokens the prefix cache saved (GEMM rows never priced).
     pub cached_tokens: u64,
+    /// Mean utilization of the fabric's intra-node links over the
+    /// makespan (0 with contention disabled).
+    pub net_util_intra: f64,
+    /// Mean utilization of the fabric's inter-node links.
+    pub net_util_inter: f64,
+    /// Congestion-delay accounting across every fabric booking of the run
+    /// (all-zero with contention disabled or an uncontended fabric).
+    pub congestion: CongestionStats,
 }
 
 enum Ev {
@@ -178,7 +228,7 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
             let step = batcher.next_step(&mut kv);
             rejected += batcher.take_rejected().len() as u64;
             if !step.is_empty() {
-                let dur = cfg.step_time(&step);
+                let dur = cfg.step_time_at(&step, q.now());
                 steps += 1;
                 if step.prefills.is_empty() {
                     decode_only += 1;
@@ -192,6 +242,17 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
 
     let pct = |s: &Summary, q: f64| if s.n() == 0 { 0.0 } else { s.percentile(q) };
     let kvs = kv.stats();
+    let (net_util_intra, net_util_inter, congestion) = match &cfg.net {
+        Some(net) => {
+            let n = net.lock().expect("interconnect lock poisoned");
+            (
+                n.utilization(LinkKind::Intra, last_done),
+                n.utilization(LinkKind::Inter, last_done),
+                n.stats().clone(),
+            )
+        }
+        None => (0.0, 0.0, CongestionStats::default()),
+    };
     ServeReport {
         output_throughput: out_tokens as f64 / last_done.max(1e-9),
         total_output_tokens: out_tokens,
@@ -210,6 +271,9 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
             kvs.hit_tokens as f64 / kvs.prompt_tokens as f64
         },
         cached_tokens: kvs.hit_tokens,
+        net_util_intra,
+        net_util_inter,
+        congestion,
     }
 }
 
@@ -239,6 +303,8 @@ pub fn fig9_config(
         chunk_tokens: 0,
         kv_pages: 60_000,
         kv_page_tokens: 16,
+        net: None,
+        net_scope: 0,
     }
 }
 
@@ -492,6 +558,63 @@ mod tests {
             s.ttft_p50,
             u.ttft_p50
         );
+    }
+
+    #[test]
+    fn contention_enabled_idle_fabric_reproduces_closed_form_serving() {
+        // The parity contract: turning the contention layer ON without any
+        // concurrent traffic books every collective byte on the fabric but
+        // changes no step time — the report is bit-identical to the
+        // closed-form run, and not a single booking is delayed.
+        let reqs = small_trace(30);
+        let plain = serve(&tp16(AllReduceImpl::Nvrar, 32), &reqs);
+        let idle = serve(&tp16(AllReduceImpl::Nvrar, 32).with_contention(), &reqs);
+        assert_eq!(plain.makespan.to_bits(), idle.makespan.to_bits());
+        assert_eq!(plain.total_output_tokens, idle.total_output_tokens);
+        assert_eq!(plain.steps, idle.steps);
+        assert!(idle.congestion.bookings > 0, "the fabric must see the traffic");
+        assert_eq!(idle.congestion.delayed, 0, "an idle fabric never delays");
+        assert_eq!(idle.congestion.total_delay, 0.0);
+        assert!(idle.net_util_inter > 0.0, "collective bytes must register on the NICs");
+        assert_eq!(plain.congestion.bookings, 0, "disabled layer books nothing");
+    }
+
+    #[test]
+    fn background_transfers_on_shared_links_inflate_serving() {
+        // Concurrent migration-sized transfers on the inter-node NIC slow
+        // every decode all-reduce: same trace, strictly longer makespan,
+        // counted congestion — and still deterministic.
+        use crate::simnet::{LinkId, LinkKind};
+        let reqs = small_trace(30);
+        let busy_cfg = || {
+            let cfg = tp16(AllReduceImpl::Nvrar, 32).with_contention();
+            {
+                let net = cfg.net.as_ref().expect("contention enabled");
+                let mut net = net.lock().unwrap();
+                let link = LinkId { scope: 0, node: 0, kind: LinkKind::Inter };
+                let mut t = 0.0;
+                for _ in 0..1500 {
+                    // Back-to-back 256 MB drain-migration-sized flows:
+                    // continuous single-flow background occupancy over the
+                    // first ~17 s — every step in that window contends.
+                    t = net.book(link, t, 256.0 * 1024.0 * 1024.0).end;
+                }
+            }
+            cfg
+        };
+        let base = serve(&tp16(AllReduceImpl::Nvrar, 32).with_contention(), &reqs);
+        let busy = serve(&busy_cfg(), &reqs);
+        assert_eq!(base.total_output_tokens, busy.total_output_tokens);
+        assert!(busy.congestion.delayed > 0, "shared links must register contention");
+        assert!(busy.congestion.total_delay > 0.0);
+        assert!(
+            busy.makespan > base.makespan,
+            "contended fabric must slow serving: {} vs {}",
+            busy.makespan,
+            base.makespan
+        );
+        let again = serve(&busy_cfg(), &reqs);
+        assert_eq!(busy.makespan.to_bits(), again.makespan.to_bits(), "still deterministic");
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Discrete-event simulation substrate.
 //!
-//! Two pieces:
+//! Three pieces:
 //!
 //! - [`EventQueue`]: a time-ordered event heap with stable FIFO tie-breaking.
 //!   Callers own the state machine and `match` on their payload type — no
@@ -12,9 +12,17 @@
 //!   occupancy interval respecting both the caller's readiness and the
 //!   resource's queue — the building block for α-β link contention in the
 //!   collective simulations.
+//! - [`Interconnect`]: a **shared fabric** of per-node links (intra-node
+//!   NVLink, inter-node NIC) with fair-share bandwidth occupancy. Every
+//!   byte a simulation moves — collective phases, KV handoffs, drain
+//!   migrations — books onto a [`LinkId`], and concurrent flows on the
+//!   same link slow each other down ([`Interconnect::book`]). With an idle
+//!   link a booking completes in exactly `bytes/β` seconds, which is what
+//!   keeps the contention path bit-compatible with the closed-form α-β
+//!   models when nothing else is on the fabric.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, BTreeMap};
 
 /// One scheduled event.
 struct Entry<T> {
@@ -37,11 +45,11 @@ impl<T> PartialOrd for Entry<T> {
 impl<T> Ord for Entry<T> {
     fn cmp(&self, other: &Self) -> Ordering {
         // Reverse for min-heap: earliest time first, then insertion order.
-        other
-            .at
-            .partial_cmp(&self.at)
-            .unwrap_or(Ordering::Equal)
-            .then(other.seq.cmp(&self.seq))
+        // `total_cmp` (not `partial_cmp` + a silent Equal fallback) makes
+        // the order *total*: a NaN timestamp can no longer collapse into a
+        // heap-shape-dependent tie, so equal-time pops are always stable
+        // FIFO — the property the contention results depend on.
+        other.at.total_cmp(&self.at).then(other.seq.cmp(&self.seq))
     }
 }
 
@@ -139,6 +147,270 @@ impl Server {
     }
 }
 
+// ---------------------------------------------------------------------
+// Shared interconnect: per-link fair-share bandwidth occupancy
+// ---------------------------------------------------------------------
+
+/// Link class of a fabric link.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LinkKind {
+    /// Intra-node (NVLink-class).
+    Intra,
+    /// Inter-node (scale-out NIC).
+    Inter,
+}
+
+/// One directedless link of the shared fabric: a `scope` (one replica's /
+/// one TP group's slice of the cluster), a node rank within that scope,
+/// and the link class. Transfers between scopes book the source's and the
+/// target's inter-node links; a collective books every node of its scope.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct LinkId {
+    pub scope: usize,
+    pub node: usize,
+    pub kind: LinkKind,
+}
+
+/// Outcome of one fabric booking.
+#[derive(Clone, Copy, Debug)]
+pub struct Flow {
+    /// When the last byte has moved.
+    pub end: f64,
+    /// Idle-link transfer seconds (`bytes/β`).
+    pub ideal: f64,
+    /// Queueing delay beyond `ideal` caused by concurrent flows
+    /// (exactly 0.0 when the link was uncontended for the whole transfer).
+    pub delay: f64,
+}
+
+/// Congestion accounting across every booking of a fabric: how many flows
+/// were delayed, by how much, and a decade histogram of the delays.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CongestionStats {
+    /// All bookings (delayed or not).
+    pub bookings: u64,
+    /// Bookings that finished later than their idle-link time.
+    pub delayed: u64,
+    /// Total delay seconds across delayed bookings.
+    pub total_delay: f64,
+    /// Largest single delay.
+    pub max_delay: f64,
+    /// Delay histogram, decade buckets: `<1µs, <10µs, <100µs, <1ms,
+    /// <10ms, <100ms, ≥100ms` (see [`CongestionStats::BUCKETS`]).
+    pub hist: [u64; 7],
+}
+
+impl CongestionStats {
+    /// Upper bounds (seconds) of the histogram buckets; the last bucket is
+    /// unbounded.
+    pub const BUCKETS: [f64; 6] = [1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1];
+
+    /// Human labels matching [`CongestionStats::hist`].
+    pub fn bucket_labels() -> [&'static str; 7] {
+        ["<1us", "<10us", "<100us", "<1ms", "<10ms", "<100ms", ">=100ms"]
+    }
+
+    fn record(&mut self, delay: f64) {
+        self.bookings += 1;
+        if delay <= 0.0 {
+            return;
+        }
+        self.delayed += 1;
+        self.total_delay += delay;
+        self.max_delay = self.max_delay.max(delay);
+        let idx = Self::BUCKETS.iter().position(|&b| delay < b).unwrap_or(6);
+        self.hist[idx] += 1;
+    }
+
+    /// Mean delay over delayed bookings (0 when none).
+    pub fn mean_delay(&self) -> f64 {
+        if self.delayed == 0 {
+            0.0
+        } else {
+            self.total_delay / self.delayed as f64
+        }
+    }
+}
+
+/// One link's occupancy state.
+#[derive(Clone, Debug)]
+struct Link {
+    /// Bandwidth β in bytes/second.
+    beta: f64,
+    /// Booked `[start, end)` intervals; intervals ending before the
+    /// fabric's [`Interconnect::advance`] watermark are pruned lazily.
+    active: Vec<(f64, f64)>,
+    /// Total idle-equivalent busy seconds (Σ bytes/β) — utilization.
+    busy_ideal: f64,
+    /// Total bytes carried.
+    bytes: f64,
+}
+
+/// Shared-fabric bandwidth tracker with **fair-share progress**: a new
+/// flow's instantaneous rate at time `τ` is `β / (1 + k(τ))` where `k(τ)`
+/// is the number of previously-booked flows overlapping `τ`. Booked flows'
+/// completion times are immutable (the newcomer pays for the sharing),
+/// which keeps every booking O(overlapping flows), deterministic, and
+/// *monotone*: adding traffic can only push later bookings out, never pull
+/// them in. On an idle link the rate is exactly β, so the booking
+/// completes in exactly `bytes/β` seconds with `delay == 0.0` — the
+/// closed-form α-β parity guarantee the integration tests pin.
+///
+/// Bookings may arrive in any time order (experiments pre-book background
+/// traffic across the whole horizon, then simulations book flows from
+/// t = 0); nothing is forgotten until the owner declares time progress
+/// via [`Interconnect::advance`], which is what keeps per-link state
+/// bounded over long runs.
+#[derive(Clone, Debug)]
+pub struct Interconnect {
+    links: BTreeMap<LinkId, Link>,
+    stats: CongestionStats,
+    /// No future booking will be ready before this time; intervals ending
+    /// at or before it are unreachable and pruned lazily.
+    watermark: f64,
+}
+
+impl Default for Interconnect {
+    fn default() -> Self {
+        Interconnect {
+            links: BTreeMap::new(),
+            stats: CongestionStats::default(),
+            watermark: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl Interconnect {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Promise that no future booking will be ready before `t` (monotone —
+    /// earlier values are ignored). Simulations call this with their event
+    /// clock so finished intervals can be pruned; pre-booking background
+    /// traffic before a run simply never advances.
+    pub fn advance(&mut self, t: f64) {
+        self.watermark = self.watermark.max(t);
+    }
+
+    /// Declare one link (idempotent; re-adding keeps existing occupancy).
+    pub fn add_link(&mut self, id: LinkId, beta: f64) {
+        assert!(beta > 0.0, "link {id:?} needs positive bandwidth");
+        self.links
+            .entry(id)
+            .or_insert(Link { beta, active: Vec::new(), busy_ideal: 0.0, bytes: 0.0 });
+    }
+
+    /// Declare one scope's links: an intra-node and an inter-node link per
+    /// node rank — the fabric slice one replica (or one standalone
+    /// topology) occupies.
+    pub fn add_scope(&mut self, scope: usize, nodes: usize, intra_beta: f64, inter_beta: f64) {
+        for node in 0..nodes.max(1) {
+            self.add_link(LinkId { scope, node, kind: LinkKind::Intra }, intra_beta);
+            self.add_link(LinkId { scope, node, kind: LinkKind::Inter }, inter_beta);
+        }
+    }
+
+    /// Move `bytes` over `id` starting no earlier than `ready`, sharing
+    /// bandwidth fairly with every already-booked overlapping flow
+    /// (whether booked for the past, the present, or the future).
+    /// Panics on an undeclared link — a wiring bug, not a load condition.
+    pub fn book(&mut self, id: LinkId, ready: f64, bytes: f64) -> Flow {
+        let cut = self.watermark;
+        let link = self
+            .links
+            .get_mut(&id)
+            .unwrap_or_else(|| panic!("booking on undeclared link {id:?}"));
+        debug_assert!(bytes >= 0.0 && ready.is_finite());
+        let ideal = bytes / link.beta;
+        if bytes <= 0.0 {
+            self.stats.record(0.0);
+            return Flow { end: ready, ideal: 0.0, delay: 0.0 };
+        }
+        // Lazily drop intervals no future booking can reach. NOT keyed to
+        // this booking's `ready`: a later call may legitimately book at an
+        // earlier time (pre-booked background traffic), and must still see
+        // every interval it overlaps.
+        link.active.retain(|&(_, e)| e > cut);
+        // Sweep the load profile: +1 at each overlap start, -1 at each
+        // end; intervals fully before `ready` cannot overlap this flow.
+        let mut events: Vec<(f64, i32)> = Vec::with_capacity(2 * link.active.len());
+        for &(s, e) in &link.active {
+            if e <= ready {
+                continue;
+            }
+            events.push((s.max(ready), 1));
+            events.push((e, -1));
+        }
+        events.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut t = ready;
+        let mut k: i32 = 0;
+        let mut remaining = bytes;
+        let mut contended = false;
+        let mut i = 0;
+        while remaining > 0.0 {
+            while i < events.len() && events[i].0 <= t {
+                k += events[i].1;
+                i += 1;
+            }
+            if k > 0 {
+                contended = true;
+            }
+            let rate = link.beta / (1.0 + k as f64);
+            let next = if i < events.len() { events[i].0 } else { f64::INFINITY };
+            let span = next - t;
+            if span * rate >= remaining {
+                t += remaining / rate;
+                remaining = 0.0;
+            } else {
+                remaining -= span * rate;
+                t = next;
+            }
+        }
+        // Uncontended bookings complete in exactly bytes/β: force the
+        // arithmetic so `delay` is a true 0.0, not floating-point dust —
+        // a contention-enabled-but-idle fabric reproduces the standalone
+        // α-β numbers bit for bit.
+        let end = if contended { t } else { ready + ideal };
+        let delay = if contended { (end - ready - ideal).max(0.0) } else { 0.0 };
+        link.active.push((ready, end));
+        link.busy_ideal += ideal;
+        link.bytes += bytes;
+        self.stats.record(delay);
+        Flow { end, ideal, delay }
+    }
+
+    /// Mean utilization of every declared link of `kind` over `[0,
+    /// horizon]`: idle-equivalent busy seconds / (links × horizon),
+    /// capped at 1.0 — traffic booked beyond the horizon (pre-booked
+    /// background outlasting a short run) would otherwise over-count.
+    pub fn utilization(&self, kind: LinkKind, horizon: f64) -> f64 {
+        if horizon <= 0.0 {
+            return 0.0;
+        }
+        let (busy, n) = self
+            .links
+            .iter()
+            .filter(|(id, _)| id.kind == kind)
+            .fold((0.0, 0usize), |(b, n), (_, l)| (b + l.busy_ideal, n + 1));
+        if n == 0 {
+            0.0
+        } else {
+            (busy / (n as f64 * horizon)).min(1.0)
+        }
+    }
+
+    /// Total bytes carried by links of `kind`.
+    pub fn bytes_carried(&self, kind: LinkKind) -> f64 {
+        self.links.iter().filter(|(id, _)| id.kind == kind).map(|(_, l)| l.bytes).sum()
+    }
+
+    /// Fabric-wide congestion accounting.
+    pub fn stats(&self) -> &CongestionStats {
+        &self.stats
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -206,5 +478,165 @@ mod tests {
             n += 1;
         }
         assert_eq!(n, 10_000);
+    }
+
+    #[test]
+    fn property_equal_timestamps_pop_in_stable_fifo_order() {
+        // The contention results are only reproducible if simultaneous
+        // events (a migration landing and a step completing at the same
+        // instant) always pop in insertion order. Draw times from a small
+        // discrete set so ties are dense, and check the pop order is the
+        // stable sort of the push order.
+        use crate::util::prop::{check, Gen};
+        check("event queue ties are FIFO", 60, |g: &mut Gen| {
+            let n = g.usize(2, 200);
+            let mut q = EventQueue::new();
+            let mut pushed: Vec<(f64, usize)> = Vec::with_capacity(n);
+            for i in 0..n {
+                let at = g.usize(0, 4) as f64 * 0.25;
+                q.push(at, i);
+                pushed.push((at, i));
+            }
+            let mut expect = pushed.clone();
+            expect.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            let popped: Vec<(f64, usize)> =
+                std::iter::from_fn(|| q.pop()).collect();
+            assert_eq!(popped, expect, "pop order must be stable FIFO per timestamp");
+        });
+    }
+
+    // -- Interconnect ---------------------------------------------------
+
+    fn one_link() -> (Interconnect, LinkId) {
+        let mut net = Interconnect::new();
+        let id = LinkId { scope: 0, node: 0, kind: LinkKind::Inter };
+        net.add_link(id, 1e9); // 1 GB/s
+        (net, id)
+    }
+
+    #[test]
+    fn idle_link_booking_is_exact_alpha_beta_with_zero_delay() {
+        let (mut net, id) = one_link();
+        let f = net.book(id, 2.0, 1e9);
+        assert_eq!(f.end, 3.0);
+        assert_eq!(f.delay, 0.0);
+        assert_eq!(f.ideal, 1.0);
+        // Non-overlapping follow-up is also idle.
+        let g = net.book(id, 10.0, 5e8);
+        assert_eq!(g.end, 10.5);
+        assert_eq!(g.delay, 0.0);
+        assert_eq!(net.stats().delayed, 0);
+        assert_eq!(net.stats().bookings, 2);
+    }
+
+    #[test]
+    fn overlapping_flows_fair_share_the_link() {
+        let (mut net, id) = one_link();
+        // Flow A occupies [0, 1).
+        net.book(id, 0.0, 1e9);
+        // Flow B starts at 0 too: shares β/2 while A is present (its whole
+        // first second), then finishes alone: 1e9 bytes = 0.5e9 in [0,1)
+        // at rate 0.5 GB/s, remaining 0.5e9 at 1 GB/s -> end 1.5.
+        let b = net.book(id, 0.0, 1e9);
+        assert!((b.end - 1.5).abs() < 1e-12, "end {}", b.end);
+        assert!((b.delay - 0.5).abs() < 1e-12, "delay {}", b.delay);
+        assert_eq!(net.stats().delayed, 1);
+        assert_eq!(net.stats().hist[6], 1, "0.5s delay lands in the top bucket");
+    }
+
+    #[test]
+    fn future_bookings_slow_flows_that_overlap_them() {
+        let (mut net, id) = one_link();
+        // A transfer parked in the future (a phase-2 booking made earlier
+        // in the step) still counts against flows that overlap it.
+        net.book(id, 1.0, 1e9); // occupies [1, 2)
+        let f = net.book(id, 0.5, 1e9);
+        // [0.5, 1): 0.5e9 moved alone; remaining 0.5e9 at half rate -> 1s.
+        assert!((f.end - 2.0).abs() < 1e-12, "end {}", f.end);
+        assert!((f.delay - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn monotone_adding_background_never_speeds_a_booking() {
+        use crate::util::prop::{check, Gen};
+        check("fair-share booking is monotone in load", 40, |g: &mut Gen| {
+            let n_bg = g.usize(0, 6);
+            let bg: Vec<(f64, f64)> = (0..n_bg)
+                .map(|_| (g.f64(0.0, 2.0), g.f64(1e6, 2e9)))
+                .collect();
+            let ready = g.f64(0.0, 2.0);
+            let bytes = g.f64(1e6, 1e9);
+            let mut last = 0.0;
+            for take in 0..=n_bg {
+                let (mut net, id) = one_link();
+                // Background in any time order relative to the measured
+                // flow — bookings are order-independent w.r.t. `ready`.
+                let mut slice: Vec<_> = bg[..take].to_vec();
+                slice.sort_by(|a, b| a.0.total_cmp(&b.0));
+                for &(t, b) in &slice {
+                    net.book(id, t, b);
+                }
+                let f = net.book(id, ready, bytes);
+                assert!(
+                    f.end >= last - 1e-12,
+                    "more background made the flow finish earlier: {} < {last}",
+                    f.end
+                );
+                last = last.max(f.end);
+            }
+        });
+    }
+
+    #[test]
+    fn pre_booked_background_is_not_forgotten_by_earlier_bookings() {
+        // Regression: experiments pre-book background transfers across the
+        // whole horizon, then simulate flows from t = 0. Booking at a time
+        // earlier than already-booked intervals must still see ALL of them
+        // (a prune keyed to the caller's ready-time used to erase every
+        // predecessor); only an explicit advance() retires history.
+        let (mut net, id) = one_link();
+        net.book(id, 0.0, 1e9); // [0, 1)
+        net.book(id, 1.0, 1e9); // [1, 2) — used to prune [0, 1)
+        net.book(id, 2.0, 1e9); // [2, 3) — used to prune [1, 2)
+        // A flow from t = 0 spanning all three: β/2 over [0, 3) moves
+        // 1.5e9, the remaining 1.5e9 alone -> end 4.5.
+        let f = net.book(id, 0.0, 3e9);
+        assert!((f.end - 4.5).abs() < 1e-12, "end {}", f.end);
+        assert!((f.delay - 1.5).abs() < 1e-12, "delay {}", f.delay);
+        // advance() is what retires history: once the clock passes them,
+        // a fresh booking pays nothing.
+        net.advance(10.0);
+        let g = net.book(id, 10.0, 1e9);
+        assert_eq!(g.delay, 0.0);
+    }
+
+    #[test]
+    fn scope_registration_and_utilization() {
+        let mut net = Interconnect::new();
+        net.add_scope(3, 2, 200e9, 20e9);
+        let nic = LinkId { scope: 3, node: 1, kind: LinkKind::Inter };
+        let f = net.book(nic, 0.0, 20e9); // 1 second of NIC time
+        assert_eq!(f.delay, 0.0);
+        // 2 inter links, one busy for 1s over a 2s horizon -> 25%.
+        assert!((net.utilization(LinkKind::Inter, 2.0) - 0.25).abs() < 1e-12);
+        assert_eq!(net.utilization(LinkKind::Intra, 2.0), 0.0);
+        assert_eq!(net.bytes_carried(LinkKind::Inter), 20e9);
+        // Re-adding a scope keeps occupancy (idempotent).
+        net.add_scope(3, 2, 200e9, 20e9);
+        assert_eq!(net.bytes_carried(LinkKind::Inter), 20e9);
+    }
+
+    #[test]
+    #[should_panic(expected = "undeclared link")]
+    fn booking_undeclared_link_is_a_wiring_bug() {
+        let mut net = Interconnect::new();
+        net.book(LinkId { scope: 9, node: 0, kind: LinkKind::Intra }, 0.0, 1.0);
+    }
+
+    #[test]
+    fn zero_byte_booking_is_free() {
+        let (mut net, id) = one_link();
+        let f = net.book(id, 1.0, 0.0);
+        assert_eq!((f.end, f.ideal, f.delay), (1.0, 0.0, 0.0));
     }
 }

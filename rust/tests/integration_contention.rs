@@ -1,0 +1,236 @@
+//! Integration: the shared-interconnect contention layer's acceptance
+//! contract.
+//!
+//! 1. **Closed-form parity** — on an idle fabric the event-driven flow
+//!    path reproduces the α-β closed forms (Eqs 1–6) within 1e-9, and an
+//!    enabled-but-idle fabric leaves serving/fleet results bit-identical
+//!    to the pre-contention path.
+//! 2. **Monotonicity** — adding concurrent drain migrations never
+//!    *decreases* decode all-reduce time on shared links (property-tested
+//!    over random background transfer sets).
+//! 3. **The new scenario class** — concurrent KV migration measurably
+//!    inflates decode all-reduce / step time, end-to-end through the
+//!    fleet, deterministically.
+
+use yalis::cluster::presets;
+use yalis::collectives::flows::{allreduce_flow, FlowSpec};
+use yalis::collectives::sim::CommConfig;
+use yalis::collectives::{model, AllReduceImpl};
+use yalis::fleet::{run_fleet, FleetConfig};
+use yalis::parallel::ParallelSpec;
+use yalis::serving::{fig9_config, ServeConfig};
+use yalis::simnet::{Interconnect, LinkId, LinkKind};
+use yalis::trace::TraceSpec;
+use yalis::util::prop::{check, Gen};
+
+fn fabric_for(t: &yalis::cluster::Topology) -> Interconnect {
+    let mut net = Interconnect::new();
+    net.add_scope(0, t.nodes, t.intra.beta, t.inter.beta);
+    net
+}
+
+fn nic0() -> LinkId {
+    LinkId { scope: 0, node: 0, kind: LinkKind::Inter }
+}
+
+/// Acceptance: zero-contention event-driven times match the closed-form
+/// α-β models within 1e-9 — for every implementation, machine, node count
+/// and the paper's message-size band.
+#[test]
+fn zero_contention_flow_times_match_closed_forms_within_1e9() {
+    for machine in ["perlmutter", "vista"] {
+        let c = CommConfig::for_machine(machine);
+        for nodes in [1usize, 2, 4, 8, 16] {
+            let t = presets::by_name(machine, nodes);
+            for kb in [64u64, 128, 512, 1024, 2048] {
+                let bytes = kb * 1024;
+                let cases: [(AllReduceImpl, f64); 5] = [
+                    (AllReduceImpl::NcclRing, model::ring(&t, bytes)),
+                    (AllReduceImpl::NcclTree, model::tree(&t, bytes)),
+                    (
+                        AllReduceImpl::NcclAuto,
+                        model::ring(&t, bytes).min(model::tree(&t, bytes)),
+                    ),
+                    (AllReduceImpl::Mpi, model::recursive_doubling_flat(&t, bytes)),
+                    (AllReduceImpl::Nvrar, model::nvrar(&t, bytes, c.eta)),
+                ];
+                for (which, expect) in cases {
+                    let mut net = fabric_for(&t);
+                    let f = allreduce_flow(
+                        which,
+                        &t,
+                        &c,
+                        FlowSpec { bytes, count: 1.0, scope: 0, at: 0.0 },
+                        &mut net,
+                    );
+                    assert!(
+                        (f.alpha_beta - expect).abs() < 1e-9,
+                        "{machine} N={nodes} {kb}KB {which:?}: flow {} vs model {expect}",
+                        f.alpha_beta
+                    );
+                    assert_eq!(f.delay, 0.0, "{machine} N={nodes} {kb}KB {which:?}");
+                    assert!((f.total() - expect).abs() < 1e-9);
+                }
+            }
+        }
+    }
+}
+
+/// Acceptance: adding concurrent drain migrations never decreases decode
+/// all-reduce time on shared links — property-tested over random
+/// background transfer sets, nested one transfer at a time.
+#[test]
+fn property_concurrent_migrations_never_speed_up_allreduce() {
+    check("contention is monotone in background traffic", 30, |g: &mut Gen| {
+        let machine = *g.pick(&["perlmutter", "vista"]);
+        let nodes = *g.pick(&[2usize, 4, 8]);
+        let t = presets::by_name(machine, nodes);
+        let c = CommConfig::for_machine(machine);
+        let bytes = *g.pick(&[128u64, 512, 2048]) * 1024;
+        let ar = *g.pick(&[AllReduceImpl::Nvrar, AllReduceImpl::NcclAuto, AllReduceImpl::Mpi]);
+        let at = g.f64(0.0, 0.05);
+        let n_bg = g.usize(0, 8);
+        let mut bg: Vec<(f64, f64)> = (0..n_bg)
+            .map(|_| (g.f64(0.0, 0.05), g.f64(1e6, 512e6)))
+            .collect();
+        bg.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut last = 0.0f64;
+        for take in 0..=n_bg {
+            let mut net = fabric_for(&t);
+            for &(start, vol) in bg.iter().take(take) {
+                net.book(nic0(), start, vol);
+            }
+            let f = allreduce_flow(
+                ar,
+                &t,
+                &c,
+                FlowSpec { bytes, count: 1.0, scope: 0, at },
+                &mut net,
+            );
+            assert!(
+                f.total() >= last - 1e-12,
+                "{machine} N={nodes} {ar:?}: background made the all-reduce faster \
+                 ({} < {last})",
+                f.total()
+            );
+            last = last.max(f.total());
+        }
+    });
+}
+
+/// The direct mechanism claim: one in-flight KV migration on the shared
+/// NIC strictly inflates an overlapping decode all-reduce, and the
+/// inflation lands in the congestion accounting.
+#[test]
+fn concurrent_migration_inflates_decode_allreduce() {
+    let t = presets::perlmutter(4); // 16 GPUs
+    let c = CommConfig::perlmutter();
+    let bytes = 512 * 1024;
+    let mut idle = fabric_for(&t);
+    let base = allreduce_flow(
+        AllReduceImpl::Nvrar,
+        &t,
+        &c,
+        FlowSpec { bytes, count: 1.0, scope: 0, at: 0.0 },
+        &mut idle,
+    );
+    let mut busy = fabric_for(&t);
+    busy.book(nic0(), 0.0, 512.0 * 1024.0 * 1024.0); // one migrating context
+    let contended = allreduce_flow(
+        AllReduceImpl::Nvrar,
+        &t,
+        &c,
+        FlowSpec { bytes, count: 1.0, scope: 0, at: 0.0 },
+        &mut busy,
+    );
+    assert!(
+        contended.total() > base.total() * 1.05,
+        "migration must measurably inflate the all-reduce: {} vs {}",
+        contended.total(),
+        base.total()
+    );
+    assert!(busy.stats().delayed > 0);
+    assert!(busy.stats().total_delay > 0.0);
+    assert_eq!(idle.stats().delayed, 0);
+}
+
+fn base_cfg(conc: usize) -> ServeConfig {
+    fig9_config(ParallelSpec::tp(16), AllReduceImpl::Nvrar, conc, "perlmutter", 16)
+}
+
+/// Contention disabled is the pre-PR fleet, bit for bit: the default
+/// `FleetConfig` has `contention: false`, books nothing, and reports
+/// all-zero congestion.
+#[test]
+fn fleet_contention_off_books_nothing_and_stays_deterministic() {
+    let mut spec = TraceSpec::burstgpt();
+    spec.num_prompts = 60;
+    spec.rate = 8.0;
+    let reqs = spec.generate();
+    let cfg = FleetConfig::new(base_cfg(32), 3).disaggregated(1);
+    assert!(!cfg.contention, "contention must be opt-in");
+    let a = run_fleet(&cfg, &reqs);
+    let b = run_fleet(&cfg, &reqs);
+    assert_eq!(a, b);
+    assert_eq!(a.congestion.bookings, 0);
+    assert_eq!(a.net_util_inter, 0.0);
+}
+
+/// End-to-end: a disaggregated fleet's continuous prefill→decode KV
+/// handoffs share the NICs with the decode all-reduces. With contention
+/// on, the fabric registers the traffic, congestion delays accumulate,
+/// serving slows measurably versus the closed-form pricing of the *same*
+/// trace — and the whole thing is still bit-deterministic.
+#[test]
+fn fleet_handoff_traffic_inflates_decode_under_contention() {
+    let mut spec = TraceSpec::burstgpt();
+    spec.num_prompts = 120;
+    spec.rate = 12.0;
+    let reqs = spec.generate();
+    let build = |contention: bool| {
+        FleetConfig::new(base_cfg(32), 2).disaggregated(1).with_contention(contention)
+    };
+    let off = run_fleet(&build(false), &reqs);
+    let on = run_fleet(&build(true), &reqs);
+    assert_eq!(off.completed, 120);
+    assert_eq!(on.completed, 120);
+    assert_eq!(off.output_tokens, on.output_tokens, "contention never loses tokens");
+    assert!(on.congestion.bookings > 0, "collectives and handoffs must book the fabric");
+    assert!(
+        on.congestion.delayed > 0,
+        "handoff traffic must contend with decode all-reduces: {:?}",
+        on.congestion
+    );
+    assert!(on.congestion.total_delay > 0.0);
+    assert!(on.net_util_inter > 0.0);
+    // Congestion slows individual steps/transfers; scheduling can reorder
+    // around the margins, so allow sub-percent noise on the aggregate.
+    assert!(
+        on.makespan >= off.makespan * 0.99,
+        "shared links cannot make the fleet meaningfully faster: {} vs {}",
+        on.makespan,
+        off.makespan
+    );
+    let again = run_fleet(&build(true), &reqs);
+    assert_eq!(on, again, "contention runs must be bit-deterministic");
+}
+
+/// Scripted drain migration under contention: the migration bytes ride
+/// the shared NICs and register as congestion against the surviving
+/// replicas' decode traffic.
+#[test]
+fn drain_migration_rides_the_shared_fabric() {
+    let mut spec = TraceSpec::burstgpt();
+    spec.num_prompts = 60;
+    spec.rate = 10.0;
+    // Long decodes so real KV context is in flight at drain time.
+    spec.output = yalis::trace::LenDist { median: 300.0, sigma: 0.3, min: 64, max: 600 };
+    let reqs = spec.generate();
+    let cfg = FleetConfig::new(base_cfg(16), 3).with_drain_at(4.0, 2).with_contention(true);
+    let rep = run_fleet(&cfg, &reqs);
+    assert_eq!(rep.completed, 60);
+    assert_eq!(rep.drains, 1);
+    assert!(rep.migrations > 0, "in-flight decodes must migrate");
+    assert!(rep.congestion.bookings > 0);
+    assert!(rep.net_util_inter > 0.0, "migration bytes must land on the NICs");
+}
