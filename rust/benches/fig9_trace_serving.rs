@@ -3,7 +3,7 @@
 use yalis::coordinator::experiments::fig9_trace_serving;
 
 fn main() {
-    let t = fig9_trace_serving(0);
+    let t = fig9_trace_serving(0, None);
     t.print();
     t.write_csv("results/fig9_trace_serving.csv").unwrap();
 }

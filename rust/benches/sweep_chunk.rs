@@ -5,7 +5,7 @@
 use yalis::coordinator::experiments::sweep_chunk;
 
 fn main() {
-    let t = sweep_chunk("70b", "perlmutter", 16);
+    let t = sweep_chunk("70b", "perlmutter", 16, None);
     t.print();
     t.write_csv("results/sweep_chunk.csv").unwrap();
 }

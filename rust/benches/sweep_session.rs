@@ -6,7 +6,7 @@
 use yalis::coordinator::experiments;
 
 fn main() {
-    let t = experiments::sweep_session("70b", "perlmutter", 16);
+    let t = experiments::sweep_session("70b", "perlmutter", 16, None);
     t.print();
     t.write_csv("results/sweep_session.csv").unwrap();
     println!("-> results/sweep_session.csv");

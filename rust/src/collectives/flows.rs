@@ -29,6 +29,7 @@ use crate::cluster::Topology;
 use crate::collectives::model::log2_steps;
 use crate::collectives::sim::{CommConfig, NVRAR_FALLBACK_BYTES};
 use crate::collectives::{model, AllReduceImpl};
+use crate::obs::{ArgV, ObsSink, Track};
 use crate::simnet::{Interconnect, LinkId, LinkKind};
 
 /// One fabric call: the per-collective message size, how many back-to-back
@@ -70,20 +71,31 @@ impl FlowTiming {
 /// One sequential phase of a collective on the fabric: `latency` α-seconds
 /// plus `bytes` booked on every node link of `kind` in the scope (the
 /// phases of one collective run on all of its nodes' links symmetrically;
-/// a phase completes when its slowest link does).
+/// a phase completes when its slowest link does). `name` is the phase's
+/// label in the event timeline (`"{algo}.{name}"` spans on link tracks).
 struct Phase {
+    name: &'static str,
     kind: LinkKind,
     latency: f64,
     bytes: f64,
 }
 
-fn run_phases(phases: &[Phase], t: &Topology, s: FlowSpec, net: &mut Interconnect) -> FlowTiming {
+fn run_phases(
+    phases: &[Phase],
+    algo: &'static str,
+    t: &Topology,
+    s: FlowSpec,
+    net: &mut Interconnect,
+    obs: Option<&ObsSink>,
+) -> FlowTiming {
     let mut cursor = s.at;
     let mut alpha_beta = 0.0;
     let mut delay = 0.0;
     let count = if s.count > 0.0 { s.count } else { 1.0 };
     for p in phases {
+        let phase_start = cursor;
         let mut ideal = 0.0;
+        let mut phase_delay = 0.0;
         if p.bytes > 0.0 {
             let mut phase_end = cursor;
             for node in 0..t.nodes.max(1) {
@@ -95,13 +107,27 @@ fn run_phases(phases: &[Phase], t: &Topology, s: FlowSpec, net: &mut Interconnec
                 ideal = f.ideal;
                 phase_end = phase_end.max(f.end);
             }
-            delay += phase_end - cursor - ideal;
+            phase_delay = phase_end - cursor - ideal;
+            delay += phase_delay;
             cursor = phase_end;
         }
         // `alpha_beta` reports the per-collective closed form: latency is
         // per-call already, the booked bandwidth term is aggregate.
         alpha_beta += p.latency + ideal / count;
         cursor += p.latency;
+        if let Some(sink) = obs {
+            sink.lock().unwrap().span(
+                Track::Link { scope: s.scope, kind: p.kind },
+                &format!("{algo}.{}", p.name),
+                phase_start,
+                cursor - phase_start,
+                vec![
+                    ("bytes", ArgV::U((count * p.bytes) as u64)),
+                    ("count", ArgV::F(count)),
+                    ("delay", ArgV::F(phase_delay)),
+                ],
+            );
+        }
     }
     FlowTiming { alpha_beta, delay, end: cursor }
 }
@@ -117,67 +143,111 @@ pub fn allreduce_flow(
     spec: FlowSpec,
     net: &mut Interconnect,
 ) -> FlowTiming {
+    allreduce_flow_obs(which, t, c, spec, net, None)
+}
+
+/// [`allreduce_flow`] with an optional event sink: each booked phase is
+/// also recorded as a span on its link track (name `"{algo}.{phase}"`,
+/// args `bytes`/`count`/`delay`). Passing `None` is exactly
+/// [`allreduce_flow`] — no recording, identical timing.
+pub fn allreduce_flow_obs(
+    which: AllReduceImpl,
+    t: &Topology,
+    c: &CommConfig,
+    spec: FlowSpec,
+    net: &mut Interconnect,
+    obs: Option<&ObsSink>,
+) -> FlowTiming {
     use AllReduceImpl::*;
     match which {
-        NcclRing => ring_flow(t, spec, net),
-        NcclTree => tree_flow(t, spec, net),
+        NcclRing => ring_flow(t, spec, net, obs),
+        NcclTree => tree_flow(t, spec, net, obs),
         NcclAuto => {
             // Pick by the closed forms, then book only the winner.
             if model::ring(t, spec.bytes) <= model::tree(t, spec.bytes) {
-                ring_flow(t, spec, net)
+                ring_flow(t, spec, net, obs)
             } else {
-                tree_flow(t, spec, net)
+                tree_flow(t, spec, net, obs)
             }
         }
-        Mpi => rd_flat_flow(t, spec, net),
+        Mpi => rd_flat_flow(t, spec, net, obs),
         Nvrar => {
             if spec.bytes > NVRAR_FALLBACK_BYTES {
-                allreduce_flow(NcclAuto, t, c, spec, net)
+                allreduce_flow_obs(NcclAuto, t, c, spec, net, obs)
             } else {
-                nvrar_flow(t, c, spec, net)
+                nvrar_flow(t, c, spec, net, obs)
             }
         }
     }
 }
 
 /// Eq. (1): flat ring, gated by the inter-node hops.
-fn ring_flow(t: &Topology, s: FlowSpec, net: &mut Interconnect) -> FlowTiming {
+fn ring_flow(
+    t: &Topology,
+    s: FlowSpec,
+    net: &mut Interconnect,
+    obs: Option<&ObsSink>,
+) -> FlowTiming {
     let p = t.total_gpus() as f64;
     let phases = [Phase {
+        name: "hops",
         kind: LinkKind::Inter,
         latency: 2.0 * (p - 1.0) * t.inter.alpha,
         bytes: 2.0 * ((p - 1.0) / p) * s.bytes as f64,
     }];
-    run_phases(&phases, t, s, net)
+    run_phases(&phases, "ring", t, s, net, obs)
 }
 
 /// Eq. (2): intra chain (latency-only in the closed form) + inter tree.
-fn tree_flow(t: &Topology, s: FlowSpec, net: &mut Interconnect) -> FlowTiming {
+fn tree_flow(
+    t: &Topology,
+    s: FlowSpec,
+    net: &mut Interconnect,
+    obs: Option<&ObsSink>,
+) -> FlowTiming {
     let (n, g) = (t.nodes as f64, t.gpus_per_node as f64);
     let phases = [
-        Phase { kind: LinkKind::Intra, latency: 2.0 * (g - 1.0) * t.intra.alpha, bytes: 0.0 },
         Phase {
+            name: "chain",
+            kind: LinkKind::Intra,
+            latency: 2.0 * (g - 1.0) * t.intra.alpha,
+            bytes: 0.0,
+        },
+        Phase {
+            name: "tree",
             kind: LinkKind::Inter,
             latency: 2.0 * log2_steps(n) * t.inter.alpha,
             bytes: 2.0 * ((n - 1.0) / n) * s.bytes as f64,
         },
     ];
-    run_phases(&phases, t, s, net)
+    run_phases(&phases, "tree", t, s, net, obs)
 }
 
 /// Flat recursive doubling: ⌈log2 P⌉ full-message inter exchanges.
-fn rd_flat_flow(t: &Topology, s: FlowSpec, net: &mut Interconnect) -> FlowTiming {
+fn rd_flat_flow(
+    t: &Topology,
+    s: FlowSpec,
+    net: &mut Interconnect,
+    obs: Option<&ObsSink>,
+) -> FlowTiming {
     let steps = log2_steps(t.total_gpus() as f64);
     let phases = [Phase {
+        name: "rd",
         kind: LinkKind::Inter,
         latency: steps * t.inter.alpha,
         bytes: steps * s.bytes as f64,
     }];
-    run_phases(&phases, t, s, net)
+    run_phases(&phases, "mpi", t, s, net, obs)
 }
 
 /// Eqs. (3)–(6): NVRAR's three phases as three distinct link bookings.
-fn nvrar_flow(t: &Topology, c: &CommConfig, s: FlowSpec, net: &mut Interconnect) -> FlowTiming {
+fn nvrar_flow(
+    t: &Topology,
+    c: &CommConfig,
+    s: FlowSpec,
+    net: &mut Interconnect,
+    obs: Option<&ObsSink>,
+) -> FlowTiming {
     let (n, g) = (t.nodes as f64, t.gpus_per_node as f64);
     let ring_bytes = ((g - 1.0) / g) * s.bytes as f64; // per intra ring phase
     let rd_bytes = if t.nodes > 1 {
@@ -186,11 +256,26 @@ fn nvrar_flow(t: &Topology, c: &CommConfig, s: FlowSpec, net: &mut Interconnect)
         0.0
     };
     let phases = [
-        Phase { kind: LinkKind::Intra, latency: (g - 1.0) * t.intra.alpha, bytes: ring_bytes },
-        Phase { kind: LinkKind::Inter, latency: log2_steps(n) * t.inter.alpha, bytes: rd_bytes },
-        Phase { kind: LinkKind::Intra, latency: (g - 1.0) * t.intra.alpha, bytes: ring_bytes },
+        Phase {
+            name: "rs-intra",
+            kind: LinkKind::Intra,
+            latency: (g - 1.0) * t.intra.alpha,
+            bytes: ring_bytes,
+        },
+        Phase {
+            name: "rd-inter",
+            kind: LinkKind::Inter,
+            latency: log2_steps(n) * t.inter.alpha,
+            bytes: rd_bytes,
+        },
+        Phase {
+            name: "ag-intra",
+            kind: LinkKind::Intra,
+            latency: (g - 1.0) * t.intra.alpha,
+            bytes: ring_bytes,
+        },
     ];
-    run_phases(&phases, t, s, net)
+    run_phases(&phases, "nvrar", t, s, net, obs)
 }
 
 /// Closed-form per-collective α-β seconds for `which` — the idle-fabric
@@ -238,17 +323,17 @@ mod tests {
             for kb in [128u64, 512, 2048] {
                 let bytes = kb * 1024;
                 let mut net = fabric_for(&t);
-                let ring = ring_flow(&t, spec(bytes), &mut net);
+                let ring = ring_flow(&t, spec(bytes), &mut net, None);
                 assert!((ring.alpha_beta - model::ring(&t, bytes)).abs() < 1e-9);
                 assert_eq!(ring.delay, 0.0);
                 let mut net = fabric_for(&t);
-                let tree = tree_flow(&t, spec(bytes), &mut net);
+                let tree = tree_flow(&t, spec(bytes), &mut net, None);
                 assert!((tree.alpha_beta - model::tree(&t, bytes)).abs() < 1e-9);
                 let mut net = fabric_for(&t);
-                let rd = rd_flat_flow(&t, spec(bytes), &mut net);
+                let rd = rd_flat_flow(&t, spec(bytes), &mut net, None);
                 assert!((rd.alpha_beta - model::recursive_doubling_flat(&t, bytes)).abs() < 1e-9);
                 let mut net = fabric_for(&t);
-                let nv = nvrar_flow(&t, &c, spec(bytes), &mut net);
+                let nv = nvrar_flow(&t, &c, spec(bytes), &mut net, None);
                 assert!(
                     (nv.alpha_beta - model::nvrar(&t, bytes, c.eta)).abs() < 1e-9,
                     "N={nodes} {kb}KB: {} vs {}",
@@ -288,7 +373,7 @@ mod tests {
         let c = CommConfig::perlmutter();
         let bytes = 512 * 1024;
         let mut idle = fabric_for(&t);
-        let base = nvrar_flow(&t, &c, spec(bytes), &mut idle);
+        let base = nvrar_flow(&t, &c, spec(bytes), &mut idle, None);
         // A drain-migration-sized transfer parked on the node-0 NIC.
         let mut busy = fabric_for(&t);
         busy.book(
@@ -296,7 +381,7 @@ mod tests {
             0.0,
             256.0 * 1024.0 * 1024.0,
         );
-        let contended = nvrar_flow(&t, &c, spec(bytes), &mut busy);
+        let contended = nvrar_flow(&t, &c, spec(bytes), &mut busy, None);
         assert_eq!(contended.alpha_beta, base.alpha_beta, "α-β part is load-independent");
         assert!(contended.delay > 0.0, "sharing the NIC must delay the RD phase");
         assert!(contended.total() > base.total());
@@ -308,15 +393,15 @@ mod tests {
         let c = CommConfig::perlmutter();
         let bytes = 256 * 1024;
         let mut net = fabric_for(&t);
-        let one = nvrar_flow(&t, &c, spec(bytes), &mut net);
+        let one = nvrar_flow(&t, &c, spec(bytes), &mut net, None);
         let mut net = fabric_for(&t);
         let many =
-            nvrar_flow(&t, &c, FlowSpec { count: 160.0, ..spec(bytes) }, &mut net);
+            nvrar_flow(&t, &c, FlowSpec { count: 160.0, ..spec(bytes) }, &mut net, None);
         assert!((one.alpha_beta - many.alpha_beta).abs() < 1e-12);
         assert_eq!(many.delay, 0.0, "an idle fabric never delays, whatever the volume");
         let heavy = net.bytes_carried(LinkKind::Inter);
         let mut net = fabric_for(&t);
-        nvrar_flow(&t, &c, spec(bytes), &mut net);
+        nvrar_flow(&t, &c, spec(bytes), &mut net, None);
         let light = net.bytes_carried(LinkKind::Inter);
         assert!((heavy / light - 160.0).abs() < 1e-9);
     }
@@ -326,8 +411,34 @@ mod tests {
         let t = presets::vista(8);
         let c = CommConfig::vista();
         let mut net = fabric_for(&t);
-        let f = nvrar_flow(&t, &c, spec(512 * 1024), &mut net);
+        let f = nvrar_flow(&t, &c, spec(512 * 1024), &mut net, None);
         assert_eq!(net.bytes_carried(LinkKind::Intra), 0.0);
         assert!((f.alpha_beta - model::nvrar(&t, 512 * 1024, c.eta)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn obs_records_one_span_per_phase_without_changing_timing() {
+        use crate::obs::{arg_f64, Recorder, RunMeta, Track};
+        let t = presets::perlmutter(4);
+        let c = CommConfig::perlmutter();
+        let bytes = 512 * 1024;
+        let mut net = fabric_for(&t);
+        let silent = nvrar_flow(&t, &c, spec(bytes), &mut net, None);
+        let sink = Recorder::sink(RunMeta::default());
+        let mut net = fabric_for(&t);
+        let traced = nvrar_flow(&t, &c, spec(bytes), &mut net, Some(&sink));
+        assert_eq!(silent.alpha_beta.to_bits(), traced.alpha_beta.to_bits());
+        assert_eq!(silent.end.to_bits(), traced.end.to_bits());
+        let rec = sink.lock().unwrap();
+        let names: Vec<&str> = rec.spans().iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, ["nvrar.rs-intra", "nvrar.rd-inter", "nvrar.ag-intra"]);
+        // Phases land on the right link class and carry their booked bytes.
+        assert_eq!(rec.spans()[0].track, Track::Link { scope: 0, kind: LinkKind::Intra });
+        assert_eq!(rec.spans()[1].track, Track::Link { scope: 0, kind: LinkKind::Inter });
+        assert!(arg_f64(&rec.spans()[0].args, "bytes") > 0.0);
+        assert_eq!(arg_f64(&rec.spans()[1].args, "delay"), 0.0);
+        // Spans tile the collective: last span ends at the flow's end.
+        let last = rec.spans().last().unwrap();
+        assert!((last.start + last.dur - traced.end).abs() < 1e-12);
     }
 }

@@ -151,17 +151,34 @@ pub fn suite() -> Vec<Metric> {
 // Flat JSON (the vendored crate set has no serde)
 // ---------------------------------------------------------------------
 
-/// A flat-JSON value: numbers for metrics, booleans for flags.
+/// A flat-JSON value: numbers for metrics, booleans for flags, strings
+/// for the `_meta_*` run-metadata entries (ignored by the gate).
 #[derive(Clone, Debug, PartialEq)]
 pub enum JsonVal {
     Num(f64),
     Bool(bool),
+    Str(String),
+}
+
+/// Run-identifying metadata stamped into every metric file so a baseline
+/// is self-describing (what build/workload produced it). String-valued,
+/// `_meta_`-prefixed: [`check_maps`] only judges numeric entries.
+fn meta_pairs() -> Vec<(&'static str, String)> {
+    vec![
+        ("version", env!("CARGO_PKG_VERSION").to_string()),
+        ("machine", "perlmutter".to_string()),
+        ("model", "70b".to_string()),
+        ("seed", format!("{:#x}", TraceSpec::burstgpt().seed)),
+    ]
 }
 
 /// Render the metric set as a flat JSON object (sorted by key emission
 /// order = suite order; stable across runs).
 pub fn to_json(metrics: &[Metric]) -> String {
     let mut s = String::from("{\n  \"schema\": 1");
+    for (k, v) in meta_pairs() {
+        s.push_str(&format!(",\n  \"_meta_{k}\": \"{v}\""));
+    }
     for m in metrics {
         s.push_str(&format!(",\n  \"{}\": {:.6}", m.key, m.value));
     }
@@ -211,17 +228,32 @@ pub fn parse_flat(text: &str) -> Result<BTreeMap<String, JsonVal>, String> {
         }
         i += 1;
         skip_ws(&chars, &mut i);
-        let mut token = String::new();
-        while i < chars.len() && !chars[i].is_whitespace() && chars[i] != ',' && chars[i] != '}' {
-            token.push(chars[i]);
-            i += 1;
-        }
-        let val = match token.as_str() {
-            "true" => JsonVal::Bool(true),
-            "false" => JsonVal::Bool(false),
-            t => JsonVal::Num(
-                t.parse::<f64>().map_err(|_| format!("bad value '{t}' for key '{key}'"))?,
-            ),
+        let val = if chars.get(i) == Some(&'"') {
+            i += 1; // opening quote (no escape support: meta strings are plain)
+            let mut sv = String::new();
+            while i < chars.len() && chars[i] != '"' {
+                sv.push(chars[i]);
+                i += 1;
+            }
+            if i >= chars.len() {
+                return Err(format!("unterminated string value for key '{key}'"));
+            }
+            i += 1; // closing quote
+            JsonVal::Str(sv)
+        } else {
+            let mut token = String::new();
+            while i < chars.len() && !chars[i].is_whitespace() && chars[i] != ',' && chars[i] != '}'
+            {
+                token.push(chars[i]);
+                i += 1;
+            }
+            match token.as_str() {
+                "true" => JsonVal::Bool(true),
+                "false" => JsonVal::Bool(false),
+                t => JsonVal::Num(
+                    t.parse::<f64>().map_err(|_| format!("bad value '{t}' for key '{key}'"))?,
+                ),
+            }
         };
         out.insert(key, val);
         skip_ws(&chars, &mut i);
@@ -466,8 +498,15 @@ mod tests {
         assert_eq!(map.get("schema"), Some(&JsonVal::Num(1.0)));
         assert_eq!(map.get("a_us"), Some(&JsonVal::Num(12.5)));
         assert_eq!(map.get("b_tok"), Some(&JsonVal::Num(3400.0)));
+        // Run metadata survives the round trip as strings the gate skips.
+        assert_eq!(
+            map.get("_meta_version"),
+            Some(&JsonVal::Str(env!("CARGO_PKG_VERSION").to_string()))
+        );
+        assert_eq!(map.get("_meta_machine"), Some(&JsonVal::Str("perlmutter".to_string())));
         assert!(parse_flat("{ \"bootstrap\": true }").unwrap().get("bootstrap")
             == Some(&JsonVal::Bool(true)));
+        assert!(parse_flat("{ \"s\": \"oops").is_err());
         assert!(parse_flat("not json").is_err());
         assert!(parse_flat("{ \"k\": oops }").is_err());
     }

@@ -9,7 +9,9 @@ use crate::engine::persona::Persona;
 use crate::engine::{engine_for, Workload};
 use crate::fleet::router::RoutePolicy;
 use crate::fleet::{run_fleet, FleetConfig};
+use crate::metrics::Breakdown;
 use crate::models::ModelConfig;
+use crate::obs::{self, fold, ObsSink, Recorder, RunMeta};
 use crate::parallel::ParallelSpec;
 use crate::perfmodel::{gemm_time, GpuSpec};
 use crate::serving::{fig9_config, serve};
@@ -26,6 +28,26 @@ fn fmt_s(x: f64) -> String {
 
 fn fmt_us(x: f64) -> String {
     format!("{:.1}", x * 1e6)
+}
+
+/// Fresh shared recorder for a traced run (seed + machine known up
+/// front; the simulation fills deployment label and model).
+fn trace_sink(seed: u64, machine: &str) -> ObsSink {
+    Recorder::sink(RunMeta { seed: Some(seed), machine: machine.to_string(), ..RunMeta::default() })
+}
+
+/// Flush a finished run's recorder to `{base}.trace.json` /
+/// `.lifecycle.csv` / `.timeline.csv`, announcing the written paths.
+fn write_trace(base: &str, sink: &ObsSink) {
+    let rec = sink.lock().expect("obs lock poisoned");
+    match obs::write_artifacts(base, &rec) {
+        Ok(paths) => {
+            for p in paths {
+                println!("-> {p}");
+            }
+        }
+        Err(e) => eprintln!("trace write failed for {base}: {e}"),
+    }
 }
 
 /// GPU counts for the strong-scaling sweeps (paper §3.2).
@@ -294,13 +316,15 @@ pub fn fig8_phase_breakdown() -> Table {
 }
 
 /// Figure 9: BurstGPT trace serving throughput (70B, Perlmutter, 16 GPUs).
-/// `chunk_tokens` caps prefill chunks (0 = budget-bounded chunks).
-pub fn fig9_trace_serving(chunk_tokens: usize) -> Table {
+/// `chunk_tokens` caps prefill chunks (0 = budget-bounded chunks);
+/// `trace` writes the tp16/NVRAR run's artifacts under that base path.
+pub fn fig9_trace_serving(chunk_tokens: usize, trace: Option<&str>) -> Table {
     serving_table(
         "Fig9 BurstGPT serving 70B/Perlmutter (16 GPUs)",
         TraceSpec::burstgpt(),
         &[32, 256],
         chunk_tokens,
+        trace,
     )
 }
 
@@ -311,6 +335,7 @@ pub fn fig18_decode_trace_serving() -> Table {
         TraceSpec::decode_heavy(),
         &[32, 256],
         0,
+        None,
     )
 }
 
@@ -319,12 +344,15 @@ fn serving_table(
     mut spec: TraceSpec,
     concurrencies: &[usize],
     chunk_tokens: usize,
+    trace: Option<&str>,
 ) -> Table {
     // Scaled-down trace keeps bench wall-clock sane; rates and shapes keep
     // the paper's Table 6 proportions.
     spec.num_prompts = 200;
     let reqs = spec.generate();
     let mut t = Table::new(title, &["deployment", "C", "tok/s", "decode-only steps", "mean TTFT (s)"]);
+    t.meta("seed", &format!("{:#x}", spec.seed));
+    let traced_c = concurrencies.last().copied().unwrap_or(0);
     for &c in concurrencies {
         // tp4-pp4 is the old "HP" shape on Perlmutter-16 (TP within a
         // node, PP across) expressed through the one spec vocabulary.
@@ -335,7 +363,16 @@ fn serving_table(
         ] {
             let mut cfg = fig9_config(pspec, ar, c, "perlmutter", 16);
             cfg.chunk_tokens = chunk_tokens;
+            // Trace exactly one run: the flagship NVRAR deployment at
+            // the highest concurrency.
+            let sink = trace
+                .filter(|_| matches!(ar, AllReduceImpl::Nvrar) && c == traced_c)
+                .map(|_| trace_sink(spec.seed, "perlmutter"));
+            cfg.obs = sink.clone();
             let rep = serve(&cfg, &reqs);
+            if let (Some(base), Some(sink)) = (trace, &sink) {
+                write_trace(base, sink);
+            }
             t.row(&[
                 cfg.deployment_label(),
                 c.to_string(),
@@ -356,7 +393,7 @@ fn serving_table(
 /// only the slicing differs. The last row is the production shape: the
 /// default 8192-token budget with prompts 4x longer — unservable before
 /// chunked prefill existed.
-pub fn sweep_chunk(model_name: &str, machine: &str, gpus: usize) -> Table {
+pub fn sweep_chunk(model_name: &str, machine: &str, gpus: usize, trace: Option<&str>) -> Table {
     let model = ModelConfig::by_name(model_name);
     let mut tspec = TraceSpec::long_prompt();
     tspec.num_prompts = 150;
@@ -372,16 +409,24 @@ pub fn sweep_chunk(model_name: &str, machine: &str, gpus: usize) -> Table {
         ),
         &["mode", "budget", "tok/s", "TTFT p50", "TTFT p99", "TPOT p50", "preempts"],
     );
+    t.meta("seed", &format!("{:#x}", tspec.seed));
     let rows: Vec<(String, usize, usize)> = std::iter::once(("whole-prompt".to_string(), budget, 0))
         .chain([512usize, 1024, 2048, 4096].into_iter().map(|c| (format!("chunk {c}"), budget, c)))
         .chain(std::iter::once(("chunk 2048".to_string(), 8192, 2048)))
         .collect();
-    for (mode, budget, chunk) in rows {
+    let last = rows.len() - 1;
+    for (i, (mode, budget, chunk)) in rows.into_iter().enumerate() {
         let mut cfg = fig9_config(ParallelSpec::tp(gpus), AllReduceImpl::Nvrar, 64, machine, gpus);
         cfg.model = model.clone();
         cfg.max_step_tokens = budget;
         cfg.chunk_tokens = chunk;
+        // Trace the production shape (the final row).
+        let sink = trace.filter(|_| i == last).map(|_| trace_sink(tspec.seed, machine));
+        cfg.obs = sink.clone();
         let rep = serve(&cfg, &reqs);
+        if let (Some(base), Some(sink)) = (trace, &sink) {
+            write_trace(base, sink);
+        }
         t.row(&[
             mode,
             budget.to_string(),
@@ -401,7 +446,7 @@ pub fn sweep_chunk(model_name: &str, machine: &str, gpus: usize) -> Table {
 /// placement costs), so on conversational workloads it reports a high hit
 /// rate and a tighter TTFT than content-blind least-outstanding; with one
 /// turn per session there is nothing to share and the policies converge.
-pub fn sweep_session(model_name: &str, machine: &str, gpus: usize) -> Table {
+pub fn sweep_session(model_name: &str, machine: &str, gpus: usize, trace: Option<&str>) -> Table {
     let model = ModelConfig::by_name(model_name);
     let mut t = Table::new(
         &format!("sweep-session {} on {machine} x{gpus} GPUs, 3 replicas", model.name),
@@ -418,12 +463,26 @@ pub fn sweep_session(model_name: &str, machine: &str, gpus: usize) -> Table {
             sspec.first_prompt =
                 LenDist { median: prefix as f64, sigma: 0.4, min: 64, max: 16_384 };
             let reqs = sspec.generate();
+            t.meta("seed", &format!("{:#x}", sspec.seed));
             for policy in [RoutePolicy::LeastOutstanding, RoutePolicy::SessionAffinity] {
                 let mut base =
                     fig9_config(ParallelSpec::tp(gpus), AllReduceImpl::Nvrar, 64, machine, gpus);
                 base.model = model.clone();
-                let cfg = FleetConfig::new(base, 3).with_policy(policy);
+                let mut cfg = FleetConfig::new(base, 3).with_policy(policy);
+                // Trace the richest grid point: 8 turns, long prefixes,
+                // cache-aware routing.
+                let sink = trace
+                    .filter(|_| {
+                        turns == 8 && prefix == 2048 && matches!(policy, RoutePolicy::SessionAffinity)
+                    })
+                    .map(|_| trace_sink(sspec.seed, machine));
+                if let Some(s) = &sink {
+                    cfg = cfg.with_obs(s.clone());
+                }
                 let rep = run_fleet(&cfg, &reqs);
+                if let (Some(base), Some(sink)) = (trace, &sink) {
+                    write_trace(base, sink);
+                }
                 t.row(&[
                     turns.to_string(),
                     prefix.to_string(),
@@ -577,7 +636,7 @@ pub fn sweep_parallel(model_name: &str, machine: &str, gpus: usize) -> Table {
 /// Fleet: multi-replica SLO-aware serving — routing policies × pool modes
 /// on a scaled BurstGPT trace with the chosen per-replica all-reduce.
 /// (Beyond the paper: its serving experiments stop at one replica.)
-pub fn fleet_experiment(ar: AllReduceImpl, chunk_tokens: usize) -> Table {
+pub fn fleet_experiment(ar: AllReduceImpl, chunk_tokens: usize, trace: Option<&str>) -> Table {
     let mut spec = TraceSpec::burstgpt();
     spec.num_prompts = 800;
     spec.rate = 12.0;
@@ -598,14 +657,28 @@ pub fn fleet_experiment(ar: AllReduceImpl, chunk_tokens: usize) -> Table {
             "handoffs",
         ],
     );
-    for policy in RoutePolicy::all() {
+    t.meta("seed", &format!("{:#x}", spec.seed));
+    let policies = RoutePolicy::all();
+    let lastp = policies.len() - 1;
+    for (pi, policy) in policies.into_iter().enumerate() {
         for disagg in [false, true] {
-            let cfg = if disagg {
+            let mut cfg = if disagg {
                 FleetConfig::new(base.clone(), 3).with_policy(policy).disaggregated(1)
             } else {
                 FleetConfig::new(base.clone(), 4).with_policy(policy)
             };
+            // Trace the disaggregated run under the final policy — the
+            // richest event stream (handoffs + prefill pool).
+            let sink = trace
+                .filter(|_| pi == lastp && disagg)
+                .map(|_| trace_sink(spec.seed, "perlmutter"));
+            if let Some(s) = &sink {
+                cfg = cfg.with_obs(s.clone());
+            }
             let rep = run_fleet(&cfg, &reqs);
+            if let (Some(tbase), Some(sink)) = (trace, &sink) {
+                write_trace(tbase, sink);
+            }
             t.row(&[
                 policy.name().to_string(),
                 if disagg { "3D+1P".to_string() } else { "4 mono".to_string() },
@@ -666,6 +739,95 @@ pub fn fleet_hetero_experiment(ar: AllReduceImpl) -> Table {
         }
     }
     t
+}
+
+/// `yalis profile`: one fully-traced fleet run built to light up every
+/// event source at once — 3 replicas + contention-priced fabric + a
+/// scripted mid-run drain (with KV migration). Writes the Chrome trace,
+/// lifecycle CSV and windowed time-series under `trace_base`, then folds
+/// the event stream back into per-replica Matmul/Other/Comm/Idle
+/// breakdowns and reconciles them against the analytic accumulator — the
+/// Pipit-style "analysis that closes the loop".
+pub fn profile_experiment(trace_base: &str) -> Vec<Table> {
+    let mut spec = TraceSpec::burstgpt();
+    spec.num_prompts = 300;
+    spec.rate = 8.0;
+    let reqs = spec.generate();
+    let base = fig9_config(ParallelSpec::tp(16), AllReduceImpl::Nvrar, 64, "perlmutter", 16);
+    let label = base.deployment_label();
+    let sink = trace_sink(spec.seed, "perlmutter");
+    let cfg = FleetConfig::new(base, 3)
+        .with_contention(true)
+        .with_migration(true)
+        .with_drain_at(15.0, 2)
+        .with_obs(sink.clone());
+    let rep = run_fleet(&cfg, &reqs);
+    write_trace(trace_base, &sink);
+
+    let rec = sink.lock().expect("obs lock poisoned");
+    let folded = fold::fold_breakdowns(&rec);
+    let mk = rec.makespan();
+
+    let mut summary = Table::new(
+        &format!("profile: 3x{label} fleet + scripted drain, BurstGPT x{}", reqs.len()),
+        &["metric", "value"],
+    );
+    summary.meta("seed", &format!("{:#x}", spec.seed));
+    summary.meta("deployment", &label);
+    summary.meta("trace", trace_base);
+    for (k, v) in [
+        ("completed", rep.completed.to_string()),
+        ("tok/s", format!("{:.1}", rep.throughput)),
+        ("goodput", format!("{:.1}", rep.goodput)),
+        ("TTFT p50 (s)", format!("{:.3}", rep.ttft_p50)),
+        ("TTFT p99 (s)", format!("{:.3}", rep.ttft_p99)),
+        ("preemptions", rep.preemptions.to_string()),
+        ("drains", rep.drains.to_string()),
+        ("migrations", rep.migrations.to_string()),
+        ("retunes", rep.retunes.to_string()),
+        ("NIC util", format!("{:.0}%", rep.net_util_inter * 100.0)),
+        ("events: spans", rec.spans().len().to_string()),
+        ("events: instants", rec.instants().len().to_string()),
+        ("makespan (s)", format!("{mk:.2}")),
+    ] {
+        summary.row(&[k.to_string(), v]);
+    }
+
+    let mut recon = Table::new(
+        "profile: per-replica breakdown, event fold vs analytic (s)",
+        &["replica", "matmul", "other", "comm", "idle", "total", "max drift"],
+    );
+    recon.meta("seed", &format!("{:#x}", spec.seed));
+    recon.meta("deployment", &label);
+    for (r, a) in rep.breakdowns.iter().enumerate() {
+        let f = folded
+            .get(&r)
+            .copied()
+            .unwrap_or(Breakdown { idle: mk, ..Breakdown::default() });
+        let drift = [
+            a.matmul - f.matmul,
+            a.other_comp - f.other_comp,
+            a.comm - f.comm,
+            a.idle - f.idle,
+        ]
+        .iter()
+        .fold(0.0f64, |w, d| w.max(d.abs()));
+        let mut cells = vec![r.to_string()];
+        cells.extend(a.row_cells());
+        cells.push(format!("{drift:.1e}"));
+        recon.row(&cells);
+    }
+    let worst = fold::reconcile(&rep.breakdowns, &folded, mk);
+    recon.row(&[
+        "worst".to_string(),
+        "".to_string(),
+        "".to_string(),
+        "".to_string(),
+        "".to_string(),
+        "".to_string(),
+        format!("{worst:.1e}"),
+    ]);
+    vec![summary, recon]
 }
 
 /// Figures 12/13 (Appendix B): sync-time hiding with interleaved matmul.
@@ -784,17 +946,17 @@ pub fn all_experiments() -> Vec<Table> {
     out.push(fig7_e2e_speedup("70b", "perlmutter"));
     out.push(fig7_e2e_speedup("405b", "perlmutter"));
     out.push(fig8_phase_breakdown());
-    out.push(fig9_trace_serving(0));
+    out.push(fig9_trace_serving(0, None));
     out.push(fig10_moe());
     out.push(fig13_sync_hiding());
     out.extend(fig14_fig15_nccl_variants());
     out.push(fig7_e2e_speedup("70b", "vista"));
     out.extend(fig17_fig18_traces());
     out.push(sweep_parallel("70b", "perlmutter", 16));
-    out.push(sweep_chunk("70b", "perlmutter", 16));
-    out.push(sweep_session("70b", "perlmutter", 16));
+    out.push(sweep_chunk("70b", "perlmutter", 16, None));
+    out.push(sweep_session("70b", "perlmutter", 16, None));
     out.push(sweep_contention(16));
-    out.push(fleet_experiment(AllReduceImpl::Nvrar, 0));
+    out.push(fleet_experiment(AllReduceImpl::Nvrar, 0, None));
     out.push(fleet_hetero_experiment(AllReduceImpl::Nvrar));
     out
 }
@@ -861,7 +1023,7 @@ mod tests {
         // The chunked-vs-whole-prompt acceptance claim: at equal admission
         // budget, 2048-token chunks tighten the TTFT tail on the
         // long-prompt trace without regressing median TPOT by >5%.
-        let t = sweep_chunk("70b", "perlmutter", 16);
+        let t = sweep_chunk("70b", "perlmutter", 16, None);
         let rows = t.rows();
         let whole = rows.iter().find(|r| r[0] == "whole-prompt").expect("baseline row");
         let chunked = rows
@@ -888,7 +1050,7 @@ mod tests {
 
     #[test]
     fn sweep_session_affinity_wins_hits_on_multi_turn_rows() {
-        let t = sweep_session("70b", "perlmutter", 8);
+        let t = sweep_session("70b", "perlmutter", 8, None);
         let rows = t.rows();
         assert_eq!(rows.len(), 3 * 2 * 2, "turns x prefix x policy grid");
         let hit = |r: &[String]| r[6].trim_end_matches('%').parse::<f64>().unwrap();

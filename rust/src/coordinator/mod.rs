@@ -19,7 +19,7 @@ pub fn main() {
          Subcommand = first positional arg: scaling | breakdown | gemm | nccl-vs-mpi |\n\
          micro | hyperparams | e2e | phase | serve | sweep-parallel | sweep-chunk |\n\
          sweep-session | sweep-contention | fleet | fleet-hetero | moe | sync |\n\
-         variants | traces | bench-suite | bench-check | all",
+         variants | traces | profile | bench-suite | bench-check | all",
     );
     cli.opt("machine", "perlmutter", "machine preset (perlmutter|vista)");
     cli.opt("model", "70b", "model (70b|405b|qwen3|tiny)");
@@ -27,6 +27,13 @@ pub fn main() {
     cli.opt("allreduce", "nvrar", "per-replica all-reduce for `fleet`/`fleet-hetero` (nccl|nccl-ring|nccl-tree|mpi|nvrar)");
     cli.opt("chunk-tokens", "0", "prefill chunk cap for serve/fleet (0 = budget-bounded)");
     cli.opt("csv-dir", "", "write CSVs into this directory (empty = don't)");
+    cli.opt(
+        "trace-out",
+        "",
+        "trace-artifact base path for serve/fleet/sweep-chunk/sweep-session/profile: \
+         writes <base>.trace.json (Perfetto), <base>.lifecycle.csv, <base>.timeline.csv \
+         (profile defaults to results/profile)",
+    );
     cli.flag("json", "`bench-suite`: print the metrics as flat JSON on stdout");
     cli.opt("out", "", "`bench-suite`: also write the metrics JSON to this path");
     cli.opt("baseline", "bench/baseline.json", "`bench-check`: committed baseline metrics");
@@ -37,6 +44,8 @@ pub fn main() {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
     let machine = args.get("machine");
     let model = args.get("model");
+    let trace_out = args.get("trace-out").to_string();
+    let trace = if trace_out.is_empty() { None } else { Some(trace_out.as_str()) };
 
     // The perf-gate subcommands exit directly (bench-check's exit code IS
     // the CI gate); everything below the match prints tables.
@@ -53,7 +62,7 @@ pub fn main() {
         std::process::exit(if ok { 0 } else { 1 });
     }
 
-    let tables = match cmd {
+    let mut tables = match cmd {
         "scaling" => experiments::fig1_fig2_scaling(model),
         "breakdown" => vec![experiments::fig3_breakdown()],
         "gemm" => vec![experiments::table4_gemm_model()],
@@ -62,26 +71,27 @@ pub fn main() {
         "hyperparams" => vec![experiments::table5_hyperparams()],
         "e2e" => vec![experiments::fig7_e2e_speedup(model, machine)],
         "phase" => vec![experiments::fig8_phase_breakdown()],
-        "serve" => vec![experiments::fig9_trace_serving(args.get_usize("chunk-tokens"))],
+        "serve" => vec![experiments::fig9_trace_serving(args.get_usize("chunk-tokens"), trace)],
         "sweep-parallel" => {
             vec![experiments::sweep_parallel(model, machine, args.get_usize("gpus"))]
         }
         "sweep-chunk" => {
-            vec![experiments::sweep_chunk(model, machine, args.get_usize("gpus"))]
+            vec![experiments::sweep_chunk(model, machine, args.get_usize("gpus"), trace)]
         }
         "sweep-session" => {
-            vec![experiments::sweep_session(model, machine, args.get_usize("gpus"))]
+            vec![experiments::sweep_session(model, machine, args.get_usize("gpus"), trace)]
         }
         "sweep-contention" => vec![experiments::sweep_contention(args.get_usize("gpus"))],
         "fleet" => {
             // Bad --allreduce values exit with a usable message, not a panic.
             let ar = args.get_with("allreduce", crate::collectives::AllReduceImpl::by_name);
-            vec![experiments::fleet_experiment(ar, args.get_usize("chunk-tokens"))]
+            vec![experiments::fleet_experiment(ar, args.get_usize("chunk-tokens"), trace)]
         }
         "fleet-hetero" => {
             let ar = args.get_with("allreduce", crate::collectives::AllReduceImpl::by_name);
             vec![experiments::fleet_hetero_experiment(ar)]
         }
+        "profile" => experiments::profile_experiment(trace.unwrap_or("results/profile")),
         "moe" => vec![experiments::fig10_moe()],
         "sync" => vec![experiments::fig13_sync_hiding()],
         "variants" => experiments::fig14_fig15_nccl_variants(),
@@ -92,6 +102,14 @@ pub fn main() {
             std::process::exit(2);
         }
     };
+    // Run-metadata header: every printed table and every CSV states what
+    // produced it (experiments add their own `seed`/`deployment` pairs).
+    for t in &mut tables {
+        t.meta("version", env!("CARGO_PKG_VERSION"));
+        t.meta("command", cmd);
+        t.meta("machine", machine);
+        t.meta("model", model);
+    }
     for t in &tables {
         t.print();
         if let Some(dir) = &csv {

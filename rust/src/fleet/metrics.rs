@@ -11,6 +11,7 @@
 //!   targets; **goodput**: output tokens of SLO-meeting requests per
 //!   second of makespan — the "useful" half of raw throughput.
 
+use crate::metrics::Breakdown;
 use crate::simnet::CongestionStats;
 use crate::util::stats::Summary;
 
@@ -107,6 +108,7 @@ impl FleetMetrics {
             net_util_intra: 0.0,
             net_util_inter: 0.0,
             congestion: CongestionStats::default(),
+            breakdowns: Vec::new(),
         }
     }
 }
@@ -190,6 +192,10 @@ pub struct FleetReport {
     /// collective flows, KV handoffs, drain migrations (all-zero with
     /// contention disabled).
     pub congestion: CongestionStats,
+    /// Per-replica analytic Matmul/Other/Comm/Idle breakdowns, each
+    /// idle-filled to the makespan (empty unless tracing was enabled via
+    /// `FleetConfig::obs` — so tracing-off reports compare bit-for-bit).
+    pub breakdowns: Vec<Breakdown>,
 }
 
 #[cfg(test)]

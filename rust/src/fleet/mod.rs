@@ -55,6 +55,8 @@ use crate::collectives::tuner::TunedTable;
 use crate::collectives::AllReduceImpl;
 use crate::engine::batcher::{Batcher, MigratedSeq, PrefillChunk, Request, StepBatch};
 use crate::engine::kv::{KvError, PagedKv};
+use crate::metrics::Breakdown;
+use crate::obs::{ArgV, ObsSink, Track};
 use crate::serving::{Fabric, ServeConfig};
 use crate::simnet::{EventQueue, Interconnect, LinkId, LinkKind, Server};
 use autoscaler::{AutoscaleConfig, Autoscaler, Decision};
@@ -110,6 +112,12 @@ pub struct FleetConfig {
     /// instead of the standalone α-β path, so concurrent transfers and
     /// decode all-reduces inflate each other.
     pub contention: bool,
+    /// Event recorder ([`crate::obs`]) shared by every replica: step spans
+    /// per replica track, collective phases and KV transfers on link
+    /// tracks, routing/scaling decisions on the control track. `None`
+    /// (the default) disables tracing; recording never feeds back into
+    /// any simulated quantity.
+    pub obs: Option<ObsSink>,
 }
 
 impl FleetConfig {
@@ -129,6 +137,7 @@ impl FleetConfig {
             migrate_on_drain: true,
             drain_at: Vec::new(),
             contention: false,
+            obs: None,
         }
     }
 
@@ -176,6 +185,13 @@ impl FleetConfig {
     /// Enable/disable shared-interconnect contention (off by default).
     pub fn with_contention(mut self, on: bool) -> Self {
         self.contention = on;
+        self
+    }
+
+    /// Attach an event recorder — every replica, link booking, and fleet
+    /// decision of the run records into it.
+    pub fn with_obs(mut self, obs: ObsSink) -> Self {
+        self.obs = Some(obs);
         self
     }
 
@@ -339,6 +355,9 @@ struct Sim<'a> {
     /// Shared interconnect (contention mode); every replica's scope is its
     /// index, registered at push time.
     fabric: Option<Fabric>,
+    /// Analytic per-replica breakdown accumulators (tracing only; one per
+    /// pushed replica, parallel to `replicas`).
+    bd: Vec<Breakdown>,
 }
 
 impl<'a> Sim<'a> {
@@ -374,6 +393,7 @@ impl<'a> Sim<'a> {
             } else {
                 None
             },
+            bd: Vec::new(),
         };
         let scalable = cfg.scalable_kind();
         for c in &cfg.replicas {
@@ -460,6 +480,28 @@ impl<'a> Sim<'a> {
         });
         report.cached_tokens = hit;
         report.cache_hit_rate = if prompt == 0 { 0.0 } else { hit as f64 / prompt as f64 };
+        if let Some(sink) = &self.cfg.obs {
+            let mut rec = sink.lock().expect("obs lock poisoned");
+            rec.set_makespan(self.last_done);
+            if rec.meta.label.is_empty() {
+                rec.meta.label =
+                    format!("fleet x{} {}", self.replicas.len(), self.cfg.replicas[0].deployment_label());
+            }
+            if rec.meta.model.is_empty() {
+                rec.meta.model = self.cfg.replicas[0].model.name.to_string();
+            }
+            // Per-replica analytic breakdowns, idle-filled to the makespan
+            // — the reference the event-stream fold is reconciled against.
+            report.breakdowns = self
+                .bd
+                .iter()
+                .map(|b| {
+                    let mut b = *b;
+                    b.idle += (self.last_done - b.total()).max(0.0);
+                    b
+                })
+                .collect();
+        }
         report
     }
 
@@ -490,6 +532,18 @@ impl<'a> Sim<'a> {
 
     fn on_arrival(&mut self, i: usize) {
         let req = self.reqs[i];
+        if let Some(sink) = &self.cfg.obs {
+            sink.lock().expect("obs lock poisoned").instant(
+                Track::Control,
+                "arrival",
+                req.arrival,
+                vec![
+                    ("req", ArgV::U(req.id)),
+                    ("prompt", ArgV::U(req.prompt_len as u64)),
+                    ("decode", ArgV::U(req.decode_len as u64)),
+                ],
+            );
+        }
         if self.cfg.disaggregated_mode() {
             // The prefill replica's product is exactly the first token:
             // submit with a single-token decode so the sequence retires at
@@ -543,6 +597,18 @@ impl<'a> Sim<'a> {
             self.router.complete(c.replica, c.pages, c.secs);
         }
         let (target, secs) = self.router.route(policy, &views, req.session, pages, &costs, &hits);
+        if let Some(sink) = &self.cfg.obs {
+            sink.lock().expect("obs lock poisoned").instant(
+                Track::Control,
+                "route",
+                self.q.now(),
+                vec![
+                    ("req", ArgV::U(req.id)),
+                    ("replica", ArgV::U(target as u64)),
+                    ("pages", ArgV::U(pages as u64)),
+                ],
+            );
+        }
         let commit = Some(Commit { replica: target, pages, secs });
         match kind {
             PoolKind::Prefill => self.commit_prefill[i] = commit,
@@ -572,6 +638,14 @@ impl<'a> Sim<'a> {
                 let i = c.id as usize;
                 if self.first_token[i].is_nan() {
                     self.first_token[i] = now;
+                    if let Some(sink) = &self.cfg.obs {
+                        sink.lock().expect("obs lock poisoned").instant(
+                            Track::Replica(r),
+                            "first_token",
+                            now,
+                            vec![("req", ArgV::U(c.id))],
+                        );
+                    }
                 }
                 self.produced[i] += 1;
             }
@@ -583,6 +657,21 @@ impl<'a> Sim<'a> {
             // The preempted row's pending token was discarded; the resumed
             // prefill re-produces it, so conservation holds.
             self.produced[*id as usize] -= 1;
+        }
+        if let Some(sink) = &self.cfg.obs {
+            let mut rec = sink.lock().expect("obs lock poisoned");
+            for id in &outcome.preempted {
+                rec.instant(Track::Replica(r), "preempt", now, vec![("req", ArgV::U(*id))]);
+            }
+            rec.instant(
+                Track::Replica(r),
+                "toks",
+                now,
+                vec![("n", ArgV::U(outcome.new_tokens as u64))],
+            );
+            let kv = &self.replicas[r].kv;
+            let frac = kv.used_pages() as f64 / kv.total_pages().max(1) as f64;
+            rec.instant(Track::Replica(r), "kv", now, vec![("frac", ArgV::F(frac))]);
         }
         let reqs = self.reqs;
         for id in finished {
@@ -626,7 +715,7 @@ impl<'a> Sim<'a> {
     /// β), preserving those runs bit for bit.
     fn kv_transfer(&mut self, from: usize, to: usize, bytes: u64, now: f64) -> f64 {
         let link = self.cfg.replicas[0].topo.inter;
-        if let Some(fab) = &self.fabric {
+        let landed = if let Some(fab) = &self.fabric {
             let mut net = fab.lock().expect("interconnect lock poisoned");
             net.advance(now);
             let eg =
@@ -637,7 +726,23 @@ impl<'a> Sim<'a> {
         } else {
             let (_start, end) = self.replicas[to].ingress.book(now, bytes as f64 / link.beta);
             end + link.alpha
+        };
+        if let Some(sink) = &self.cfg.obs {
+            // The transfer occupies the target's ingress NIC: one span on
+            // its inter-node link track.
+            sink.lock().expect("obs lock poisoned").span(
+                Track::Link { scope: to, kind: LinkKind::Inter },
+                "xfer",
+                now,
+                landed - now,
+                vec![
+                    ("bytes", ArgV::U(bytes)),
+                    ("from", ArgV::U(from as u64)),
+                    ("to", ArgV::U(to as u64)),
+                ],
+            );
         }
+        landed
     }
 
     /// Ship request `i`'s prompt KV from its prefill replica `from` to a
@@ -657,6 +762,19 @@ impl<'a> Sim<'a> {
         let landed = self.kv_transfer(from, target, bytes, now);
         self.handoffs += 1;
         self.handoff_bytes += bytes;
+        if let Some(sink) = &self.cfg.obs {
+            sink.lock().expect("obs lock poisoned").instant(
+                Track::Control,
+                "handoff",
+                now,
+                vec![
+                    ("req", ArgV::U(req.id)),
+                    ("from", ArgV::U(from as u64)),
+                    ("to", ArgV::U(target as u64)),
+                    ("bytes", ArgV::U(bytes)),
+                ],
+            );
+        }
         self.q.push(landed, Ev::Handoff { replica: target, req });
     }
 
@@ -683,6 +801,19 @@ impl<'a> Sim<'a> {
         let landed = self.kv_transfer(from, target, bytes, now);
         self.migrations += 1;
         self.migration_bytes += bytes;
+        if let Some(sink) = &self.cfg.obs {
+            sink.lock().expect("obs lock poisoned").instant(
+                Track::Control,
+                "migrate",
+                now,
+                vec![
+                    ("req", ArgV::U(m.id)),
+                    ("from", ArgV::U(from as u64)),
+                    ("to", ArgV::U(target as u64)),
+                    ("bytes", ArgV::U(bytes)),
+                ],
+            );
+        }
         let synthetic = Request {
             id: m.id,
             prompt_len: m.ctx,
@@ -849,6 +980,14 @@ impl<'a> Sim<'a> {
         self.replicas[victim].draining = true;
         self.replicas[victim].drain_start = Some(now);
         self.drains += 1;
+        if let Some(sink) = &self.cfg.obs {
+            sink.lock().expect("obs lock poisoned").instant(
+                Track::Control,
+                "drain",
+                now,
+                vec![("replica", ArgV::U(victim as u64))],
+            );
+        }
         self.router.evict_replica_sessions(victim);
         self.retune_pool(kind);
         if self.cfg.migrate_on_drain {
@@ -905,6 +1044,21 @@ impl<'a> Sim<'a> {
                 .add_scope(scope, cfg.topo.nodes, cfg.topo.intra.beta, cfg.topo.inter.beta);
             cfg.net = Some(fab.clone());
             cfg.net_scope = scope;
+        }
+        // The replica's own config carries the sink so its fabric bookings
+        // (collective phase spans) record under its link scope.
+        cfg.obs = self.cfg.obs.clone();
+        self.bd.push(Breakdown::default());
+        if let Some(sink) = &self.cfg.obs {
+            sink.lock().expect("obs lock poisoned").instant(
+                Track::Control,
+                "replica_up",
+                self.q.now(),
+                vec![
+                    ("replica", ArgV::U(self.replicas.len() as u64)),
+                    ("pool", ArgV::S(format!("{kind:?}"))),
+                ],
+            );
         }
         let pred_step = predict_step(&cfg);
         let pred_chunk = predict_chunk(&cfg);
@@ -980,6 +1134,14 @@ impl<'a> Sim<'a> {
             rep.pred_step = predict_step(&rep.cfg);
             rep.pred_chunk = predict_chunk(&rep.cfg);
             self.retunes += 1;
+            if let Some(sink) = &self.cfg.obs {
+                sink.lock().expect("obs lock poisoned").instant(
+                    Track::Control,
+                    "retune",
+                    self.q.now(),
+                    vec![("replica", ArgV::U(i as u64)), ("msg", ArgV::U(msg))],
+                );
+            }
         }
     }
 
@@ -1004,6 +1166,45 @@ impl<'a> Sim<'a> {
         // Each replica prices the step with its own cost model; under
         // contention the booking inflates it when its links are busy.
         let dur = rep.cfg.step_time_at(&step, now);
+        if let Some(sink) = &self.cfg.obs {
+            // Same contract as the single-replica loop: the span carries
+            // the buckets the analytic accumulator sums (fabric queueing
+            // delay folded into Comm), so the event fold reconciles.
+            let base = rep.cfg.step_time(&step);
+            let delay = (dur - base).max(0.0);
+            let mut b = rep.cfg.step_breakdown(&step);
+            b.comm += delay;
+            let mut rec = sink.lock().expect("obs lock poisoned");
+            for c in &step.prefills {
+                rec.instant(
+                    Track::Replica(r),
+                    "chunk",
+                    now,
+                    vec![
+                        ("req", ArgV::U(c.id)),
+                        ("tokens", ArgV::U(c.tokens as u64)),
+                        ("ctx", ArgV::U(c.ctx as u64)),
+                        ("last", ArgV::U(c.last as u64)),
+                    ],
+                );
+            }
+            rec.span(
+                Track::Replica(r),
+                "step",
+                now,
+                dur,
+                vec![
+                    ("matmul", ArgV::F(b.matmul)),
+                    ("other", ArgV::F(b.other_comp)),
+                    ("comm", ArgV::F(b.comm)),
+                    ("idle", ArgV::F(b.idle)),
+                    ("rows", ArgV::U(step.token_rows() as u64)),
+                    ("seqs", ArgV::U(step.seqs() as u64)),
+                ],
+            );
+            drop(rec);
+            self.bd[r].add(&b);
+        }
         rep.current = Some(step);
         rep.stepping = true;
         self.q.push_in(dur, Ev::StepDone(r));
@@ -1034,6 +1235,14 @@ impl<'a> Sim<'a> {
             if let Some(t0) = rep.drain_start.take() {
                 self.drain_secs += now - t0;
             }
+            if let Some(sink) = &self.cfg.obs {
+                sink.lock().expect("obs lock poisoned").instant(
+                    Track::Control,
+                    "retire",
+                    now,
+                    vec![("replica", ArgV::U(r as u64))],
+                );
+            }
         }
     }
 
@@ -1048,6 +1257,14 @@ impl<'a> Sim<'a> {
         // truncation must not inflate throughput or deflate TPOT.
         let toks = self.produced[i].max(1);
         let tpot = if toks > 1 { (now - ft) / (toks - 1) as f64 } else { 0.0 };
+        if let Some(sink) = &self.cfg.obs {
+            sink.lock().expect("obs lock poisoned").instant(
+                Track::Control,
+                "finish",
+                now,
+                vec![("req", ArgV::U(i as u64)), ("out", ArgV::U(toks as u64))],
+            );
+        }
         self.metrics.record(ttft, tpot, toks as u64, &self.cfg.slo);
         if let Some(a) = self.autoscaler.as_mut() {
             a.observe(ttft, tpot);

@@ -38,6 +38,7 @@ pub mod fleet;
 pub mod metrics;
 pub mod models;
 pub mod moe;
+pub mod obs;
 pub mod parallel;
 pub mod perfmodel;
 pub mod runtime;

@@ -115,6 +115,40 @@ mod tests {
     }
 
     #[test]
+    fn idle_fill_overwrites_preexisting_idle_and_clamps_busy_overrun() {
+        // with_idle_to is a *fill*, not an add: stale idle is replaced.
+        let b = Breakdown { matmul: 1.0, other_comp: 0.0, comm: 0.0, idle: 99.0 };
+        assert_eq!(b.with_idle_to(4.0).idle, 3.0);
+        // Busy exceeding the wall clamps to exactly zero (no negative
+        // slot, and no NaN from e.g. fp-noise overruns).
+        let over = Breakdown { matmul: 3.0, other_comp: 2.0, comm: 1.0, idle: 0.5 };
+        let filled = over.with_idle_to(5.0);
+        assert_eq!(filled.idle, 0.0);
+        assert_eq!(filled.total(), 6.0); // busy buckets untouched
+        // Zero wall, zero busy: a degenerate but valid all-zero result.
+        let z = Breakdown::default().with_idle_to(0.0);
+        assert_eq!(z.total(), 0.0);
+    }
+
+    #[test]
+    fn fractions_of_empty_breakdown_are_zero_not_nan() {
+        let f = Breakdown::default().fractions();
+        assert_eq!(f, [0.0; 4]);
+        for x in f {
+            assert!(x.is_finite());
+        }
+    }
+
+    #[test]
+    fn scale_is_linear_per_bucket() {
+        let b = Breakdown { matmul: 1.0, other_comp: 0.5, comm: 0.25, idle: 0.25 };
+        let s = b.scale(4.0);
+        assert_eq!(s.total(), 8.0);
+        assert_eq!(s.matmul, 4.0);
+        assert_eq!(b.scale(0.0).total(), 0.0);
+    }
+
+    #[test]
     fn spans_aggregate_by_name() {
         let mut s = Spans::new();
         s.record("comm", 1.0);

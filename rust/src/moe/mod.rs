@@ -12,6 +12,7 @@ use crate::cluster::Topology;
 use crate::collectives::sim::{allreduce, CommConfig};
 use crate::collectives::AllReduceImpl;
 use crate::engine::batcher::StepBatch;
+use crate::metrics::Breakdown;
 use crate::parallel::{ParallelSpec, StepCost};
 use crate::perfmodel;
 use crate::serving::ServeConfig;
@@ -120,6 +121,58 @@ impl StepCost for MoeCost {
         model.n_layers as f64 * per_layer + s.pp as f64 * p2p + cfg.persona.step_overhead
     }
 
+    fn step_breakdown(&self, cfg: &ServeConfig, step: &StepBatch) -> Breakdown {
+        // Mirrors `step_time` exactly; buckets sum back to it. The DP
+        // straggler penalty is *exposed waiting* at the all-to-all
+        // rendezvous, so its inflation lands in Idle, not in the buckets
+        // of the work it stretches.
+        let s = self.spec;
+        let model = &cfg.model;
+        let moe = model.moe.expect("MoE model required");
+        let rows_total = step.token_rows().max(1);
+        let rows = rows_total.div_ceil(s.dp).max(1);
+        let d = model.d_model;
+        let dt = model.dtype_bytes;
+        let kv_len = step.mean_ctx();
+
+        let mut dense = model.clone();
+        dense.moe = None;
+        dense.ffn = 0;
+        let tp_topo = s.tp_topology(&cfg.topo);
+        let batch = step.seqs().div_ceil(s.dp).max(1);
+        let lt_attn = perfmodel::layer_times(&cfg.gpu, &dense, s.tp, rows, kv_len, batch);
+        let ar_msg = (rows * d * dt) as u64;
+        let ar_t = if s.tp > 1 {
+            allreduce(self.ar, &tp_topo, &cfg.comm, ar_msg, lt_attn.total() / 2.0).total
+        } else {
+            0.0
+        };
+
+        let experts_per_gpu = (moe.n_experts / s.ep).max(1);
+        let routed = (rows * moe.active_experts).div_ceil(s.ep).max(1);
+        let rows_e = routed.div_ceil(experts_per_gpu).max(1);
+        let expert_gemm = experts_per_gpu as f64
+            * (perfmodel::gemm_time(&cfg.gpu, rows_e, 2 * moe.expert_ffn, d, dt)
+                + perfmodel::gemm_time(&cfg.gpu, rows_e, d, moe.expert_ffn, dt));
+        let a2a = 2.0 * all_to_all_time(&cfg.topo, &cfg.comm, rows, d, dt, s.ep);
+
+        let eff = cfg.persona.compute_efficiency;
+        let per_layer_base = lt_attn.total() / eff + 2.0 * ar_t + expert_gemm + a2a;
+        let straggle = if s.dp > 1 { 0.45 * (1.0 - 1.0 / s.dp as f64) * 2.0 } else { 0.0 };
+        let p2p = if s.pp > 1 {
+            s.stage_link(&cfg.topo).xfer_time((rows * d * dt) as u64) + cfg.persona.p2p_overhead
+        } else {
+            0.0
+        };
+        let layers = model.n_layers as f64;
+        Breakdown {
+            matmul: layers * (lt_attn.matmul / eff + expert_gemm),
+            other_comp: layers * (lt_attn.other / eff) + cfg.persona.step_overhead,
+            comm: layers * (2.0 * ar_t + a2a) + s.pp as f64 * p2p,
+            idle: layers * (straggle * per_layer_base),
+        }
+    }
+
     fn step_collective_bytes(&self, cfg: &ServeConfig, step: &StepBatch) -> (u64, f64) {
         // The TP all-reduces of the attention part are what share the
         // fabric; EP all-to-alls stay un-booked for now (they are mostly
@@ -207,5 +260,24 @@ mod tests {
     #[should_panic(expected = "expert-parallel")]
     fn moe_cost_rejects_dense_spec() {
         let _ = MoeCost::new(ParallelSpec::tp(16), AllReduceImpl::NcclAuto);
+    }
+
+    #[test]
+    fn moe_breakdown_sums_to_step_time_and_charges_dp_straggle_to_idle() {
+        for (s, ar) in fig10_specs() {
+            let cfg = qwen_cfg(s, ar);
+            let batch = step(128);
+            let t = cfg.step_time(&batch);
+            let bd = cfg.step_breakdown(&batch);
+            assert!(
+                (bd.total() - t).abs() <= 1e-9 * t,
+                "{}: {} vs {t}",
+                cfg.deployment_label(),
+                bd.total()
+            );
+            assert!(bd.matmul > 0.0 && bd.comm > 0.0);
+            // Only the DP deployment has a rendezvous straggler bucket.
+            assert_eq!(bd.idle > 0.0, s.dp > 1, "{}", cfg.deployment_label());
+        }
     }
 }

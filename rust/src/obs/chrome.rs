@@ -1,0 +1,231 @@
+//! Chrome trace-event JSON emission (the `{base}.trace.json` artifact).
+//!
+//! The format is the Trace Event Format both `chrome://tracing` and
+//! Perfetto load: a `traceEvents` array of complete spans (`ph: "X"`,
+//! microsecond `ts`/`dur`) and instants (`ph: "i"`), plus `ph: "M"`
+//! metadata events naming the processes and threads. Tracks map as:
+//!
+//! - pid 1 "replicas" — one tid per serving replica,
+//! - pid 2 "fabric links" — one tid per (scope, link-class),
+//! - pid 3 "control" — router/autoscaler/drain decisions.
+//!
+//! Events are sorted by (pid, tid, ts) so per-track timestamps are
+//! monotone — pinned by `tests/integration_obs.rs` and the CI
+//! trace-smoke job. Hand-emitted (the vendored crate set has no serde);
+//! the inverse parser for validation lives in [`crate::obs::json`].
+
+use super::{ArgV, Recorder, Track};
+use crate::simnet::LinkKind;
+
+/// (pid, tid) a track renders under.
+fn track_ids(t: Track) -> (u64, u64) {
+    match t {
+        Track::Replica(r) => (1, r as u64),
+        Track::Link { scope, kind } => {
+            (2, 2 * scope as u64 + if kind == LinkKind::Intra { 0 } else { 1 })
+        }
+        Track::Control => (3, 0),
+    }
+}
+
+fn track_name(t: Track) -> String {
+    match t {
+        Track::Replica(r) => format!("replica {r}"),
+        Track::Link { scope, kind } => format!(
+            "scope {scope} {}",
+            if kind == LinkKind::Intra { "intra (NVLink)" } else { "inter (NIC)" }
+        ),
+        Track::Control => "decisions".to_string(),
+    }
+}
+
+/// Escape a string for a JSON string literal.
+pub fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn args_json(args: &[(&'static str, ArgV)]) -> String {
+    let mut s = String::from("{");
+    for (i, (k, v)) in args.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("\"{}\":", esc(k)));
+        match v {
+            ArgV::F(x) => s.push_str(&format!("{x:.9}")),
+            ArgV::U(u) => s.push_str(&format!("{u}")),
+            ArgV::S(t) => s.push_str(&format!("\"{}\"", esc(t))),
+        }
+    }
+    s.push('}');
+    s
+}
+
+/// Render the whole recorder as a Chrome trace JSON document.
+pub fn to_chrome_json(rec: &Recorder) -> String {
+    // One row per event, keyed for the (pid, tid, ts) sort. Instants sort
+    // after spans starting at the same instant (stable marker placement).
+    struct Row {
+        pid: u64,
+        tid: u64,
+        ts: f64,
+        order: u8,
+        body: String,
+    }
+    let mut rows: Vec<Row> = Vec::with_capacity(rec.spans().len() + rec.instants().len());
+    let mut tracks: Vec<Track> = Vec::new();
+    let mut see = |t: Track, tracks: &mut Vec<Track>| {
+        if !tracks.contains(&t) {
+            tracks.push(t);
+        }
+    };
+    for sp in rec.spans() {
+        see(sp.track, &mut tracks);
+        let (pid, tid) = track_ids(sp.track);
+        rows.push(Row {
+            pid,
+            tid,
+            ts: sp.start,
+            order: 0,
+            body: format!(
+                "{{\"name\":\"{}\",\"ph\":\"X\",\"ts\":{:.3},\"dur\":{:.3},\"pid\":{pid},\
+                 \"tid\":{tid},\"args\":{}}}",
+                esc(&sp.name),
+                sp.start * 1e6,
+                sp.dur * 1e6,
+                args_json(&sp.args)
+            ),
+        });
+    }
+    for iv in rec.instants() {
+        see(iv.track, &mut tracks);
+        let (pid, tid) = track_ids(iv.track);
+        rows.push(Row {
+            pid,
+            tid,
+            ts: iv.at,
+            order: 1,
+            body: format!(
+                "{{\"name\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\"ts\":{:.3},\"pid\":{pid},\
+                 \"tid\":{tid},\"args\":{}}}",
+                esc(&iv.name),
+                iv.at * 1e6,
+                args_json(&iv.args)
+            ),
+        });
+    }
+    rows.sort_by(|a, b| {
+        (a.pid, a.tid)
+            .cmp(&(b.pid, b.tid))
+            .then(a.ts.total_cmp(&b.ts))
+            .then(a.order.cmp(&b.order))
+    });
+
+    let mut out = String::from("{\n\"displayTimeUnit\":\"ms\",\n\"metadata\":{");
+    for (i, (k, v)) in rec.meta.pairs().iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\"{}\":\"{}\"", esc(k), esc(v)));
+    }
+    out.push_str(&format!(",\"makespan_s\":\"{:.6}\"", rec.makespan()));
+    out.push_str("},\n\"traceEvents\":[\n");
+    // Process/thread naming metadata first.
+    let mut bodies: Vec<String> = Vec::new();
+    for (pid, name) in [(1u64, "replicas"), (2, "fabric links"), (3, "control")] {
+        bodies.push(format!(
+            "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\
+             \"args\":{{\"name\":\"{name}\"}}}}"
+        ));
+    }
+    tracks.sort();
+    for t in tracks {
+        let (pid, tid) = track_ids(t);
+        bodies.push(format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            esc(&track_name(t))
+        ));
+    }
+    bodies.extend(rows.into_iter().map(|r| r.body));
+    out.push_str(&bodies.join(",\n"));
+    out.push_str("\n]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{json, RunMeta};
+
+    fn sample() -> Recorder {
+        let mut r = Recorder::new(RunMeta { label: "tp16/NVRAR".into(), ..Default::default() });
+        r.span(Track::Replica(0), "step", 0.0, 0.5, vec![("rows", ArgV::U(8))]);
+        r.span(Track::Replica(0), "step", 0.5, 0.25, vec![("matmul", ArgV::F(0.125))]);
+        r.span(
+            Track::Link { scope: 0, kind: LinkKind::Inter },
+            "nvrar.rd-inter",
+            0.1,
+            0.05,
+            vec![("bytes", ArgV::F(1e6))],
+        );
+        r.instant(Track::Control, "route", 0.0, vec![("req", ArgV::U(1))]);
+        r.set_makespan(0.75);
+        r
+    }
+
+    #[test]
+    fn emitted_trace_parses_as_json_with_expected_structure() {
+        let text = to_chrome_json(&sample());
+        let v = json::parse(&text).expect("trace must be valid JSON");
+        let evs = v.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        // 3 process_name + 3 thread_name + 3 spans + 1 instant.
+        assert_eq!(evs.len(), 10);
+        let meta = v.get("metadata").unwrap();
+        assert_eq!(meta.get("deployment").and_then(|d| d.as_str()), Some("tp16/NVRAR"));
+        // Every non-metadata event carries numeric ts and pid/tid.
+        for e in evs {
+            let ph = e.get("ph").and_then(|p| p.as_str()).unwrap();
+            if ph != "M" {
+                assert!(e.get("ts").and_then(|t| t.as_f64()).is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn per_track_timestamps_are_monotone() {
+        let text = to_chrome_json(&sample());
+        let v = json::parse(&text).unwrap();
+        let mut last: std::collections::BTreeMap<(u64, u64), f64> = Default::default();
+        for e in v.get("traceEvents").and_then(|e| e.as_arr()).unwrap() {
+            if e.get("ph").and_then(|p| p.as_str()) == Some("M") {
+                continue;
+            }
+            let key = (
+                e.get("pid").and_then(|p| p.as_f64()).unwrap() as u64,
+                e.get("tid").and_then(|p| p.as_f64()).unwrap() as u64,
+            );
+            let ts = e.get("ts").and_then(|t| t.as_f64()).unwrap();
+            let prev = last.insert(key, ts).unwrap_or(f64::NEG_INFINITY);
+            assert!(ts >= prev, "track {key:?} went backwards: {prev} -> {ts}");
+        }
+    }
+
+    #[test]
+    fn escaping_handles_quotes_and_control_chars() {
+        assert_eq!(esc("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(esc("\u{1}"), "\\u0001");
+    }
+}

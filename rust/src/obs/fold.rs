@@ -1,0 +1,131 @@
+//! The Pipit-style fold: re-derive per-replica Matmul / Other-Comp /
+//! Comm / Idle [`Breakdown`]s from the event stream alone, and reconcile
+//! them against the analytically accumulated ones.
+//!
+//! Each `step` span a replica track carries was stamped with its own
+//! four-bucket decomposition (plus any fabric queueing delay, folded
+//! into Comm at record time). The fold sums the busy buckets across a
+//! track's spans and attributes everything else up to the run's makespan
+//! as Idle — exactly what Pipit does to an Nsight trace (paper Figs 3,
+//! 8). Since the serving loops accumulate the *same* per-step breakdowns
+//! analytically, the two paths must agree: any drift means the recorder
+//! dropped or double-counted an event, or the cost model's decomposition
+//! stopped summing to its own step time. `tests/integration_obs.rs`
+//! pins the agreement to 1e-6 on serve and fleet runs.
+
+use super::{arg_f64, Recorder, Track};
+use crate::metrics::Breakdown;
+use std::collections::BTreeMap;
+
+/// Per-replica breakdowns derived purely from the event stream. A
+/// replica's Idle is its span-stamped idle (pipeline bubbles) plus the
+/// gap between its total busy time and the run's makespan.
+pub fn fold_breakdowns(rec: &Recorder) -> BTreeMap<usize, Breakdown> {
+    let mut out: BTreeMap<usize, Breakdown> = BTreeMap::new();
+    let mut span_total: BTreeMap<usize, f64> = BTreeMap::new();
+    for sp in rec.spans() {
+        let Track::Replica(r) = sp.track else { continue };
+        if sp.name != "step" {
+            continue;
+        }
+        let b = out.entry(r).or_default();
+        b.matmul += arg_f64(&sp.args, "matmul");
+        b.other_comp += arg_f64(&sp.args, "other");
+        b.comm += arg_f64(&sp.args, "comm");
+        b.idle += arg_f64(&sp.args, "idle");
+        *span_total.entry(r).or_default() += sp.dur;
+    }
+    for (r, b) in out.iter_mut() {
+        b.idle += (rec.makespan() - span_total[r]).max(0.0);
+    }
+    out
+}
+
+/// Max absolute per-bucket difference between the analytic breakdowns
+/// (`analytic[r]` for replica `r`) and the event-derived ones. A replica
+/// with no recorded steps folds to pure idle over the makespan.
+pub fn reconcile(
+    analytic: &[Breakdown],
+    folded: &BTreeMap<usize, Breakdown>,
+    makespan: f64,
+) -> f64 {
+    let mut worst = 0.0f64;
+    for (r, a) in analytic.iter().enumerate() {
+        let idle_only = Breakdown { idle: makespan, ..Default::default() };
+        let f = folded.get(&r).copied().unwrap_or(idle_only);
+        for d in [
+            a.matmul - f.matmul,
+            a.other_comp - f.other_comp,
+            a.comm - f.comm,
+            a.idle - f.idle,
+        ] {
+            worst = worst.max(d.abs());
+        }
+    }
+    // Folded tracks the analytic side never produced also count.
+    for r in folded.keys() {
+        if *r >= analytic.len() {
+            worst = f64::INFINITY;
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{ArgV, RunMeta};
+
+    fn step_args(m: f64, o: f64, c: f64, i: f64) -> Vec<(&'static str, ArgV)> {
+        vec![
+            ("matmul", ArgV::F(m)),
+            ("other", ArgV::F(o)),
+            ("comm", ArgV::F(c)),
+            ("idle", ArgV::F(i)),
+        ]
+    }
+
+    #[test]
+    fn fold_sums_buckets_and_attributes_gap_idle() {
+        let mut r = Recorder::new(RunMeta::default());
+        r.span(Track::Replica(0), "step", 0.0, 1.0, step_args(0.4, 0.3, 0.3, 0.0));
+        r.span(Track::Replica(0), "step", 2.0, 1.0, step_args(0.5, 0.2, 0.2, 0.1));
+        r.set_makespan(4.0);
+        let folded = fold_breakdowns(&r);
+        let b = folded[&0];
+        assert!((b.matmul - 0.9).abs() < 1e-12);
+        assert!((b.other_comp - 0.5).abs() < 1e-12);
+        assert!((b.comm - 0.5).abs() < 1e-12);
+        // 0.1 span-stamped + (4.0 − 2.0 span seconds) gap.
+        assert!((b.idle - 2.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconcile_matches_identical_breakdowns_and_flags_drift() {
+        let mut r = Recorder::new(RunMeta::default());
+        r.span(Track::Replica(0), "step", 0.0, 1.0, step_args(0.4, 0.3, 0.3, 0.0));
+        r.set_makespan(1.0);
+        let folded = fold_breakdowns(&r);
+        let analytic = vec![Breakdown { matmul: 0.4, other_comp: 0.3, comm: 0.3, idle: 0.0 }];
+        assert!(reconcile(&analytic, &folded, 1.0) < 1e-12);
+        let drifted = vec![Breakdown { matmul: 0.5, other_comp: 0.3, comm: 0.3, idle: 0.0 }];
+        assert!((reconcile(&drifted, &folded, 1.0) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replica_with_no_steps_folds_to_pure_idle() {
+        let r = Recorder::new(RunMeta::default());
+        let folded = fold_breakdowns(&r);
+        let analytic = vec![Breakdown { idle: 3.0, ..Default::default() }];
+        assert!(reconcile(&analytic, &folded, 3.0) < 1e-12);
+    }
+
+    #[test]
+    fn unknown_folded_replica_is_infinite_drift() {
+        let mut r = Recorder::new(RunMeta::default());
+        r.span(Track::Replica(5), "step", 0.0, 1.0, step_args(1.0, 0.0, 0.0, 0.0));
+        r.set_makespan(1.0);
+        let folded = fold_breakdowns(&r);
+        assert!(reconcile(&[], &folded, 1.0).is_infinite());
+    }
+}

@@ -1,0 +1,139 @@
+//! Per-request lifecycle records folded from the event stream (the
+//! `{base}.lifecycle.csv` artifact).
+//!
+//! The serving loops emit request-keyed instants — `arrival`, `chunk`
+//! (one per scheduled prefill chunk, with the attended context), `preempt`,
+//! `first_token`, `finish` — and this fold groups them into one row per
+//! request: admission latency (arrival → first chunk scheduled), chunk
+//! count, preemptions, prefix-cache hit tokens (first chunk's
+//! `ctx − tokens`, the cached prefix the batcher skipped), TTFT and TPOT.
+
+use super::{arg_f64, Recorder};
+use crate::util::tables::Table;
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+struct Life {
+    arrival: Option<f64>,
+    first_chunk: Option<f64>,
+    hit_tok: u64,
+    chunks: u64,
+    preempts: u64,
+    first_token: Option<f64>,
+    finish: Option<f64>,
+    out_tokens: u64,
+}
+
+/// Fold the recorder's instants into one [`Table`] row per request,
+/// ordered by request id. Requests still in flight at the end of the
+/// trace (no `finish`) render with an empty finish column.
+pub fn lifecycle_table(rec: &Recorder) -> Table {
+    let mut lives: BTreeMap<u64, Life> = BTreeMap::new();
+    for iv in rec.instants() {
+        let req = arg_f64(&iv.args, "req") as u64;
+        match iv.name.as_str() {
+            "arrival" => lives.entry(req).or_default().arrival = Some(iv.at),
+            "chunk" => {
+                let l = lives.entry(req).or_default();
+                l.chunks += 1;
+                if l.first_chunk.is_none() {
+                    l.first_chunk = Some(iv.at);
+                    let tokens = arg_f64(&iv.args, "tokens");
+                    let ctx = arg_f64(&iv.args, "ctx");
+                    l.hit_tok = (ctx - tokens).max(0.0) as u64;
+                }
+            }
+            "preempt" => lives.entry(req).or_default().preempts += 1,
+            "first_token" => {
+                let l = lives.entry(req).or_default();
+                if l.first_token.is_none() {
+                    l.first_token = Some(iv.at);
+                }
+            }
+            "finish" => {
+                let l = lives.entry(req).or_default();
+                l.finish = Some(iv.at);
+                l.out_tokens = arg_f64(&iv.args, "out") as u64;
+            }
+            _ => {}
+        }
+    }
+    let mut t = Table::new(
+        "request lifecycle",
+        &[
+            "req", "arrival_s", "admit_s", "chunks", "preempts", "hit_tok", "ttft_s", "tpot_s",
+            "out_tok", "finish_s",
+        ],
+    );
+    for (k, v) in rec.meta.pairs() {
+        t.meta(&k, &v);
+    }
+    let f = |x: Option<f64>| x.map(|v| format!("{v:.6}")).unwrap_or_default();
+    for (req, l) in &lives {
+        let arrival = l.arrival.unwrap_or(0.0);
+        let admit = l.first_chunk.map(|c| c - arrival);
+        let ttft = l.first_token.map(|ft| ft - arrival);
+        let tpot = match (l.first_token, l.finish) {
+            (Some(ft), Some(fin)) if l.out_tokens > 1 => {
+                Some((fin - ft) / (l.out_tokens - 1) as f64)
+            }
+            (Some(_), Some(_)) => Some(0.0),
+            _ => None,
+        };
+        t.row(&[
+            req.to_string(),
+            format!("{arrival:.6}"),
+            f(admit),
+            l.chunks.to_string(),
+            l.preempts.to_string(),
+            l.hit_tok.to_string(),
+            f(ttft),
+            f(tpot),
+            l.out_tokens.to_string(),
+            f(l.finish),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{ArgV, RunMeta, Track};
+
+    #[test]
+    fn folds_one_request_end_to_end() {
+        let mut r = Recorder::new(RunMeta::default());
+        let t = Track::Replica(0);
+        let u = |x: u64| ArgV::U(x);
+        r.instant(t, "arrival", 1.0, vec![("req", u(7))]);
+        // First chunk attends 640 tokens but only computes 512: 128 cached.
+        r.instant(t, "chunk", 1.5, vec![("req", u(7)), ("tokens", u(512)), ("ctx", u(640))]);
+        r.instant(t, "chunk", 2.0, vec![("req", u(7)), ("tokens", u(256)), ("ctx", u(896))]);
+        r.instant(t, "first_token", 2.5, vec![("req", u(7))]);
+        r.instant(t, "preempt", 3.0, vec![("req", u(7))]);
+        r.instant(t, "finish", 4.5, vec![("req", u(7)), ("out", u(5))]);
+        let table = lifecycle_table(&r);
+        assert_eq!(table.rows().len(), 1);
+        let row = &table.rows()[0];
+        assert_eq!(row[0], "7");
+        assert_eq!(row[1], "1.000000"); // arrival
+        assert_eq!(row[2], "0.500000"); // admit latency
+        assert_eq!(row[3], "2"); // chunks
+        assert_eq!(row[4], "1"); // preempts
+        assert_eq!(row[5], "128"); // hit tokens from the FIRST chunk only
+        assert_eq!(row[6], "1.500000"); // ttft
+        assert_eq!(row[7], "0.500000"); // tpot = (4.5-2.5)/(5-1)
+        assert_eq!(row[8], "5");
+    }
+
+    #[test]
+    fn unfinished_request_has_empty_finish_cells() {
+        let mut r = Recorder::new(RunMeta::default());
+        r.instant(Track::Replica(0), "arrival", 0.0, vec![("req", ArgV::U(1))]);
+        let table = lifecycle_table(&r);
+        let row = &table.rows()[0];
+        assert_eq!(row[6], ""); // no ttft
+        assert_eq!(row[9], ""); // no finish
+    }
+}

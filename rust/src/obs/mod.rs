@@ -1,0 +1,270 @@
+//! Simulator-native tracing: a Nsight/Pipit-style event timeline for
+//! every run.
+//!
+//! The source paper's bottleneck analysis (Figs 3, 8) comes from Nsight
+//! Systems traces folded with Pipit into per-GPU Matmul / Other-Comp /
+//! Comm / Idle buckets. This module is the simulation's analogue: a
+//! structured event [`Recorder`] the serving loop, the fleet simulation,
+//! and the collective flow models all feed, from which three artifacts
+//! are derived:
+//!
+//! 1. **Chrome trace-event JSON** ([`chrome`]) — loadable in Perfetto;
+//!    tracks are replicas (step spans with per-bucket args), fabric links
+//!    (per-phase collective spans, KV transfers), and a control track
+//!    (router/autoscaler decisions).
+//! 2. **Per-request lifecycle CSV** ([`lifecycle`]) — admission latency,
+//!    prefill chunks, preemptions, prefix-cache hit tokens, TTFT/TPOT.
+//! 3. **Windowed time-series CSV** ([`timeseries`]) — goodput, batch
+//!    occupancy, KV utilization, per-kind link activity over sim-time.
+//!
+//! [`fold`] closes the loop: it re-derives the four-bucket
+//! [`crate::metrics::Breakdown`] per replica from the event stream alone
+//! and reconciles it against the analytically accumulated one — turning
+//! the tracer into a correctness check on the cost model itself
+//! (asserted to 1e-6 in `tests/integration_obs.rs`).
+//!
+//! Tracing is **zero-cost when disabled**: every hook sits behind an
+//! `Option<ObsSink>` that defaults to `None`, and the recording path
+//! never feeds back into any simulated quantity — reports with tracing
+//! off are bit-for-bit identical to a build without this module.
+
+pub mod chrome;
+pub mod fold;
+pub mod json;
+pub mod lifecycle;
+pub mod timeseries;
+
+use crate::simnet::LinkKind;
+use std::sync::{Arc, Mutex};
+
+/// Shared handle every instrumented layer holds; cheap to clone.
+pub type ObsSink = Arc<Mutex<Recorder>>;
+
+/// Where an event lives in the timeline. One `Replica` track per serving
+/// replica (a TP group acting as one logical GPU), one `Link` track per
+/// (scope, link-class) slice of the shared fabric, and a `Control` track
+/// for fleet-level decisions (routing, scaling, drains).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Track {
+    Replica(usize),
+    Link { scope: usize, kind: LinkKind },
+    Control,
+}
+
+/// One span/instant argument value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArgV {
+    F(f64),
+    U(u64),
+    S(String),
+}
+
+/// A duration event (`ph: "X"` in the Chrome trace).
+#[derive(Clone, Debug)]
+pub struct SpanEv {
+    pub track: Track,
+    pub name: String,
+    /// Start time, sim seconds.
+    pub start: f64,
+    /// Duration, sim seconds.
+    pub dur: f64,
+    pub args: Vec<(&'static str, ArgV)>,
+}
+
+/// A point event (`ph: "i"`).
+#[derive(Clone, Debug)]
+pub struct InstantEv {
+    pub track: Track,
+    pub name: String,
+    pub at: f64,
+    pub args: Vec<(&'static str, ArgV)>,
+}
+
+/// Run-identifying metadata stamped into every artifact so traces are
+/// self-describing and reproducible (the satellite of ISSUE 6).
+#[derive(Clone, Debug)]
+pub struct RunMeta {
+    /// Workload seed (None for seedless runs).
+    pub seed: Option<u64>,
+    /// Deployment label, e.g. `tp16/NVRAR`.
+    pub label: String,
+    pub model: String,
+    pub machine: String,
+    /// Crate version the artifact was produced by.
+    pub version: &'static str,
+}
+
+impl Default for RunMeta {
+    fn default() -> Self {
+        RunMeta {
+            seed: None,
+            label: String::new(),
+            model: String::new(),
+            machine: String::new(),
+            version: env!("CARGO_PKG_VERSION"),
+        }
+    }
+}
+
+impl RunMeta {
+    /// Key/value pairs for CSV headers and the trace's metadata object.
+    pub fn pairs(&self) -> Vec<(String, String)> {
+        let mut out = vec![("version".to_string(), self.version.to_string())];
+        if let Some(s) = self.seed {
+            out.push(("seed".to_string(), format!("{s:#x}")));
+        }
+        for (k, v) in
+            [("deployment", &self.label), ("model", &self.model), ("machine", &self.machine)]
+        {
+            if !v.is_empty() {
+                out.push((k.to_string(), v.clone()));
+            }
+        }
+        out
+    }
+}
+
+/// The event store one run accumulates. Owned behind an [`ObsSink`];
+/// locked briefly per event (the simulations are single-threaded, the
+/// mutex only exists so the sink can be shared through `Arc` clones in
+/// configs).
+#[derive(Debug, Default)]
+pub struct Recorder {
+    pub meta: RunMeta,
+    spans: Vec<SpanEv>,
+    instants: Vec<InstantEv>,
+    makespan: f64,
+}
+
+impl Recorder {
+    pub fn new(meta: RunMeta) -> Self {
+        Recorder { meta, ..Default::default() }
+    }
+
+    /// Convenience: a fresh shared sink.
+    pub fn sink(meta: RunMeta) -> ObsSink {
+        Arc::new(Mutex::new(Recorder::new(meta)))
+    }
+
+    pub fn span(
+        &mut self,
+        track: Track,
+        name: &str,
+        start: f64,
+        dur: f64,
+        args: Vec<(&'static str, ArgV)>,
+    ) {
+        self.spans.push(SpanEv { track, name: name.to_string(), start, dur: dur.max(0.0), args });
+    }
+
+    pub fn instant(&mut self, track: Track, name: &str, at: f64, args: Vec<(&'static str, ArgV)>) {
+        self.instants.push(InstantEv { track, name: name.to_string(), at, args });
+    }
+
+    /// Declare the run's horizon (monotone max) — the fold uses it to
+    /// attribute trailing idle time.
+    pub fn set_makespan(&mut self, t: f64) {
+        self.makespan = self.makespan.max(t);
+    }
+
+    pub fn makespan(&self) -> f64 {
+        self.makespan
+    }
+
+    pub fn spans(&self) -> &[SpanEv] {
+        &self.spans
+    }
+
+    pub fn instants(&self) -> &[InstantEv] {
+        &self.instants
+    }
+}
+
+/// Look up a span/instant argument by key.
+pub fn arg<'a>(args: &'a [(&'static str, ArgV)], key: &str) -> Option<&'a ArgV> {
+    args.iter().find(|(k, _)| *k == key).map(|(_, v)| v)
+}
+
+/// Numeric argument lookup (F or U), defaulting to 0.
+pub fn arg_f64(args: &[(&'static str, ArgV)], key: &str) -> f64 {
+    match arg(args, key) {
+        Some(ArgV::F(x)) => *x,
+        Some(ArgV::U(u)) => *u as f64,
+        _ => 0.0,
+    }
+}
+
+/// Write the three artifacts for a finished run: `{base}.trace.json`
+/// (Chrome trace), `{base}.lifecycle.csv`, `{base}.timeline.csv`.
+/// Returns the written paths.
+pub fn write_artifacts(base: &str, rec: &Recorder) -> std::io::Result<Vec<String>> {
+    if let Some(dir) = std::path::Path::new(base).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let trace = format!("{base}.trace.json");
+    std::fs::write(&trace, chrome::to_chrome_json(rec))?;
+    let life = format!("{base}.lifecycle.csv");
+    std::fs::write(&life, lifecycle::lifecycle_table(rec).to_csv())?;
+    let tl = format!("{base}.timeline.csv");
+    let window = (rec.makespan() / 20.0).max(1e-3);
+    std::fs::write(&tl, timeseries::timeseries_table(rec, window).to_csv())?;
+    Ok(vec![trace, life, tl])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_accumulates_and_makespan_is_monotone() {
+        let mut r = Recorder::new(RunMeta::default());
+        r.span(Track::Replica(0), "step", 0.0, 1.0, vec![("rows", ArgV::U(4))]);
+        r.instant(Track::Control, "route", 0.5, vec![("req", ArgV::U(7))]);
+        r.set_makespan(2.0);
+        r.set_makespan(1.0);
+        assert_eq!(r.spans().len(), 1);
+        assert_eq!(r.instants().len(), 1);
+        assert_eq!(r.makespan(), 2.0);
+        assert_eq!(arg_f64(&r.spans()[0].args, "rows"), 4.0);
+        assert_eq!(arg_f64(&r.spans()[0].args, "nope"), 0.0);
+    }
+
+    #[test]
+    fn negative_durations_clamp_to_zero() {
+        let mut r = Recorder::new(RunMeta::default());
+        r.span(Track::Replica(0), "step", 1.0, -0.25, vec![]);
+        assert_eq!(r.spans()[0].dur, 0.0);
+    }
+
+    #[test]
+    fn meta_pairs_include_version_and_skip_empty() {
+        let m = RunMeta {
+            seed: Some(0xB0257),
+            label: "tp16/NVRAR".into(),
+            model: "70b".into(),
+            machine: String::new(),
+            version: "9.9.9",
+        };
+        let pairs = m.pairs();
+        assert!(pairs.contains(&("version".to_string(), "9.9.9".to_string())));
+        assert!(pairs.contains(&("seed".to_string(), "0xb0257".to_string())));
+        assert!(pairs.contains(&("deployment".to_string(), "tp16/NVRAR".to_string())));
+        assert!(!pairs.iter().any(|(k, _)| k == "machine"));
+    }
+
+    #[test]
+    fn write_artifacts_emits_all_three_files() {
+        let mut r = Recorder::new(RunMeta::default());
+        r.span(Track::Replica(0), "step", 0.0, 0.5, vec![]);
+        r.set_makespan(0.5);
+        let dir = std::env::temp_dir().join("yalis_obs_test");
+        let base = dir.join("run").to_str().unwrap().to_string();
+        let paths = write_artifacts(&base, &r).unwrap();
+        assert_eq!(paths.len(), 3);
+        for p in &paths {
+            assert!(std::fs::metadata(p).unwrap().len() > 0, "{p} empty");
+        }
+    }
+}

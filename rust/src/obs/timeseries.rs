@@ -1,0 +1,171 @@
+//! Fixed-window time-series folded from the event stream (the
+//! `{base}.timeline.csv` artifact): how goodput, batch occupancy, KV
+//! utilization, and fabric activity move over sim-time — the view the
+//! end-of-run aggregates flatten away (diurnal ramps, drain dips,
+//! migration bursts).
+
+use super::{arg_f64, Recorder, Track};
+use crate::simnet::LinkKind;
+use crate::util::tables::Table;
+
+/// Overlap of `[s, e)` with window `[w0, w1)`.
+fn overlap(s: f64, e: f64, w0: f64, w1: f64) -> f64 {
+    (e.min(w1) - s.max(w0)).max(0.0)
+}
+
+/// Fraction of `[w0, w1)` covered by the union of `intervals`.
+fn union_frac(intervals: &[(f64, f64)], w0: f64, w1: f64) -> f64 {
+    let mut clipped: Vec<(f64, f64)> = intervals
+        .iter()
+        .filter_map(|&(s, e)| {
+            let (a, b) = (s.max(w0), e.min(w1));
+            (b > a).then_some((a, b))
+        })
+        .collect();
+    clipped.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut covered = 0.0;
+    let mut cursor = w0;
+    for (s, e) in clipped {
+        let s = s.max(cursor);
+        if e > s {
+            covered += e - s;
+            cursor = e;
+        }
+    }
+    covered / (w1 - w0).max(1e-12)
+}
+
+/// Fold the recorder into one row per `window`-second bucket over
+/// `[0, makespan]`:
+///
+/// - `out_tok_per_s` — decoded tokens per second (`toks` instants),
+/// - `running` — mean sequences in flight (step spans' `seqs` weighted
+///   by their overlap with the window),
+/// - `kv_frac` — mean KV-page occupancy across `kv` gauge samples in the
+///   window (previous sample held when a window has none),
+/// - `busy_intra` / `busy_inter` — fraction of the window in which at
+///   least one flow occupied a link of that class (union over the link
+///   tracks' spans).
+pub fn timeseries_table(rec: &Recorder, window: f64) -> Table {
+    let window = window.max(1e-9);
+    let horizon = rec.makespan().max(window);
+    let n_win = (horizon / window).ceil() as usize;
+
+    // Pre-split events once.
+    let mut step_spans: Vec<(f64, f64, f64)> = Vec::new(); // (start, end, seqs)
+    let mut intra: Vec<(f64, f64)> = Vec::new();
+    let mut inter: Vec<(f64, f64)> = Vec::new();
+    for sp in rec.spans() {
+        match sp.track {
+            Track::Replica(_) if sp.name == "step" => {
+                step_spans.push((sp.start, sp.start + sp.dur, arg_f64(&sp.args, "seqs")));
+            }
+            Track::Link { kind, .. } => {
+                let iv = (sp.start, sp.start + sp.dur);
+                if kind == LinkKind::Intra {
+                    intra.push(iv);
+                } else {
+                    inter.push(iv);
+                }
+            }
+            _ => {}
+        }
+    }
+    let mut toks: Vec<(f64, f64)> = Vec::new(); // (at, tokens)
+    let mut kv: Vec<(f64, f64)> = Vec::new(); // (at, frac)
+    for iv in rec.instants() {
+        match iv.name.as_str() {
+            "toks" => toks.push((iv.at, arg_f64(&iv.args, "n"))),
+            "kv" => kv.push((iv.at, arg_f64(&iv.args, "frac"))),
+            _ => {}
+        }
+    }
+    kv.sort_by(|a, b| a.0.total_cmp(&b.0));
+
+    let mut t = Table::new(
+        "timeline",
+        &["t0_s", "out_tok_per_s", "running", "kv_frac", "busy_intra", "busy_inter"],
+    );
+    for (k, v) in rec.meta.pairs() {
+        t.meta(&k, &v);
+    }
+    let mut last_kv = 0.0;
+    for w in 0..n_win {
+        let (w0, w1) = (w as f64 * window, (w as f64 + 1.0) * window);
+        let out: f64 = toks.iter().filter(|(at, _)| *at >= w0 && *at < w1).map(|(_, n)| n).sum();
+        let running: f64 = step_spans
+            .iter()
+            .map(|&(s, e, seqs)| seqs * overlap(s, e, w0, w1))
+            .sum::<f64>()
+            / window;
+        let samples: Vec<f64> =
+            kv.iter().filter(|(at, _)| *at >= w0 && *at < w1).map(|(_, f)| *f).collect();
+        let kv_frac = if samples.is_empty() {
+            last_kv
+        } else {
+            let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+            last_kv = *samples.last().unwrap();
+            mean
+        };
+        t.row(&[
+            format!("{w0:.3}"),
+            format!("{:.2}", out / window),
+            format!("{running:.2}"),
+            format!("{kv_frac:.4}"),
+            format!("{:.4}", union_frac(&intra, w0, w1)),
+            format!("{:.4}", union_frac(&inter, w0, w1)),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{ArgV, RunMeta};
+
+    #[test]
+    fn union_frac_merges_overlaps() {
+        let iv = [(0.0, 0.5), (0.25, 0.75), (2.0, 3.0)];
+        assert!((union_frac(&iv, 0.0, 1.0) - 0.75).abs() < 1e-12);
+        assert_eq!(union_frac(&iv, 1.0, 2.0), 0.0);
+        assert_eq!(union_frac(&[], 0.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn windows_partition_the_run() {
+        let mut r = Recorder::new(RunMeta::default());
+        // 10 tokens at t=0.5, 20 at t=1.5; one step span covering [0, 2)
+        // with 4 seqs; KV gauge sampled once per second.
+        r.span(
+            Track::Replica(0),
+            "step",
+            0.0,
+            2.0,
+            vec![("seqs", ArgV::F(4.0))],
+        );
+        r.instant(Track::Replica(0), "toks", 0.5, vec![("n", ArgV::U(10))]);
+        r.instant(Track::Replica(0), "toks", 1.5, vec![("n", ArgV::U(20))]);
+        r.instant(Track::Replica(0), "kv", 0.5, vec![("frac", ArgV::F(0.25))]);
+        r.span(
+            Track::Link { scope: 0, kind: LinkKind::Inter },
+            "xfer",
+            0.0,
+            0.5,
+            vec![],
+        );
+        r.set_makespan(2.0);
+        let t = timeseries_table(&r, 1.0);
+        assert_eq!(t.rows().len(), 2);
+        let r0 = &t.rows()[0];
+        let r1 = &t.rows()[1];
+        assert_eq!(r0[1], "10.00");
+        assert_eq!(r1[1], "20.00");
+        assert_eq!(r0[2], "4.00");
+        assert_eq!(r0[3], "0.2500");
+        // Window 1 has no KV sample: previous value held.
+        assert_eq!(r1[3], "0.2500");
+        assert_eq!(r0[5], "0.5000"); // NIC busy half of window 0
+        assert_eq!(r1[5], "0.0000");
+    }
+}

@@ -18,7 +18,9 @@ use crate::collectives::AllReduceImpl;
 use crate::engine::batcher::{Batcher, Request, StepBatch};
 use crate::engine::kv::PagedKv;
 use crate::engine::persona::Persona;
+use crate::metrics::Breakdown;
 use crate::models::ModelConfig;
+use crate::obs::ArgV;
 use crate::parallel::{cost_for, ParallelSpec, StepCost};
 use crate::perfmodel::GpuSpec;
 use crate::simnet::{CongestionStats, EventQueue, Interconnect, LinkKind};
@@ -69,6 +71,10 @@ pub struct ServeConfig {
     /// Link scope this deployment's nodes occupy on the fabric (a fleet
     /// assigns one scope per replica; standalone `serve` uses 0).
     pub net_scope: usize,
+    /// Event recorder ([`crate::obs`]) — `None` (the default) disables
+    /// tracing entirely. Recording never feeds back into any simulated
+    /// quantity: reports with tracing off are bit-for-bit identical.
+    pub obs: Option<crate::obs::ObsSink>,
 }
 
 impl ServeConfig {
@@ -85,6 +91,13 @@ impl ServeConfig {
     /// or the fabric is idle.
     pub fn step_time_at(&self, step: &StepBatch, at: f64) -> f64 {
         self.cost.step_time_at(self, step, at)
+    }
+
+    /// Four-bucket decomposition of [`ServeConfig::step_time`] (same
+    /// inputs, buckets summing back to it — see
+    /// [`StepCost::step_breakdown`]).
+    pub fn step_breakdown(&self, step: &StepBatch) -> Breakdown {
+        self.cost.step_breakdown(self, step)
     }
 
     /// Enable the shared-interconnect contention layer with a fresh
@@ -157,6 +170,9 @@ pub struct ServeReport {
     /// Congestion-delay accounting across every fabric booking of the run
     /// (all-zero with contention disabled or an uncontended fabric).
     pub congestion: CongestionStats,
+    /// Analytically accumulated Matmul/Other/Comm/Idle over the run
+    /// (`Some` only when tracing was enabled; sums to the makespan).
+    pub breakdown: Option<Breakdown>,
 }
 
 enum Ev {
@@ -183,11 +199,36 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
     let mut ttft = Summary::new();
     let mut tpot = Summary::new();
     let mut last_done = 0.0f64;
+    // Tracing state: the replica's event track and the analytically
+    // accumulated breakdown the event fold is reconciled against.
+    let track = crate::obs::Track::Replica(cfg.net_scope);
+    if let Some(sink) = &cfg.obs {
+        let mut r = sink.lock().expect("obs lock poisoned");
+        if r.meta.label.is_empty() {
+            r.meta.label = cfg.deployment_label();
+        }
+        if r.meta.model.is_empty() {
+            r.meta.model = cfg.model.name.to_string();
+        }
+    }
+    let mut analytic = Breakdown::default();
 
     while let Some((now, ev)) = q.pop() {
         match ev {
             Ev::Arrival(i) => {
                 batcher.submit(reqs[i]);
+                if let Some(sink) = &cfg.obs {
+                    sink.lock().expect("obs lock poisoned").instant(
+                        track,
+                        "arrival",
+                        now,
+                        vec![
+                            ("req", ArgV::U(reqs[i].id)),
+                            ("prompt", ArgV::U(reqs[i].prompt_len as u64)),
+                            ("decode", ArgV::U(reqs[i].decode_len as u64)),
+                        ],
+                    );
+                }
             }
             Ev::StepDone => {
                 stepping = false;
@@ -202,6 +243,14 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
                         let i = c.id as usize;
                         if first_token[i].is_none() {
                             first_token[i] = Some(now);
+                            if let Some(sink) = &cfg.obs {
+                                sink.lock().expect("obs lock poisoned").instant(
+                                    track,
+                                    "first_token",
+                                    now,
+                                    vec![("req", ArgV::U(c.id))],
+                                );
+                            }
                         }
                         produced[i] += 1;
                     }
@@ -214,24 +263,93 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
                     // will be re-produced after the re-prefill.
                     produced[*id as usize] -= 1;
                 }
+                if let Some(sink) = &cfg.obs {
+                    let mut r = sink.lock().expect("obs lock poisoned");
+                    for id in &outcome.preempted {
+                        r.instant(track, "preempt", now, vec![("req", ArgV::U(*id))]);
+                    }
+                    r.instant(
+                        track,
+                        "toks",
+                        now,
+                        vec![("n", ArgV::U(outcome.new_tokens as u64))],
+                    );
+                    let frac = kv.used_pages() as f64 / kv.total_pages().max(1) as f64;
+                    r.instant(track, "kv", now, vec![("frac", ArgV::F(frac))]);
+                }
                 for id in batcher.take_finished() {
                     let i = id as usize;
                     let ft = first_token[i].expect("finished request has a first token");
                     ttft.add(ft - reqs[i].arrival);
                     let toks = produced[i].max(1);
                     tpot.add(if toks > 1 { (now - ft) / (toks - 1) as f64 } else { 0.0 });
+                    if let Some(sink) = &cfg.obs {
+                        sink.lock().expect("obs lock poisoned").instant(
+                            track,
+                            "finish",
+                            now,
+                            vec![("req", ArgV::U(id)), ("out", ArgV::U(produced[i] as u64))],
+                        );
+                    }
                 }
                 last_done = now;
             }
         }
         if !stepping {
             let step = batcher.next_step(&mut kv);
-            rejected += batcher.take_rejected().len() as u64;
+            let rej = batcher.take_rejected();
+            rejected += rej.len() as u64;
+            if let Some(sink) = &cfg.obs {
+                let mut r = sink.lock().expect("obs lock poisoned");
+                for id in &rej {
+                    r.instant(track, "reject", now, vec![("req", ArgV::U(*id))]);
+                }
+            }
             if !step.is_empty() {
                 let dur = cfg.step_time_at(&step, q.now());
                 steps += 1;
                 if step.prefills.is_empty() {
                     decode_only += 1;
+                }
+                if let Some(sink) = &cfg.obs {
+                    // Per-step four-bucket decomposition; any fabric
+                    // queueing delay beyond the closed-form step time is
+                    // Comm. The span carries the same buckets the analytic
+                    // accumulator sums, so the event fold reconciles
+                    // bit-for-bit on the busy buckets.
+                    let base = cfg.step_time(&step);
+                    let delay = (dur - base).max(0.0);
+                    let mut bd = cfg.step_breakdown(&step);
+                    bd.comm += delay;
+                    analytic.add(&bd);
+                    let mut r = sink.lock().expect("obs lock poisoned");
+                    for c in &step.prefills {
+                        r.instant(
+                            track,
+                            "chunk",
+                            q.now(),
+                            vec![
+                                ("req", ArgV::U(c.id)),
+                                ("tokens", ArgV::U(c.tokens as u64)),
+                                ("ctx", ArgV::U(c.ctx as u64)),
+                                ("last", ArgV::U(c.last as u64)),
+                            ],
+                        );
+                    }
+                    r.span(
+                        track,
+                        "step",
+                        q.now(),
+                        dur,
+                        vec![
+                            ("matmul", ArgV::F(bd.matmul)),
+                            ("other", ArgV::F(bd.other_comp)),
+                            ("comm", ArgV::F(bd.comm)),
+                            ("idle", ArgV::F(bd.idle)),
+                            ("rows", ArgV::U(step.token_rows() as u64)),
+                            ("seqs", ArgV::U(step.seqs() as u64)),
+                        ],
+                    );
                 }
                 stepping = true;
                 q.push_in(dur, Ev::StepDone);
@@ -253,6 +371,15 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
         }
         None => (0.0, 0.0, CongestionStats::default()),
     };
+    let breakdown = cfg.obs.as_ref().map(|sink| {
+        let mut r = sink.lock().expect("obs lock poisoned");
+        r.set_makespan(last_done);
+        // Everything the steps did not cover is idle — the same gap the
+        // event fold attributes from the recorded spans.
+        let mut b = analytic;
+        b.idle += (last_done - b.total()).max(0.0);
+        b
+    });
     ServeReport {
         output_throughput: out_tokens as f64 / last_done.max(1e-9),
         total_output_tokens: out_tokens,
@@ -274,6 +401,7 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
         net_util_intra,
         net_util_inter,
         congestion,
+        breakdown,
     }
 }
 
@@ -305,6 +433,7 @@ pub fn fig9_config(
         kv_page_tokens: 16,
         net: None,
         net_scope: 0,
+        obs: None,
     }
 }
 
@@ -577,6 +706,31 @@ mod tests {
         assert_eq!(idle.congestion.total_delay, 0.0);
         assert!(idle.net_util_inter > 0.0, "collective bytes must register on the NICs");
         assert_eq!(plain.congestion.bookings, 0, "disabled layer books nothing");
+    }
+
+    #[test]
+    fn tracing_is_zero_cost_and_reconciles_with_the_event_fold() {
+        use crate::obs::{fold, Recorder, RunMeta};
+        let reqs = small_trace(30);
+        let plain = serve(&tp16(AllReduceImpl::Nvrar, 32), &reqs);
+        assert!(plain.breakdown.is_none(), "tracing off reports no breakdown");
+        let sink = Recorder::sink(RunMeta::default());
+        let mut cfg = tp16(AllReduceImpl::Nvrar, 32);
+        cfg.obs = Some(sink.clone());
+        let traced = serve(&cfg, &reqs);
+        // Zero-cost contract: recording changes nothing simulated.
+        assert_eq!(plain.makespan.to_bits(), traced.makespan.to_bits());
+        assert_eq!(plain.total_output_tokens, traced.total_output_tokens);
+        assert_eq!(plain.steps, traced.steps);
+        let bd = traced.breakdown.expect("tracing on reports a breakdown");
+        assert!((bd.total() - traced.makespan).abs() < 1e-6 * traced.makespan);
+        let rec = sink.lock().unwrap();
+        assert_eq!(rec.meta.label, "tp16/NVRAR");
+        assert_eq!(rec.meta.model, "Llama-3.1-70B");
+        assert_eq!(rec.spans().len() as u64, traced.steps);
+        let folded = fold::fold_breakdowns(&rec);
+        let drift = fold::reconcile(&[bd], &folded, rec.makespan());
+        assert!(drift < 1e-6, "event fold drifted {drift} from the analytic breakdown");
     }
 
     #[test]

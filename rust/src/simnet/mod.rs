@@ -416,6 +416,39 @@ mod tests {
     use super::*;
 
     #[test]
+    fn congestion_histogram_bucket_boundaries() {
+        let mut s = CongestionStats::default();
+        // Non-positive delays count the booking but touch nothing else.
+        s.record(0.0);
+        s.record(-1e-9);
+        assert_eq!(s.bookings, 2);
+        assert_eq!(s.delayed, 0);
+        assert_eq!(s.hist, [0; 7]);
+        // Buckets are half-open [prev, bound): an exact bound belongs to
+        // the NEXT bucket (strict `<` in record).
+        s.record(1e-6);
+        assert_eq!(s.hist, [0, 1, 0, 0, 0, 0, 0], "1µs is the 2nd bucket's floor");
+        s.record(1e-6 - 1e-12);
+        assert_eq!(s.hist[0], 1, "just under 1µs lands in <1µs");
+        for (i, b) in CongestionStats::BUCKETS.iter().enumerate() {
+            let mut t = CongestionStats::default();
+            t.record(*b);
+            let expect = (i + 1).min(6);
+            assert_eq!(t.hist[expect], 1, "bound {b} -> bucket {expect}");
+        }
+        // At and beyond the last bound: the unbounded tail bucket.
+        s.record(1e-1);
+        s.record(7.5);
+        assert_eq!(s.hist[6], 2);
+        // Aggregates line up with what was recorded.
+        assert_eq!(s.delayed, 4);
+        assert_eq!(s.max_delay, 7.5);
+        assert!((s.mean_delay() - (1e-6 + (1e-6 - 1e-12) + 1e-1 + 7.5) / 4.0).abs() < 1e-12);
+        assert_eq!(s.hist.iter().sum::<u64>(), s.delayed);
+        assert_eq!(CongestionStats::bucket_labels().len(), s.hist.len());
+    }
+
+    #[test]
     fn pops_in_time_order() {
         let mut q = EventQueue::new();
         q.push(3.0, "c");

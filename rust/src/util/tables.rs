@@ -6,6 +6,7 @@ pub struct Table {
     title: String,
     header: Vec<String>,
     rows: Vec<Vec<String>>,
+    meta: Vec<(String, String)>,
 }
 
 impl Table {
@@ -14,7 +15,25 @@ impl Table {
             title: title.to_string(),
             header: header.iter().map(|s| s.to_string()).collect(),
             rows: Vec::new(),
+            meta: Vec::new(),
         }
+    }
+
+    /// Attach one run-metadata pair (seed, deployment, crate version…).
+    /// Rendered as `# key=value` comment lines after the title and ahead
+    /// of the CSV header, so every emitted artifact is self-describing.
+    /// Re-setting a key overwrites it.
+    pub fn meta(&mut self, key: &str, value: &str) -> &mut Self {
+        if let Some(kv) = self.meta.iter_mut().find(|(k, _)| k == key) {
+            kv.1 = value.to_string();
+        } else {
+            self.meta.push((key.to_string(), value.to_string()));
+        }
+        self
+    }
+
+    pub fn metadata(&self) -> &[(String, String)] {
+        &self.meta
     }
 
     pub fn row(&mut self, cells: &[String]) -> &mut Self {
@@ -46,6 +65,9 @@ impl Table {
         if !self.title.is_empty() {
             out.push_str(&format!("== {} ==\n", self.title));
         }
+        for (k, v) in &self.meta {
+            out.push_str(&format!("# {k}={v}\n"));
+        }
         out.push_str(&line(&self.header));
         out.push('\n');
         out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
@@ -69,7 +91,11 @@ impl Table {
                 s.to_string()
             }
         };
-        let mut out = self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+        let mut out = String::new();
+        for (k, v) in &self.meta {
+            out.push_str(&format!("# {k}={v}\n"));
+        }
+        out.push_str(&self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
         out.push('\n');
         for row in &self.rows {
             out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
@@ -127,5 +153,21 @@ mod tests {
     #[test]
     fn speedup_format() {
         assert_eq!(fmt_speedup(1.7234), "1.72x");
+    }
+
+    #[test]
+    fn meta_lines_render_after_title_and_lead_the_csv() {
+        let mut t = Table::new("demo", &["a"]);
+        t.meta("version", "0.1.0").meta("seed", "0xb0257");
+        t.meta("version", "0.2.0"); // overwrite, no duplicate
+        t.row(&["1".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines[0], "== demo ==");
+        assert_eq!(lines[1], "# version=0.2.0");
+        assert_eq!(lines[2], "# seed=0xb0257");
+        let csv = t.to_csv();
+        assert!(csv.starts_with("# version=0.2.0\n# seed=0xb0257\na\n"));
+        assert_eq!(t.metadata().len(), 2);
     }
 }

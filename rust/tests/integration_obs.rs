@@ -1,0 +1,198 @@
+//! Integration: the tracing subsystem's acceptance contract (ISSUE 6).
+//!
+//! 1. **Reconciliation** — folding the event stream back into per-GPU
+//!    Matmul/Other/Comm/Idle breakdowns agrees with the analytically
+//!    accumulated ones within 1e-6, on single-replica serving (including
+//!    the pipeline-bubble tp4-pp4 shape) and on a multi-replica fleet.
+//! 2. **Zero cost when disabled** — attaching a recorder never changes a
+//!    simulated number: reports are bit-for-bit identical with tracing
+//!    on and off (the traced run merely *adds* the breakdown fields).
+//! 3. **Artifact validity** — the emitted Chrome trace parses as JSON
+//!    and every (pid, tid) track's timestamps are monotone.
+
+use std::collections::BTreeMap;
+
+use yalis::collectives::AllReduceImpl;
+use yalis::fleet::{run_fleet, FleetConfig};
+use yalis::obs::{self, chrome, fold, json, Recorder, RunMeta};
+use yalis::parallel::ParallelSpec;
+use yalis::serving::{fig9_config, serve};
+use yalis::trace::TraceSpec;
+
+fn burst_reqs(n: usize) -> Vec<yalis::engine::batcher::Request> {
+    let mut spec = TraceSpec::burstgpt();
+    spec.num_prompts = n;
+    spec.generate()
+}
+
+#[test]
+fn serve_event_fold_reconciles_with_analytic_breakdown() {
+    let reqs = burst_reqs(120);
+    for (pspec, ar) in [
+        (ParallelSpec::tp(16), AllReduceImpl::Nvrar),
+        (ParallelSpec::tp(16), AllReduceImpl::NcclAuto),
+        // Pipeline parallelism: the shape with real (bubble) idle inside
+        // every step, not just trailing-gap idle.
+        (ParallelSpec::tp_pp(4, 4), AllReduceImpl::NcclAuto),
+    ] {
+        let mut cfg = fig9_config(pspec, ar, 64, "perlmutter", 16);
+        let sink = Recorder::sink(RunMeta::default());
+        cfg.obs = Some(sink.clone());
+        let rep = serve(&cfg, &reqs);
+        let label = cfg.deployment_label();
+        let bd = rep.breakdown.expect("tracing on -> analytic breakdown present");
+        assert!(
+            (bd.total() - rep.makespan).abs() < 1e-6,
+            "{label}: breakdown total {} vs makespan {}",
+            bd.total(),
+            rep.makespan
+        );
+        let rec = sink.lock().unwrap();
+        let folded = fold::fold_breakdowns(&rec);
+        let drift = fold::reconcile(&[bd], &folded, rec.makespan());
+        assert!(drift < 1e-6, "{label}: fold-vs-analytic drift {drift}");
+        if pspec.pp > 1 {
+            assert!(bd.idle > 0.0, "{label}: pipeline bubbles must show up as idle");
+        }
+    }
+}
+
+#[test]
+fn serve_tracing_is_bitwise_zero_cost() {
+    let reqs = burst_reqs(100);
+    let plain_cfg = fig9_config(ParallelSpec::tp(16), AllReduceImpl::Nvrar, 64, "perlmutter", 16);
+    let plain = serve(&plain_cfg, &reqs);
+    assert!(plain.breakdown.is_none(), "tracing off -> no breakdown");
+    let mut traced_cfg = plain_cfg.clone();
+    let sink = Recorder::sink(RunMeta::default());
+    traced_cfg.obs = Some(sink.clone());
+    let traced = serve(&traced_cfg, &reqs);
+    // Every modeled quantity is bit-identical; recording only observes.
+    assert_eq!(plain.makespan.to_bits(), traced.makespan.to_bits());
+    assert_eq!(plain.output_throughput.to_bits(), traced.output_throughput.to_bits());
+    assert_eq!(plain.mean_ttft.to_bits(), traced.mean_ttft.to_bits());
+    assert_eq!(plain.tpot_p50.to_bits(), traced.tpot_p50.to_bits());
+    assert_eq!(plain.steps, traced.steps);
+    assert_eq!(plain.preemptions, traced.preemptions);
+    assert_eq!(plain.total_output_tokens, traced.total_output_tokens);
+    // And the recorder did observe the run: one span per step.
+    let rec = sink.lock().unwrap();
+    assert_eq!(rec.spans().iter().filter(|s| s.name == "step").count() as u64, traced.steps);
+}
+
+#[test]
+fn fleet_event_fold_reconciles_per_replica_and_is_zero_cost() {
+    let mut spec = TraceSpec::burstgpt();
+    spec.num_prompts = 200;
+    spec.rate = 10.0;
+    let reqs = spec.generate();
+    let base = fig9_config(ParallelSpec::tp(16), AllReduceImpl::Nvrar, 64, "perlmutter", 16);
+    let plain = run_fleet(&FleetConfig::new(base.clone(), 3), &reqs);
+    assert!(plain.breakdowns.is_empty(), "tracing off -> no per-replica breakdowns");
+
+    let sink = Recorder::sink(RunMeta::default());
+    let traced = run_fleet(&FleetConfig::new(base, 3).with_obs(sink.clone()), &reqs);
+
+    // Bit-for-bit identical report, modulo the added breakdowns.
+    let mut scrubbed = traced.clone();
+    scrubbed.breakdowns = Vec::new();
+    assert_eq!(plain, scrubbed, "tracing must not perturb the fleet simulation");
+
+    assert_eq!(traced.breakdowns.len(), 3);
+    let rec = sink.lock().unwrap();
+    for b in &traced.breakdowns {
+        assert!(
+            (b.total() - rec.makespan()).abs() < 1e-6,
+            "idle-filled breakdown must span the makespan: {} vs {}",
+            b.total(),
+            rec.makespan()
+        );
+    }
+    let folded = fold::fold_breakdowns(&rec);
+    let drift = fold::reconcile(&traced.breakdowns, &folded, rec.makespan());
+    assert!(drift < 1e-6, "fleet fold-vs-analytic drift {drift}");
+    // The control plane left its marks too.
+    let names: Vec<&str> = rec.instants().iter().map(|i| i.name.as_str()).collect();
+    for expect in ["arrival", "route", "replica_up", "finish"] {
+        assert!(names.contains(&expect), "missing control instant '{expect}'");
+    }
+}
+
+#[test]
+fn chrome_trace_is_valid_json_with_monotone_per_track_timestamps() {
+    let reqs = burst_reqs(60);
+    let mut cfg = fig9_config(ParallelSpec::tp(16), AllReduceImpl::Nvrar, 32, "perlmutter", 16);
+    let sink = Recorder::sink(RunMeta {
+        seed: Some(0xB0257),
+        label: String::new(),
+        model: String::new(),
+        machine: "perlmutter".to_string(),
+        ..RunMeta::default()
+    });
+    cfg.obs = Some(sink.clone());
+    serve(&cfg, &reqs);
+    let rec = sink.lock().unwrap();
+    let text = chrome::to_chrome_json(&rec);
+    let v = json::parse(&text).expect("trace must parse as JSON");
+    let events = v.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents array");
+    assert!(!events.is_empty());
+    let (mut spans, mut instants, mut metas) = (0usize, 0usize, 0usize);
+    let mut last: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+    for ev in events {
+        let ph = ev.get("ph").and_then(|p| p.as_str()).expect("every event has ph");
+        if ph == "M" {
+            metas += 1;
+            continue;
+        }
+        let pid = ev.get("pid").and_then(|p| p.as_f64()).expect("pid") as u64;
+        let tid = ev.get("tid").and_then(|p| p.as_f64()).expect("tid") as u64;
+        let ts = ev.get("ts").and_then(|p| p.as_f64()).expect("ts");
+        assert!(ts >= 0.0, "timestamps are non-negative microseconds");
+        match ph {
+            "X" => {
+                spans += 1;
+                let dur = ev.get("dur").and_then(|d| d.as_f64()).expect("span dur");
+                assert!(dur >= 0.0);
+            }
+            "i" => instants += 1,
+            other => panic!("unexpected phase {other:?}"),
+        }
+        let prev = last.entry((pid, tid)).or_insert(f64::NEG_INFINITY);
+        assert!(*prev <= ts, "track ({pid},{tid}): ts {ts} precedes {prev}");
+        *prev = ts;
+    }
+    assert!(spans > 0, "step and collective spans expected");
+    assert!(instants > 0, "lifecycle instants expected");
+    assert!(metas > 0, "track-naming metadata expected");
+}
+
+#[test]
+fn write_artifacts_emits_all_three_files_with_meta_headers() {
+    let reqs = burst_reqs(40);
+    let mut cfg = fig9_config(ParallelSpec::tp(16), AllReduceImpl::Nvrar, 32, "perlmutter", 16);
+    let sink = Recorder::sink(RunMeta {
+        seed: Some(0xB0257),
+        machine: "perlmutter".to_string(),
+        ..RunMeta::default()
+    });
+    cfg.obs = Some(sink.clone());
+    serve(&cfg, &reqs);
+    let dir = std::env::temp_dir().join("yalis_obs_integration");
+    let base = dir.join("run").to_str().unwrap().to_string();
+    let rec = sink.lock().unwrap();
+    let paths = obs::write_artifacts(&base, &rec).expect("artifact write");
+    assert_eq!(paths.len(), 3);
+    for p in &paths {
+        let text = std::fs::read_to_string(p).unwrap();
+        assert!(!text.is_empty(), "{p} empty");
+        if p.ends_with(".trace.json") {
+            json::parse(&text).expect("trace JSON parses");
+            assert!(text.contains("\"seed\""), "trace carries run metadata");
+        } else {
+            // CSVs lead with `# key=value` run-metadata comment lines.
+            assert!(text.starts_with('#'), "{p} must start with a meta header");
+            assert!(text.contains("# seed=0xb0257"), "{p} meta: {text:.120}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
