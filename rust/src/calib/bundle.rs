@@ -1,0 +1,399 @@
+//! The serializable machine bundle: one versioned artifact holding *all*
+//! of a machine's calibration constants.
+//!
+//! A bundle couples the communication-stack tunables ([`CommConfig`]), the
+//! GPU roofline ([`GpuSpec`]) and the link topology shape ([`TopoSpec`])
+//! under one name+version, so a deployment can never pair one machine's
+//! α/β with another's roofline. Bundles serialize to a small flat-ish JSON
+//! document read back by the no-serde [`crate::obs::json`] parser — the
+//! same self-contained style as the benchsuite metric files.
+
+use crate::cluster::{LinkParams, Topology};
+use crate::collectives::sim::CommConfig;
+use crate::obs::json::{self, Value};
+use crate::perfmodel::GpuSpec;
+use anyhow::{bail, Context, Result};
+
+/// Bundle file schema version (the `"schema"` field).
+pub const SCHEMA: u32 = 1;
+
+/// The topology *shape* of a machine — everything in [`Topology`] except
+/// the node count, which is chosen per experiment.
+#[derive(Clone, Copy, Debug)]
+pub struct TopoSpec {
+    pub gpus_per_node: usize,
+    pub intra: LinkParams,
+    pub inter: LinkParams,
+    /// Host-side kernel launch overhead (see [`Topology::kernel_launch`]).
+    pub kernel_launch: f64,
+}
+
+impl TopoSpec {
+    /// The shape of an existing topology (drops the node count).
+    pub fn of(t: &Topology) -> Self {
+        TopoSpec {
+            gpus_per_node: t.gpus_per_node,
+            intra: t.intra,
+            inter: t.inter,
+            kernel_launch: t.kernel_launch,
+        }
+    }
+
+    /// Instantiate at `nodes` nodes.
+    pub fn topology(&self, nodes: usize) -> Topology {
+        Topology {
+            nodes,
+            gpus_per_node: self.gpus_per_node,
+            intra: self.intra,
+            inter: self.inter,
+            kernel_launch: self.kernel_launch,
+        }
+    }
+
+    /// Instantiate for a total GPU count, filling nodes first (the
+    /// fallible twin of [`Topology::with_gpus`] for data-driven callers
+    /// like `yalis fit`, where a ragged count is a row error, not a bug).
+    pub fn topology_for_gpus(&self, gpus: usize) -> Result<Topology> {
+        if gpus == 0 {
+            bail!("gpu count must be >= 1");
+        }
+        if gpus > self.gpus_per_node && gpus % self.gpus_per_node != 0 {
+            bail!("{gpus} GPUs is not a multiple of {}/node", self.gpus_per_node);
+        }
+        Ok(self.topology(1).with_gpus(gpus))
+    }
+}
+
+/// A named, versioned calibration bundle — the single source of truth for
+/// a machine's constants.
+#[derive(Clone, Debug)]
+pub struct MachineBundle {
+    /// Machine name (`perlmutter`, `vista`, ... or a site-local name).
+    pub name: String,
+    /// Calibration version; `yalis fit` bumps this when emitting.
+    pub version: u32,
+    pub comm: CommConfig,
+    pub gpu: GpuSpec,
+    pub topo: TopoSpec,
+}
+
+impl MachineBundle {
+    /// `name@version` — stamped into run metadata so every table, CSV and
+    /// trace records which calibration produced it.
+    pub fn label(&self) -> String {
+        format!("{}@{}", self.name, self.version)
+    }
+
+    /// Serialize to the bundle JSON document.
+    pub fn to_json(&self) -> String {
+        let c = &self.comm;
+        let g = &self.gpu;
+        let t = &self.topo;
+        format!(
+            "{{\n  \"schema\": {SCHEMA},\n  \"name\": \"{}\",\n  \"version\": {},\n  \
+             \"comm\": {{\n    \"eta\": {},\n    \"block_count\": {},\n    \
+             \"chunk_bytes\": {},\n    \"reduce_bw\": {},\n    \"launch_overhead\": {},\n    \
+             \"proxy_overhead\": {},\n    \"nvshmem_overhead\": {},\n    \
+             \"put_overhead\": {},\n    \"sync_cost\": {},\n    \"ll_bw_penalty\": {},\n    \
+             \"ll_alpha_factor\": {},\n    \"mpi_host_overhead\": {}\n  }},\n  \
+             \"gpu\": {{\n    \"name\": \"{}\",\n    \"flops\": {},\n    \"mem_bw\": {},\n    \
+             \"mem_bytes\": {},\n    \"tile_m\": {},\n    \"tile_n\": {},\n    \
+             \"kernel_floor\": {},\n    \"mxu_efficiency\": {}\n  }},\n  \
+             \"topo\": {{\n    \"gpus_per_node\": {},\n    \"intra_alpha\": {},\n    \
+             \"intra_beta\": {},\n    \"inter_alpha\": {},\n    \"inter_beta\": {},\n    \
+             \"kernel_launch\": {}\n  }}\n}}\n",
+            self.name,
+            self.version,
+            c.eta,
+            c.block_count,
+            c.chunk_bytes,
+            c.reduce_bw,
+            c.launch_overhead,
+            c.proxy_overhead,
+            c.nvshmem_overhead,
+            c.put_overhead,
+            c.sync_cost,
+            c.ll_bw_penalty,
+            c.ll_alpha_factor,
+            c.mpi_host_overhead,
+            g.name,
+            g.flops,
+            g.mem_bw,
+            g.mem_bytes,
+            g.tile_m,
+            g.tile_n,
+            g.kernel_floor,
+            g.mxu_efficiency,
+            t.gpus_per_node,
+            t.intra.alpha,
+            t.intra.beta,
+            t.inter.alpha,
+            t.inter.beta,
+            t.kernel_launch,
+        )
+    }
+
+    /// Parse a bundle document (the inverse of [`Self::to_json`]).
+    pub fn from_json(text: &str) -> Result<Self> {
+        let doc = json::parse(text).map_err(|e| anyhow::anyhow!("bundle JSON: {e}"))?;
+        let schema = num(&doc, "schema")? as u32;
+        if schema != SCHEMA {
+            bail!("unsupported bundle schema {schema} (this build reads schema {SCHEMA})");
+        }
+        let name = string(&doc, "name")?;
+        let version = uint(&doc, "version")? as u32;
+        let c = section(&doc, "comm")?;
+        let comm = CommConfig {
+            eta: num(c, "eta")?,
+            block_count: uint(c, "block_count")? as usize,
+            chunk_bytes: uint(c, "chunk_bytes")?,
+            reduce_bw: num(c, "reduce_bw")?,
+            launch_overhead: num(c, "launch_overhead")?,
+            proxy_overhead: num(c, "proxy_overhead")?,
+            nvshmem_overhead: num(c, "nvshmem_overhead")?,
+            put_overhead: num(c, "put_overhead")?,
+            sync_cost: num(c, "sync_cost")?,
+            ll_bw_penalty: num(c, "ll_bw_penalty")?,
+            ll_alpha_factor: num(c, "ll_alpha_factor")?,
+            mpi_host_overhead: num(c, "mpi_host_overhead")?,
+        };
+        let g = section(&doc, "gpu")?;
+        let gpu = GpuSpec {
+            // GpuSpec is Copy with a &'static name; a loaded bundle's name
+            // is leaked once per load — bounded, since bundles are read a
+            // handful of times per process, not in any loop.
+            name: Box::leak(string(g, "name")?.into_boxed_str()),
+            flops: num(g, "flops")?,
+            mem_bw: num(g, "mem_bw")?,
+            mem_bytes: uint(g, "mem_bytes")?,
+            tile_m: uint(g, "tile_m")? as usize,
+            tile_n: uint(g, "tile_n")? as usize,
+            kernel_floor: num(g, "kernel_floor")?,
+            mxu_efficiency: num(g, "mxu_efficiency")?,
+        };
+        let t = section(&doc, "topo")?;
+        let topo = TopoSpec {
+            gpus_per_node: uint(t, "gpus_per_node")? as usize,
+            intra: LinkParams { alpha: num(t, "intra_alpha")?, beta: num(t, "intra_beta")? },
+            inter: LinkParams { alpha: num(t, "inter_alpha")?, beta: num(t, "inter_beta")? },
+            kernel_launch: num(t, "kernel_launch")?,
+        };
+        let bundle = MachineBundle { name, version, comm, gpu, topo };
+        bundle.validate()?;
+        Ok(bundle)
+    }
+
+    /// Load from a bundle file.
+    pub fn load(path: &str) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading bundle {path}"))?;
+        Self::from_json(&text).with_context(|| format!("parsing bundle {path}"))
+    }
+
+    /// Write to a bundle file (creating parent directories).
+    pub fn save(&self, path: &str) -> Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+        }
+        std::fs::write(path, self.to_json()).with_context(|| format!("writing bundle {path}"))
+    }
+
+    /// Physical-sanity checks applied to every loaded bundle, so a typo'd
+    /// constant fails at load time with a named field, not as NaNs deep in
+    /// a simulation.
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            bail!("bundle name must be non-empty");
+        }
+        for (field, v) in [
+            ("comm.eta", self.comm.eta),
+            ("comm.ll_bw_penalty", self.comm.ll_bw_penalty),
+            ("comm.ll_alpha_factor", self.comm.ll_alpha_factor),
+        ] {
+            if !(v.is_finite() && v > 0.0) {
+                bail!("{field} must be positive and finite (got {v})");
+            }
+        }
+        if self.comm.eta < 1.0 {
+            bail!("comm.eta must be >= 1 (LL payloads never shrink the message; got {})", self.comm.eta);
+        }
+        for (field, v) in [
+            ("comm.reduce_bw", self.comm.reduce_bw),
+            ("gpu.flops", self.gpu.flops),
+            ("gpu.mem_bw", self.gpu.mem_bw),
+            ("topo.intra_beta", self.topo.intra.beta),
+            ("topo.inter_beta", self.topo.inter.beta),
+        ] {
+            if !(v.is_finite() && v > 0.0) {
+                bail!("{field} must be a positive bandwidth (got {v})");
+            }
+        }
+        for (field, v) in [
+            ("comm.launch_overhead", self.comm.launch_overhead),
+            ("comm.proxy_overhead", self.comm.proxy_overhead),
+            ("comm.nvshmem_overhead", self.comm.nvshmem_overhead),
+            ("comm.put_overhead", self.comm.put_overhead),
+            ("comm.sync_cost", self.comm.sync_cost),
+            ("comm.mpi_host_overhead", self.comm.mpi_host_overhead),
+            ("gpu.kernel_floor", self.gpu.kernel_floor),
+            ("topo.intra_alpha", self.topo.intra.alpha),
+            ("topo.inter_alpha", self.topo.inter.alpha),
+            ("topo.kernel_launch", self.topo.kernel_launch),
+        ] {
+            if !(v.is_finite() && v >= 0.0) {
+                bail!("{field} must be a non-negative time (got {v})");
+            }
+        }
+        if self.comm.block_count == 0 || self.comm.chunk_bytes == 0 {
+            bail!("comm.block_count and comm.chunk_bytes must be >= 1");
+        }
+        if self.topo.gpus_per_node == 0 {
+            bail!("topo.gpus_per_node must be >= 1");
+        }
+        if self.gpu.tile_m == 0 || self.gpu.tile_n == 0 {
+            bail!("gpu.tile_m and gpu.tile_n must be >= 1");
+        }
+        if !(self.gpu.mxu_efficiency > 0.0 && self.gpu.mxu_efficiency <= 1.0) {
+            bail!(
+                "gpu.mxu_efficiency must be in (0, 1] (got {})",
+                self.gpu.mxu_efficiency
+            );
+        }
+        Ok(())
+    }
+}
+
+fn section<'a>(doc: &'a Value, key: &str) -> Result<&'a Value> {
+    match doc.get(key) {
+        Some(v @ Value::Obj(_)) => Ok(v),
+        Some(_) => bail!("bundle field '{key}' must be an object"),
+        None => bail!("bundle is missing the '{key}' section"),
+    }
+}
+
+fn num(obj: &Value, key: &str) -> Result<f64> {
+    obj.get(key)
+        .and_then(Value::as_f64)
+        .with_context(|| format!("bundle is missing numeric field '{key}'"))
+}
+
+fn string(obj: &Value, key: &str) -> Result<String> {
+    obj.get(key)
+        .and_then(Value::as_str)
+        .map(str::to_string)
+        .with_context(|| format!("bundle is missing string field '{key}'"))
+}
+
+fn uint(obj: &Value, key: &str) -> Result<u64> {
+    let v = num(obj, key)?;
+    if v < 0.0 || v.fract() != 0.0 || v > (1u64 << 53) as f64 {
+        bail!("bundle field '{key}' must be a non-negative integer (got {v})");
+    }
+    Ok(v as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::registry;
+
+    fn fields(b: &MachineBundle) -> Vec<f64> {
+        vec![
+            b.comm.eta,
+            b.comm.block_count as f64,
+            b.comm.chunk_bytes as f64,
+            b.comm.reduce_bw,
+            b.comm.launch_overhead,
+            b.comm.proxy_overhead,
+            b.comm.nvshmem_overhead,
+            b.comm.put_overhead,
+            b.comm.sync_cost,
+            b.comm.ll_bw_penalty,
+            b.comm.ll_alpha_factor,
+            b.comm.mpi_host_overhead,
+            b.gpu.flops,
+            b.gpu.mem_bw,
+            b.gpu.mem_bytes as f64,
+            b.gpu.tile_m as f64,
+            b.gpu.tile_n as f64,
+            b.gpu.kernel_floor,
+            b.gpu.mxu_efficiency,
+            b.topo.gpus_per_node as f64,
+            b.topo.intra.alpha,
+            b.topo.intra.beta,
+            b.topo.inter.alpha,
+            b.topo.inter.beta,
+            b.topo.kernel_launch,
+        ]
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        // f64 Display emits the shortest round-tripping decimal, so every
+        // constant must survive write -> parse bit-for-bit.
+        for name in registry::names() {
+            let b = registry::resolve(name).unwrap();
+            let back = MachineBundle::from_json(&b.to_json()).unwrap();
+            assert_eq!(b.name, back.name);
+            assert_eq!(b.version, back.version);
+            assert_eq!(b.gpu.name, back.gpu.name);
+            assert_eq!(fields(&b), fields(&back), "{name}");
+        }
+    }
+
+    #[test]
+    fn missing_field_is_a_named_error() {
+        let b = registry::resolve("perlmutter").unwrap();
+        let broken = b.to_json().replace("\"eta\"", "\"eta_typo\"");
+        let err = MachineBundle::from_json(&broken).unwrap_err().to_string();
+        assert!(err.contains("eta"), "{err}");
+        let err = MachineBundle::from_json("{ not json").unwrap_err().to_string();
+        assert!(err.contains("JSON"), "{err}");
+    }
+
+    #[test]
+    fn insane_constants_rejected_by_field_name() {
+        let mut b = registry::resolve("perlmutter").unwrap();
+        b.topo.inter.beta = 0.0;
+        let err = MachineBundle::from_json(&b.to_json()).unwrap_err().to_string();
+        assert!(err.contains("inter_beta") || err.contains("inter.beta"), "{err}");
+        let mut b = registry::resolve("perlmutter").unwrap();
+        b.comm.eta = 0.5;
+        assert!(b.validate().unwrap_err().to_string().contains("eta"));
+        let mut b = registry::resolve("perlmutter").unwrap();
+        b.gpu.mxu_efficiency = 1.5;
+        assert!(b.validate().unwrap_err().to_string().contains("mxu_efficiency"));
+    }
+
+    #[test]
+    fn wrong_schema_rejected() {
+        let b = registry::resolve("vista").unwrap();
+        let future = b.to_json().replacen("\"schema\": 1", "\"schema\": 99", 1);
+        let err = MachineBundle::from_json(&future).unwrap_err().to_string();
+        assert!(err.contains("schema 99"), "{err}");
+    }
+
+    #[test]
+    fn topology_for_gpus_fills_nodes_first() {
+        let b = registry::resolve("perlmutter").unwrap();
+        let t = b.topo.topology_for_gpus(2).unwrap();
+        assert_eq!((t.nodes, t.gpus_per_node), (1, 2));
+        let t = b.topo.topology_for_gpus(32).unwrap();
+        assert_eq!((t.nodes, t.gpus_per_node), (8, 4));
+        assert!(b.topo.topology_for_gpus(6).is_err());
+        assert!(b.topo.topology_for_gpus(0).is_err());
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = std::env::temp_dir().join("yalis_calib_bundle_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("perlmutter_copy.json");
+        let b = registry::resolve("perlmutter").unwrap();
+        b.save(path.to_str().unwrap()).unwrap();
+        let back = MachineBundle::load(path.to_str().unwrap()).unwrap();
+        assert_eq!(fields(&b), fields(&back));
+        assert_eq!(back.label(), "perlmutter@1");
+        assert!(MachineBundle::load(dir.join("nope.json").to_str().unwrap()).is_err());
+    }
+}

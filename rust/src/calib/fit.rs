@@ -1,0 +1,504 @@
+//! `yalis fit`: least-squares calibration of link α/β (and optionally the
+//! GPU roofline efficiency) from measured-latency CSVs.
+//!
+//! The input is the shape the sweeps emit and the real `shmem` all-reduce
+//! path can produce: `bytes,gpus,impl,seconds`. Each row is mapped through
+//! the closed-form models (Eqs 1–6) to a linear combination of
+//! `θ = [α_intra, 1/β_intra, α_inter, 1/β_inter]`, and θ is solved by
+//! column-scaled normal equations (Gaussian elimination with partial
+//! pivoting — 4 unknowns, so the normal-equation conditioning is fine once
+//! columns are scaled to O(1)). Columns with no signal in the data (e.g.
+//! no multi-GPU-per-node rows ⇒ no intra terms) keep the base bundle's
+//! values. The output is a new bundle with `version = base + 1` plus a
+//! per-row residual report, closing the loop: measure → fit → bundle →
+//! validate.
+
+use super::bundle::MachineBundle;
+use crate::collectives::model::log2_steps;
+use crate::perfmodel::GpuSpec;
+use crate::util::tables::Table;
+use anyhow::{bail, Context, Result};
+
+/// One measured all-reduce latency sample.
+#[derive(Clone, Debug)]
+pub struct FitRow {
+    pub bytes: u64,
+    pub gpus: usize,
+    pub imp: String,
+    pub secs: f64,
+}
+
+/// Parse a `bytes,gpus,impl,seconds` CSV. `#` comments, blank lines and a
+/// leading header row are skipped.
+pub fn parse_csv(text: &str) -> Result<Vec<FitRow>> {
+    let mut out = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let cells: Vec<&str> = line.split(',').map(str::trim).collect();
+        if cells.len() != 4 {
+            bail!("line {}: expected 4 columns bytes,gpus,impl,seconds", ln + 1);
+        }
+        if cells[0].parse::<u64>().is_err() && cells[0].eq_ignore_ascii_case("bytes") {
+            continue; // header row
+        }
+        let bytes: u64 =
+            cells[0].parse().with_context(|| format!("line {}: bad bytes '{}'", ln + 1, cells[0]))?;
+        let gpus: usize =
+            cells[1].parse().with_context(|| format!("line {}: bad gpus '{}'", ln + 1, cells[1]))?;
+        let secs: f64 = cells[3]
+            .parse()
+            .with_context(|| format!("line {}: bad seconds '{}'", ln + 1, cells[3]))?;
+        if !(secs.is_finite() && secs > 0.0) {
+            bail!("line {}: seconds must be positive ({secs})", ln + 1);
+        }
+        if bytes == 0 || gpus == 0 {
+            bail!("line {}: bytes and gpus must be >= 1", ln + 1);
+        }
+        out.push(FitRow { bytes, gpus, imp: cells[2].to_string(), secs });
+    }
+    if out.is_empty() {
+        bail!("no data rows in fit CSV");
+    }
+    Ok(out)
+}
+
+/// Coefficients of θ for one sample under the matching closed-form model
+/// (Eqs 1–6): `t ≈ c·θ` with `θ = [α_i, 1/β_i, α_e, 1/β_e]`.
+fn coeffs(imp: &str, nodes: usize, g: usize, bytes: u64, eta: f64) -> Result<[f64; 4]> {
+    let n = nodes as f64;
+    let p = (nodes * g) as f64;
+    let m = bytes as f64;
+    Ok(match imp {
+        // Eq 1: ring charges every hop at inter α/β at scale.
+        "ring" | "nccl-ring" => [0.0, 0.0, 2.0 * (p - 1.0), 2.0 * ((p - 1.0) / p) * m],
+        // Eq 2: intra chain + inter tree depth.
+        "tree" | "nccl-tree" => {
+            [2.0 * (g as f64 - 1.0), 0.0, 2.0 * log2_steps(n), 2.0 * ((n - 1.0) / n) * m]
+        }
+        // Eq 3: flat recursive doubling, full message per step.
+        "mpi" | "rd" => {
+            let s = log2_steps(p);
+            [0.0, 0.0, s, s * m]
+        }
+        // Eqs 4–6: RS + AG intra, recursive doubling on η-inflated
+        // node-local shards inter.
+        "nvrar" => {
+            let gf = g as f64;
+            [
+                2.0 * (gf - 1.0),
+                2.0 * ((gf - 1.0) / gf) * m,
+                log2_steps(n),
+                ((n - 1.0) / n) * eta * m / gf,
+            ]
+        }
+        other => bail!(
+            "unknown impl '{other}' in fit CSV (expected ring, tree, mpi/rd or nvrar)"
+        ),
+    })
+}
+
+/// Least squares for `A·θ ≈ y` over the active (non-zero) columns of `A`.
+/// Returns per-column `Some(θ_k)` or `None` for columns with no signal.
+fn solve_lstsq(a: &[[f64; 4]], y: &[f64]) -> Result<[Option<f64>; 4]> {
+    let active: Vec<usize> =
+        (0..4).filter(|&k| a.iter().any(|r| r[k] != 0.0)).collect();
+    let m = active.len();
+    if m == 0 {
+        bail!("fit data exercises no model terms");
+    }
+    if a.len() < m {
+        bail!("{} rows cannot determine {m} parameters", a.len());
+    }
+    // Scale each active column to O(1) so the normal equations stay
+    // well-conditioned despite α ~ 1e-6 coefficients next to M/β ~ 1e6.
+    let scale: Vec<f64> = active
+        .iter()
+        .map(|&k| a.iter().map(|r| r[k].abs()).fold(0.0f64, f64::max))
+        .collect();
+    let mut ata = vec![vec![0.0f64; m]; m];
+    let mut aty = vec![0.0f64; m];
+    for (row, &obs) in a.iter().zip(y) {
+        let sr: Vec<f64> = active.iter().zip(&scale).map(|(&k, s)| row[k] / s).collect();
+        for i in 0..m {
+            aty[i] += sr[i] * obs;
+            for j in 0..m {
+                ata[i][j] += sr[i] * sr[j];
+            }
+        }
+    }
+    // Gaussian elimination with partial pivoting on [AtA | Aty].
+    let mut aug: Vec<Vec<f64>> =
+        (0..m).map(|i| ata[i].iter().copied().chain([aty[i]]).collect()).collect();
+    for col in 0..m {
+        let piv = (col..m)
+            .max_by(|&r1, &r2| aug[r1][col].abs().total_cmp(&aug[r2][col].abs()))
+            .unwrap();
+        if aug[piv][col].abs() < 1e-300 {
+            bail!("singular fit system (degenerate sample set)");
+        }
+        aug.swap(col, piv);
+        for r in 0..m {
+            if r != col {
+                let f = aug[r][col] / aug[col][col];
+                for cc in col..=m {
+                    aug[r][cc] -= f * aug[col][cc];
+                }
+            }
+        }
+    }
+    let mut theta = [None; 4];
+    for (j, (&k, s)) in active.iter().zip(&scale).enumerate() {
+        theta[k] = Some(aug[j][m] / aug[j][j] / s);
+    }
+    Ok(theta)
+}
+
+/// Outcome of an α/β fit.
+pub struct FitReport {
+    /// The fitted bundle (base constants with fitted link params spliced
+    /// in, `version = base.version + 1`).
+    pub bundle: MachineBundle,
+    /// Per-row residuals (`impl, gpus, bytes, observed, predicted, rel err`).
+    pub residuals: Table,
+    /// Root-mean-square relative residual across all rows.
+    pub rms: f64,
+    /// Which of `[α_intra, β_intra, α_inter, β_inter]` the data determined.
+    pub fitted: [bool; 4],
+}
+
+/// Fit link α/β from measured rows against `base`'s topology shape.
+pub fn fit_alpha_beta(base: &MachineBundle, rows: &[FitRow]) -> Result<FitReport> {
+    let mut a = Vec::with_capacity(rows.len());
+    let mut y = Vec::with_capacity(rows.len());
+    for r in rows {
+        let t = base.topo.topology_for_gpus(r.gpus).with_context(|| {
+            format!("row {} GPUs does not fit {}'s topology", r.gpus, base.name)
+        })?;
+        a.push(coeffs(&r.imp, t.nodes, t.gpus_per_node, r.bytes, base.comm.eta)?);
+        y.push(r.secs);
+    }
+    let theta = solve_lstsq(&a, &y)?;
+    for (name, v) in ["alpha_intra", "inv_beta_intra", "alpha_inter", "inv_beta_inter"]
+        .iter()
+        .zip(&theta)
+    {
+        if let Some(v) = v {
+            if !(v.is_finite() && *v > 0.0) {
+                bail!("fitted {name} is non-physical ({v}); check the input data");
+            }
+        }
+    }
+
+    let mut bundle = base.clone();
+    bundle.version = base.version + 1;
+    if let Some(v) = theta[0] {
+        bundle.topo.intra.alpha = v;
+    }
+    if let Some(v) = theta[1] {
+        bundle.topo.intra.beta = 1.0 / v;
+    }
+    if let Some(v) = theta[2] {
+        bundle.topo.inter.alpha = v;
+    }
+    if let Some(v) = theta[3] {
+        bundle.topo.inter.beta = 1.0 / v;
+    }
+    bundle.validate()?;
+
+    let mut residuals = Table::new(
+        "yalis fit — residuals",
+        &["impl", "gpus", "bytes", "observed_s", "predicted_s", "rel_err"],
+    );
+    residuals.meta("bundle", &bundle.label());
+    let mut sq = 0.0;
+    for (r, row) in rows.iter().zip(&a) {
+        let pred: f64 = row
+            .iter()
+            .zip(&theta)
+            .map(|(c, t)| c * t.unwrap_or(0.0))
+            .sum();
+        let rel = (pred - r.secs) / r.secs;
+        sq += rel * rel;
+        residuals.row(&[
+            r.imp.clone(),
+            r.gpus.to_string(),
+            r.bytes.to_string(),
+            format!("{:.3e}", r.secs),
+            format!("{pred:.3e}"),
+            format!("{:+.4}", rel),
+        ]);
+    }
+    let rms = (sq / rows.len() as f64).sqrt();
+    residuals.meta("rms_rel_residual", &format!("{rms:.4e}"));
+    Ok(FitReport { bundle, residuals, rms, fitted: theta.map(|t| t.is_some()) })
+}
+
+/// One measured GEMM sample: `m,n,k,dtype_bytes,seconds`.
+#[derive(Clone, Debug)]
+pub struct GemmRow {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub dtype: usize,
+    pub secs: f64,
+}
+
+/// Parse a `m,n,k,dtype_bytes,seconds` CSV (comments/header as above).
+pub fn parse_gemm_csv(text: &str) -> Result<Vec<GemmRow>> {
+    let mut out = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let cells: Vec<&str> = line.split(',').map(str::trim).collect();
+        if cells.len() != 5 {
+            bail!("line {}: expected 5 columns m,n,k,dtype_bytes,seconds", ln + 1);
+        }
+        if cells[0].parse::<usize>().is_err() && cells[0].eq_ignore_ascii_case("m") {
+            continue;
+        }
+        let p = |i: usize| -> Result<usize> {
+            cells[i].parse().with_context(|| format!("line {}: bad '{}'", ln + 1, cells[i]))
+        };
+        let secs: f64 = cells[4]
+            .parse()
+            .with_context(|| format!("line {}: bad seconds '{}'", ln + 1, cells[4]))?;
+        if !(secs.is_finite() && secs > 0.0) {
+            bail!("line {}: seconds must be positive", ln + 1);
+        }
+        out.push(GemmRow { m: p(0)?, n: p(1)?, k: p(2)?, dtype: p(3)?, secs });
+    }
+    if out.is_empty() {
+        bail!("no data rows in GEMM CSV");
+    }
+    Ok(out)
+}
+
+/// Fit the roofline `mxu_efficiency` from measured GEMM times. Only
+/// clearly compute-bound samples vote (memory time and kernel floor both
+/// < 70% of the observation); returns `None` if no sample qualifies.
+pub fn fit_mxu_efficiency(gpu: &GpuSpec, rows: &[GemmRow]) -> Option<f64> {
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for r in rows {
+        let mq = r.m.div_ceil(gpu.tile_m) * gpu.tile_m;
+        let nq = r.n.div_ceil(gpu.tile_n) * gpu.tile_n;
+        // Time at 100% efficiency; observed ≈ c / eff for compute-bound rows.
+        let c = 2.0 * mq as f64 * nq as f64 * r.k as f64 / gpu.flops;
+        let mem = ((r.m * r.k + r.k * r.n + r.m * r.n) * r.dtype) as f64 / gpu.mem_bw;
+        if mem < 0.7 * r.secs && gpu.kernel_floor < 0.7 * r.secs {
+            num += c * r.secs;
+            den += c * c;
+        }
+    }
+    if den == 0.0 {
+        return None;
+    }
+    let eff = den / num; // slope = 1/eff minimizing Σ(c/eff − t)²
+    (eff > 0.0).then(|| eff.min(1.0))
+}
+
+/// The `yalis fit` driver: parse CSVs, fit, print residuals, save the new
+/// bundle to `out`.
+pub fn run_fit(base: &MachineBundle, fit_csv: &str, gemm_csv: &str, out: &str) -> Result<()> {
+    let text =
+        std::fs::read_to_string(fit_csv).with_context(|| format!("reading {fit_csv}"))?;
+    let rows = parse_csv(&text).with_context(|| format!("parsing {fit_csv}"))?;
+    let mut report = fit_alpha_beta(base, &rows)?;
+    if !gemm_csv.is_empty() {
+        let gtext = std::fs::read_to_string(gemm_csv)
+            .with_context(|| format!("reading {gemm_csv}"))?;
+        let grows = parse_gemm_csv(&gtext).with_context(|| format!("parsing {gemm_csv}"))?;
+        match fit_mxu_efficiency(&report.bundle.gpu, &grows) {
+            Some(eff) => {
+                println!(
+                    "fitted mxu_efficiency {:.4} from {} GEMM samples (was {:.4})",
+                    eff,
+                    grows.len(),
+                    report.bundle.gpu.mxu_efficiency
+                );
+                report.bundle.gpu.mxu_efficiency = eff;
+            }
+            None => println!(
+                "GEMM CSV has no clearly compute-bound samples; keeping mxu_efficiency {:.4}",
+                report.bundle.gpu.mxu_efficiency
+            ),
+        }
+    }
+    report.residuals.print();
+    let names = ["alpha_intra", "beta_intra", "alpha_inter", "beta_inter"];
+    let fitted: Vec<&str> =
+        names.iter().zip(report.fitted).filter(|(_, f)| *f).map(|(n, _)| *n).collect();
+    let kept: Vec<&str> =
+        names.iter().zip(report.fitted).filter(|(_, f)| !*f).map(|(n, _)| *n).collect();
+    println!(
+        "fitted {{{}}} over {} rows, rms relative residual {:.3e}",
+        fitted.join(", "),
+        rows.len(),
+        report.rms
+    );
+    if !kept.is_empty() {
+        println!("no signal for {{{}}}; kept base values", kept.join(", "));
+    }
+    let t = &report.bundle.topo;
+    println!(
+        "intra α {:.3e}s β {:.3e}B/s | inter α {:.3e}s β {:.3e}B/s",
+        t.intra.alpha, t.intra.beta, t.inter.alpha, t.inter.beta
+    );
+    report.bundle.save(out)?;
+    println!("wrote {} ({})", out, report.bundle.label());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::registry;
+
+    fn synth_rows(b: &MachineBundle, noise: bool) -> Vec<FitRow> {
+        // Deterministic multiplicative "noise" from a Weyl sequence — tests
+        // must not depend on RNG state.
+        let mut rows = Vec::new();
+        let mut i: u64 = 0;
+        for imp in ["nvrar", "tree", "mpi", "ring"] {
+            for gpus in [8usize, 16, 32, 64] {
+                for bytes in [131072u64, 524288, 2097152] {
+                    let t = b.topo.topology_for_gpus(gpus).unwrap();
+                    let c =
+                        coeffs(imp, t.nodes, t.gpus_per_node, bytes, b.comm.eta).unwrap();
+                    let th = [
+                        b.topo.intra.alpha,
+                        1.0 / b.topo.intra.beta,
+                        b.topo.inter.alpha,
+                        1.0 / b.topo.inter.beta,
+                    ];
+                    let mut secs: f64 = c.iter().zip(th).map(|(c, t)| c * t).sum();
+                    if noise {
+                        let u = ((i.wrapping_mul(2654435761) % 1000) as f64) / 1000.0;
+                        secs *= 1.0 + 0.02 * (u - 0.5);
+                    }
+                    i += 1;
+                    rows.push(FitRow { bytes, gpus, imp: imp.to_string(), secs });
+                }
+            }
+        }
+        rows
+    }
+
+    #[test]
+    fn exact_data_recovers_alpha_beta_exactly() {
+        let b = registry::resolve("perlmutter").unwrap();
+        let rows = synth_rows(&b, false);
+        let rep = fit_alpha_beta(&b, &rows).unwrap();
+        assert!(rep.rms < 1e-9, "rms {}", rep.rms);
+        assert_eq!(rep.fitted, [true; 4]);
+        let t = &rep.bundle.topo;
+        for (got, want) in [
+            (t.intra.alpha, b.topo.intra.alpha),
+            (t.intra.beta, b.topo.intra.beta),
+            (t.inter.alpha, b.topo.inter.alpha),
+            (t.inter.beta, b.topo.inter.beta),
+        ] {
+            assert!((got - want).abs() / want < 1e-9, "{got} vs {want}");
+        }
+        assert_eq!(rep.bundle.version, b.version + 1);
+    }
+
+    #[test]
+    fn noisy_data_recovers_different_truth_within_tolerance() {
+        // Ground truth deliberately far from the perlmutter base, with 2%
+        // multiplicative noise: recovery must land within 3%.
+        let mut truth = registry::resolve("perlmutter").unwrap();
+        truth.topo.intra.alpha = 3.0e-6;
+        truth.topo.intra.beta = 150.0e9;
+        truth.topo.inter.alpha = 12.0e-6;
+        truth.topo.inter.beta = 30.0e9;
+        let rows = synth_rows(&truth, true);
+        let base = registry::resolve("perlmutter").unwrap();
+        let rep = fit_alpha_beta(&base, &rows).unwrap();
+        let t = &rep.bundle.topo;
+        for (got, want) in [
+            (t.intra.alpha, 3.0e-6),
+            (t.intra.beta, 150.0e9),
+            (t.inter.alpha, 12.0e-6),
+            (t.inter.beta, 30.0e9),
+        ] {
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.03, "{got} vs {want} (rel {rel})");
+        }
+    }
+
+    #[test]
+    fn single_gpu_per_node_data_leaves_intra_untouched() {
+        // Vista-shaped data (g = 1 everywhere) has no intra-link signal:
+        // the intra columns must stay at base values, inter must fit.
+        let b = registry::resolve("vista").unwrap();
+        let mut rows = Vec::new();
+        for imp in ["nvrar", "mpi", "ring"] {
+            for gpus in [8usize, 16] {
+                for bytes in [131072u64, 1048576] {
+                    let c = coeffs(imp, gpus, 1, bytes, b.comm.eta).unwrap();
+                    let secs = c[2] * 8.0e-6 + c[3] / 48.0e9;
+                    rows.push(FitRow { bytes, gpus, imp: imp.to_string(), secs });
+                }
+            }
+        }
+        let rep = fit_alpha_beta(&b, &rows).unwrap();
+        assert_eq!(rep.fitted, [false, false, true, true]);
+        assert_eq!(rep.bundle.topo.intra.alpha, b.topo.intra.alpha);
+        assert_eq!(rep.bundle.topo.intra.beta, b.topo.intra.beta);
+        assert!((rep.bundle.topo.inter.alpha - 8.0e-6).abs() / 8.0e-6 < 1e-9);
+        assert!((rep.bundle.topo.inter.beta - 48.0e9).abs() / 48.0e9 < 1e-9);
+    }
+
+    #[test]
+    fn csv_parsing_and_rejection() {
+        let rows = parse_csv(
+            "# comment\nbytes,gpus,impl,seconds\n131072, 8, nvrar, 1.5e-4\n\n262144,16,ring,2e-4\n",
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].imp, "nvrar");
+        assert_eq!(rows[1].gpus, 16);
+        assert!(parse_csv("bytes,gpus,impl,seconds\n").is_err());
+        assert!(parse_csv("1,2,ring\n").is_err());
+        assert!(parse_csv("1024,8,ring,-1.0\n").is_err());
+        let b = registry::resolve("perlmutter").unwrap();
+        let bad = vec![FitRow { bytes: 1024, gpus: 8, imp: "warp".into(), secs: 1e-4 }];
+        let err = fit_alpha_beta(&b, &bad).unwrap_err().to_string();
+        assert!(err.contains("unknown impl 'warp'"), "{err}");
+    }
+
+    #[test]
+    fn ragged_gpu_count_is_a_row_error() {
+        let b = registry::resolve("perlmutter").unwrap();
+        let bad = vec![FitRow { bytes: 1024, gpus: 6, imp: "ring".into(), secs: 1e-4 }];
+        assert!(fit_alpha_beta(&b, &bad).is_err());
+    }
+
+    #[test]
+    fn mxu_efficiency_recovered_from_compute_bound_gemms() {
+        let gpu = GpuSpec::a100();
+        let truth = 0.62;
+        let mut rows = Vec::new();
+        for (m, n, k) in [(4096usize, 4096usize, 4096usize), (8192, 4096, 8192)] {
+            let mq = m.div_ceil(gpu.tile_m) * gpu.tile_m;
+            let nq = n.div_ceil(gpu.tile_n) * gpu.tile_n;
+            let secs = 2.0 * mq as f64 * nq as f64 * k as f64 / (gpu.flops * truth);
+            rows.push(GemmRow { m, n, k, dtype: 2, secs });
+        }
+        // A decode-shaped memory-bound row (KN weight stream dominates)
+        // must be filtered out — its tile-quantized compute time is far
+        // from the truth and would skew the slope if it voted.
+        let membound = GemmRow { m: 1, n: 8192, k: 8192, dtype: 2, secs: 7.0e-5 };
+        rows.push(membound.clone());
+        let eff = fit_mxu_efficiency(&gpu, &rows).unwrap();
+        assert!((eff - truth).abs() < 1e-6, "{eff}");
+        // All-memory-bound input: no votes.
+        assert!(fit_mxu_efficiency(&gpu, &[membound]).is_none());
+    }
+}

@@ -1,0 +1,53 @@
+//! Calibration subsystem: machine bundles, paper-claim validation, α/β
+//! fitting.
+//!
+//! The paper's reproduction rests on calibration constants — link α/β,
+//! comm-stack overheads, the GPU roofline. This module makes them a
+//! first-class, *versioned* artifact and closes the loop around them:
+//!
+//! 1. **Bundles** ([`bundle`]): a [`MachineBundle`] couples one machine's
+//!    [`crate::collectives::sim::CommConfig`],
+//!    [`crate::perfmodel::GpuSpec`] and topology shape under a
+//!    `name@version` label, serialized as self-contained JSON. The
+//!    [`registry`] ships `perlmutter`, `vista` and `generic_ib` as
+//!    built-ins and also loads bundle files, so `--machine` takes either a
+//!    name or a path.
+//! 2. **Validation** ([`claims`]): `yalis validate` re-derives the paper's
+//!    quantitative claims (Fig 6 speedup bands per fabric, the Fig 7 405B
+//!    e2e speedup, Eq 1–6 parity) from the current stack and fails on
+//!    drift.
+//! 3. **Fitting** ([`fit`]): `yalis fit` least-squares-fits α/β (and
+//!    optionally roofline efficiency) from measured CSVs, emitting a
+//!    version-bumped bundle that feeds straight back into validation.
+//!
+//! measure → `fit` → bundle → `validate` — the loop Kundu et al. argue an
+//! analytical model needs to stay trustworthy.
+
+pub mod bundle;
+pub mod claims;
+pub mod fit;
+pub mod registry;
+
+pub use bundle::{MachineBundle, TopoSpec};
+
+/// The machine assumed when `--machine` is not given (the paper's primary
+/// testbed). The *only* place this default is spelled.
+pub const DEFAULT_MACHINE: &str = "perlmutter";
+
+/// `name@version` label of the default machine's bundle, for run metadata.
+pub fn default_label() -> String {
+    registry::resolve(DEFAULT_MACHINE)
+        .expect("default machine is a built-in bundle")
+        .label()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_machine_is_a_builtin() {
+        assert!(registry::names().contains(&DEFAULT_MACHINE));
+        assert_eq!(default_label(), "perlmutter@1");
+    }
+}

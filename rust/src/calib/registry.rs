@@ -1,0 +1,129 @@
+//! Built-in machine bundles and the one resolution path for `--machine`.
+//!
+//! Everything that needs per-machine constants — `CommConfig::for_machine`,
+//! `GpuSpec::for_machine`, `cluster::presets::by_name`, the CLI — resolves
+//! through [`resolve`], so a name always yields one *coherent* bundle: a
+//! deployment can never pair perlmutter's α/β with vista's roofline. A
+//! `--machine` value that is not a built-in name is treated as a path to a
+//! bundle JSON file.
+
+use super::bundle::{MachineBundle, TopoSpec};
+use crate::collectives::sim::CommConfig;
+use crate::perfmodel::GpuSpec;
+use anyhow::{bail, Result};
+
+/// Built-in bundle names, in help/display order.
+pub fn names() -> &'static [&'static str] {
+    &["perlmutter", "vista", "generic_ib"]
+}
+
+/// Comma-ish list of built-in names for error/help strings:
+/// `"perlmutter, vista or generic_ib"`.
+pub fn names_for_help() -> String {
+    let ns = names();
+    match ns {
+        [] => String::new(),
+        [only] => (*only).to_string(),
+        [init @ .., last] => format!("{} or {last}", init.join(", ")),
+    }
+}
+
+fn builtin(name: &str) -> Option<MachineBundle> {
+    // Topology shapes are taken from the cluster presets at one node; the
+    // node count is a per-experiment parameter, not a machine constant.
+    let b = match name {
+        "perlmutter" => MachineBundle {
+            name: "perlmutter".to_string(),
+            version: 1,
+            comm: CommConfig::perlmutter(),
+            gpu: GpuSpec::a100(),
+            topo: TopoSpec::of(&crate::cluster::presets::perlmutter(1)),
+        },
+        "vista" => MachineBundle {
+            name: "vista".to_string(),
+            version: 1,
+            comm: CommConfig::vista(),
+            gpu: GpuSpec::gh200(),
+            topo: TopoSpec::of(&crate::cluster::presets::vista(1)),
+        },
+        "generic_ib" => MachineBundle {
+            name: "generic_ib".to_string(),
+            version: 1,
+            comm: CommConfig::generic_ib(),
+            gpu: GpuSpec::a100(),
+            topo: TopoSpec::of(&crate::cluster::presets::generic_ib(1)),
+        },
+        _ => return None,
+    };
+    Some(b)
+}
+
+/// Resolve a `--machine` value: a built-in bundle name, or a path to a
+/// bundle JSON file (anything containing a path separator or ending in
+/// `.json`, or simply a file that exists).
+pub fn resolve(spec: &str) -> Result<MachineBundle> {
+    if let Some(b) = builtin(spec) {
+        return Ok(b);
+    }
+    let looks_like_path =
+        spec.contains('/') || spec.contains('\\') || spec.ends_with(".json");
+    if looks_like_path || std::path::Path::new(spec).is_file() {
+        return MachineBundle::load(spec);
+    }
+    bail!(
+        "unknown machine '{spec}' (expected {}, or a path to a bundle JSON file)",
+        names_for_help()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_resolve_and_match_legacy_constants() {
+        let p = resolve("perlmutter").unwrap();
+        assert_eq!(p.label(), "perlmutter@1");
+        assert_eq!(p.comm.reduce_bw, CommConfig::perlmutter().reduce_bw);
+        assert_eq!(p.gpu.name, "A100-80GB");
+        assert_eq!(p.topo.gpus_per_node, 4);
+
+        let v = resolve("vista").unwrap();
+        assert_eq!(v.comm.proxy_overhead, CommConfig::vista().proxy_overhead);
+        assert_eq!(v.gpu.name, "GH200-96GB");
+        assert_eq!(v.topo.gpus_per_node, 1);
+
+        let g = resolve("generic_ib").unwrap();
+        assert_eq!(g.comm.proxy_overhead, CommConfig::generic_ib().proxy_overhead);
+        assert_eq!(g.topo.gpus_per_node, 8);
+    }
+
+    #[test]
+    fn unknown_name_lists_valid_names() {
+        let err = resolve("summit").unwrap_err().to_string();
+        assert!(err.contains("unknown machine 'summit'"), "{err}");
+        for n in names() {
+            assert!(err.contains(n), "missing {n} in: {err}");
+        }
+    }
+
+    #[test]
+    fn pathlike_spec_reports_file_error_not_unknown_name() {
+        let err = resolve("/no/such/bundle.json").unwrap_err().to_string();
+        assert!(!err.contains("unknown machine"), "{err}");
+    }
+
+    #[test]
+    fn bundle_file_resolves_via_machine_spec() {
+        let dir = std::env::temp_dir().join("yalis_calib_registry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("site.json");
+        let mut b = resolve("generic_ib").unwrap();
+        b.name = "site_cluster".to_string();
+        b.version = 3;
+        b.save(path.to_str().unwrap()).unwrap();
+        let loaded = resolve(path.to_str().unwrap()).unwrap();
+        assert_eq!(loaded.label(), "site_cluster@3");
+        assert_eq!(loaded.comm.sync_cost, b.comm.sync_cost);
+    }
+}

@@ -147,13 +147,11 @@ pub mod presets {
         }
     }
 
-    pub fn by_name(name: &str, nodes: usize) -> Topology {
-        match name {
-            "perlmutter" => perlmutter(nodes),
-            "vista" => vista(nodes),
-            "generic_ib" => generic_ib(nodes),
-            other => panic!("unknown machine preset '{other}'"),
-        }
+    /// Topology for a machine name or bundle file path at `nodes` nodes,
+    /// resolved through [`crate::calib::registry`]. Unknown names are an
+    /// error, not a panic.
+    pub fn by_name(name: &str, nodes: usize) -> anyhow::Result<Topology> {
+        Ok(crate::calib::registry::resolve(name)?.topo.topology(nodes))
     }
 }
 

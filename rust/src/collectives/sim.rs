@@ -91,12 +91,33 @@ impl CommConfig {
         }
     }
 
-    pub fn for_machine(name: &str) -> Self {
-        match name {
-            "perlmutter" => Self::perlmutter(),
-            "vista" => Self::vista(),
-            _ => Self::perlmutter(),
+    /// A generic InfiniBand GPU cluster (8 GPUs/node, DGX-like): per-hop
+    /// costs between the Slingshot libfabric stack and Vista's tuned IBGDA
+    /// path. The reference point for porting to unprofiled IB sites before
+    /// `yalis fit` replaces the guesses with measured constants.
+    pub fn generic_ib() -> Self {
+        CommConfig {
+            eta: 1.25,
+            block_count: 32,
+            chunk_bytes: 32 * 1024,
+            reduce_bw: 600.0e9,
+            launch_overhead: 4.0e-6,
+            proxy_overhead: 15.0e-6,
+            nvshmem_overhead: 0.8e-6,
+            put_overhead: 0.2e-6,
+            sync_cost: 14.0e-6,
+            ll_bw_penalty: 2.0,
+            ll_alpha_factor: 0.6,
+            mpi_host_overhead: 11.0e-6,
         }
+    }
+
+    /// Comm constants for a machine name or bundle file path, resolved
+    /// through [`crate::calib::registry`] (which also guarantees the
+    /// matching [`crate::perfmodel::GpuSpec`] and topology come from the
+    /// same bundle). Unknown names are an error, not a silent fallback.
+    pub fn for_machine(name: &str) -> anyhow::Result<Self> {
+        Ok(crate::calib::registry::resolve(name)?.comm)
     }
 }
 

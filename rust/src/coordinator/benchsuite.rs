@@ -98,7 +98,8 @@ pub fn suite() -> Vec<Metric> {
     let mut tspec = TraceSpec::burstgpt();
     tspec.num_prompts = 80;
     let reqs = tspec.generate();
-    let cfg = fig9_config(ParallelSpec::tp(16), AllReduceImpl::Nvrar, 32, "perlmutter", 16);
+    let cfg =
+        fig9_config(ParallelSpec::tp(16), AllReduceImpl::Nvrar, 32, crate::calib::DEFAULT_MACHINE, 16);
     let rep = serve(&cfg, &reqs);
     out.push(Metric { key: "serve_ttft_p50_ms", value: rep.ttft_p50 * 1e3, better: Better::Lower });
     out.push(Metric { key: "serve_tpot_p50_ms", value: rep.tpot_p50 * 1e3, better: Better::Lower });
@@ -113,7 +114,8 @@ pub fn suite() -> Vec<Metric> {
     fspec.num_prompts = 150;
     fspec.rate = 12.0;
     let freqs = fspec.generate();
-    let base = fig9_config(ParallelSpec::tp(16), AllReduceImpl::Nvrar, 64, "perlmutter", 16);
+    let base =
+        fig9_config(ParallelSpec::tp(16), AllReduceImpl::Nvrar, 64, crate::calib::DEFAULT_MACHINE, 16);
     let frep = run_fleet(&FleetConfig::new(base, 3), &freqs);
     out.push(Metric {
         key: "fleet_goodput_tok_per_s",
@@ -166,7 +168,8 @@ pub enum JsonVal {
 fn meta_pairs() -> Vec<(&'static str, String)> {
     vec![
         ("version", env!("CARGO_PKG_VERSION").to_string()),
-        ("machine", "perlmutter".to_string()),
+        // Bundle name@version: which calibration produced these numbers.
+        ("machine", crate::calib::default_label()),
         ("model", "70b".to_string()),
         ("seed", format!("{:#x}", TraceSpec::burstgpt().seed)),
     ]
@@ -503,7 +506,7 @@ mod tests {
             map.get("_meta_version"),
             Some(&JsonVal::Str(env!("CARGO_PKG_VERSION").to_string()))
         );
-        assert_eq!(map.get("_meta_machine"), Some(&JsonVal::Str("perlmutter".to_string())));
+        assert_eq!(map.get("_meta_machine"), Some(&JsonVal::Str("perlmutter@1".to_string())));
         assert!(parse_flat("{ \"bootstrap\": true }").unwrap().get("bootstrap")
             == Some(&JsonVal::Bool(true)));
         assert!(parse_flat("{ \"s\": \"oops").is_err());

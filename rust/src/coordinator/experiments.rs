@@ -33,7 +33,13 @@ fn fmt_us(x: f64) -> String {
 /// Fresh shared recorder for a traced run (seed + machine known up
 /// front; the simulation fills deployment label and model).
 fn trace_sink(seed: u64, machine: &str) -> ObsSink {
-    Recorder::sink(RunMeta { seed: Some(seed), machine: machine.to_string(), ..RunMeta::default() })
+    // Stamp the bundle's name@version so the trace records which
+    // calibration produced it; fall back to the raw string for machines
+    // outside the registry (should not happen past CLI validation).
+    let label = crate::calib::registry::resolve(machine)
+        .map(|b| b.label())
+        .unwrap_or_else(|_| machine.to_string());
+    Recorder::sink(RunMeta { seed: Some(seed), machine: label, ..RunMeta::default() })
 }
 
 /// Flush a finished run's recorder to `{base}.trace.json` /
@@ -61,7 +67,7 @@ pub fn scaling_gpus(model: &str) -> Vec<usize> {
 
 /// Figures 1, 2 and 11: strong scaling of engines × parallelism schemes.
 pub fn fig1_fig2_scaling(model_name: &str) -> Vec<Table> {
-    let model = ModelConfig::by_name(model_name);
+    let model = ModelConfig::by_name(model_name).unwrap_or_else(|e| panic!("{e}"));
     let engines: [(&str, &str, Persona); 5] = [
         ("YALIS (TP)", "tp", Persona::yalis()),
         ("vLLM (TP)", "tp", Persona::vllm_v1()),
@@ -181,8 +187,8 @@ pub fn fig4_nccl_vs_mpi() -> Table {
 /// and the speedup grid. Microbenchmark = back-to-back collectives (no
 /// interleaved compute), so NVRAR pays its deferred sync (Appendix B).
 pub fn fig6_microbench(machine: &str) -> Vec<Table> {
-    let c = CommConfig::for_machine(machine);
-    let base = presets::by_name(machine, 1);
+    let c = CommConfig::for_machine(machine).unwrap_or_else(|e| panic!("{e}"));
+    let base = presets::by_name(machine, 1).unwrap_or_else(|e| panic!("{e}"));
     let gpus_list: Vec<usize> = match machine {
         "vista" => vec![2, 4, 8, 16, 32],
         _ => vec![8, 16, 32, 64, 128],
@@ -257,7 +263,7 @@ pub fn table5_hyperparams() -> Table {
 
 /// Figures 7 & 16: end-to-end decode-heavy speedup of NVRAR over NCCL.
 pub fn fig7_e2e_speedup(model_name: &str, machine: &str) -> Table {
-    let model = ModelConfig::by_name(model_name);
+    let model = ModelConfig::by_name(model_name).unwrap_or_else(|e| panic!("{e}"));
     let mut t = Table::new(
         &format!("Fig7/16 e2e decode-heavy NVRAR speedup, {} on {machine}", model.name),
         &["engine", "#P", "gpus", "msg", "NCCL (s)", "NVRAR (s)", "speedup"],
@@ -394,7 +400,7 @@ fn serving_table(
 /// default 8192-token budget with prompts 4x longer — unservable before
 /// chunked prefill existed.
 pub fn sweep_chunk(model_name: &str, machine: &str, gpus: usize, trace: Option<&str>) -> Table {
-    let model = ModelConfig::by_name(model_name);
+    let model = ModelConfig::by_name(model_name).unwrap_or_else(|e| panic!("{e}"));
     let mut tspec = TraceSpec::long_prompt();
     tspec.num_prompts = 150;
     let reqs = tspec.generate();
@@ -447,7 +453,7 @@ pub fn sweep_chunk(model_name: &str, machine: &str, gpus: usize, trace: Option<&
 /// rate and a tighter TTFT than content-blind least-outstanding; with one
 /// turn per session there is nothing to share and the policies converge.
 pub fn sweep_session(model_name: &str, machine: &str, gpus: usize, trace: Option<&str>) -> Table {
-    let model = ModelConfig::by_name(model_name);
+    let model = ModelConfig::by_name(model_name).unwrap_or_else(|e| panic!("{e}"));
     let mut t = Table::new(
         &format!("sweep-session {} on {machine} x{gpus} GPUs, 3 replicas", model.name),
         &["turns", "prefix", "policy", "tok/s", "TTFT p50", "TTFT p99", "hit %", "saved tok"],
@@ -516,11 +522,11 @@ pub fn sweep_contention(gpus: usize) -> Table {
         &["fabric", "msg", "mig/s", "idle us", "mean us", "p99 us", "inflate", "NIC util"],
     );
     for machine in ["perlmutter", "vista"] {
-        let topo = presets::by_name(machine, 1).with_gpus(gpus);
+        let topo = presets::by_name(machine, 1).unwrap().with_gpus(gpus);
         if topo.nodes > 1 && !topo.nodes.is_power_of_two() {
             continue;
         }
-        let c = CommConfig::for_machine(machine);
+        let c = CommConfig::for_machine(machine).unwrap();
         for kb in [128u64, 512, 2048] {
             for rate in [0usize, 2, 8, 32] {
                 let mut net = crate::simnet::Interconnect::new();
@@ -598,11 +604,11 @@ pub fn fig10_moe() -> Table {
 /// throughput and mean TTFT, and mark the Pareto frontier (no other
 /// configuration is at least as good on both axes and better on one).
 pub fn sweep_parallel(model_name: &str, machine: &str, gpus: usize) -> Table {
-    let model = ModelConfig::by_name(model_name);
+    let model = ModelConfig::by_name(model_name).unwrap_or_else(|e| panic!("{e}"));
     let mut tspec = TraceSpec::burstgpt();
     tspec.num_prompts = 120;
     let reqs = tspec.generate();
-    let topo = presets::by_name(machine, 1).with_gpus(gpus);
+    let topo = presets::by_name(machine, 1).unwrap_or_else(|e| panic!("{e}")).with_gpus(gpus);
     let mut rows: Vec<(String, f64, f64)> = Vec::new();
     for pspec in ParallelSpec::enumerate(gpus, model.moe.is_some()) {
         if pspec.validate(&topo).is_err() {

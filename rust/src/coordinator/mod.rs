@@ -19,9 +19,16 @@ pub fn main() {
          Subcommand = first positional arg: scaling | breakdown | gemm | nccl-vs-mpi |\n\
          micro | hyperparams | e2e | phase | serve | sweep-parallel | sweep-chunk |\n\
          sweep-session | sweep-contention | fleet | fleet-hetero | moe | sync |\n\
-         variants | traces | profile | bench-suite | bench-check | all",
+         variants | traces | profile | bench-suite | bench-check | validate | fit | all",
     );
-    cli.opt("machine", "perlmutter", "machine preset (perlmutter|vista)");
+    cli.opt(
+        "machine",
+        crate::calib::DEFAULT_MACHINE,
+        &format!(
+            "machine bundle ({}) or path to a bundle JSON file",
+            crate::calib::registry::names().join("|")
+        ),
+    );
     cli.opt("model", "70b", "model (70b|405b|qwen3|tiny)");
     cli.opt("gpus", "16", "GPU count for the `sweep-*` subcommands");
     cli.opt("allreduce", "nvrar", "per-replica all-reduce for `fleet`/`fleet-hetero` (nccl|nccl-ring|nccl-tree|mpi|nvrar)");
@@ -35,10 +42,19 @@ pub fn main() {
          (profile defaults to results/profile)",
     );
     cli.flag("json", "`bench-suite`: print the metrics as flat JSON on stdout");
-    cli.opt("out", "", "`bench-suite`: also write the metrics JSON to this path");
+    cli.opt(
+        "out",
+        "",
+        "`bench-suite`: also write the metrics JSON to this path; \
+         `validate`: write the pass/fail table here; \
+         `fit`: output bundle path (default results/fitted.json)",
+    );
     cli.opt("baseline", "bench/baseline.json", "`bench-check`: committed baseline metrics");
     cli.opt("current", "", "`bench-check`: freshly generated metrics to compare");
     cli.opt("tol", "0.10", "`bench-check`: allowed worse-direction fraction per metric");
+    cli.opt("bundle", "", "`validate`: check this bundle file instead of the built-ins");
+    cli.opt("fit-csv", "", "`fit`: measured latencies (bytes,gpus,impl,seconds CSV)");
+    cli.opt("gemm-csv", "", "`fit`: optional measured GEMMs (m,n,k,dtype_bytes,seconds CSV)");
     let args = cli.parse();
     let csv = if args.get("csv-dir").is_empty() { None } else { Some(args.get("csv-dir").to_string()) };
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
@@ -61,6 +77,60 @@ pub fn main() {
         );
         std::process::exit(if ok { 0 } else { 1 });
     }
+    if cmd == "validate" {
+        // Paper-claim harness: exit code IS the drift gate for CI.
+        let override_bundle = if args.get("bundle").is_empty() {
+            None
+        } else {
+            Some(args.get_with("bundle", crate::calib::MachineBundle::load))
+        };
+        match crate::calib::claims::run(override_bundle.as_ref()) {
+            Ok((table, ok)) => {
+                table.print();
+                let out = args.get("out");
+                if !out.is_empty() {
+                    if let Some(dir) = std::path::Path::new(out).parent() {
+                        let _ = std::fs::create_dir_all(dir);
+                    }
+                    match std::fs::write(out, table.render()) {
+                        Ok(()) => println!("-> {out}"),
+                        Err(e) => eprintln!("table write failed for {out}: {e}"),
+                    }
+                }
+                if ok {
+                    println!("validate: all claims in band");
+                } else {
+                    eprintln!("validate: CLAIM DRIFT — observed values left their bands");
+                }
+                std::process::exit(if ok { 0 } else { 1 });
+            }
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+    if cmd == "fit" {
+        let base = args.get_with("machine", crate::calib::registry::resolve);
+        if args.get("fit-csv").is_empty() {
+            eprintln!("error: fit needs --fit-csv <bytes,gpus,impl,seconds CSV>");
+            std::process::exit(2);
+        }
+        let out = if args.get("out").is_empty() { "results/fitted.json" } else { args.get("out") };
+        match crate::calib::fit::run_fit(&base, args.get("fit-csv"), args.get("gemm-csv"), out) {
+            Ok(()) => std::process::exit(0),
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+
+    // Validate --machine/--model up front: a bad value exits 2 with the
+    // registry's list-the-valid-names message instead of panicking deep in
+    // an experiment driver.
+    let bundle = args.get_with("machine", crate::calib::registry::resolve);
+    let _ = args.get_with("model", crate::models::ModelConfig::by_name);
 
     let mut tables = match cmd {
         "scaling" => experiments::fig1_fig2_scaling(model),
@@ -107,7 +177,8 @@ pub fn main() {
     for t in &mut tables {
         t.meta("version", env!("CARGO_PKG_VERSION"));
         t.meta("command", cmd);
-        t.meta("machine", machine);
+        // name@version: which calibration produced this table.
+        t.meta("machine", &bundle.label());
         t.meta("model", model);
     }
     for t in &tables {

@@ -280,7 +280,28 @@ impl Engine {
     }
 }
 
-/// Convenience constructor for the Perlmutter/Vista sweeps.
+/// Engine over an already-resolved calibration bundle — topology, GPU
+/// roofline and comm constants all come from the *same* bundle.
+pub fn engine_for_bundle(
+    bundle: &crate::calib::MachineBundle,
+    model: ModelConfig,
+    gpus: usize,
+    plan_kind: &str,
+    persona: Persona,
+    ar: AllReduceImpl,
+) -> Engine {
+    let topo = bundle.topo.topology(1).with_gpus(gpus);
+    let plan = match plan_kind {
+        "tp" => Plan::tensor(gpus),
+        "hp" => Plan::hybrid(&topo, gpus),
+        other => panic!("unknown plan '{other}'"),
+    };
+    Engine { model, topo, gpu: bundle.gpu, comm: bundle.comm, plan, persona, allreduce: ar }
+}
+
+/// Convenience constructor for the Perlmutter/Vista sweeps. Panics on an
+/// unknown machine (sweep drivers hard-code known names); CLI paths
+/// validate the name via [`crate::calib::registry::resolve`] first.
 pub fn engine_for(
     machine: &str,
     model: ModelConfig,
@@ -289,22 +310,9 @@ pub fn engine_for(
     persona: Persona,
     ar: AllReduceImpl,
 ) -> Engine {
-    let base = crate::cluster::presets::by_name(machine, 1);
-    let topo = base.with_gpus(gpus);
-    let plan = match plan_kind {
-        "tp" => Plan::tensor(gpus),
-        "hp" => Plan::hybrid(&topo, gpus),
-        other => panic!("unknown plan '{other}'"),
-    };
-    Engine {
-        model,
-        topo,
-        gpu: GpuSpec::for_machine(machine),
-        comm: CommConfig::for_machine(machine),
-        plan,
-        persona,
-        allreduce: ar,
-    }
+    let bundle =
+        crate::calib::registry::resolve(machine).unwrap_or_else(|e| panic!("{e}"));
+    engine_for_bundle(&bundle, model, gpus, plan_kind, persona, ar)
 }
 
 #[cfg(test)]

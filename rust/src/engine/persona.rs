@@ -74,14 +74,16 @@ impl Persona {
         }
     }
 
-    pub fn by_name(name: &str) -> Self {
-        match name.to_ascii_lowercase().as_str() {
+    pub fn by_name(name: &str) -> anyhow::Result<Self> {
+        Ok(match name.to_ascii_lowercase().as_str() {
             "yalis" => Self::yalis(),
             "vllm" | "vllm-v1" => Self::vllm_v1(),
             "vllm-v0" => Self::vllm_v0(),
             "sglang" => Self::sglang(),
-            other => panic!("unknown persona '{other}'"),
-        }
+            other => anyhow::bail!(
+                "unknown persona '{other}' (expected yalis, vllm, vllm-v0 or sglang)"
+            ),
+        })
     }
 }
 
@@ -106,7 +108,9 @@ mod tests {
 
     #[test]
     fn lookup_by_name() {
-        assert_eq!(Persona::by_name("YALIS").name, "YALIS");
-        assert_eq!(Persona::by_name("vllm-v0").name, "vLLM-V0");
+        assert_eq!(Persona::by_name("YALIS").unwrap().name, "YALIS");
+        assert_eq!(Persona::by_name("vllm-v0").unwrap().name, "vLLM-V0");
+        let err = Persona::by_name("triton").unwrap_err().to_string();
+        assert!(err.contains("sglang"), "{err}");
     }
 }

@@ -20,8 +20,11 @@
 //!   collective algorithms ([`collectives`]) including the paper's NVRAR
 //!   (an event-level simulation, a flow-level shared-fabric path
 //!   [`collectives::flows`], and a **real** shared-memory implementation
-//!   over the [`shmem`] PGAS substrate), and the PJRT [`runtime`] that
-//!   executes AOT-compiled model artifacts.
+//!   over the [`shmem`] PGAS substrate), the calibration subsystem
+//!   ([`calib`]: versioned machine bundles, the `yalis validate`
+//!   paper-claim harness, and `yalis fit` α/β fitting from measured
+//!   CSVs), and the PJRT [`runtime`] that executes AOT-compiled model
+//!   artifacts.
 //! - **Layer 2** — JAX model graphs (`python/compile/model.py`), lowered
 //!   once to HLO text in `artifacts/`.
 //! - **Layer 1** — Pallas kernels (`python/compile/kernels/`), lowered into
@@ -30,6 +33,7 @@
 //! Python never runs at inference time: the `yalis` binary and every
 //! example/bench are self-contained once `make artifacts` has run.
 
+pub mod calib;
 pub mod cluster;
 pub mod collectives;
 pub mod coordinator;

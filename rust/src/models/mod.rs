@@ -154,14 +154,14 @@ impl ModelConfig {
         }
     }
 
-    pub fn by_name(name: &str) -> Self {
-        match name.to_ascii_lowercase().as_str() {
+    pub fn by_name(name: &str) -> anyhow::Result<Self> {
+        Ok(match name.to_ascii_lowercase().as_str() {
             "70b" | "llama-70b" | "llama31-70b" => Self::llama31_70b(),
             "405b" | "llama-405b" | "llama31-405b" => Self::llama31_405b(),
             "qwen3" | "qwen3-235b" => Self::qwen3_235b_a22b(),
             "tiny" => Self::tiny(),
-            other => panic!("unknown model '{other}'"),
-        }
+            other => anyhow::bail!("unknown model '{other}' (expected 70b, 405b, qwen3 or tiny)"),
+        })
     }
 }
 

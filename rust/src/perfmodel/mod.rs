@@ -63,12 +63,12 @@ impl GpuSpec {
         }
     }
 
-    pub fn for_machine(name: &str) -> Self {
-        match name {
-            "perlmutter" => Self::a100(),
-            "vista" => Self::gh200(),
-            _ => Self::a100(),
-        }
+    /// GPU spec for a machine name or bundle file path, resolved through
+    /// [`crate::calib::registry`] so it always pairs with the same
+    /// bundle's comm constants. Unknown names are an error, not a silent
+    /// A100 fallback.
+    pub fn for_machine(name: &str) -> anyhow::Result<Self> {
+        Ok(crate::calib::registry::resolve(name)?.gpu)
     }
 }
 

@@ -406,8 +406,9 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
 }
 
 /// Standard config builder for the Fig 9/18 setups (70B on `machine`).
-/// Panics if `spec` does not fit the `machine`×`gpus` topology — CLI paths
-/// should `validate` first for a usable error.
+/// Panics if the machine is unknown or `spec` does not fit the
+/// `machine`×`gpus` topology — CLI paths should resolve/`validate` first
+/// for a usable error.
 pub fn fig9_config(
     spec: ParallelSpec,
     ar: AllReduceImpl,
@@ -415,15 +416,29 @@ pub fn fig9_config(
     machine: &str,
     gpus: usize,
 ) -> ServeConfig {
-    let topo = crate::cluster::presets::by_name(machine, 1).with_gpus(gpus);
+    let bundle =
+        crate::calib::registry::resolve(machine).unwrap_or_else(|e| panic!("fig9_config: {e}"));
+    fig9_config_bundle(spec, ar, concurrency, &bundle, gpus)
+}
+
+/// [`fig9_config`] over an already-resolved calibration bundle: topology,
+/// roofline and comm constants all come from the same bundle.
+pub fn fig9_config_bundle(
+    spec: ParallelSpec,
+    ar: AllReduceImpl,
+    concurrency: usize,
+    bundle: &crate::calib::MachineBundle,
+    gpus: usize,
+) -> ServeConfig {
+    let topo = bundle.topo.topology(1).with_gpus(gpus);
     if let Err(e) = spec.validate(&topo) {
         panic!("fig9_config: {e}");
     }
     ServeConfig {
         model: ModelConfig::llama31_70b(),
         topo,
-        gpu: GpuSpec::for_machine(machine),
-        comm: CommConfig::for_machine(machine),
+        gpu: bundle.gpu,
+        comm: bundle.comm,
         persona: Persona::vllm_v1(),
         cost: cost_for(spec, ar),
         max_concurrency: concurrency,

@@ -9,7 +9,9 @@ use std::collections::BTreeMap;
 #[derive(Clone, Debug)]
 struct Opt {
     name: &'static str,
-    help: &'static str,
+    // Owned so callers can build help text at runtime (e.g. listing the
+    // registered machine bundles).
+    help: String,
     default: Option<String>,
     is_flag: bool,
 }
@@ -43,20 +45,25 @@ impl Cli {
     }
 
     /// Option with a default value.
-    pub fn opt(&mut self, name: &'static str, default: &str, help: &'static str) -> &mut Self {
-        self.opts.push(Opt { name, help, default: Some(default.to_string()), is_flag: false });
+    pub fn opt(&mut self, name: &'static str, default: &str, help: &str) -> &mut Self {
+        self.opts.push(Opt {
+            name,
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
         self
     }
 
     /// Required option (no default).
-    pub fn req(&mut self, name: &'static str, help: &'static str) -> &mut Self {
-        self.opts.push(Opt { name, help, default: None, is_flag: false });
+    pub fn req(&mut self, name: &'static str, help: &str) -> &mut Self {
+        self.opts.push(Opt { name, help: help.to_string(), default: None, is_flag: false });
         self
     }
 
     /// Boolean flag (default false).
-    pub fn flag(&mut self, name: &'static str, help: &'static str) -> &mut Self {
-        self.opts.push(Opt { name, help, default: None, is_flag: true });
+    pub fn flag(&mut self, name: &'static str, help: &str) -> &mut Self {
+        self.opts.push(Opt { name, help: help.to_string(), default: None, is_flag: true });
         self
     }
 

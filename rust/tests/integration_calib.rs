@@ -1,0 +1,122 @@
+//! Integration: the calibration loop end-to-end — bundles round-trip
+//! through files, the registry rejects unknowns usably, `validate`'s claim
+//! suite passes on built-ins and catches perturbed constants, and `fit`
+//! recovers known α/β whose output bundle resolves via `--machine <path>`.
+
+use yalis::calib::{claims, fit, registry, MachineBundle};
+use yalis::cluster::presets;
+use yalis::collectives::sim::CommConfig;
+use yalis::perfmodel::GpuSpec;
+
+fn tmp(name: &str) -> String {
+    let dir = std::env::temp_dir().join("yalis_integration_calib");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name).to_str().unwrap().to_string()
+}
+
+/// The registry's built-ins are byte-for-byte the legacy preset constants:
+/// refactoring resolution through `calib` changed no simulated number.
+#[test]
+fn builtin_bundles_match_legacy_presets() {
+    for (name, comm, gpu, topo) in [
+        ("perlmutter", CommConfig::perlmutter(), GpuSpec::a100(), presets::perlmutter(1)),
+        ("vista", CommConfig::vista(), GpuSpec::gh200(), presets::vista(1)),
+        ("generic_ib", CommConfig::generic_ib(), GpuSpec::a100(), presets::generic_ib(1)),
+    ] {
+        let b = registry::resolve(name).unwrap();
+        assert_eq!(b.comm.eta, comm.eta, "{name}");
+        assert_eq!(b.comm.proxy_overhead, comm.proxy_overhead, "{name}");
+        assert_eq!(b.comm.sync_cost, comm.sync_cost, "{name}");
+        assert_eq!(b.gpu.name, gpu.name, "{name}");
+        assert_eq!(b.gpu.flops, gpu.flops, "{name}");
+        assert_eq!(b.topo.gpus_per_node, topo.gpus_per_node, "{name}");
+        assert_eq!(b.topo.inter.alpha, topo.inter.alpha, "{name}");
+        assert_eq!(b.topo.inter.beta, topo.inter.beta, "{name}");
+        // ...and the fallible machine-wide accessors agree with the bundle.
+        assert_eq!(CommConfig::for_machine(name).unwrap().reduce_bw, b.comm.reduce_bw);
+        assert_eq!(GpuSpec::for_machine(name).unwrap().mem_bw, b.gpu.mem_bw);
+        assert_eq!(presets::by_name(name, 4).unwrap().nodes, 4);
+    }
+}
+
+#[test]
+fn unknown_names_error_with_valid_name_list() {
+    for err in [
+        CommConfig::for_machine("frontier").unwrap_err().to_string(),
+        GpuSpec::for_machine("frontier").unwrap_err().to_string(),
+        presets::by_name("frontier", 2).unwrap_err().to_string(),
+    ] {
+        assert!(err.contains("unknown machine 'frontier'"), "{err}");
+        assert!(err.contains("perlmutter") && err.contains("generic_ib"), "{err}");
+    }
+}
+
+#[test]
+fn bundle_file_round_trip_preserves_every_constant() {
+    let path = tmp("roundtrip.json");
+    let b = registry::resolve("vista").unwrap();
+    b.save(&path).unwrap();
+    let back = MachineBundle::load(&path).unwrap();
+    assert_eq!(back.label(), "vista@1");
+    assert_eq!(back.comm.proxy_overhead, b.comm.proxy_overhead);
+    assert_eq!(back.comm.chunk_bytes, b.comm.chunk_bytes);
+    assert_eq!(back.gpu.flops, b.gpu.flops);
+    assert_eq!(back.gpu.mem_bytes, b.gpu.mem_bytes);
+    assert_eq!(back.topo.inter.beta, b.topo.inter.beta);
+    // A loaded bundle is a first-class --machine value everywhere.
+    assert_eq!(
+        CommConfig::for_machine(&path).unwrap().proxy_overhead,
+        b.comm.proxy_overhead
+    );
+    assert_eq!(presets::by_name(&path, 8).unwrap().gpus_per_node, 1);
+}
+
+#[test]
+fn validate_passes_builtins_and_fails_perturbed_bundle() {
+    let (table, ok) = claims::run(None).unwrap();
+    assert!(ok, "built-in claim drift:\n{}", table.render());
+    assert!(!table.rows().is_empty());
+
+    // Perturb one comm constant: NVRAR pays 5 ms per inter-node put — the
+    // speedup claims must leave their bands and the run must fail, which
+    // is what gives `yalis validate` its non-zero exit in CI.
+    let mut bad = registry::resolve("perlmutter").unwrap();
+    bad.comm.nvshmem_overhead = 5.0e-3;
+    let (table, ok) = claims::run(Some(&bad)).unwrap();
+    assert!(!ok, "perturbation undetected:\n{}", table.render());
+    assert!(table.render().contains("FAIL"));
+}
+
+#[test]
+fn fit_recovers_known_constants_and_output_bundle_resolves() {
+    // The committed CI fixture: closed-form latencies generated at the
+    // perlmutter bundle's exact α/β.
+    let csv = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../bench/fit_smoke.csv"
+    ))
+    .expect("bench/fit_smoke.csv fixture");
+    let rows = fit::parse_csv(&csv).unwrap();
+    assert_eq!(rows.len(), 48);
+    let base = registry::resolve("perlmutter").unwrap();
+    let rep = fit::fit_alpha_beta(&base, &rows).unwrap();
+    assert!(rep.rms < 1e-6, "rms {}", rep.rms);
+    let t = &rep.bundle.topo;
+    for (got, want) in [
+        (t.intra.alpha, base.topo.intra.alpha),
+        (t.intra.beta, base.topo.intra.beta),
+        (t.inter.alpha, base.topo.inter.alpha),
+        (t.inter.beta, base.topo.inter.beta),
+    ] {
+        assert!((got - want).abs() / want < 1e-6, "{got} vs {want}");
+    }
+
+    // The emitted bundle loads via the --machine path route and, being the
+    // same constants at version 2, still passes the perlmutter claims.
+    let out = tmp("fitted.json");
+    rep.bundle.save(&out).unwrap();
+    let loaded = registry::resolve(&out).unwrap();
+    assert_eq!(loaded.label(), "perlmutter@2");
+    let (table, ok) = claims::run(Some(&loaded)).unwrap();
+    assert!(ok, "fitted bundle drifted:\n{}", table.render());
+}

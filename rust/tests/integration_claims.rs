@@ -16,8 +16,8 @@ fn nvrar_speedup_range_matches_paper() {
     for (machine, nodes, min_s, max_s) in
         [("perlmutter", 8usize, 1.05, 2.2), ("vista", 16, 1.5, 4.0)]
     {
-        let c = CommConfig::for_machine(machine);
-        let topo = presets::by_name(machine, nodes);
+        let c = CommConfig::for_machine(machine).unwrap();
+        let topo = presets::by_name(machine, nodes).unwrap();
         let mut best: f64 = 0.0;
         for kb in [256u64, 512, 1024] {
             let s = sim::nccl_auto(&topo, &c, kb * 1024).total

@@ -39,9 +39,9 @@ fn nic0() -> LinkId {
 #[test]
 fn zero_contention_flow_times_match_closed_forms_within_1e9() {
     for machine in ["perlmutter", "vista"] {
-        let c = CommConfig::for_machine(machine);
+        let c = CommConfig::for_machine(machine).unwrap();
         for nodes in [1usize, 2, 4, 8, 16] {
-            let t = presets::by_name(machine, nodes);
+            let t = presets::by_name(machine, nodes).unwrap();
             for kb in [64u64, 128, 512, 1024, 2048] {
                 let bytes = kb * 1024;
                 let cases: [(AllReduceImpl, f64); 5] = [
@@ -84,8 +84,8 @@ fn property_concurrent_migrations_never_speed_up_allreduce() {
     check("contention is monotone in background traffic", 30, |g: &mut Gen| {
         let machine = *g.pick(&["perlmutter", "vista"]);
         let nodes = *g.pick(&[2usize, 4, 8]);
-        let t = presets::by_name(machine, nodes);
-        let c = CommConfig::for_machine(machine);
+        let t = presets::by_name(machine, nodes).unwrap();
+        let c = CommConfig::for_machine(machine).unwrap();
         let bytes = *g.pick(&[128u64, 512, 2048]) * 1024;
         let ar = *g.pick(&[AllReduceImpl::Nvrar, AllReduceImpl::NcclAuto, AllReduceImpl::Mpi]);
         let at = g.f64(0.0, 0.05);
