@@ -6,6 +6,9 @@
 //! Usage: cargo run --release --example allreduce_microbench --
 //!        [--machine perlmutter|vista] [--real]
 
+// stdout is the product here (CLI tables / bench reports), not stray debug noise.
+#![allow(clippy::print_stdout)]
+
 use yalis::collectives::real::{serial_sum, Algo, Harness};
 use yalis::coordinator::experiments;
 use yalis::util::cli::Cli;
@@ -42,6 +45,7 @@ fn main() {
             } else {
                 h
             };
+            // lint: allow(D03) real wall-clock timing of the host all-reduce
             let t0 = std::time::Instant::now();
             let out = h.run_once(|pe| inputs[pe].clone());
             let dt = t0.elapsed().as_secs_f64();

@@ -11,6 +11,9 @@
 //!        [--prompts 300] [--rate 4] [--conc 64] [--chunk 2048]
 //!        [--gpus 16] [--allreduce nvrar]
 
+// stdout is the product here (CLI tables / bench reports), not stray debug noise.
+#![allow(clippy::print_stdout)]
+
 use yalis::collectives::AllReduceImpl;
 use yalis::parallel::ParallelSpec;
 use yalis::serving::{fig9_config, serve, ServeReport};

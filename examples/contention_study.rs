@@ -12,6 +12,9 @@
 //!        [--prompts 400] [--rate 10] [--replicas 3] [--prefill 1]
 //!        [--conc 32] [--allreduce nvrar] [--drain-at 0]
 
+// stdout is the product here (CLI tables / bench reports), not stray debug noise.
+#![allow(clippy::print_stdout)]
+
 use yalis::collectives::AllReduceImpl;
 use yalis::fleet::{run_fleet, FleetConfig};
 use yalis::parallel::ParallelSpec;

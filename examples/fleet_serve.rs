@@ -16,6 +16,9 @@
 //!        [--policies round-robin,least-tokens,kv-pressure,session-affinity]
 //!        [--slo-ttft 5.0] [--slo-tpot 0.2] [--ramp 0] [--autoscale]
 
+// stdout is the product here (CLI tables / bench reports), not stray debug noise.
+#![allow(clippy::print_stdout)]
+
 use yalis::collectives::AllReduceImpl;
 use yalis::fleet::autoscaler::AutoscaleConfig;
 use yalis::fleet::metrics::{FleetReport, SloTargets};

@@ -4,6 +4,9 @@
 //!
 //! Usage: cargo run --release --example quickstart -- [--steps 32]
 
+// stdout is the product here (CLI tables / bench reports), not stray debug noise.
+#![allow(clippy::print_stdout)]
+
 use yalis::runtime::tensor::argmax_rows;
 use yalis::runtime::tp::TpRuntime;
 use yalis::util::cli::Cli;
@@ -32,12 +35,14 @@ fn main() -> anyhow::Result<()> {
         .map(|_| rng.usize(0, rt.dims.vocab - 1) as i32)
         .collect();
 
+    // lint: allow(D03) real wall-clock timing of the host runtime
     let t0 = std::time::Instant::now();
     let mut logits = rt.prefill(&prompt)?;
     println!("prefill: {}", fmt_time(t0.elapsed().as_secs_f64()));
 
     let steps = args.get_usize("steps");
     let b = rt.dims.batch;
+    // lint: allow(D03) real wall-clock timing of the host runtime
     let t1 = std::time::Instant::now();
     let mut tokens_out: Vec<Vec<i32>> = vec![Vec::new(); b];
     for _ in 0..steps {

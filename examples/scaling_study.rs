@@ -5,6 +5,9 @@
 //! Usage: cargo run --release --example scaling_study -- [--model 70b]
 //!        [--csv results/scaling.csv]
 
+// stdout is the product here (CLI tables / bench reports), not stray debug noise.
+#![allow(clippy::print_stdout)]
+
 use yalis::coordinator::experiments;
 use yalis::util::cli::Cli;
 

@@ -7,6 +7,9 @@
 //!        [--conc 32,256] [--gpus 16] [--specs tp16,tp4-pp4]
 //!        [--allreduce nccl,nvrar] [--chunk-tokens 0]
 
+// stdout is the product here (CLI tables / bench reports), not stray debug noise.
+#![allow(clippy::print_stdout)]
+
 use yalis::collectives::AllReduceImpl;
 use yalis::parallel::ParallelSpec;
 use yalis::serving::{fig9_config, serve};

@@ -12,6 +12,9 @@
 //!        [--conc 64] [--allreduce nvrar]
 //!        [--policies round-robin,least-tokens,kv-pressure,session-affinity]
 
+// stdout is the product here (CLI tables / bench reports), not stray debug noise.
+#![allow(clippy::print_stdout)]
+
 use yalis::collectives::AllReduceImpl;
 use yalis::fleet::router::RoutePolicy;
 use yalis::fleet::{run_fleet, FleetConfig};

@@ -9,6 +9,9 @@
 //!
 //! Open the `.trace.json` at <https://ui.perfetto.dev> (drag & drop).
 
+// stdout is the product here (CLI tables / bench reports), not stray debug noise.
+#![allow(clippy::print_stdout)]
+
 use yalis::collectives::AllReduceImpl;
 use yalis::obs::{self, fold, Recorder, RunMeta};
 use yalis::parallel::ParallelSpec;

@@ -4,6 +4,9 @@
 //! all-reduce inflation the closed-form α-β models cannot represent.
 //! CSV into results/.
 
+// stdout is the product here (CLI tables / bench reports), not stray debug noise.
+#![allow(clippy::print_stdout)]
+
 use yalis::coordinator::experiments;
 
 fn main() {

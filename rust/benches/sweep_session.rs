@@ -3,6 +3,9 @@
 //! showing where prefix-cache-aware session affinity wins TTFT and hit
 //! rate over content-blind least-outstanding. CSV into results/.
 
+// stdout is the product here (CLI tables / bench reports), not stray debug noise.
+#![allow(clippy::print_stdout)]
+
 use yalis::coordinator::experiments;
 
 fn main() {

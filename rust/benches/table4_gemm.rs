@@ -2,6 +2,10 @@
 //! the paper's exact A100 shapes, and (b) REAL wall-clock PJRT executions of
 //! the CPU-scaled GEMM artifacts (M/2 vs K/2), proving the tile-floor effect
 //! on real hardware too (XLA CPU also tiles).
+
+// stdout is the product here (CLI tables / bench reports), not stray debug noise.
+#![allow(clippy::print_stdout)]
+
 use yalis::coordinator::experiments::table4_gemm_model;
 use yalis::runtime::{lit_f32, Runtime};
 use yalis::util::bench::Bencher;

@@ -13,6 +13,9 @@
 //! per-row residual report, closing the loop: measure → fit → bundle →
 //! validate.
 
+// stdout is the product here (CLI tables / bench reports), not stray debug noise.
+#![allow(clippy::print_stdout)]
+
 use super::bundle::MachineBundle;
 use crate::collectives::model::log2_steps;
 use crate::perfmodel::GpuSpec;

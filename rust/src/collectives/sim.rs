@@ -242,7 +242,10 @@ pub fn nccl_auto(t: &Topology, c: &CommConfig, bytes: u64) -> Timing {
     ];
     candidates
         .into_iter()
-        .min_by(|a, b| a.total.partial_cmp(&b.total).unwrap())
+        // total_cmp (D02): a NaN timing must not panic the tuner; NaN
+        // compares greatest, so it simply never wins the min.
+        .min_by(|a, b| a.total.total_cmp(&b.total))
+        // lint: allow(P01) fixed four-candidate array is never empty
         .unwrap()
 }
 

@@ -16,6 +16,9 @@
 //! `cargo run --release -- bench-suite --json --out bench/baseline.json`
 //! and commit the result.
 
+// stdout is the product here (CLI tables / bench reports), not stray debug noise.
+#![allow(clippy::print_stdout)]
+
 use crate::cluster::presets;
 use crate::collectives::flows::{allreduce_flow, FlowSpec};
 use crate::collectives::sim::{self, CommConfig};

@@ -1,6 +1,9 @@
 //! One function per paper table/figure. See DESIGN.md's per-experiment
 //! index; EXPERIMENTS.md records paper-vs-measured for each.
 
+// stdout is the product here (CLI tables / bench reports), not stray debug noise.
+#![allow(clippy::print_stdout)]
+
 use crate::cluster::presets;
 use crate::collectives::flows::{allreduce_flow, FlowSpec};
 use crate::collectives::sim::{self, CommConfig};

@@ -6,6 +6,9 @@
 //! harnesses in `rust/benches/` are thin wrappers over these, so the CLI,
 //! the benches, and the integration tests all exercise identical code.
 
+// stdout is the product here (CLI tables / bench reports), not stray debug noise.
+#![allow(clippy::print_stdout)]
+
 pub mod benchsuite;
 pub mod experiments;
 
@@ -19,7 +22,8 @@ pub fn main() {
          Subcommand = first positional arg: scaling | breakdown | gemm | nccl-vs-mpi |\n\
          micro | hyperparams | e2e | phase | serve | sweep-parallel | sweep-chunk |\n\
          sweep-session | sweep-contention | fleet | fleet-hetero | moe | sync |\n\
-         variants | traces | profile | bench-suite | bench-check | validate | fit | all",
+         variants | traces | profile | bench-suite | bench-check | validate | fit |\n\
+         lint | all",
     );
     cli.opt(
         "machine",
@@ -41,13 +45,21 @@ pub fn main() {
          writes <base>.trace.json (Perfetto), <base>.lifecycle.csv, <base>.timeline.csv \
          (profile defaults to results/profile)",
     );
-    cli.flag("json", "`bench-suite`: print the metrics as flat JSON on stdout");
+    cli.flag("json", "`bench-suite`/`lint`: print the report as JSON on stdout");
     cli.opt(
         "out",
         "",
         "`bench-suite`: also write the metrics JSON to this path; \
          `validate`: write the pass/fail table here; \
-         `fit`: output bundle path (default results/fitted.json)",
+         `fit`: output bundle path (default results/fitted.json); \
+         `lint`: also write the JSON report here",
+    );
+    cli.opt("root", ".", "`lint`: repository root to scan");
+    cli.opt(
+        "lint-baseline",
+        crate::lint::DEFAULT_BASELINE,
+        "`lint`: ratcheted debt baseline (relative to --root); new debt fails, \
+         decreases auto-tighten",
     );
     cli.opt("baseline", "bench/baseline.json", "`bench-check`: committed baseline metrics");
     cli.opt("current", "", "`bench-check`: freshly generated metrics to compare");
@@ -76,6 +88,22 @@ pub fn main() {
             args.get_f64("tol"),
         );
         std::process::exit(if ok { 0 } else { 1 });
+    }
+    if cmd == "lint" {
+        // simlint: the exit code IS the CI gate (0 clean, 1 new debt or
+        // bad waiver, 2 usage/IO error).
+        match crate::lint::run_cli(
+            args.get("root"),
+            args.get("lint-baseline"),
+            args.get_flag("json"),
+            args.get("out"),
+        ) {
+            Ok(ok) => std::process::exit(if ok { 0 } else { 1 }),
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                std::process::exit(2);
+            }
+        }
     }
     if cmd == "validate" {
         // Paper-claim harness: exit code IS the drift gate for CI.

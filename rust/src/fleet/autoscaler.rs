@@ -116,7 +116,9 @@ impl Autoscaler {
             return 0.0;
         }
         let mut v: Vec<f64> = window.iter().copied().collect();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: an observed NaN latency must not panic the control
+        // loop (D02); it sorts last and shows up in the p95 instead.
+        v.sort_by(f64::total_cmp);
         v[((v.len() - 1) as f64 * 0.95).round() as usize]
     }
 

@@ -23,8 +23,10 @@
 //!   over the [`shmem`] PGAS substrate), the calibration subsystem
 //!   ([`calib`]: versioned machine bundles, the `yalis validate`
 //!   paper-claim harness, and `yalis fit` α/β fitting from measured
-//!   CSVs), and the PJRT [`runtime`] that executes AOT-compiled model
-//!   artifacts.
+//!   CSVs), the determinism-invariant static-analysis pass ([`lint`]:
+//!   `yalis lint`, a ratcheted source-level gate on the hazards that
+//!   silently break the simulator's bit-for-bit guarantees), and the
+//!   PJRT [`runtime`] that executes AOT-compiled model artifacts.
 //! - **Layer 2** — JAX model graphs (`python/compile/model.py`), lowered
 //!   once to HLO text in `artifacts/`.
 //! - **Layer 1** — Pallas kernels (`python/compile/kernels/`), lowered into
@@ -39,6 +41,7 @@ pub mod collectives;
 pub mod coordinator;
 pub mod engine;
 pub mod fleet;
+pub mod lint;
 pub mod metrics;
 pub mod models;
 pub mod moe;

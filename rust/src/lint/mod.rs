@@ -1,0 +1,421 @@
+//! simlint — determinism-invariant static analysis for the simulator
+//! (`yalis lint`).
+//!
+//! The repo's headline guarantees are determinism claims: traced runs
+//! bit-for-bit equal to untraced, contention-off equal to pre-contention
+//! numbers, idle-fabric α-β parity within 1e-9. Spot-check tests pin
+//! those end to end, but the hazards that silently break them — NaN
+//! orderings, wall-clock reads, iteration-order-dependent containers,
+//! ambient RNG, panics in library paths — reappear with every PR. This
+//! module is the machine-checked invariant layer: a dependency-free
+//! source scanner ([`scan`]) enforcing a small rule catalog ([`RULES`]),
+//! with inline waivers (`// lint: allow(RULE) reason`) and a committed
+//! per-file ratcheted debt baseline ([`ratchet`], `lint/baseline.json`)
+//! so pre-existing debt is frozen and can only shrink.
+//!
+//! Rule catalog (see DESIGN.md "Static analysis & determinism
+//! invariants" for the rationale of each):
+//!
+//! | id  | pattern | protects |
+//! |-----|---------|----------|
+//! | D01 | `HashMap`/`HashSet` in simulation modules | iteration-order determinism |
+//! | D02 | `partial_cmp` comparators (`unwrap`/`sort_by`/`min_by`/`max_by`) | NaN-total ordering |
+//! | D03 | `Instant::now`/`SystemTime` outside real-hardware modules | simulated-time purity |
+//! | D04 | `thread_rng`/`rand::random` | all randomness flows from the seed |
+//! | P01 | `unwrap`/`expect`/`panic!`/`f64::NAN` in library code | panic-free library paths |
+//!
+//! `yalis lint` exits non-zero on any new (unwaived, above-baseline)
+//! violation or malformed waiver; `--json` emits a machine-readable
+//! report for CI.
+
+// This module is a CLI surface: diagnostics and the summary table print
+// to stdout by design.
+#![allow(clippy::print_stdout)]
+
+pub mod ratchet;
+pub mod scan;
+
+use crate::obs::chrome::esc;
+use crate::util::tables::Table;
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One lint rule: stable id, what it matches, which guarantee it guards.
+pub struct Rule {
+    pub id: &'static str,
+    pub summary: &'static str,
+    pub protects: &'static str,
+}
+
+/// The rule catalog. Ids are stable (they appear in waivers and in the
+/// committed baseline); add new rules at the end.
+pub const RULES: [Rule; 5] = [
+    Rule {
+        id: "D01",
+        summary: "HashMap/HashSet in simulation code",
+        protects: "iteration order feeds simulated decisions; BTreeMap/Vec keep runs bit-for-bit",
+    },
+    Rule {
+        id: "D02",
+        summary: "NaN-unsafe float comparator (partial_cmp in sort/min/max or unwrapped)",
+        protects: "a NaN must surface as a value bug, not a panic or heap-shape-dependent order",
+    },
+    Rule {
+        id: "D03",
+        summary: "wall-clock read (Instant::now/SystemTime) in simulated paths",
+        protects: "simulated time derives from the event queue; wall-clock makes runs machine-bound",
+    },
+    Rule {
+        id: "D04",
+        summary: "ambient randomness (thread_rng/rand::random)",
+        protects: "all stochastic choice flows from the run seed so reruns reproduce exactly",
+    },
+    Rule {
+        id: "P01",
+        summary: "panic path (unwrap/expect/panic!/f64::NAN) in library code",
+        protects: "library paths return Result; a panic kills a fleet run halfway through",
+    },
+];
+
+/// Directories scanned, relative to the repo root. Missing ones are
+/// skipped (`rust/examples` exists for layouts that keep examples under
+/// the package; this repo keeps them at the workspace root).
+pub const ROOTS: [&str; 5] = ["rust/src", "rust/tests", "rust/benches", "rust/examples", "examples"];
+
+/// Default ratchet baseline path, relative to the repo root.
+pub const DEFAULT_BASELINE: &str = "lint/baseline.json";
+
+/// A (file, rule) group whose unwaived count exceeds its baseline.
+#[derive(Clone, Debug)]
+pub struct DebtGroup {
+    pub file: String,
+    pub rule: &'static str,
+    pub count: u64,
+    pub baseline: u64,
+    /// All unwaived hits of the rule in the file (line, excerpt) — the
+    /// scanner cannot know which individual lines are the new ones.
+    pub hits: Vec<(usize, String)>,
+}
+
+/// Aggregated result of a lint run.
+#[derive(Default)]
+pub struct Report {
+    pub files_scanned: usize,
+    pub new_debt: Vec<DebtGroup>,
+    pub waiver_errors: Vec<(String, usize, String)>,
+    pub unused_waivers: Vec<(String, usize)>,
+    /// (file, rule, old, new) baseline entries that will tighten.
+    pub tightened: Vec<(String, String, u64, u64)>,
+    pub baselined: u64,
+    pub waived: u64,
+    /// Current unwaived counts (what an auto-tightened baseline holds).
+    pub counts: ratchet::Counts,
+    /// Per-rule (baselined, waived, new) tallies for the summary table.
+    pub per_rule: BTreeMap<&'static str, (u64, u64, u64)>,
+}
+
+impl Report {
+    /// A run passes iff there is no new debt and every waiver parses.
+    pub fn ok(&self) -> bool {
+        self.new_debt.is_empty() && self.waiver_errors.is_empty()
+    }
+}
+
+/// Recursively collect `.rs` files under the scan roots, sorted by
+/// repo-relative path so runs are deterministic.
+pub fn collect_files(root: &Path) -> anyhow::Result<Vec<(String, PathBuf)>> {
+    fn walk(dir: &Path, root: &Path, out: &mut Vec<(String, PathBuf)>) -> anyhow::Result<()> {
+        let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+            .with_context(|| format!("reading {}", dir.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .collect();
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                walk(&p, root, out)?;
+            } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+                let rel = p
+                    .strip_prefix(root)
+                    .unwrap_or(&p)
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                out.push((rel, p));
+            }
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    for r in ROOTS {
+        let dir = root.join(r);
+        if dir.is_dir() {
+            walk(&dir, root, &mut out)?;
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Run the scanner over the repo at `root` and ratchet against the
+/// baseline at `baseline_path` (not written here — see [`run_cli`]).
+pub fn run(root: &Path, baseline_path: &Path) -> anyhow::Result<Report> {
+    let files = collect_files(root)?;
+    if files.is_empty() {
+        bail!("no .rs files found under {} (scan roots: {})", root.display(), ROOTS.join(", "));
+    }
+    let mut report = Report { files_scanned: files.len(), ..Report::default() };
+    for r in RULES.iter() {
+        report.per_rule.insert(r.id, (0, 0, 0));
+    }
+    // (file, rule) → unwaived hits.
+    let mut groups: BTreeMap<(String, &'static str), Vec<(usize, String)>> = BTreeMap::new();
+    for (rel, path) in &files {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let fs = scan::scan_source(rel, &text);
+        for e in fs.waiver_errors {
+            report.waiver_errors.push((rel.clone(), e.line, e.msg));
+        }
+        for l in fs.unused_waivers {
+            report.unused_waivers.push((rel.clone(), l));
+        }
+        for h in fs.hits {
+            if h.waived {
+                report.waived += 1;
+                if let Some(t) = report.per_rule.get_mut(h.rule) {
+                    t.1 += 1;
+                }
+            } else {
+                groups.entry((rel.clone(), h.rule)).or_default().push((h.line, h.excerpt));
+            }
+        }
+    }
+    for ((file, rule), hits) in &groups {
+        report
+            .counts
+            .entry(file.clone())
+            .or_default()
+            .insert(rule.to_string(), hits.len() as u64);
+    }
+    let baseline = ratchet::load(baseline_path)?;
+    let rr = ratchet::compare(&report.counts, &baseline);
+    report.baselined = rr.baselined;
+    report.tightened = rr.tightened;
+    for (file, rule, c, b) in rr.exceeded {
+        let rule_id = RULES.iter().find(|r| r.id == rule.as_str()).map(|r| r.id).unwrap_or("?");
+        let hits = groups.get(&(file.clone(), rule_id)).cloned().unwrap_or_default();
+        if let Some(t) = report.per_rule.get_mut(rule_id) {
+            t.2 += c - b;
+        }
+        report.new_debt.push(DebtGroup { file, rule: rule_id, count: c, baseline: b, hits });
+    }
+    // Everything unwaived and not exceeded is baselined debt.
+    for ((file, rule), hits) in &groups {
+        let exceeded = report.new_debt.iter().any(|d| d.file == *file && d.rule == *rule);
+        if !exceeded {
+            if let Some(t) = report.per_rule.get_mut(*rule) {
+                t.0 += hits.len() as u64;
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// Render the per-rule summary table.
+pub fn summary_table(report: &Report) -> Table {
+    let mut t = Table::new("simlint summary", &["rule", "checks", "baselined", "waived", "new"]);
+    t.meta("files_scanned", &report.files_scanned.to_string());
+    for r in RULES.iter() {
+        let (b, w, n) = report.per_rule.get(r.id).copied().unwrap_or((0, 0, 0));
+        t.row(&[
+            r.id.to_string(),
+            r.summary.to_string(),
+            b.to_string(),
+            w.to_string(),
+            n.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Render the machine-readable JSON report (no serde — hand-emitted,
+/// validated by [`crate::obs::json`] in tests).
+pub fn report_json(report: &Report) -> String {
+    let mut s = String::from("{\n");
+    s.push_str("  \"schema\": 1,\n");
+    s.push_str(&format!("  \"files_scanned\": {},\n", report.files_scanned));
+    s.push_str(&format!("  \"ok\": {},\n", report.ok()));
+    let new_total: u64 = report.new_debt.iter().map(|d| d.count - d.baseline).sum();
+    s.push_str(&format!("  \"new\": {new_total},\n"));
+    s.push_str(&format!("  \"baselined\": {},\n", report.baselined));
+    s.push_str(&format!("  \"waived\": {},\n", report.waived));
+    s.push_str(&format!("  \"tightened\": {},\n", report.tightened.len()));
+    let werrs: Vec<String> = report
+        .waiver_errors
+        .iter()
+        .map(|(f, l, m)| {
+            format!("    {{ \"file\": \"{}\", \"line\": {l}, \"msg\": \"{}\" }}", esc(f), esc(m))
+        })
+        .collect();
+    s.push_str(&format!("  \"waiver_errors\": [\n{}\n  ],\n", werrs.join(",\n")));
+    let debts: Vec<String> = report
+        .new_debt
+        .iter()
+        .map(|d| {
+            let lines: Vec<String> = d.hits.iter().map(|(l, _)| l.to_string()).collect();
+            format!(
+                "    {{ \"file\": \"{}\", \"rule\": \"{}\", \"count\": {}, \"baseline\": {}, \"lines\": [{}] }}",
+                esc(&d.file),
+                d.rule,
+                d.count,
+                d.baseline,
+                lines.join(", ")
+            )
+        })
+        .collect();
+    s.push_str(&format!("  \"new_debt\": [\n{}\n  ]\n", debts.join(",\n")));
+    s.push_str("}\n");
+    // Hand-emitted arrays with no members would render a blank line;
+    // normalize to strict JSON either way.
+    s.replace("[\n\n  ]", "[]")
+}
+
+/// CLI entry for `yalis lint`. Returns `Ok(true)` when the repo is
+/// clean (exit 0), `Ok(false)` on new debt or waiver errors (exit 1);
+/// IO/parse failures bubble as `Err` (exit 2).
+pub fn run_cli(root: &str, baseline: &str, json: bool, out: &str) -> anyhow::Result<bool> {
+    let root_path = Path::new(root);
+    if !root_path.join("rust/src").is_dir() {
+        bail!("--root {root}: rust/src not found (run from the repo root or pass --root)");
+    }
+    let baseline_path = if Path::new(baseline).is_absolute() {
+        PathBuf::from(baseline)
+    } else {
+        root_path.join(baseline)
+    };
+    let report = run(root_path, &baseline_path)?;
+
+    let json_text = report_json(&report);
+    if json {
+        println!("{json_text}");
+    } else {
+        for (file, line, msg) in &report.waiver_errors {
+            println!("{file}:{line}: [waiver] {msg}");
+        }
+        for d in &report.new_debt {
+            println!(
+                "{}: [{}] {} unwaived (baseline {}) — new debt:",
+                d.file, d.rule, d.count, d.baseline
+            );
+            for (line, excerpt) in &d.hits {
+                println!("  {}:{}: {}", d.file, line, excerpt);
+            }
+        }
+        for (file, line) in &report.unused_waivers {
+            println!("{file}:{line}: note: waiver matches no violation (stale?)");
+        }
+        summary_table(&report).print();
+    }
+    if !out.is_empty() {
+        let out_path = Path::new(out);
+        if let Some(dir) = out_path.parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        std::fs::write(out_path, &json_text).with_context(|| format!("writing {out}"))?;
+        if !json {
+            println!("-> {out}");
+        }
+    }
+    if report.ok() && !report.tightened.is_empty() {
+        ratchet::save(&baseline_path, &report.counts)?;
+        eprintln!(
+            "lint: ratchet tightened {} entr{} in {} — commit the updated baseline",
+            report.tightened.len(),
+            if report.tightened.len() == 1 { "y" } else { "ies" },
+            baseline_path.display()
+        );
+    }
+    if report.ok() {
+        eprintln!(
+            "lint: clean — {} files, {} baselined, {} waived",
+            report.files_scanned, report.baselined, report.waived
+        );
+    } else {
+        eprintln!(
+            "lint: FAILED — {} new-debt group(s), {} waiver error(s); fix the code, \
+             waive with `// lint: allow(RULE) reason`, or (never) hand-raise the baseline",
+            report.new_debt.len(),
+            report.waiver_errors.len()
+        );
+    }
+    Ok(report.ok())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report_with(counts: &[(&str, &'static str, u64, u64)]) -> Report {
+        // (file, rule, current, baseline) — synthesize a report the way
+        // `run` would classify it.
+        let mut r = Report::default();
+        for rule in RULES.iter() {
+            r.per_rule.insert(rule.id, (0, 0, 0));
+        }
+        for (file, rule, c, b) in counts {
+            r.counts.entry(file.to_string()).or_default().insert(rule.to_string(), *c);
+            if c > b {
+                let hits = (1..=*c as usize).map(|i| (i, format!("line {i}"))).collect();
+                r.new_debt.push(DebtGroup {
+                    file: file.to_string(),
+                    rule: *rule,
+                    count: *c,
+                    baseline: *b,
+                    hits,
+                });
+            } else {
+                r.baselined += c;
+            }
+        }
+        r
+    }
+
+    #[test]
+    fn json_report_parses_and_carries_verdict() {
+        let r = report_with(&[("a.rs", "P01", 3, 1), ("b.rs", "D02", 1, 1)]);
+        let v = crate::obs::json::parse(&report_json(&r)).unwrap();
+        assert_eq!(v.get("ok"), Some(&crate::obs::json::Value::Bool(false)));
+        assert_eq!(v.get("new").and_then(|x| x.as_f64()), Some(2.0));
+        assert_eq!(v.get("baselined").and_then(|x| x.as_f64()), Some(1.0));
+        let debt = v.get("new_debt").and_then(|x| x.as_arr()).unwrap();
+        assert_eq!(debt.len(), 1);
+        assert_eq!(debt[0].get("file").and_then(|x| x.as_str()), Some("a.rs"));
+        assert_eq!(debt[0].get("lines").and_then(|x| x.as_arr()).map(|a| a.len()), Some(3));
+    }
+
+    #[test]
+    fn json_report_empty_arrays_are_strict_json() {
+        let r = report_with(&[("a.rs", "P01", 1, 1)]);
+        let v = crate::obs::json::parse(&report_json(&r)).unwrap();
+        assert_eq!(v.get("ok"), Some(&crate::obs::json::Value::Bool(true)));
+        assert_eq!(v.get("new_debt").and_then(|x| x.as_arr()).map(|a| a.len()), Some(0));
+        assert_eq!(v.get("waiver_errors").and_then(|x| x.as_arr()).map(|a| a.len()), Some(0));
+    }
+
+    #[test]
+    fn summary_table_has_one_row_per_rule() {
+        let r = report_with(&[]);
+        let t = summary_table(&r);
+        assert_eq!(t.rows().len(), RULES.len());
+    }
+
+    #[test]
+    fn rule_ids_are_unique_and_stable() {
+        let mut ids: Vec<&str> = RULES.iter().map(|r| r.id).collect();
+        let n = ids.len();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), n);
+        assert_eq!(ids, vec!["D01", "D02", "D03", "D04", "P01"]);
+    }
+}

@@ -1,0 +1,223 @@
+//! Ratcheted debt baseline for `yalis lint`.
+//!
+//! `lint/baseline.json` records, per file and per rule, how many
+//! *unwaived* violations existed when the linter landed. The contract is
+//! one-directional: a count above its baseline entry fails the run (new
+//! debt), a count below it is written back automatically so the ceiling
+//! only ever comes down ("auto-tighten"). Files and rules at zero are
+//! dropped from the file entirely. Never hand-raise an entry — fix the
+//! code or waive the line with a reason instead.
+//!
+//! The format is the repo's no-serde JSON (parsed with
+//! [`crate::obs::json`], emitted by hand, keys sorted) so diffs are
+//! stable and reviewable.
+
+use crate::obs::chrome::esc;
+use crate::obs::json as oj;
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// file → rule id → unwaived violation count.
+pub type Counts = BTreeMap<String, BTreeMap<String, u64>>;
+
+/// Load a baseline. A missing file is an empty baseline (every
+/// violation is new debt), so a repo without one still gets gated.
+pub fn load(path: &Path) -> anyhow::Result<Counts> {
+    if !path.exists() {
+        return Ok(Counts::new());
+    }
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading lint baseline {}", path.display()))?;
+    parse(&text).with_context(|| format!("parsing lint baseline {}", path.display()))
+}
+
+/// Parse baseline JSON text.
+pub fn parse(text: &str) -> anyhow::Result<Counts> {
+    let v = oj::parse(text).map_err(|e| anyhow::anyhow!("bad JSON: {e}"))?;
+    let schema = v.get("schema").and_then(|s| s.as_f64());
+    if schema != Some(1.0) {
+        bail!("unsupported baseline schema {schema:?} (expected 1)");
+    }
+    let files = match v.get("counts") {
+        Some(oj::Value::Obj(files)) => files,
+        _ => bail!("missing \"counts\" object"),
+    };
+    let mut out = Counts::new();
+    for (file, rules) in files {
+        let rules = match rules {
+            oj::Value::Obj(rs) => rs,
+            _ => bail!("counts[{file}] must be an object"),
+        };
+        for (rule, n) in rules {
+            let n = match n.as_f64() {
+                Some(x) if x >= 0.0 => x as u64,
+                _ => bail!("counts[{file}][{rule}] must be a non-negative number"),
+            };
+            if n > 0 {
+                out.entry(file.clone()).or_default().insert(rule.clone(), n);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Render baseline JSON: sorted, one file per line, diff-friendly.
+/// Zero-count entries are dropped.
+pub fn render(counts: &Counts) -> String {
+    let mut s = String::from("{\n  \"schema\": 1,\n");
+    s.push_str(
+        "  \"note\": \"ratchet: counts may only decrease; `yalis lint` \
+         auto-tightens on improvement — never hand-raise an entry\",\n",
+    );
+    s.push_str("  \"counts\": {\n");
+    let files: Vec<String> = counts
+        .iter()
+        .filter(|(_, rules)| rules.values().any(|n| *n > 0))
+        .map(|(file, rules)| {
+            let inner: Vec<String> = rules
+                .iter()
+                .filter(|(_, n)| **n > 0)
+                .map(|(rule, n)| format!("\"{}\": {}", esc(rule), n))
+                .collect();
+            format!("    \"{}\": {{ {} }}", esc(file), inner.join(", "))
+        })
+        .collect();
+    s.push_str(&files.join(",\n"));
+    s.push_str("\n  }\n}\n");
+    s
+}
+
+/// Write the baseline (creating parent directories).
+pub fn save(path: &Path, counts: &Counts) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+    }
+    std::fs::write(path, render(counts))
+        .with_context(|| format!("writing lint baseline {}", path.display()))
+}
+
+/// Outcome of ratcheting current counts against the baseline.
+#[derive(Clone, Debug, Default)]
+pub struct RatchetResult {
+    /// (file, rule, current, baseline): current exceeds baseline — new
+    /// debt, fails the run.
+    pub exceeded: Vec<(String, String, u64, u64)>,
+    /// (file, rule, baseline, current): improved — the baseline can and
+    /// will be tightened to `current`.
+    pub tightened: Vec<(String, String, u64, u64)>,
+    /// Violations fully covered by the baseline.
+    pub baselined: u64,
+}
+
+/// Compare `current` unwaived counts against `baseline`.
+pub fn compare(current: &Counts, baseline: &Counts) -> RatchetResult {
+    let mut r = RatchetResult::default();
+    for (file, rules) in current {
+        for (rule, &c) in rules {
+            if c == 0 {
+                continue;
+            }
+            let b = baseline.get(file).and_then(|rs| rs.get(rule)).copied().unwrap_or(0);
+            if c > b {
+                r.exceeded.push((file.clone(), rule.clone(), c, b));
+            } else {
+                r.baselined += c;
+                if c < b {
+                    r.tightened.push((file.clone(), rule.clone(), b, c));
+                }
+            }
+        }
+    }
+    // Baseline entries the current scan no longer reaches at all
+    // (debt fully paid, or the file was deleted) tighten to zero.
+    for (file, rules) in baseline {
+        for (rule, &b) in rules {
+            let c = current.get(file).and_then(|rs| rs.get(rule)).copied().unwrap_or(0);
+            if c == 0 && b > 0 {
+                r.tightened.push((file.clone(), rule.clone(), b, 0));
+            }
+        }
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts(entries: &[(&str, &str, u64)]) -> Counts {
+        let mut c = Counts::new();
+        for (f, r, n) in entries {
+            c.entry(f.to_string()).or_default().insert(r.to_string(), *n);
+        }
+        c
+    }
+
+    #[test]
+    fn round_trips_through_render_and_parse() {
+        let c = counts(&[
+            ("rust/src/engine/kv.rs", "P01", 12),
+            ("rust/src/engine/kv.rs", "D02", 1),
+            ("examples/quickstart.rs", "D03", 3),
+        ]);
+        let text = render(&c);
+        let back = parse(&text).unwrap();
+        assert_eq!(back, c);
+        // Sorted and stable: rendering the parse reproduces the text.
+        assert_eq!(render(&back), text);
+    }
+
+    #[test]
+    fn zero_entries_are_dropped() {
+        let c = counts(&[("a.rs", "P01", 0), ("b.rs", "D01", 2)]);
+        let text = render(&c);
+        assert!(!text.contains("a.rs"));
+        let back = parse(&text).unwrap();
+        assert!(!back.contains_key("a.rs"));
+        assert_eq!(back["b.rs"]["D01"], 2);
+    }
+
+    #[test]
+    fn rejects_bad_schema_and_shapes() {
+        assert!(parse("{}").is_err());
+        assert!(parse("{\"schema\": 2, \"counts\": {}}").is_err());
+        assert!(parse("{\"schema\": 1}").is_err());
+        assert!(parse("{\"schema\": 1, \"counts\": {\"a.rs\": 3}}").is_err());
+        assert!(parse("{\"schema\": 1, \"counts\": {\"a.rs\": {\"P01\": -1}}}").is_err());
+        assert!(parse("{\"schema\": 1, \"counts\": {}}").unwrap().is_empty());
+    }
+
+    #[test]
+    fn compare_flags_increase_and_tightens_decrease() {
+        let base = counts(&[("a.rs", "P01", 3), ("b.rs", "D02", 2), ("gone.rs", "P01", 4)]);
+        let cur = counts(&[("a.rs", "P01", 5), ("b.rs", "D02", 1)]);
+        let r = compare(&cur, &base);
+        assert_eq!(r.exceeded, vec![("a.rs".into(), "P01".into(), 5, 3)]);
+        assert_eq!(r.baselined, 1);
+        let mut t = r.tightened.clone();
+        t.sort();
+        assert_eq!(
+            t,
+            vec![
+                ("b.rs".into(), "D02".into(), 2, 1),
+                ("gone.rs".into(), "P01".into(), 4, 0),
+            ]
+        );
+    }
+
+    #[test]
+    fn unbaselined_violation_is_new_debt() {
+        let r = compare(&counts(&[("new.rs", "D04", 1)]), &Counts::new());
+        assert_eq!(r.exceeded, vec![("new.rs".into(), "D04".into(), 1, 0)]);
+    }
+
+    #[test]
+    fn equal_counts_are_quiet() {
+        let c = counts(&[("a.rs", "P01", 3)]);
+        let r = compare(&c, &c);
+        assert!(r.exceeded.is_empty() && r.tightened.is_empty());
+        assert_eq!(r.baselined, 3);
+    }
+}

@@ -1,0 +1,637 @@
+//! Source scanner for `yalis lint` — see [`crate::lint`] for the rule
+//! catalog and the ratchet workflow.
+//!
+//! A hand-rolled two-pass line/token scanner (the vendored crate set has
+//! no `syn` and no regex):
+//!
+//! 1. **Strip pass** ([`strip`]) — walks the file once, character by
+//!    character, classifying every char as code, line comment, block
+//!    comment, or literal content. Emits, per line, the *code* text
+//!    (string/char-literal contents blanked, comments dropped) and the
+//!    *line-comment* text (for waiver parsing). Handles nested `/* */`
+//!    blocks, raw strings, byte strings, char literals vs. lifetimes,
+//!    escaped-newline string continuations, and multi-line literals.
+//! 2. **Rule pass** ([`scan_source`]) — walks the stripped lines in
+//!    order, tracking brace depth, `#[cfg(test)]` regions and pending
+//!    waivers, and records a [`Hit`] for every rule pattern that matches
+//!    in an applicable scope.
+//!
+//! Deliberately line-oriented: a comparator chain split across lines
+//! evades D02. The rules target the idioms as actually written —
+//! rustfmt keeps comparator closures on one line — and the ratchet
+//! means an evasion is at worst status quo, never a lost guarantee.
+
+use super::RULES;
+
+/// One stripped source line.
+#[derive(Clone, Debug, Default)]
+pub struct StrippedLine {
+    /// Code chars only: comments removed, literal contents blanked
+    /// (string/char delimiters kept so the text stays token-shaped).
+    pub code: String,
+    /// Concatenated `//` line-comment text, delimiter removed.
+    pub comment: String,
+}
+
+enum St {
+    Normal,
+    Line,
+    Block(u32),
+    Str,
+    RawStr(u32),
+}
+
+/// Strip pass: split source text into per-line (code, comment) pairs.
+/// Line count always equals the source's `lines()` count, so hit line
+/// numbers map 1:1 onto the raw file.
+pub fn strip(text: &str) -> Vec<StrippedLine> {
+    let cs: Vec<char> = text.chars().collect();
+    let n = cs.len();
+    let mut out = Vec::new();
+    let mut cur = StrippedLine::default();
+    let mut st = St::Normal;
+    let mut prev_ident = false;
+    let mut i = 0usize;
+    while i < n {
+        if cs[i] == '\n' {
+            out.push(std::mem::take(&mut cur));
+            if matches!(st, St::Line) {
+                st = St::Normal;
+            }
+            prev_ident = false;
+            i += 1;
+            continue;
+        }
+        let c = cs[i];
+        let next = cs.get(i + 1).copied();
+        match st {
+            St::Normal => {
+                if c == '/' && next == Some('/') {
+                    st = St::Line;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    st = St::Str;
+                    prev_ident = false;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !prev_ident {
+                    // Maybe r"…", r#"…"#, b"…", br"…": jump to just past
+                    // the opening quote; otherwise an ordinary ident char.
+                    if let Some((hashes, after, raw)) = raw_or_byte_open(&cs, i) {
+                        cur.code.push('"');
+                        st = if raw { St::RawStr(hashes) } else { St::Str };
+                        prev_ident = false;
+                        i = after;
+                    } else {
+                        cur.code.push(c);
+                        prev_ident = true;
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    i = consume_quote(&cs, i, &mut cur.code);
+                    prev_ident = false;
+                } else {
+                    cur.code.push(c);
+                    prev_ident = c.is_alphanumeric() || c == '_';
+                    i += 1;
+                }
+            }
+            St::Line => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            St::Block(d) => {
+                if c == '*' && next == Some('/') {
+                    st = if d == 1 { St::Normal } else { St::Block(d - 1) };
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::Block(d + 1);
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    // Escaped newline continues the string on the next
+                    // line; let the top-of-loop newline handling see it
+                    // so line numbers stay aligned.
+                    i += if next == Some('\n') { 1 } else { 2 };
+                } else if c == '"' {
+                    cur.code.push('"');
+                    st = St::Normal;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                if c == '"' {
+                    let mut k = 0u32;
+                    while cs.get(i + 1 + k as usize) == Some(&'#') && k < h {
+                        k += 1;
+                    }
+                    if k >= h {
+                        cur.code.push('"');
+                        st = St::Normal;
+                        i += 1 + h as usize;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    out.push(cur);
+    out
+}
+
+/// If position `i` (at `r` or `b`) opens a raw/byte string literal,
+/// return (hash count, index just past the opening quote, is_raw).
+fn raw_or_byte_open(cs: &[char], i: usize) -> Option<(u32, usize, bool)> {
+    let mut j = i;
+    if cs.get(j) == Some(&'b') {
+        j += 1;
+    }
+    let raw = cs.get(j) == Some(&'r');
+    if raw {
+        j += 1;
+    }
+    let mut hashes = 0u32;
+    while raw && cs.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    // A bare `r` / `b` identifier is not an opener; a plain `"` after a
+    // lone `b` is a byte string, after `r`(+hashes) a raw string.
+    if cs.get(j) == Some(&'"') && (raw || cs.get(i) == Some(&'b')) {
+        Some((hashes, j + 1, raw))
+    } else {
+        None
+    }
+}
+
+/// Consume a `'`-introduced token: a char literal (`'x'`, `'\n'`,
+/// `'\x41'`, `'\u{1F600}'`, `'{'` …) with contents blanked, or a
+/// lifetime quote kept as-is. Returns the next index.
+fn consume_quote(cs: &[char], i: usize, code: &mut String) -> usize {
+    let next = cs.get(i + 1).copied();
+    if next == Some('\\') {
+        code.push('\'');
+        code.push('\'');
+        let mut j = i + 2;
+        match cs.get(j) {
+            Some('x') => j += 3,
+            Some('u') => {
+                j += 1;
+                if cs.get(j) == Some(&'{') {
+                    while j < cs.len() && cs[j] != '}' {
+                        j += 1;
+                    }
+                }
+                j += 1;
+            }
+            Some(_) => j += 1,
+            None => {}
+        }
+        if cs.get(j) == Some(&'\'') {
+            j += 1;
+        }
+        return j;
+    }
+    if let (Some(ch), Some('\'')) = (next, cs.get(i + 2).copied()) {
+        if ch != '\'' {
+            code.push('\'');
+            code.push('\'');
+            return i + 3;
+        }
+    }
+    // Lifetime (or stray quote): keep the quote, consume one char.
+    code.push('\'');
+    i + 1
+}
+
+/// Which scanning scope a file belongs to, decided from its repo-relative
+/// path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FileClass {
+    /// Simulated library code under `rust/src` — the full rule set.
+    Sim,
+    /// Real-hardware modules (`runtime/`, `shmem/`, `util/bench.rs`):
+    /// wall-clock reads are their job, so D03 (and D01 — they hold host
+    /// state, not simulated decisions) do not apply.
+    RealHw,
+    /// Tests, benches and examples: P01 exempt (panics are assertions
+    /// there), determinism rules still on.
+    TestLike,
+}
+
+/// Classify a repo-relative path (forward slashes).
+pub fn classify(rel: &str) -> FileClass {
+    if rel.starts_with("rust/src/") {
+        if rel.starts_with("rust/src/runtime/")
+            || rel.starts_with("rust/src/shmem/")
+            || rel == "rust/src/util/bench.rs"
+        {
+            FileClass::RealHw
+        } else {
+            FileClass::Sim
+        }
+    } else {
+        FileClass::TestLike
+    }
+}
+
+/// Does `rule` apply in this (file class, cfg(test) region) scope?
+pub fn applies(rule: &str, class: FileClass, in_test: bool) -> bool {
+    match rule {
+        "D01" => class == FileClass::Sim && !in_test,
+        "D02" => true,
+        "D03" => class != FileClass::RealHw,
+        "D04" => true,
+        "P01" => class != FileClass::TestLike && !in_test,
+        _ => false,
+    }
+}
+
+/// Does the stripped code line contain `rule`'s pattern?
+pub fn pattern_hit(rule: &str, code: &str) -> bool {
+    match rule {
+        "D01" => code.contains("HashMap") || code.contains("HashSet"),
+        "D02" => {
+            code.contains(".partial_cmp(")
+                && (code.contains(".unwrap()")
+                    || code.contains(".expect(")
+                    || code.contains("sort_by")
+                    || code.contains("min_by")
+                    || code.contains("max_by"))
+        }
+        "D03" => code.contains("Instant::now") || code.contains("SystemTime"),
+        "D04" => code.contains("thread_rng") || code.contains("rand::random"),
+        "P01" => {
+            code.contains(".unwrap()")
+                || code.contains(".expect(")
+                || code.contains("panic!")
+                || code.contains("f64::NAN")
+        }
+        _ => false,
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Waiver {
+    rules: Vec<String>,
+    line: usize,
+}
+
+/// Parse a waiver from a line's comment text. `None`: no waiver on this
+/// line. `Some(Err)`: the comment *claims* to be a waiver (leads with
+/// `lint:`) but does not parse — always a hard error, never baselined.
+fn parse_waiver(comment: &str, line: usize) -> Option<Result<Waiver, String>> {
+    let t = comment.trim_start();
+    let rest = t.strip_prefix("lint:")?;
+    let rest = rest.trim_start();
+    let rest = match rest.strip_prefix("allow(") {
+        Some(r) => r,
+        None => return Some(Err("malformed waiver: expected `lint: allow(RULE) reason`".into())),
+    };
+    let close = match rest.find(')') {
+        Some(p) => p,
+        None => return Some(Err("malformed waiver: missing `)`".into())),
+    };
+    let ids: Vec<String> = rest[..close].split(',').map(|s| s.trim().to_string()).collect();
+    for id in &ids {
+        if !RULES.iter().any(|r| r.id == id) {
+            return Some(Err(format!("waiver names unknown rule `{id}`")));
+        }
+    }
+    let reason = rest[close + 1..].trim();
+    if reason.is_empty() {
+        return Some(Err("waiver needs a reason: `lint: allow(RULE) <why>`".into()));
+    }
+    Some(Ok(Waiver { rules: ids, line }))
+}
+
+/// One rule match.
+#[derive(Clone, Debug)]
+pub struct Hit {
+    pub rule: &'static str,
+    /// 1-based source line.
+    pub line: usize,
+    /// The raw source line, trimmed, for diagnostics.
+    pub excerpt: String,
+    /// Covered by an inline `lint: allow` waiver.
+    pub waived: bool,
+}
+
+/// A waiver that failed to parse (always fails the run).
+#[derive(Clone, Debug)]
+pub struct WaiverErr {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Scan result for one file.
+#[derive(Clone, Debug)]
+pub struct FileScan {
+    pub path: String,
+    pub hits: Vec<Hit>,
+    pub waiver_errors: Vec<WaiverErr>,
+    /// Lines that declared a waiver which matched no violation.
+    pub unused_waivers: Vec<usize>,
+}
+
+/// Rule pass: scan one file's source text.
+pub fn scan_source(rel_path: &str, text: &str) -> FileScan {
+    let class = classify(rel_path);
+    let stripped = strip(text);
+    let raw_lines: Vec<&str> = text.lines().collect();
+    let mut hits = Vec::new();
+    let mut waiver_errors = Vec::new();
+    let mut unused_waivers = Vec::new();
+    let mut depth: i64 = 0;
+    let mut test_stack: Vec<i64> = Vec::new();
+    let mut pending_cfg = false;
+    let mut pending_waivers: Vec<Waiver> = Vec::new();
+
+    for (idx, line) in stripped.iter().enumerate() {
+        let lineno = idx + 1;
+        let mut line_waivers: Vec<Waiver> = Vec::new();
+        match parse_waiver(&line.comment, lineno) {
+            Some(Ok(w)) => line_waivers.push(w),
+            Some(Err(msg)) => waiver_errors.push(WaiverErr { line: lineno, msg }),
+            None => {}
+        }
+        if line.code.trim().is_empty() {
+            // Comment-only / blank line: a waiver here covers the next
+            // code line (pending survives further blank lines).
+            pending_waivers.append(&mut line_waivers);
+            continue;
+        }
+        let mut waivers = std::mem::take(&mut pending_waivers);
+        waivers.append(&mut line_waivers);
+
+        if line.code.contains("#[cfg(test)]") {
+            pending_cfg = true;
+        }
+        let test_at_start = !test_stack.is_empty();
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    if pending_cfg {
+                        test_stack.push(depth);
+                        pending_cfg = false;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if test_stack.last() == Some(&depth) {
+                        test_stack.pop();
+                    }
+                }
+                // `#[cfg(test)] use x;` / `mod tests;` gate no block.
+                ';' => pending_cfg = false,
+                _ => {}
+            }
+        }
+        let in_test = test_at_start || !test_stack.is_empty() || pending_cfg;
+
+        let raw = raw_lines.get(idx).map(|s| s.trim()).unwrap_or_default();
+        let mut used = vec![false; waivers.len()];
+        for rule in RULES.iter() {
+            if !applies(rule.id, class, in_test) || !pattern_hit(rule.id, &line.code) {
+                continue;
+            }
+            let widx = waivers.iter().position(|w| w.rules.iter().any(|r| r == rule.id));
+            if let Some(wi) = widx {
+                used[wi] = true;
+            }
+            hits.push(Hit {
+                rule: rule.id,
+                line: lineno,
+                excerpt: raw.to_string(),
+                waived: widx.is_some(),
+            });
+        }
+        for (wi, w) in waivers.iter().enumerate() {
+            if !used[wi] {
+                unused_waivers.push(w.line);
+            }
+        }
+    }
+    for w in &pending_waivers {
+        unused_waivers.push(w.line);
+    }
+    FileScan { path: rel_path.to_string(), hits, waiver_errors, unused_waivers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(text: &str) -> Vec<String> {
+        strip(text).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strip_blanks_strings_and_comments() {
+        let c = codes("let x = \"HashMap\"; // HashMap in comment\nuse std::fmt;");
+        assert_eq!(c.len(), 2);
+        assert!(!c[0].contains("HashMap"), "{:?}", c[0]);
+        assert!(c[0].contains("let x = "));
+        assert_eq!(c[1], "use std::fmt;");
+    }
+
+    #[test]
+    fn strip_handles_block_comments_and_nesting() {
+        let c = codes("a /* x /* y */ z */ b\n/* open\nstill comment */ after");
+        assert_eq!(c[0].replace(' ', ""), "ab");
+        assert_eq!(c[1], "");
+        assert_eq!(c[2].trim(), "after");
+    }
+
+    #[test]
+    fn strip_handles_raw_and_byte_strings() {
+        let c = codes("let j = r#\"{\"panic!\": 1}\"#; let b = b\"panic!\";");
+        assert!(!c[0].contains("panic!"), "{:?}", c[0]);
+        // Braces inside the raw string must not reach the code text.
+        assert!(!c[0].contains('{'), "{:?}", c[0]);
+    }
+
+    #[test]
+    fn strip_handles_char_literals_and_lifetimes() {
+        let c = codes("fn f<'a>(x: &'a str) -> char { '{' }");
+        // The char-literal brace is blanked; the real braces survive.
+        let opens = c[0].matches('{').count();
+        let closes = c[0].matches('}').count();
+        assert_eq!(opens, 1);
+        assert_eq!(closes, 1);
+        let c = codes(r"let e = '\n'; let q = '\''; let u = '\u{8}'; let h = '\x41';");
+        assert!(!c[0].contains('n') || !c[0].contains("\\"), "{:?}", c[0]);
+        assert!(!c[0].contains('{'), "{:?}", c[0]);
+    }
+
+    #[test]
+    fn strip_keeps_line_count_with_continued_strings() {
+        let text = "let s = \"a\\\n    b\";\nlet t = 1;";
+        let c = codes(text);
+        assert_eq!(c.len(), text.lines().count());
+        assert_eq!(c[2].trim(), "let t = 1;");
+    }
+
+    #[test]
+    fn strip_collects_comment_text() {
+        let l = strip("x(); // lint: allow(P01) because\n");
+        assert!(l[0].comment.trim_start().starts_with("lint:"), "{:?}", l[0].comment);
+    }
+
+    #[test]
+    fn classify_scopes() {
+        assert_eq!(classify("rust/src/simnet/mod.rs"), FileClass::Sim);
+        assert_eq!(classify("rust/src/runtime/tp.rs"), FileClass::RealHw);
+        assert_eq!(classify("rust/src/shmem/mod.rs"), FileClass::RealHw);
+        assert_eq!(classify("rust/src/util/bench.rs"), FileClass::RealHw);
+        assert_eq!(classify("rust/src/util/stats.rs"), FileClass::Sim);
+        assert_eq!(classify("rust/tests/integration_fleet.rs"), FileClass::TestLike);
+        assert_eq!(classify("examples/quickstart.rs"), FileClass::TestLike);
+        assert_eq!(classify("rust/benches/sweep_chunk.rs"), FileClass::TestLike);
+    }
+
+    fn hit_rules(path: &str, src: &str) -> Vec<(&'static str, usize, bool)> {
+        scan_source(path, src).hits.iter().map(|h| (h.rule, h.line, h.waived)).collect()
+    }
+
+    #[test]
+    fn d01_hits_in_sim_misses_in_tests_and_realhw() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(hit_rules("rust/src/fleet/mod.rs", src), vec![("D01", 1, false)]);
+        assert_eq!(hit_rules("rust/src/runtime/tp.rs", src), vec![]);
+        assert_eq!(hit_rules("rust/tests/x.rs", src), vec![]);
+        let test_src = "#[cfg(test)]\nmod tests {\n    use std::collections::HashSet;\n}\n";
+        assert_eq!(hit_rules("rust/src/fleet/mod.rs", test_src), vec![]);
+    }
+
+    #[test]
+    fn d02_hits_comparator_idioms_everywhere() {
+        let unwrap = "v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n";
+        let min_by = "xs.iter().min_by(|a, b| a.t.partial_cmp(&b.t).unwrap());\n";
+        let fallback = "v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));\n";
+        let fixed = "v.sort_by(|a, b| a.total_cmp(b));\n";
+        assert!(hit_rules("rust/src/util/stats.rs", unwrap).iter().any(|h| h.0 == "D02"));
+        assert!(hit_rules("rust/tests/t.rs", unwrap).iter().any(|h| h.0 == "D02"));
+        assert!(hit_rules("rust/src/x.rs", min_by).iter().any(|h| h.0 == "D02"));
+        // NaN-tolerant but order-unstable: still flagged.
+        assert!(hit_rules("rust/src/x.rs", fallback).iter().any(|h| h.0 == "D02"));
+        assert!(hit_rules("rust/src/x.rs", fixed).is_empty());
+        // Defining PartialOrd is not a comparator call.
+        let def = "fn partial_cmp(&self, other: &Self) -> Option<Ordering> {\n";
+        assert!(hit_rules("rust/src/x.rs", def).is_empty());
+    }
+
+    #[test]
+    fn d03_hits_outside_realhw_only() {
+        let src = "let t0 = std::time::Instant::now();\n";
+        assert!(hit_rules("rust/src/fleet/mod.rs", src).iter().any(|h| h.0 == "D03"));
+        assert!(hit_rules("examples/quickstart.rs", src).iter().any(|h| h.0 == "D03"));
+        assert!(hit_rules("rust/src/runtime/tp.rs", src).is_empty());
+        assert!(hit_rules("rust/src/util/bench.rs", src).is_empty());
+        let sys = "let now = std::time::SystemTime::now();\n";
+        assert!(hit_rules("rust/src/obs/mod.rs", sys).iter().any(|h| h.0 == "D03"));
+    }
+
+    #[test]
+    fn d04_hits_ambient_randomness() {
+        assert!(hit_rules("rust/src/trace/mod.rs", "let r = rand::random::<f64>();\n")
+            .iter()
+            .any(|h| h.0 == "D04"));
+        assert!(hit_rules("rust/tests/t.rs", "let mut rng = thread_rng();\n")
+            .iter()
+            .any(|h| h.0 == "D04"));
+        assert!(hit_rules("rust/src/trace/mod.rs", "let mut rng = Rng::seeded(7);\n").is_empty());
+    }
+
+    #[test]
+    fn p01_lib_only_and_cfg_test_exempt() {
+        let src = "let v = m.get(&k).unwrap();\n";
+        assert_eq!(hit_rules("rust/src/engine/kv.rs", src), vec![("P01", 1, false)]);
+        // Real-hardware modules are still library code for P01.
+        assert_eq!(hit_rules("rust/src/runtime/tp.rs", src), vec![("P01", 1, false)]);
+        assert!(hit_rules("rust/tests/t.rs", src).is_empty());
+        assert!(hit_rules("rust/benches/b.rs", src).is_empty());
+        let test_src = "#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn lib() { y.expect(\"boom\"); }\n";
+        assert_eq!(hit_rules("rust/src/engine/kv.rs", test_src), vec![("P01", 5, false)]);
+        // unwrap_or & friends are fine; so is expect_err-free code.
+        assert!(hit_rules("rust/src/x.rs", "let v = o.unwrap_or_default();\n").is_empty());
+        assert!(hit_rules("rust/src/x.rs", "let v = o.unwrap_or(3);\n").is_empty());
+        // NaN sentinel.
+        assert!(hit_rules("rust/src/x.rs", "let v = f64::NAN;\n").iter().any(|h| h.0 == "P01"));
+    }
+
+    #[test]
+    fn cfg_test_on_single_item_without_block_is_cancelled_by_semicolon() {
+        let src = "#[cfg(test)]\nuse crate::util::prop;\nfn lib() { x.unwrap(); }\n";
+        let hits = hit_rules("rust/src/x.rs", src);
+        assert_eq!(hits, vec![("P01", 3, false)]);
+    }
+
+    #[test]
+    fn waiver_on_same_line_and_preceding_line() {
+        let same = "let v = x.unwrap(); // lint: allow(P01) init-time config, cannot fail\n";
+        assert_eq!(hit_rules("rust/src/x.rs", same), vec![("P01", 1, true)]);
+        let prev = "// lint: allow(P01) init-time config, cannot fail\nlet v = x.unwrap();\n";
+        assert_eq!(hit_rules("rust/src/x.rs", prev), vec![("P01", 2, true)]);
+        // Pending waiver survives an intervening blank/comment line.
+        let gap = "// lint: allow(P01) init-time config\n\n// explains more\nlet v = x.unwrap();\n";
+        assert_eq!(hit_rules("rust/src/x.rs", gap), vec![("P01", 4, true)]);
+    }
+
+    #[test]
+    fn waiver_multi_rule_and_scope_is_one_line() {
+        let src = "a.sort_by(|x, y| x.partial_cmp(y).unwrap()); // lint: allow(D02,P01) fixture exercising the unsafe idiom\nb.unwrap();\n";
+        let hits = hit_rules("rust/src/x.rs", src);
+        assert_eq!(hits[0], ("D02", 1, true));
+        assert_eq!(hits[1], ("P01", 1, true));
+        // The waiver does not leak to line 2.
+        assert_eq!(hits[2], ("P01", 2, false));
+    }
+
+    #[test]
+    fn waiver_grammar_errors_are_hard_errors() {
+        let bad = [
+            "x(); // lint: allowed(P01) typo\n",
+            "x(); // lint: allow(P01\n",
+            "x(); // lint: allow(D99) no such rule\n",
+            "x(); // lint: allow(P01)\n", // missing reason
+        ];
+        for src in bad {
+            let s = scan_source("rust/src/x.rs", src);
+            assert_eq!(s.waiver_errors.len(), 1, "{src:?}");
+        }
+        // Prose mentioning lint waivers is not a waiver.
+        let prose = "// the linter accepts lint waivers via allow(...)\nx();\n";
+        assert!(scan_source("rust/src/x.rs", prose).waiver_errors.is_empty());
+    }
+
+    #[test]
+    fn unused_waivers_are_reported_not_fatal() {
+        let src = "// lint: allow(D03) no wall clock here after all\nlet x = 1;\n";
+        let s = scan_source("rust/src/x.rs", src);
+        assert!(s.waiver_errors.is_empty());
+        assert_eq!(s.unused_waivers, vec![1]);
+        // A waiver dangling at EOF is unused too.
+        let eof = "let x = 1;\n// lint: allow(D03) dangling\n";
+        assert_eq!(scan_source("rust/src/x.rs", eof).unused_waivers, vec![2]);
+    }
+
+    #[test]
+    fn patterns_inside_strings_do_not_fire() {
+        let src = "let msg = \"call .unwrap() on HashMap at Instant::now\";\n";
+        assert!(hit_rules("rust/src/x.rs", src).is_empty());
+    }
+}

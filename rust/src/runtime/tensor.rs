@@ -89,12 +89,16 @@ impl HostTensor {
 
 /// Row-major argmax over the last dim of a (B, V) logits buffer.
 pub fn argmax_rows(logits: &[f32], batch: usize) -> Vec<i32> {
-    assert!(batch > 0 && logits.len() % batch == 0);
+    assert!(batch > 0 && !logits.is_empty() && logits.len() % batch == 0);
     let v = logits.len() / batch;
     (0..batch)
         .map(|b| {
             let row = &logits[b * v..(b + 1) * v];
-            row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0 as i32
+            // total_cmp (D02): NaN logits must not panic argmax; NaN
+            // compares greatest under the IEEE total order, so a NaN row
+            // deterministically picks the last NaN index.
+            // lint: allow(P01) rows are non-empty (v > 0 asserted above)
+            row.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0 as i32
         })
         .collect()
 }
@@ -106,6 +110,15 @@ mod tests {
     fn t(dims: &[usize]) -> HostTensor {
         let n: usize = dims.iter().product();
         HostTensor::new(dims.to_vec(), (0..n).map(|i| i as f32).collect()).unwrap()
+    }
+
+    #[test]
+    fn argmax_tolerates_nan() {
+        // Regression (D02): partial_cmp().unwrap() panicked here on NaN.
+        // Under total_cmp, NaN compares greatest, so the NaN index wins
+        // deterministically and finite rows are unaffected.
+        let r = argmax_rows(&[0.0, f32::NAN, 1.0, 5.0, 2.0, 1.0], 2);
+        assert_eq!(r, vec![1, 0]);
     }
 
     #[test]

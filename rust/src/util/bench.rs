@@ -5,6 +5,9 @@
 //! Mirrors the paper's microbenchmark methodology (§5): warm-up iterations
 //! followed by timed iterations, reporting the mean per-call time.
 
+// stdout is the product here (CLI tables / bench reports), not stray debug noise.
+#![allow(clippy::print_stdout)]
+
 use std::time::Instant;
 
 use super::stats::{fmt_time, Summary};

@@ -4,6 +4,9 @@
 //! args, and auto-generated `--help`. Used by the `yalis` binary, all
 //! examples, and all bench harnesses.
 
+// stdout is the product here (CLI tables / bench reports), not stray debug noise.
+#![allow(clippy::print_stdout)]
+
 use std::collections::BTreeMap;
 
 #[derive(Clone, Debug)]

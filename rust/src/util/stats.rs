@@ -49,7 +49,9 @@ impl Summary {
     pub fn percentile(&self, q: f64) -> f64 {
         assert!(!self.samples.is_empty(), "percentile of empty summary");
         let mut v = self.samples.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a NaN sample must not panic the sort (D02); it
+        // sorts last, so finite percentiles stay meaningful.
+        v.sort_by(f64::total_cmp);
         let pos = (q / 100.0) * (v.len() - 1) as f64;
         let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
         if lo == hi { v[lo] } else { v[lo] + (pos - lo as f64) * (v[hi] - v[lo]) }
@@ -127,6 +129,18 @@ mod tests {
         assert_eq!(fmt_time(2.5e-6), "2.500 µs");
         assert_eq!(fmt_bytes(128 * 1024), "128 KB");
         assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.0 MB");
+    }
+
+    #[test]
+    fn percentile_tolerates_nan() {
+        // Regression (D02): partial_cmp().unwrap() panicked here on NaN.
+        let mut s = Summary::new();
+        s.add(1.0);
+        s.add(f64::NAN);
+        s.add(3.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.median(), 3.0); // NaN sorts last under total_cmp
+        assert!(s.percentile(100.0).is_nan());
     }
 
     #[test]

@@ -1,5 +1,8 @@
 //! Aligned console tables + CSV emission for the paper-figure harnesses.
 
+// stdout is the product here (CLI tables / bench reports), not stray debug noise.
+#![allow(clippy::print_stdout)]
+
 /// A simple column-aligned table that can also dump CSV.
 #[derive(Clone, Debug)]
 pub struct Table {

@@ -1,0 +1,160 @@
+//! Integration: `yalis lint` over self-contained fixture trees — the
+//! scanner, waiver grammar, and ratchet composing through the same
+//! [`yalis::lint::run_cli`] entry the CI gate calls. Fixtures live in
+//! per-test temp directories so these tests never depend on the state of
+//! the real repo (that gate is the `simlint` CI job itself).
+
+use std::path::PathBuf;
+use yalis::lint;
+
+/// Build a fixture repo: a temp root with the given (rel_path, contents)
+/// files. Directory names are unique per (process, test) so parallel
+/// test binaries never collide.
+fn fixture(name: &str, files: &[(&str, &str)]) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("yalis_lint_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    for (rel, text) in files {
+        let p = root.join(rel);
+        std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+        std::fs::write(&p, text).unwrap();
+    }
+    root
+}
+
+const CLEAN: &str = "//! Fixture.\npub fn add(a: u64, b: u64) -> u64 { a + b }\n";
+
+#[test]
+fn seeded_violation_fails_clean_tree_passes() {
+    let bad = fixture(
+        "seeded",
+        &[(
+            "rust/src/foo.rs",
+            "pub fn worst(v: &[f64]) -> f64 {\n\
+             \x20   *v.iter().max_by(|a, b| a.partial_cmp(b).unwrap()).unwrap()\n\
+             }\n",
+        )],
+    );
+    let report = lint::run(&bad, &bad.join(lint::DEFAULT_BASELINE)).unwrap();
+    assert!(!report.ok(), "seeded .partial_cmp().unwrap() must be new debt");
+    assert!(report.new_debt.iter().any(|d| d.rule == "D02" && d.file == "rust/src/foo.rs"));
+    // The same line is also a P01 (unwrap in library code).
+    assert!(report.new_debt.iter().any(|d| d.rule == "P01"));
+    std::fs::remove_dir_all(&bad).unwrap();
+
+    let good = fixture("clean", &[("rust/src/foo.rs", CLEAN)]);
+    let report = lint::run(&good, &good.join(lint::DEFAULT_BASELINE)).unwrap();
+    assert!(report.ok());
+    assert_eq!(report.files_scanned, 1);
+    assert_eq!(report.baselined + report.waived, 0);
+    std::fs::remove_dir_all(&good).unwrap();
+}
+
+#[test]
+fn waiver_suppresses_and_malformed_waiver_fails() {
+    let root = fixture(
+        "waiver",
+        &[(
+            "rust/src/foo.rs",
+            "use std::collections::HashMap; // lint: allow(D01) fixture justification\n\
+             pub fn f() -> HashMap<u32, u32> { HashMap::new() } // lint: allow(D01) ditto\n",
+        )],
+    );
+    let report = lint::run(&root, &root.join(lint::DEFAULT_BASELINE)).unwrap();
+    assert!(report.ok(), "waived hits are not debt");
+    assert_eq!(report.waived, 2);
+    std::fs::remove_dir_all(&root).unwrap();
+
+    // Missing reason → hard error even though the rule id is valid.
+    let root = fixture(
+        "badwaiver",
+        &[("rust/src/foo.rs", "use std::collections::HashMap; // lint: allow(D01)\n")],
+    );
+    let report = lint::run(&root, &root.join(lint::DEFAULT_BASELINE)).unwrap();
+    assert!(!report.ok());
+    assert_eq!(report.waiver_errors.len(), 1);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn cfg_test_and_test_tree_exemptions() {
+    // P01 in a #[cfg(test)] module and in rust/tests/ is exempt; the same
+    // pattern in library code is not.
+    let root = fixture(
+        "exempt",
+        &[
+            (
+                "rust/src/foo.rs",
+                "pub fn f(v: &[u64]) -> u64 { *v.first().unwrap() }\n\
+                 #[cfg(test)]\n\
+                 mod tests {\n\
+                 \x20   #[test]\n\
+                 \x20   fn t() { assert_eq!(super::f(&[1]), 1); Some(1).unwrap(); }\n\
+                 }\n",
+            ),
+            ("rust/tests/itest.rs", "#[test]\nfn t() { Some(1).unwrap(); }\n"),
+        ],
+    );
+    let report = lint::run(&root, &root.join(lint::DEFAULT_BASELINE)).unwrap();
+    let p01: Vec<_> = report.new_debt.iter().filter(|d| d.rule == "P01").collect();
+    assert_eq!(p01.len(), 1, "only the library-path unwrap counts: {p01:?}");
+    assert_eq!(p01[0].file, "rust/src/foo.rs");
+    assert_eq!(p01[0].hits.len(), 1);
+    assert_eq!(p01[0].hits[0].0, 1, "the cfg(test) unwraps are exempt");
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn ratchet_increase_fails_decrease_tightens_on_disk() {
+    let two_unwraps = "pub fn f(v: &[u64]) -> u64 { *v.first().unwrap() }\n\
+                       pub fn g(v: &[u64]) -> u64 { *v.last().unwrap() }\n";
+    let baseline_one = "{\n  \"schema\": 1,\n  \"counts\": {\n    \"rust/src/foo.rs\": { \"P01\": 1 }\n  }\n}\n";
+
+    // 2 current vs 1 baselined → new debt, and the baseline is NOT rewritten.
+    let root = fixture(
+        "ratchet_up",
+        &[("rust/src/foo.rs", two_unwraps), (lint::DEFAULT_BASELINE, baseline_one)],
+    );
+    let before = std::fs::read_to_string(root.join(lint::DEFAULT_BASELINE)).unwrap();
+    let ok = lint::run_cli(root.to_str().unwrap(), lint::DEFAULT_BASELINE, true, "").unwrap();
+    assert!(!ok, "count above baseline must fail");
+    let after = std::fs::read_to_string(root.join(lint::DEFAULT_BASELINE)).unwrap();
+    assert_eq!(before, after, "a failing run must not touch the baseline");
+    std::fs::remove_dir_all(&root).unwrap();
+
+    // 1 current vs 2 baselined → passes AND auto-tightens the file to 1.
+    let baseline_two = baseline_one.replace("\"P01\": 1", "\"P01\": 2");
+    let root = fixture(
+        "ratchet_down",
+        &[
+            ("rust/src/foo.rs", "pub fn f(v: &[u64]) -> u64 { *v.first().unwrap() }\n"),
+            (lint::DEFAULT_BASELINE, &baseline_two),
+        ],
+    );
+    let ok = lint::run_cli(root.to_str().unwrap(), lint::DEFAULT_BASELINE, true, "").unwrap();
+    assert!(ok);
+    let tightened = lint::ratchet::load(&root.join(lint::DEFAULT_BASELINE)).unwrap();
+    assert_eq!(tightened.get("rust/src/foo.rs").and_then(|m| m.get("P01")), Some(&1));
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn json_report_lands_at_out_path() {
+    let root = fixture("jsonout", &[("rust/src/foo.rs", CLEAN)]);
+    let out = root.join("results/lint.json");
+    let ok =
+        lint::run_cli(root.to_str().unwrap(), lint::DEFAULT_BASELINE, true, out.to_str().unwrap())
+            .unwrap();
+    assert!(ok);
+    let v = yalis::obs::json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+    assert_eq!(v.get("ok"), Some(&yalis::obs::json::Value::Bool(true)));
+    assert_eq!(v.get("files_scanned").and_then(|x| x.as_f64()), Some(1.0));
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn missing_root_is_a_usage_error() {
+    let root = fixture("noroot", &[("README.md", "not a rust tree\n")]);
+    let err = lint::run_cli(root.to_str().unwrap(), lint::DEFAULT_BASELINE, true, "");
+    assert!(err.is_err(), "a root without rust/src must be exit-2 (Err), not a pass");
+    std::fs::remove_dir_all(&root).unwrap();
+}

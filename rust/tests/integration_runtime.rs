@@ -2,6 +2,9 @@
 //! composing. Requires `make artifacts`; tests skip (with a note) if the
 //! artifacts directory is missing so plain `cargo test` still passes.
 
+// stdout is the product here (CLI tables / bench reports), not stray debug noise.
+#![allow(clippy::print_stdout)]
+
 use yalis::collectives::real::Algo;
 use yalis::runtime::manifest::Manifest;
 use yalis::runtime::tensor::argmax_rows;
