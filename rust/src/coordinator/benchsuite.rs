@@ -67,9 +67,18 @@ pub fn directions() -> BTreeMap<&'static str, Better> {
         ("fleet_goodput_tok_per_s", Better::Higher),
         ("fleet_ttft_p99_ms", Better::Lower),
         ("contention_rd_delay_us", Better::Either),
+        ("sim_throughput_rps", Better::Higher),
     ]
     .into()
 }
+
+/// Request count of the simulator-throughput reference run (a scaled-down
+/// `yalis soak`: mixed fleet, diurnal trace, contention priced). Small
+/// enough that debug-build tests stay fast; the full 10M-request target
+/// lives in `yalis soak` itself.
+pub const SIM_THROUGHPUT_REQUESTS: usize = 20_000;
+/// Replica count of the reference run.
+pub const SIM_THROUGHPUT_REPLICAS: usize = 16;
 
 /// Compute the tracked metric set. Small and deterministic: one run takes
 /// seconds, and two runs of the same build emit identical JSON.
@@ -148,6 +157,21 @@ pub fn suite() -> Vec<Metric> {
         value: flow.delay * 1e6,
         better: Better::Either,
     });
+
+    // The simulator's own speed: simulated requests per wall-second on the
+    // soak reference run. The only wall-clock metric in the suite — max of
+    // two repeats so one scheduler hiccup doesn't trip the 10% gate.
+    let mut rps = 0.0f64;
+    for _ in 0..2 {
+        if let Ok((_rep, wall)) = super::experiments::soak_run(
+            SIM_THROUGHPUT_REQUESTS,
+            SIM_THROUGHPUT_REPLICAS,
+            super::experiments::SOAK_SEED,
+        ) {
+            rps = rps.max(SIM_THROUGHPUT_REQUESTS as f64 / wall.max(1e-9));
+        }
+    }
+    out.push(Metric { key: "sim_throughput_rps", value: rps, better: Better::Higher });
 
     out
 }
@@ -464,7 +488,16 @@ mod tests {
         let a = suite();
         let b = suite();
         assert!(a.len() >= 10, "suite should track a real metric set");
-        assert_eq!(to_json(&a), to_json(&b), "two runs must emit identical JSON");
+        // `sim_throughput_rps` is wall-clock by design — everything else
+        // must render bit-identically across runs.
+        let strip = |text: &str| -> String {
+            text.lines().filter(|l| !l.contains("sim_throughput_rps")).collect::<Vec<_>>().join("\n")
+        };
+        assert_eq!(
+            strip(&to_json(&a)),
+            strip(&to_json(&b)),
+            "two runs must emit identical JSON (wall-clock metric aside)"
+        );
         for m in &a {
             assert!(m.value.is_finite() && m.value >= 0.0, "{}: {}", m.key, m.value);
         }
@@ -476,9 +509,13 @@ mod tests {
             "serve_ttft_p50_ms",
             "serve_tpot_p50_ms",
             "fleet_goodput_tok_per_s",
+            "sim_throughput_rps",
         ] {
             assert!(keys.contains(&k), "missing {k}");
         }
+        // The simulator-throughput reference actually ran and timed.
+        let rps = a.iter().find(|m| m.key == "sim_throughput_rps").unwrap();
+        assert!(rps.value > 0.0, "soak reference run must complete");
     }
 
     #[test]

@@ -750,6 +750,92 @@ pub fn fleet_hetero_experiment(ar: AllReduceImpl) -> Table {
     t
 }
 
+/// Default request count / replica count for `yalis soak` — the
+/// million-request throughput gate: a 10M-request diurnal day on a
+/// 120-replica mixed Perlmutter+Vista fleet with contention priced.
+pub const SOAK_REQUESTS: usize = 10_000_000;
+pub const SOAK_REPLICAS: usize = 120;
+pub const SOAK_SEED: u64 = 0x50AC;
+
+/// The soak fleet: a mixed pool (3 Perlmutter A100 tp4 replicas to every
+/// Vista GH200 tp4 replica), cost-aware routing, shared-fabric contention
+/// on — every hot path the simulator has, in one configuration.
+pub fn soak_fleet_config(replicas: usize) -> anyhow::Result<FleetConfig> {
+    let perl = crate::calib::registry::resolve("perlmutter")?;
+    let vista = crate::calib::registry::resolve("vista")?;
+    let a = crate::serving::fig9_config_bundle(
+        ParallelSpec::tp(4),
+        AllReduceImpl::Nvrar,
+        32,
+        &perl,
+        4,
+    );
+    let b = crate::serving::fig9_config_bundle(
+        ParallelSpec::tp(4),
+        AllReduceImpl::Nvrar,
+        32,
+        &vista,
+        4,
+    );
+    let pool: Vec<_> =
+        (0..replicas.max(1)).map(|i| if i % 4 == 3 { b.clone() } else { a.clone() }).collect();
+    Ok(FleetConfig::heterogeneous(pool).with_contention(true))
+}
+
+/// One timed soak run: generate the diurnal trace (mean rate scaled to
+/// ~5 req/s per replica so the sinusoid's peaks overload the pool and its
+/// troughs drain it), run the fleet, and return the report plus the
+/// wall-clock seconds the simulation loop took. Everything in the report
+/// is deterministic in `(requests, replicas, seed)`; only the wall-clock
+/// half varies.
+pub fn soak_run(
+    requests: usize,
+    replicas: usize,
+    seed: u64,
+) -> anyhow::Result<(crate::fleet::FleetReport, f64)> {
+    let mut spec = TraceSpec::soak(requests);
+    spec.seed = seed;
+    spec.rate = 5.0 * replicas.max(1) as f64;
+    let reqs = spec.with_diurnal_cycles(2.0, 0.6).generate();
+    let cfg = soak_fleet_config(replicas)?;
+    let sw = crate::util::bench::Stopwatch::start();
+    let rep = run_fleet(&cfg, &reqs);
+    Ok((rep, sw.elapsed_secs()))
+}
+
+/// `yalis soak`: the simulator's own throughput benchmark. Simulated
+/// requests per wall-second is the headline number `bench-suite` gates
+/// (key `sim_throughput_rps`).
+pub fn soak_experiment(requests: usize, replicas: usize, seed: u64) -> anyhow::Result<Table> {
+    let (rep, wall) = soak_run(requests, replicas, seed)?;
+    let mut t = Table::new(
+        &format!("soak: {replicas}-replica mixed fleet, diurnal trace x{requests}"),
+        &["metric", "value"],
+    );
+    t.meta("seed", &format!("{seed:#x}"));
+    for (k, v) in [
+        ("requests", requests.to_string()),
+        ("replicas", replicas.to_string()),
+        ("completed", rep.completed.to_string()),
+        ("rejected", rep.rejected.to_string()),
+        ("sim makespan (s)", format!("{:.1}", rep.makespan)),
+        ("wall clock (s)", format!("{wall:.2}")),
+        ("sim req/wall s", format!("{:.0}", requests as f64 / wall.max(1e-9))),
+        ("tok/s", format!("{:.1}", rep.throughput)),
+        ("goodput", format!("{:.1}", rep.goodput)),
+        ("TTFT p50 (s)", format!("{:.3}", rep.ttft_p50)),
+        ("TTFT p99 (s)", format!("{:.3}", rep.ttft_p99)),
+        ("TPOT p50 (s)", format!("{:.4}", rep.tpot_p50)),
+        ("SLO %", format!("{:.0}%", rep.slo_attainment * 100.0)),
+        ("preemptions", rep.preemptions.to_string()),
+        ("over-capacity routes", rep.over_capacity_routes.to_string()),
+        ("NIC util", format!("{:.0}%", rep.net_util_inter * 100.0)),
+    ] {
+        t.row(&[k.to_string(), v]);
+    }
+    Ok(t)
+}
+
 /// `yalis profile`: one fully-traced fleet run built to light up every
 /// event source at once — 3 replicas + contention-priced fabric + a
 /// scripted mid-run drain (with KV migration). Writes the Chrome trace,
@@ -1109,6 +1195,24 @@ mod tests {
                 assert!(cells[3] > cells[0], "{machine} {msg}: {cells:?}");
             }
         }
+    }
+
+    #[test]
+    fn soak_run_is_deterministic_and_mixed() {
+        // Scaled-down soak: the report must be bit-identical across runs
+        // (wall-clock aside) and the pool must actually mix machines.
+        let cfg = soak_fleet_config(8).unwrap();
+        assert_eq!(cfg.replicas.len(), 8);
+        let labels: std::collections::BTreeSet<String> =
+            cfg.replicas.iter().map(|r| format!("{:?}", r.gpu)).collect();
+        assert!(labels.len() >= 2, "pool must mix GPU kinds: {labels:?}");
+        let (a, wa) = soak_run(2000, 8, SOAK_SEED).unwrap();
+        let (b, _wb) = soak_run(2000, 8, SOAK_SEED).unwrap();
+        assert!(wa >= 0.0);
+        assert_eq!(a, b, "soak report must be deterministic");
+        assert_eq!(a.completed as u64 + a.rejected, 2000);
+        let (c, _) = soak_run(2000, 8, SOAK_SEED + 1).unwrap();
+        assert_ne!(a.makespan.to_bits(), c.makespan.to_bits(), "seed must matter");
     }
 
     #[test]

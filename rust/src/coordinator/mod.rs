@@ -21,9 +21,9 @@ pub fn main() {
         "multi-node LLM inference study + NVRAR all-reduce (paper reproduction).\n\
          Subcommand = first positional arg: scaling | breakdown | gemm | nccl-vs-mpi |\n\
          micro | hyperparams | e2e | phase | serve | sweep-parallel | sweep-chunk |\n\
-         sweep-session | sweep-contention | fleet | fleet-hetero | moe | sync |\n\
-         variants | traces | profile | bench-suite | bench-check | validate | fit |\n\
-         lint | all",
+         sweep-session | sweep-contention | fleet | fleet-hetero | soak | moe |\n\
+         sync | variants | traces | profile | bench-suite | bench-check | validate |\n\
+         fit | lint | all",
     );
     cli.opt(
         "machine",
@@ -64,6 +64,17 @@ pub fn main() {
     cli.opt("baseline", "bench/baseline.json", "`bench-check`: committed baseline metrics");
     cli.opt("current", "", "`bench-check`: freshly generated metrics to compare");
     cli.opt("tol", "0.10", "`bench-check`: allowed worse-direction fraction per metric");
+    cli.opt(
+        "requests",
+        &experiments::SOAK_REQUESTS.to_string(),
+        "`soak`: simulated request count",
+    );
+    cli.opt(
+        "replicas",
+        &experiments::SOAK_REPLICAS.to_string(),
+        "`soak`: mixed-pool replica count",
+    );
+    cli.opt("seed", &experiments::SOAK_SEED.to_string(), "`soak`: trace seed");
     cli.opt("bundle", "", "`validate`: check this bundle file instead of the built-ins");
     cli.opt("fit-csv", "", "`fit`: measured latencies (bytes,gpus,impl,seconds CSV)");
     cli.opt("gemm-csv", "", "`fit`: optional measured GEMMs (m,n,k,dtype_bytes,seconds CSV)");
@@ -188,6 +199,19 @@ pub fn main() {
         "fleet-hetero" => {
             let ar = args.get_with("allreduce", crate::collectives::AllReduceImpl::by_name);
             vec![experiments::fleet_hetero_experiment(ar)]
+        }
+        "soak" => {
+            match experiments::soak_experiment(
+                args.get_usize("requests"),
+                args.get_usize("replicas"),
+                args.get_u64("seed"),
+            ) {
+                Ok(t) => vec![t],
+                Err(e) => {
+                    eprintln!("error: {e:#}");
+                    std::process::exit(1);
+                }
+            }
         }
         "profile" => experiments::profile_experiment(trace.unwrap_or("results/profile")),
         "moe" => vec![experiments::fig10_moe()],

@@ -150,7 +150,8 @@ impl FleetConfig {
     /// replica's config; the existing `replicas` become decode-only.
     pub fn disaggregated(self, n: usize) -> Self {
         assert!(n >= 1, "disaggregation needs at least one prefill replica");
-        let base = self.replicas.first().expect("need a replica to clone").clone();
+        assert!(!self.replicas.is_empty(), "need a replica to clone");
+        let base = self.replicas[0].clone();
         self.with_prefill_pool(vec![base; n])
     }
 
@@ -330,7 +331,9 @@ struct Sim<'a> {
     router: Router,
     autoscaler: Option<Autoscaler>,
     metrics: FleetMetrics,
-    first_token: Vec<f64>,
+    /// First-token timestamp per request (`None` until the last prefill
+    /// chunk completes).
+    first_token: Vec<Option<f64>>,
     /// Tokens actually produced per request (prefill's first token + one
     /// per decode-step participation).
     produced: Vec<u32>,
@@ -358,6 +361,13 @@ struct Sim<'a> {
     /// Analytic per-replica breakdown accumulators (tracing only; one per
     /// pushed replica, parallel to `replicas`).
     bd: Vec<Breakdown>,
+    /// Routing scratch reused across placement decisions — the candidate
+    /// views, per-candidate costs and prefix-hit estimates were three
+    /// fresh `Vec`s per request in the old path, which at 10M requests ×
+    /// 100+ replicas dominated the fleet loop's allocation profile.
+    scratch_views: Vec<ReplicaView>,
+    scratch_costs: Vec<f64>,
+    scratch_hits: Vec<usize>,
 }
 
 impl<'a> Sim<'a> {
@@ -371,7 +381,7 @@ impl<'a> Sim<'a> {
             router: Router::new(0),
             autoscaler: cfg.autoscale.map(|a| Autoscaler::new(a, cfg.slo)),
             metrics: FleetMetrics::new(),
-            first_token: vec![f64::NAN; reqs.len()],
+            first_token: vec![None; reqs.len()],
             produced: vec![0; reqs.len()],
             done: vec![false; reqs.len()],
             commit_prefill: vec![None; reqs.len()],
@@ -394,6 +404,9 @@ impl<'a> Sim<'a> {
                 None
             },
             bd: Vec::new(),
+            scratch_views: Vec::new(),
+            scratch_costs: Vec::new(),
+            scratch_hits: Vec::new(),
         };
         let scalable = cfg.scalable_kind();
         for c in &cfg.replicas {
@@ -469,7 +482,7 @@ impl<'a> Sim<'a> {
         report.rejected = self.rejected;
         report.preemptions = self.replicas.iter().map(|r| r.batcher.preemptions()).sum();
         if let Some(fab) = &self.fabric {
-            let net = fab.lock().expect("interconnect lock poisoned");
+            let net = fab.lock().unwrap_or_else(|e| e.into_inner());
             report.net_util_intra = net.utilization(LinkKind::Intra, self.last_done);
             report.net_util_inter = net.utilization(LinkKind::Inter, self.last_done);
             report.congestion = net.stats().clone();
@@ -481,7 +494,7 @@ impl<'a> Sim<'a> {
         report.cached_tokens = hit;
         report.cache_hit_rate = if prompt == 0 { 0.0 } else { hit as f64 / prompt as f64 };
         if let Some(sink) = &self.cfg.obs {
-            let mut rec = sink.lock().expect("obs lock poisoned");
+            let mut rec = sink.lock().unwrap_or_else(|e| e.into_inner());
             rec.set_makespan(self.last_done);
             if rec.meta.label.is_empty() {
                 rec.meta.label =
@@ -520,20 +533,21 @@ impl<'a> Sim<'a> {
     /// prefix-affinity signal. Only the session-affinity policy probes the
     /// allocators; every other policy stays content-blind (and with solo
     /// sessions the probe returns zeros anyway).
-    fn hit_views(&self, views: &[ReplicaView], req: &Request) -> Vec<usize> {
+    fn fill_hits(&self, views: &[ReplicaView], req: &Request, out: &mut Vec<usize>) {
+        out.clear();
         if self.cfg.policy != RoutePolicy::SessionAffinity {
-            return vec![0; views.len()];
+            out.resize(views.len(), 0);
+            return;
         }
-        views
-            .iter()
-            .map(|v| self.replicas[v.id].kv.lookup_prefix(req.session, req.prompt_len))
-            .collect()
+        out.extend(
+            views.iter().map(|v| self.replicas[v.id].kv.lookup_prefix(req.session, req.prompt_len)),
+        );
     }
 
     fn on_arrival(&mut self, i: usize) {
         let req = self.reqs[i];
         if let Some(sink) = &self.cfg.obs {
-            sink.lock().expect("obs lock poisoned").instant(
+            sink.lock().unwrap_or_else(|e| e.into_inner()).instant(
                 Track::Control,
                 "arrival",
                 req.arrival,
@@ -560,34 +574,39 @@ impl<'a> Sim<'a> {
     /// by each candidate's expected prefix-cache hit.
     fn route_queued(&mut self, kind: PoolKind, req: Request) {
         let i = req.id as usize;
-        let views = self.views(kind);
-        let hits = self.hit_views(&views, &req);
-        let (pages, costs, policy): (usize, Vec<f64>, RoutePolicy) = match kind {
-            PoolKind::Prefill => (
-                self.pages_for(req.prompt_len),
-                views
-                    .iter()
-                    .zip(&hits)
-                    .map(|(v, &h)| self.leg_cost(v.id, req.prompt_len - h, 0))
-                    .collect(),
+        let mut views = std::mem::take(&mut self.scratch_views);
+        self.fill_views(kind, &mut views);
+        let mut hits = std::mem::take(&mut self.scratch_hits);
+        self.fill_hits(&views, &req, &mut hits);
+        let mut costs = std::mem::take(&mut self.scratch_costs);
+        costs.clear();
+        let (pages, policy) = match kind {
+            PoolKind::Prefill => {
+                costs.extend(
+                    views
+                        .iter()
+                        .zip(&hits)
+                        .map(|(v, &h)| self.leg_cost(v.id, req.prompt_len - h, 0)),
+                );
                 // Prefill placement is least-outstanding, except under
                 // session affinity: the prefill pool is where the prefix
                 // cache actually pays.
-                if self.cfg.policy == RoutePolicy::SessionAffinity {
+                let policy = if self.cfg.policy == RoutePolicy::SessionAffinity {
                     RoutePolicy::SessionAffinity
                 } else {
                     RoutePolicy::LeastOutstanding
-                },
-            ),
-            PoolKind::Monolithic | PoolKind::Decode => (
-                self.pages_for(req.prompt_len + req.decode_len),
-                views
-                    .iter()
-                    .zip(&hits)
-                    .map(|(v, &h)| self.leg_cost(v.id, req.prompt_len - h, req.decode_len))
-                    .collect(),
-                self.cfg.policy,
-            ),
+                };
+                (self.pages_for(req.prompt_len), policy)
+            }
+            PoolKind::Monolithic | PoolKind::Decode => {
+                costs.extend(
+                    views
+                        .iter()
+                        .zip(&hits)
+                        .map(|(v, &h)| self.leg_cost(v.id, req.prompt_len - h, req.decode_len)),
+                );
+                (self.pages_for(req.prompt_len + req.decode_len), self.cfg.policy)
+            }
         };
         let old = match kind {
             PoolKind::Prefill => self.commit_prefill[i].take(),
@@ -597,8 +616,11 @@ impl<'a> Sim<'a> {
             self.router.complete(c.replica, c.pages, c.secs);
         }
         let (target, secs) = self.router.route(policy, &views, req.session, pages, &costs, &hits);
+        self.scratch_views = views;
+        self.scratch_costs = costs;
+        self.scratch_hits = hits;
         if let Some(sink) = &self.cfg.obs {
-            sink.lock().expect("obs lock poisoned").instant(
+            sink.lock().unwrap_or_else(|e| e.into_inner()).instant(
                 Track::Control,
                 "route",
                 self.q.now(),
@@ -619,10 +641,12 @@ impl<'a> Sim<'a> {
     }
 
     fn on_step_done(&mut self, r: usize, now: f64) {
-        let (kind, step) = {
-            let rep = &mut self.replicas[r];
-            rep.stepping = false;
-            (rep.kind, rep.current.take().expect("step in flight"))
+        let rep = &mut self.replicas[r];
+        rep.stepping = false;
+        let kind = rep.kind;
+        let Some(step) = rep.current.take() else {
+            debug_assert!(false, "StepDone for replica {r} with no step in flight");
+            return;
         };
         let (outcome, finished) = {
             let rep = &mut self.replicas[r];
@@ -636,10 +660,10 @@ impl<'a> Sim<'a> {
         for c in &step.prefills {
             if c.last {
                 let i = c.id as usize;
-                if self.first_token[i].is_nan() {
-                    self.first_token[i] = now;
+                if self.first_token[i].is_none() {
+                    self.first_token[i] = Some(now);
                     if let Some(sink) = &self.cfg.obs {
-                        sink.lock().expect("obs lock poisoned").instant(
+                        sink.lock().unwrap_or_else(|e| e.into_inner()).instant(
                             Track::Replica(r),
                             "first_token",
                             now,
@@ -659,7 +683,7 @@ impl<'a> Sim<'a> {
             self.produced[*id as usize] -= 1;
         }
         if let Some(sink) = &self.cfg.obs {
-            let mut rec = sink.lock().expect("obs lock poisoned");
+            let mut rec = sink.lock().unwrap_or_else(|e| e.into_inner());
             for id in &outcome.preempted {
                 rec.instant(Track::Replica(r), "preempt", now, vec![("req", ArgV::U(*id))]);
             }
@@ -695,6 +719,7 @@ impl<'a> Sim<'a> {
                 }
             }
         }
+        self.replicas[r].batcher.recycle(step);
         if self.replicas[r].draining && self.cfg.migrate_on_drain {
             // The step that was in flight at drain time has completed:
             // everything left (including rows it just decoded) migrates
@@ -716,7 +741,7 @@ impl<'a> Sim<'a> {
     fn kv_transfer(&mut self, from: usize, to: usize, bytes: u64, now: f64) -> f64 {
         let link = self.cfg.replicas[0].topo.inter;
         let landed = if let Some(fab) = &self.fabric {
-            let mut net = fab.lock().expect("interconnect lock poisoned");
+            let mut net = fab.lock().unwrap_or_else(|e| e.into_inner());
             net.advance(now);
             let eg =
                 net.book(LinkId { scope: from, node: 0, kind: LinkKind::Inter }, now, bytes as f64);
@@ -730,7 +755,7 @@ impl<'a> Sim<'a> {
         if let Some(sink) = &self.cfg.obs {
             // The transfer occupies the target's ingress NIC: one span on
             // its inter-node link track.
-            sink.lock().expect("obs lock poisoned").span(
+            sink.lock().unwrap_or_else(|e| e.into_inner()).span(
                 Track::Link { scope: to, kind: LinkKind::Inter },
                 "xfer",
                 now,
@@ -750,20 +775,27 @@ impl<'a> Sim<'a> {
     /// remaining decode cost — the prefill leg is already done).
     fn start_handoff(&mut self, i: usize, from: usize, now: f64) {
         let req = self.reqs[i];
-        let views = self.views(PoolKind::Decode);
-        let costs: Vec<f64> =
-            views.iter().map(|v| self.leg_cost(v.id, 0, req.decode_len)).collect();
-        let no_hits = vec![0usize; views.len()];
+        let mut views = std::mem::take(&mut self.scratch_views);
+        self.fill_views(PoolKind::Decode, &mut views);
+        let mut costs = std::mem::take(&mut self.scratch_costs);
+        costs.clear();
+        costs.extend(views.iter().map(|v| self.leg_cost(v.id, 0, req.decode_len)));
+        let mut no_hits = std::mem::take(&mut self.scratch_hits);
+        no_hits.clear();
+        no_hits.resize(views.len(), 0);
         let pages = self.pages_for(req.prompt_len + req.decode_len);
         let (target, secs) =
             self.router.route(self.cfg.policy, &views, req.session, pages, &costs, &no_hits);
+        self.scratch_views = views;
+        self.scratch_costs = costs;
+        self.scratch_hits = no_hits;
         self.commit_main[i] = Some(Commit { replica: target, pages, secs });
         let bytes = self.kv_context_bytes(req.prompt_len);
         let landed = self.kv_transfer(from, target, bytes, now);
         self.handoffs += 1;
         self.handoff_bytes += bytes;
         if let Some(sink) = &self.cfg.obs {
-            sink.lock().expect("obs lock poisoned").instant(
+            sink.lock().unwrap_or_else(|e| e.into_inner()).instant(
                 Track::Control,
                 "handoff",
                 now,
@@ -789,20 +821,27 @@ impl<'a> Sim<'a> {
         if let Some(c) = self.commit_main[i].take() {
             self.router.complete(c.replica, c.pages, c.secs);
         }
-        let views = self.views(pool);
-        let costs: Vec<f64> =
-            views.iter().map(|v| self.leg_cost(v.id, 0, m.remaining_decode)).collect();
-        let no_hits = vec![0usize; views.len()];
+        let mut views = std::mem::take(&mut self.scratch_views);
+        self.fill_views(pool, &mut views);
+        let mut costs = std::mem::take(&mut self.scratch_costs);
+        costs.clear();
+        costs.extend(views.iter().map(|v| self.leg_cost(v.id, 0, m.remaining_decode)));
+        let mut no_hits = std::mem::take(&mut self.scratch_hits);
+        no_hits.clear();
+        no_hits.resize(views.len(), 0);
         let pages = self.pages_for(m.ctx + m.remaining_decode);
         let (target, secs) =
             self.router.route(self.cfg.policy, &views, m.session, pages, &costs, &no_hits);
+        self.scratch_views = views;
+        self.scratch_costs = costs;
+        self.scratch_hits = no_hits;
         self.commit_main[i] = Some(Commit { replica: target, pages, secs });
         let bytes = self.kv_context_bytes(m.ctx);
         let landed = self.kv_transfer(from, target, bytes, now);
         self.migrations += 1;
         self.migration_bytes += bytes;
         if let Some(sink) = &self.cfg.obs {
-            sink.lock().expect("obs lock poisoned").instant(
+            sink.lock().unwrap_or_else(|e| e.into_inner()).instant(
                 Track::Control,
                 "migrate",
                 now,
@@ -894,7 +933,13 @@ impl<'a> Sim<'a> {
             match rep.batcher.submit_prefilled(req, &mut rep.kv) {
                 Ok(()) => {}
                 Err(KvError::OutOfPages) => rep.pending.push_back(req),
-                Err(e) => panic!("handoff admission failed: {e:?}"),
+                Err(e) => {
+                    // Any other admission failure is an invariant breach;
+                    // park the request so a release build degrades to a
+                    // retry through try_admit_pending instead of aborting.
+                    debug_assert!(false, "handoff admission failed: {e:?}");
+                    rep.pending.push_back(req);
+                }
             }
         } else {
             rep.pending.push_back(req);
@@ -912,7 +957,9 @@ impl<'a> Sim<'a> {
             let total: u64 = self.replicas.iter().map(|r| r.batcher.preemptions()).sum();
             let delta = total - self.preempt_snapshot;
             self.preempt_snapshot = total;
-            self.autoscaler.as_mut().expect("checked").observe_preemptions(delta);
+            if let Some(a) = self.autoscaler.as_mut() {
+                a.observe_preemptions(delta);
+            }
             self.scale_pool(self.cfg.scalable_kind());
             if self.cfg.disaggregated_mode() {
                 self.scale_pool(PoolKind::Prefill);
@@ -940,7 +987,7 @@ impl<'a> Sim<'a> {
             .map(|r| r.batcher.waiting_len() + r.pending.len())
             .sum();
         let (decision, delay) = {
-            let a = self.autoscaler.as_mut().expect("checked by caller");
+            let Some(a) = self.autoscaler.as_mut() else { return };
             let d = match kind {
                 PoolKind::Prefill => a.decide_prefill(active, queued),
                 PoolKind::Decode => a.decide_decode(active, queued),
@@ -981,7 +1028,7 @@ impl<'a> Sim<'a> {
         self.replicas[victim].drain_start = Some(now);
         self.drains += 1;
         if let Some(sink) = &self.cfg.obs {
-            sink.lock().expect("obs lock poisoned").instant(
+            sink.lock().unwrap_or_else(|e| e.into_inner()).instant(
                 Track::Control,
                 "drain",
                 now,
@@ -1040,7 +1087,7 @@ impl<'a> Sim<'a> {
             // the source's and target's scopes.
             let scope = self.replicas.len();
             fab.lock()
-                .expect("interconnect lock poisoned")
+                .unwrap_or_else(|e| e.into_inner())
                 .add_scope(scope, cfg.topo.nodes, cfg.topo.intra.beta, cfg.topo.inter.beta);
             cfg.net = Some(fab.clone());
             cfg.net_scope = scope;
@@ -1050,7 +1097,7 @@ impl<'a> Sim<'a> {
         cfg.obs = self.cfg.obs.clone();
         self.bd.push(Breakdown::default());
         if let Some(sink) = &self.cfg.obs {
-            sink.lock().expect("obs lock poisoned").instant(
+            sink.lock().unwrap_or_else(|e| e.into_inner()).instant(
                 Track::Control,
                 "replica_up",
                 self.q.now(),
@@ -1135,7 +1182,7 @@ impl<'a> Sim<'a> {
             rep.pred_chunk = predict_chunk(&rep.cfg);
             self.retunes += 1;
             if let Some(sink) = &self.cfg.obs {
-                sink.lock().expect("obs lock poisoned").instant(
+                sink.lock().unwrap_or_else(|e| e.into_inner()).instant(
                     Track::Control,
                     "retune",
                     self.q.now(),
@@ -1149,6 +1196,14 @@ impl<'a> Sim<'a> {
     fn try_start(&mut self, r: usize) {
         self.try_admit_pending(r);
         let now = self.q.now();
+        if let Some(fab) = &self.fabric {
+            // Event time is monotone and every booking lands at or after
+            // it, so advancing the shared fabric's watermark here lets
+            // `book` prune expired intervals — without this a transfer-free
+            // contention run grows every link's active list without bound
+            // and each step's booking sweep degrades to O(run length).
+            fab.lock().unwrap_or_else(|e| e.into_inner()).advance(now);
+        }
         let rep = &mut self.replicas[r];
         if rep.stepping {
             return;
@@ -1161,6 +1216,7 @@ impl<'a> Sim<'a> {
             "feasibility pre-check missed an infeasible request"
         );
         if step.is_empty() {
+            rep.batcher.recycle(step);
             return;
         }
         // Each replica prices the step with its own cost model; under
@@ -1174,7 +1230,7 @@ impl<'a> Sim<'a> {
             let delay = (dur - base).max(0.0);
             let mut b = rep.cfg.step_breakdown(&step);
             b.comm += delay;
-            let mut rec = sink.lock().expect("obs lock poisoned");
+            let mut rec = sink.lock().unwrap_or_else(|e| e.into_inner());
             for c in &step.prefills {
                 rec.instant(
                     Track::Replica(r),
@@ -1236,7 +1292,7 @@ impl<'a> Sim<'a> {
                 self.drain_secs += now - t0;
             }
             if let Some(sink) = &self.cfg.obs {
-                sink.lock().expect("obs lock poisoned").instant(
+                sink.lock().unwrap_or_else(|e| e.into_inner()).instant(
                     Track::Control,
                     "retire",
                     now,
@@ -1250,15 +1306,18 @@ impl<'a> Sim<'a> {
         assert!(!self.done[i], "request {i} completed twice");
         self.done[i] = true;
         let r = &self.reqs[i];
-        let ft = self.first_token[i];
-        debug_assert!(ft.is_finite(), "request {i} finished without a first token");
+        debug_assert!(
+            self.first_token[i].is_some(),
+            "request {i} finished without a first token"
+        );
+        let ft = self.first_token[i].unwrap_or(r.arrival);
         let ttft = ft - r.arrival;
         // Credit only tokens that were actually produced: a KV-exhaustion
         // truncation must not inflate throughput or deflate TPOT.
         let toks = self.produced[i].max(1);
         let tpot = if toks > 1 { (now - ft) / (toks - 1) as f64 } else { 0.0 };
         if let Some(sink) = &self.cfg.obs {
-            sink.lock().expect("obs lock poisoned").instant(
+            sink.lock().unwrap_or_else(|e| e.into_inner()).instant(
                 Track::Control,
                 "finish",
                 now,
@@ -1272,18 +1331,22 @@ impl<'a> Sim<'a> {
         self.last_done = now;
     }
 
-    fn views(&self, kind: PoolKind) -> Vec<ReplicaView> {
-        self.replicas
-            .iter()
-            .enumerate()
-            .filter(|(_, r)| r.kind == kind && !r.retired)
-            .map(|(id, r)| ReplicaView {
-                id,
-                accepting: !r.draining,
-                total_pages: r.cfg.kv_pages,
-                pred_step: r.pred_step,
-            })
-            .collect()
+    /// Rebuild the candidate views of `kind`'s pool into `out` (a reused
+    /// scratch buffer — same contents the old allocating path produced).
+    fn fill_views(&self, kind: PoolKind, out: &mut Vec<ReplicaView>) {
+        out.clear();
+        out.extend(
+            self.replicas
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.kind == kind && !r.retired)
+                .map(|(id, r)| ReplicaView {
+                    id,
+                    accepting: !r.draining,
+                    total_pages: r.cfg.kv_pages,
+                    pred_step: r.pred_step,
+                }),
+        );
     }
 
     fn pages_for(&self, tokens: usize) -> usize {

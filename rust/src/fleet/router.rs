@@ -100,6 +100,10 @@ pub struct Router {
     committed_pages: Vec<usize>,
     outstanding_secs: Vec<f64>,
     sessions: BTreeMap<u64, usize>,
+    /// Candidate-pool scratch reused across [`Router::route`] calls so a
+    /// placement allocates nothing: at 10M requests × 100+ replicas the
+    /// per-call `Vec` churn of the old path dominated the routing profile.
+    scratch: Vec<usize>,
     /// Placements made against each replica (observability for the
     /// heterogeneous-fleet tests and tables; a disaggregated request's
     /// prefill and decode legs count separately).
@@ -117,6 +121,7 @@ impl Router {
             committed_pages: vec![0; replicas],
             outstanding_secs: vec![0.0; replicas],
             sessions: BTreeMap::new(),
+            scratch: Vec::new(),
             routed: vec![0; replicas],
             max_committed_pages: 0,
             over_capacity_routes: 0,
@@ -161,23 +166,24 @@ impl Router {
     ) -> (usize, f64) {
         assert_eq!(views.len(), costs.len(), "one cost per candidate view");
         assert_eq!(views.len(), hits.len(), "one hit estimate per candidate view");
-        let accepting: Vec<usize> =
-            (0..views.len()).filter(|&i| views[i].accepting).collect();
-        assert!(!accepting.is_empty(), "router needs at least one accepting replica");
-        // Capacity pre-filter: never knowingly commit past a replica's KV
-        // allocator. If nothing fits, fall back to least-committed (the
-        // request queues there) and record the relief placement.
-        let fits: Vec<usize> = accepting
-            .iter()
-            .copied()
-            .filter(|&i| self.committed_pages[views[i].id] + pages <= views[i].total_pages)
-            .collect();
-        let pool: Vec<usize> = if fits.is_empty() {
+        // Candidate pool in the reusable scratch buffer (taken out of self
+        // so the comparators below can still read the commitment tables):
+        // accepting replicas that pass the capacity pre-filter — never
+        // knowingly commit past a replica's KV allocator. If nothing fits,
+        // fall back to every accepting replica (the request queues on the
+        // least-committed one) and record the relief placement.
+        let mut pool = std::mem::take(&mut self.scratch);
+        pool.clear();
+        for (i, v) in views.iter().enumerate() {
+            if v.accepting && self.committed_pages[v.id] + pages <= v.total_pages {
+                pool.push(i);
+            }
+        }
+        if pool.is_empty() {
+            pool.extend(views.iter().enumerate().filter(|(_, v)| v.accepting).map(|(i, _)| i));
+            assert!(!pool.is_empty(), "router needs at least one accepting replica");
             self.over_capacity_routes += 1;
-            accepting
-        } else {
-            fits
-        };
+        }
 
         let chosen_idx = match policy {
             RoutePolicy::RoundRobin => {
@@ -190,17 +196,14 @@ impl Router {
                 // Lowest committed/total fraction, compared exactly via
                 // cross-multiplication (deterministic, no float ties);
                 // equal fractions go to the faster replica.
-                pool.iter()
-                    .copied()
-                    .min_by(|&a, &b| {
-                        let (va, vb) = (&views[a], &views[b]);
-                        let la = self.committed_pages[va.id] * vb.total_pages.max(1);
-                        let lb = self.committed_pages[vb.id] * va.total_pages.max(1);
-                        la.cmp(&lb)
-                            .then(va.pred_step.total_cmp(&vb.pred_step))
-                            .then(va.id.cmp(&vb.id))
-                    })
-                    .expect("non-empty pool")
+                first_min_by(&pool, |a, b| {
+                    let (va, vb) = (&views[a], &views[b]);
+                    let la = self.committed_pages[va.id] * vb.total_pages.max(1);
+                    let lb = self.committed_pages[vb.id] * va.total_pages.max(1);
+                    la.cmp(&lb)
+                        .then(va.pred_step.total_cmp(&vb.pred_step))
+                        .then(va.id.cmp(&vb.id))
+                })
             }
             RoutePolicy::SessionAffinity => {
                 let chosen = if hits.iter().any(|&h| h > 0) {
@@ -209,16 +212,13 @@ impl Router {
                     // the session where its cache lives — unless that
                     // replica is so loaded the recompute elsewhere is
                     // cheaper. Ties break toward the bigger hit.
-                    pool.iter()
-                        .copied()
-                        .min_by(|&a, &b| {
-                            let la = self.outstanding_secs[views[a].id] + costs[a];
-                            let lb = self.outstanding_secs[views[b].id] + costs[b];
-                            la.total_cmp(&lb)
-                                .then(hits[b].cmp(&hits[a]))
-                                .then(views[a].id.cmp(&views[b].id))
-                        })
-                        .expect("non-empty pool")
+                    first_min_by(&pool, |a, b| {
+                        let la = self.outstanding_secs[views[a].id] + costs[a];
+                        let lb = self.outstanding_secs[views[b].id] + costs[b];
+                        la.total_cmp(&lb)
+                            .then(hits[b].cmp(&hits[a]))
+                            .then(views[a].id.cmp(&views[b].id))
+                    })
                 } else {
                     // No cache signal anywhere: sticky pin (the warm
                     // prior — the prior turn may still be in flight and
@@ -233,6 +233,7 @@ impl Router {
                 chosen
             }
         };
+        self.scratch = pool;
 
         let chosen = views[chosen_idx].id;
         let secs = costs[chosen_idx];
@@ -249,14 +250,11 @@ impl Router {
     /// fleet's load, and a replica whose chunked prefill would take many
     /// chunk-steps is priced accordingly.
     fn least_cost(&self, views: &[ReplicaView], costs: &[f64], pool: &[usize]) -> usize {
-        pool.iter()
-            .copied()
-            .min_by(|&a, &b| {
-                let la = self.outstanding_secs[views[a].id] + costs[a];
-                let lb = self.outstanding_secs[views[b].id] + costs[b];
-                la.total_cmp(&lb).then(views[a].id.cmp(&views[b].id))
-            })
-            .expect("non-empty pool")
+        first_min_by(pool, |a, b| {
+            let la = self.outstanding_secs[views[a].id] + costs[a];
+            let lb = self.outstanding_secs[views[b].id] + costs[b];
+            la.total_cmp(&lb).then(views[a].id.cmp(&views[b].id))
+        })
     }
 
     /// Release a prior commitment (request completed or handed off).
@@ -271,6 +269,24 @@ impl Router {
     pub fn evict_replica_sessions(&mut self, replica: usize) {
         self.sessions.retain(|_, r| *r != replica);
     }
+}
+
+/// First minimal element of a non-empty candidate pool — the same element
+/// `Iterator::min_by` returns (it keeps the earliest minimum), but over a
+/// borrowed slice so the pool itself never has to be consumed or cloned.
+/// Infallible by construction, which is what lets [`Router::route`] stay
+/// free of `expect` on a pool it just asserted non-empty.
+fn first_min_by(
+    pool: &[usize],
+    mut cmp: impl FnMut(usize, usize) -> std::cmp::Ordering,
+) -> usize {
+    let mut best = pool[0];
+    for &i in &pool[1..] {
+        if cmp(i, best) == std::cmp::Ordering::Less {
+            best = i;
+        }
+    }
+    best
 }
 
 #[cfg(test)]
@@ -413,6 +429,155 @@ mod tests {
         for _ in 0..5 {
             assert_eq!(r.route(RoutePolicy::RoundRobin, &v, 0, 1, &flat(2, 1.0), &no_hits(2)).0, 1);
         }
+    }
+
+    /// Verbatim pre-optimization routing algorithm — three fresh `Vec`s
+    /// and `min_by` per placement — kept as the oracle the zero-allocation
+    /// scratch-buffer path must match byte for byte, state and all.
+    fn route_reference(
+        r: &mut Router,
+        policy: RoutePolicy,
+        views: &[ReplicaView],
+        session: u64,
+        pages: usize,
+        costs: &[f64],
+        hits: &[usize],
+    ) -> (usize, f64) {
+        assert_eq!(views.len(), costs.len(), "one cost per candidate view");
+        assert_eq!(views.len(), hits.len(), "one hit estimate per candidate view");
+        let accepting: Vec<usize> = (0..views.len()).filter(|&i| views[i].accepting).collect();
+        assert!(!accepting.is_empty(), "router needs at least one accepting replica");
+        let fits: Vec<usize> = accepting
+            .iter()
+            .copied()
+            .filter(|&i| r.committed_pages[views[i].id] + pages <= views[i].total_pages)
+            .collect();
+        let pool: Vec<usize> = if fits.is_empty() {
+            r.over_capacity_routes += 1;
+            accepting
+        } else {
+            fits
+        };
+        let least_cost = |r: &Router, pool: &[usize]| -> usize {
+            pool.iter()
+                .copied()
+                .min_by(|&a, &b| {
+                    let la = r.outstanding_secs[views[a].id] + costs[a];
+                    let lb = r.outstanding_secs[views[b].id] + costs[b];
+                    la.total_cmp(&lb).then(views[a].id.cmp(&views[b].id))
+                })
+                .expect("non-empty pool")
+        };
+        let chosen_idx = match policy {
+            RoutePolicy::RoundRobin => {
+                let idx = r.rr_next % pool.len();
+                r.rr_next = r.rr_next.wrapping_add(1);
+                pool[idx]
+            }
+            RoutePolicy::LeastOutstanding => least_cost(r, &pool),
+            RoutePolicy::KvPressure => pool
+                .iter()
+                .copied()
+                .min_by(|&a, &b| {
+                    let (va, vb) = (&views[a], &views[b]);
+                    let la = r.committed_pages[va.id] * vb.total_pages.max(1);
+                    let lb = r.committed_pages[vb.id] * va.total_pages.max(1);
+                    la.cmp(&lb)
+                        .then(va.pred_step.total_cmp(&vb.pred_step))
+                        .then(va.id.cmp(&vb.id))
+                })
+                .expect("non-empty pool"),
+            RoutePolicy::SessionAffinity => {
+                let chosen = if hits.iter().any(|&h| h > 0) {
+                    pool.iter()
+                        .copied()
+                        .min_by(|&a, &b| {
+                            let la = r.outstanding_secs[views[a].id] + costs[a];
+                            let lb = r.outstanding_secs[views[b].id] + costs[b];
+                            la.total_cmp(&lb)
+                                .then(hits[b].cmp(&hits[a]))
+                                .then(views[a].id.cmp(&views[b].id))
+                        })
+                        .expect("non-empty pool")
+                } else {
+                    let pinned = r.sessions.get(&session).copied();
+                    match pinned.and_then(|p| pool.iter().copied().find(|&i| views[i].id == p)) {
+                        Some(i) => i,
+                        None => least_cost(r, &pool),
+                    }
+                };
+                r.sessions.insert(session, views[chosen].id);
+                chosen
+            }
+        };
+        let chosen = views[chosen_idx].id;
+        let secs = costs[chosen_idx];
+        r.committed_pages[chosen] += pages;
+        r.outstanding_secs[chosen] += secs;
+        r.routed[chosen] += 1;
+        r.max_committed_pages = r.max_committed_pages.max(r.committed_pages[chosen]);
+        (chosen, secs)
+    }
+
+    fn assert_state_identical(opt: &Router, refr: &Router) {
+        assert_eq!(opt.rr_next, refr.rr_next);
+        assert_eq!(opt.committed_pages, refr.committed_pages);
+        // Outstanding seconds compared bitwise: the scratch path must not
+        // reorder a single float add.
+        let ob: Vec<u64> = opt.outstanding_secs.iter().map(|x| x.to_bits()).collect();
+        let rb: Vec<u64> = refr.outstanding_secs.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(ob, rb);
+        assert_eq!(opt.sessions, refr.sessions);
+        assert_eq!(opt.routed, refr.routed);
+        assert_eq!(opt.max_committed_pages, refr.max_committed_pages);
+        assert_eq!(opt.over_capacity_routes, refr.over_capacity_routes);
+    }
+
+    #[test]
+    fn scratch_path_is_byte_identical_to_reference() {
+        use crate::util::prop::{check, Gen};
+        check("router scratch path ≡ allocating reference", 60, |g: &mut Gen| {
+            let n = g.usize(1, 6);
+            let mut opt = Router::new(n);
+            let mut refr = Router::new(n);
+            let policies = RoutePolicy::all();
+            let mut live: Vec<(usize, usize, f64)> = Vec::new();
+            for _ in 0..g.usize(5, 40) {
+                // Occasionally release a live commitment so the pool
+                // drains and refills like a real fleet.
+                if !live.is_empty() && g.bool() && g.bool() {
+                    let k = g.usize(0, live.len() - 1);
+                    let (rep, pages, secs) = live.swap_remove(k);
+                    opt.complete(rep, pages, secs);
+                    refr.complete(rep, pages, secs);
+                    assert_state_identical(&opt, &refr);
+                    continue;
+                }
+                let policy = *g.pick(&policies);
+                let mut views: Vec<ReplicaView> = (0..n)
+                    .map(|id| ReplicaView {
+                        id,
+                        accepting: g.bool(),
+                        total_pages: g.usize(4, 40),
+                        pred_step: g.f64(0.1, 2.0),
+                    })
+                    .collect();
+                if !views.iter().any(|v| v.accepting) {
+                    views[0].accepting = true;
+                }
+                let pages = g.usize(0, 12);
+                let costs: Vec<f64> = (0..n).map(|_| g.f64(0.0, 50.0)).collect();
+                let hits: Vec<usize> =
+                    (0..n).map(|_| if g.bool() { 0 } else { g.usize(0, 900) }).collect();
+                let session = g.u64(0, 5);
+                let a = opt.route(policy, &views, session, pages, &costs, &hits);
+                let b = route_reference(&mut refr, policy, &views, session, pages, &costs, &hits);
+                assert_eq!(a.0, b.0, "placement diverged");
+                assert_eq!(a.1.to_bits(), b.1.to_bits(), "committed seconds diverged");
+                assert_state_identical(&opt, &refr);
+                live.push((a.0, pages, a.1));
+            }
+        });
     }
 
     #[test]

@@ -293,9 +293,19 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
                     }
                 }
                 last_done = now;
+                batcher.recycle(step);
             }
         }
         if !stepping {
+            if let Some(net) = &cfg.net {
+                // Advance the fabric watermark with the event clock so
+                // `book` can prune expired intervals; without this a long
+                // contention run grows every link's active list without
+                // bound. Pruned intervals end at or before `now`, and all
+                // future bookings start at or after it, so nothing priced
+                // changes.
+                net.lock().unwrap_or_else(|e| e.into_inner()).advance(q.now());
+            }
             let step = batcher.next_step(&mut kv);
             let rej = batcher.take_rejected();
             rejected += rej.len() as u64;
@@ -354,6 +364,8 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
                 stepping = true;
                 q.push_in(dur, Ev::StepDone);
                 current = Some(step);
+            } else {
+                batcher.recycle(step);
             }
         }
     }

@@ -128,6 +128,32 @@ impl TraceSpec {
         }
     }
 
+    /// Overlay a diurnal rate cycle sized to the trace's expected span:
+    /// `cycles` full sinusoid periods across the `num_prompts / rate`
+    /// seconds the trace covers at its mean rate.
+    pub fn with_diurnal_cycles(mut self, cycles: f64, amplitude: f64) -> Self {
+        let span = self.num_prompts as f64 / self.rate.max(1e-9);
+        self.shape = RateShape::Diurnal { period: span / cycles.max(1e-9), amplitude };
+        self
+    }
+
+    /// Million-request soak workload (the `yalis soak` reference trace):
+    /// chat-shaped lengths — short-to-moderate prompts, light outputs — at
+    /// a fleet-scale arrival rate with a diurnal swing whose peaks push
+    /// past a ~120-replica pool's capacity and whose troughs let it drain.
+    pub fn soak(num_prompts: usize) -> Self {
+        TraceSpec {
+            num_prompts,
+            rate: 600.0,
+            burstiness: 2.0,
+            shape: RateShape::Flat,
+            input: LenDist { median: 700.0, sigma: 0.8, min: 32, max: 4096 },
+            output: LenDist { median: 150.0, sigma: 0.5, min: 8, max: 512 },
+            seed: 0x50AC,
+        }
+        .with_diurnal_cycles(2.0, 0.6)
+    }
+
     /// Generate the request list (sorted by arrival time).
     pub fn generate(&self) -> Vec<Request> {
         let mut rng = Rng::new(self.seed);
@@ -457,6 +483,36 @@ mod tests {
             assert!(r.session >= (1 << 63));
         }
         assert!(a.iter().all(|r| r.session < (1 << 63)));
+    }
+
+    #[test]
+    fn soak_trace_is_diurnal_and_scales_with_requests() {
+        let spec = TraceSpec::soak(20_000);
+        let reqs = spec.generate();
+        assert_eq!(reqs.len(), 20_000);
+        match spec.shape {
+            RateShape::Diurnal { period, amplitude } => {
+                // Two full cycles across the expected span at the mean rate.
+                let span = 20_000.0 / spec.rate;
+                assert!((period - span / 2.0).abs() < 1e-9, "period {period}");
+                assert!(amplitude > 0.0);
+            }
+            other => panic!("soak trace must be diurnal, got {other:?}"),
+        }
+        // The swing must actually modulate density: the busiest tenth of
+        // the trace is much denser than the quietest tenth.
+        let n = reqs.len() / 10;
+        let window_span = |i: usize| reqs[i + n - 1].arrival - reqs[i].arrival;
+        let mut fastest = f64::INFINITY;
+        let mut slowest = 0.0f64;
+        for i in (0..reqs.len() - n).step_by(n) {
+            let s = window_span(i);
+            fastest = fastest.min(s);
+            slowest = slowest.max(s);
+        }
+        assert!(slowest > 2.0 * fastest, "diurnal swing: {fastest} vs {slowest}");
+        // Soak lengths stay light so 10M-request runs fit the budget.
+        assert!(reqs.iter().all(|r| r.decode_len <= 512));
     }
 
     #[test]

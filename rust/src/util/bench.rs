@@ -37,6 +37,25 @@ impl Measurement {
     }
 }
 
+/// Wall-clock stopwatch for one-shot timings (soak throughput, CI smoke
+/// budgets) where the [`Bencher`]'s warmup/repeat machinery is overkill.
+/// Lives here so wall-clock reads stay confined to the RealHw-classed
+/// bench module — simulator code must never observe real time.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    t0: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { t0: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+}
+
 /// Benchmark runner with warmup and an adaptive iteration count.
 pub struct Bencher {
     /// Target total measurement time per benchmark.

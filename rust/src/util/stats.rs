@@ -6,6 +6,11 @@ pub struct Summary {
     samples: Vec<f64>,
     mean: f64,
     m2: f64,
+    /// Lazily built sorted view of `samples`, shared by every quantile
+    /// read. Samples are append-only, so the cache is valid exactly when
+    /// its length matches `samples` — a fleet report asking for p50, p95
+    /// and p99 over a 10M-sample summary sorts once, not three times.
+    sorted: std::cell::RefCell<Vec<f64>>,
 }
 
 impl Summary {
@@ -48,10 +53,15 @@ impl Summary {
     /// Linear-interpolated percentile, `q` in [0, 100].
     pub fn percentile(&self, q: f64) -> f64 {
         assert!(!self.samples.is_empty(), "percentile of empty summary");
-        let mut v = self.samples.clone();
-        // total_cmp: a NaN sample must not panic the sort (D02); it
-        // sorts last, so finite percentiles stay meaningful.
-        v.sort_by(f64::total_cmp);
+        let mut sorted = self.sorted.borrow_mut();
+        if sorted.len() != self.samples.len() {
+            sorted.clear();
+            sorted.extend_from_slice(&self.samples);
+            // total_cmp: a NaN sample must not panic the sort (D02); it
+            // sorts last, so finite percentiles stay meaningful.
+            sorted.sort_by(f64::total_cmp);
+        }
+        let v = &*sorted;
         let pos = (q / 100.0) * (v.len() - 1) as f64;
         let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
         if lo == hi { v[lo] } else { v[lo] + (pos - lo as f64) * (v[hi] - v[lo]) }
@@ -141,6 +151,30 @@ mod tests {
         assert_eq!(s.percentile(0.0), 1.0);
         assert_eq!(s.median(), 3.0); // NaN sorts last under total_cmp
         assert!(s.percentile(100.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_cache_invalidates_on_growth() {
+        // The sorted view is cached between quantile reads; appending a
+        // sample must rebuild it, and interleaved add/read sequences must
+        // match a fresh clone-and-sort every time.
+        let mut s = Summary::new();
+        for x in [5.0, 1.0, 9.0] {
+            s.add(x);
+        }
+        assert_eq!(s.median(), 5.0);
+        assert_eq!(s.percentile(100.0), 9.0);
+        s.add(11.0); // cache is stale now
+        assert_eq!(s.percentile(100.0), 11.0);
+        assert!((s.median() - 7.0).abs() < 1e-12);
+        s.add(0.0);
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.median(), 5.0);
+        // A cloned summary keeps serving correct quantiles independently.
+        let mut c = s.clone();
+        c.add(100.0);
+        assert_eq!(c.percentile(100.0), 100.0);
+        assert_eq!(s.percentile(100.0), 11.0);
     }
 
     #[test]

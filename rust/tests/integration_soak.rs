@@ -1,0 +1,73 @@
+//! Integration: the soak subcommand's determinism contract. Every hot-loop
+//! optimization this PR ships (router scratch buffers, step recycling,
+//! sorted-percentile caching, fabric watermark pruning) must preserve
+//! reports bit for bit — pinned here by hashing the full Debug rendering
+//! of each report (f64's Debug is shortest-roundtrip, so two values print
+//! identically only when their bits match, modulo the 0.0/-0.0 sign).
+
+use yalis::collectives::AllReduceImpl;
+use yalis::coordinator::experiments::{soak_run, SOAK_SEED};
+use yalis::fleet::{run_fleet, FleetConfig};
+use yalis::parallel::ParallelSpec;
+use yalis::serving::{fig9_config, serve};
+use yalis::trace::TraceSpec;
+
+/// FNV-1a 64-bit over the value's Debug rendering.
+fn digest<T: std::fmt::Debug>(v: &T) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in format!("{v:?}").bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[test]
+fn soak_report_digest_is_bit_stable_and_seed_sensitive() {
+    // The scaled-down `yalis soak --requests 50000 --replicas 16` run:
+    // two executions must produce byte-identical reports, and a different
+    // trace seed must change them.
+    let (a, _) = soak_run(50_000, 16, SOAK_SEED).expect("soak run");
+    let (b, _) = soak_run(50_000, 16, SOAK_SEED).expect("soak run");
+    assert_eq!(digest(&a), digest(&b), "soak report drifted between runs");
+    assert_eq!(a.completed as u64 + a.rejected, 50_000);
+    assert!(a.completed > 0, "the soak fleet must actually serve");
+    let (c, _) = soak_run(50_000, 16, SOAK_SEED ^ 0xDEAD).expect("soak run");
+    assert_ne!(digest(&a), digest(&c), "seed must reach the whole report");
+}
+
+#[test]
+fn serve_report_digest_is_bit_stable() {
+    let mut spec = TraceSpec::burstgpt();
+    spec.num_prompts = 120;
+    let reqs = spec.generate();
+    let cfg = fig9_config(ParallelSpec::tp(16), AllReduceImpl::Nvrar, 32, "perlmutter", 16);
+    let a = serve(&cfg, &reqs);
+    let b = serve(&cfg, &reqs);
+    assert_eq!(digest(&a), digest(&b), "serve report drifted between runs");
+    // Contention on with an idle fabric must stay on the same bits too —
+    // the watermark-advance optimization prices nothing differently.
+    let ca = serve(&cfg.clone().with_contention(), &reqs);
+    let cb = serve(&cfg.clone().with_contention(), &reqs);
+    assert_eq!(digest(&ca), digest(&cb));
+    assert_eq!(a.makespan.to_bits(), ca.makespan.to_bits(), "idle fabric parity");
+}
+
+#[test]
+fn fleet_report_digest_is_bit_stable_under_contention_and_migration() {
+    let mut spec = TraceSpec::burstgpt();
+    spec.num_prompts = 200;
+    spec.rate = 12.0;
+    let reqs = spec.generate();
+    let base = fig9_config(ParallelSpec::tp(16), AllReduceImpl::Nvrar, 64, "perlmutter", 16);
+    let cfg = || {
+        FleetConfig::new(base.clone(), 3)
+            .with_contention(true)
+            .with_migration(true)
+            .with_drain_at(15.0, 2)
+    };
+    let a = run_fleet(&cfg(), &reqs);
+    let b = run_fleet(&cfg(), &reqs);
+    assert_eq!(digest(&a), digest(&b), "fleet report drifted between runs");
+    assert_eq!(a.completed as u64 + a.rejected, 200);
+}
