@@ -1,9 +1,10 @@
 //! Regenerates Figure 9: output throughput serving the BurstGPT trace with
 //! NCCL-TP, NVRAR-TP and HP at C in {32, 256}.
 use yalis::coordinator::experiments::fig9_trace_serving;
+use yalis::parallel::OverlapSpec;
 
 fn main() {
-    let t = fig9_trace_serving(0, None);
+    let t = fig9_trace_serving(0, None, OverlapSpec::none());
     t.print();
     t.write_csv("results/fig9_trace_serving.csv").unwrap();
 }

@@ -1,0 +1,16 @@
+//! `cargo bench --bench sweep_overlap` — comm/compute overlap
+//! sensitivity: deployment shape × decode batch size × overlap fraction,
+//! with the exposed/hidden collective split and the step-time speedup
+//! over the serial (overlap 0) pricing. CSV into results/.
+
+// stdout is the product here (CLI tables / bench reports), not stray debug noise.
+#![allow(clippy::print_stdout)]
+
+use yalis::coordinator::experiments;
+
+fn main() {
+    let t = experiments::sweep_overlap(16);
+    t.print();
+    t.write_csv("results/sweep_overlap.csv").unwrap();
+    println!("-> results/sweep_overlap.csv");
+}

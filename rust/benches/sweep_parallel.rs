@@ -2,9 +2,10 @@
 //! {NCCL, NVRAR} for 70B on Perlmutter-16, with the Pareto frontier of
 //! throughput vs mean TTFT marked.
 use yalis::coordinator::experiments::sweep_parallel;
+use yalis::parallel::OverlapSpec;
 
 fn main() {
-    let t = sweep_parallel("70b", "perlmutter", 16);
+    let t = sweep_parallel("70b", "perlmutter", 16, OverlapSpec::none());
     t.print();
     t.write_csv("results/sweep_parallel.csv").unwrap();
 }

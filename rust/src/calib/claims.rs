@@ -112,6 +112,39 @@ fn e2e_405b_speedup(b: &MachineBundle, gpus: usize) -> f64 {
     nccl.total / nvrar.total
 }
 
+/// Fig 13 observable: hidden-vs-serial NVRAR latency ratio at the paper's
+/// 128 KiB / 16-GPU operating point — interleaved compute hides the
+/// deferred sequence-number sync, so the hot call must be a real but
+/// bounded fraction cheaper than the cold one (Appendix B).
+fn fig13_hidden_vs_serial(b: &MachineBundle) -> f64 {
+    let topo = b.topo.topology(4);
+    let bytes = 128 * 1024;
+    sim::nvrar(&topo, &b.comm, bytes, 1.0).total / sim::nvrar(&topo, &b.comm, bytes, 0.0).total
+}
+
+/// Fig 13 step-level observable: the fraction of a tp16/NVRAR decode
+/// step's collective time the cost layer hides at full overlap. The
+/// compute-cap makes this land strictly inside (0, 1): a 32-row decode
+/// layer has less GEMM time than its serial all-reduce pair, so even
+/// `uniform(1.0)` cannot hide everything.
+fn fig13_step_hidden_frac(b: &MachineBundle) -> f64 {
+    let cfg = crate::serving::fig9_config_bundle(
+        crate::parallel::ParallelSpec::tp(16),
+        AllReduceImpl::Nvrar,
+        32,
+        b,
+        16,
+    )
+    .with_overlap(crate::parallel::OverlapSpec::uniform(1.0));
+    let step = crate::engine::batcher::StepBatch {
+        prefills: vec![],
+        decodes: (0..32u64).collect(),
+        decode_ctx: vec![1024; 32],
+    };
+    let c = cfg.step_comm(&step);
+    c.hidden / (c.hidden + c.exposed).max(1e-30)
+}
+
 /// Eq 6 parity observable: event-level NVRAR sim over the closed form with
 /// chunking and implementation overheads disabled (the same zeroing as the
 /// pinned `sim_vs_closed_form_agreement` test).
@@ -176,6 +209,22 @@ pub fn claims() -> Vec<Claim> {
         what: "NVRAR sim / Eq 6 closed form, overheads zeroed".to_string(),
         band: band(0.90, 1.30),
         eval: Box::new(|b| eq6_parity(b, 128)),
+    });
+    // Fig 13 (sync hiding): observed at v10 — 0.793 for the kernel-level
+    // hot/cold ratio, 0.437 for the step-level hidden fraction.
+    out.push(Claim {
+        id: "fig13/hidden-vs-serial/128KB".to_string(),
+        machine: "perlmutter",
+        what: "NVRAR hot / cold latency, 128 KiB, 16 GPUs".to_string(),
+        band: band(0.70, 0.90),
+        eval: Box::new(fig13_hidden_vs_serial),
+    });
+    out.push(Claim {
+        id: "fig13/step-hidden-frac/tp16".to_string(),
+        machine: "perlmutter",
+        what: "hidden share of tp16/NVRAR decode-step comm at overlap 1.0".to_string(),
+        band: band(0.25, 0.65),
+        eval: Box::new(fig13_step_hidden_frac),
     });
     out
 }

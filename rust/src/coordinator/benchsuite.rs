@@ -67,6 +67,7 @@ pub fn directions() -> BTreeMap<&'static str, Better> {
         ("fleet_goodput_tok_per_s", Better::Higher),
         ("fleet_ttft_p99_ms", Better::Lower),
         ("contention_rd_delay_us", Better::Either),
+        ("overlap_exposed_comm_frac", Better::Either),
         ("sim_throughput_rps", Better::Higher),
     ]
     .into()
@@ -155,6 +156,30 @@ pub fn suite() -> Vec<Metric> {
     out.push(Metric {
         key: "contention_rd_delay_us",
         value: flow.delay * 1e6,
+        better: Better::Either,
+    });
+
+    // Overlap pricing constant: the share of a half-overlapped tp16/NVRAR
+    // decode step's collective time that stays exposed — the Fig 13 knob's
+    // step-level effect. A silent move means the overlap math (or the cost
+    // model under it) changed without a baseline regeneration.
+    let ocfg = fig9_config(
+        ParallelSpec::tp(16),
+        AllReduceImpl::Nvrar,
+        64,
+        crate::calib::DEFAULT_MACHINE,
+        16,
+    )
+    .with_overlap(crate::parallel::OverlapSpec::uniform(0.5));
+    let ostep = crate::engine::batcher::StepBatch {
+        prefills: vec![],
+        decodes: (0..64u64).collect(),
+        decode_ctx: vec![1024; 64],
+    };
+    let sc = ocfg.step_comm(&ostep);
+    out.push(Metric {
+        key: "overlap_exposed_comm_frac",
+        value: sc.exposed / (sc.exposed + sc.hidden).max(1e-30),
         better: Better::Either,
     });
 

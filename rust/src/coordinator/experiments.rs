@@ -15,7 +15,7 @@ use crate::fleet::{run_fleet, FleetConfig};
 use crate::metrics::Breakdown;
 use crate::models::ModelConfig;
 use crate::obs::{self, fold, ObsSink, Recorder, RunMeta};
-use crate::parallel::ParallelSpec;
+use crate::parallel::{OverlapSpec, ParallelSpec};
 use crate::perfmodel::{gemm_time, GpuSpec};
 use crate::serving::{fig9_config, serve};
 use crate::trace::{LenDist, SessionSpec, TraceSpec};
@@ -326,14 +326,20 @@ pub fn fig8_phase_breakdown() -> Table {
 
 /// Figure 9: BurstGPT trace serving throughput (70B, Perlmutter, 16 GPUs).
 /// `chunk_tokens` caps prefill chunks (0 = budget-bounded chunks);
-/// `trace` writes the tp16/NVRAR run's artifacts under that base path.
-pub fn fig9_trace_serving(chunk_tokens: usize, trace: Option<&str>) -> Table {
+/// `trace` writes the tp16/NVRAR run's artifacts under that base path;
+/// `overlap` prices comm/compute overlap in every deployment's step cost.
+pub fn fig9_trace_serving(
+    chunk_tokens: usize,
+    trace: Option<&str>,
+    overlap: OverlapSpec,
+) -> Table {
     serving_table(
         "Fig9 BurstGPT serving 70B/Perlmutter (16 GPUs)",
         TraceSpec::burstgpt(),
         &[32, 256],
         chunk_tokens,
         trace,
+        overlap,
     )
 }
 
@@ -345,6 +351,7 @@ pub fn fig18_decode_trace_serving() -> Table {
         &[32, 256],
         0,
         None,
+        OverlapSpec::none(),
     )
 }
 
@@ -354,6 +361,7 @@ fn serving_table(
     concurrencies: &[usize],
     chunk_tokens: usize,
     trace: Option<&str>,
+    overlap: OverlapSpec,
 ) -> Table {
     // Scaled-down trace keeps bench wall-clock sane; rates and shapes keep
     // the paper's Table 6 proportions.
@@ -372,6 +380,7 @@ fn serving_table(
         ] {
             let mut cfg = fig9_config(pspec, ar, c, "perlmutter", 16);
             cfg.chunk_tokens = chunk_tokens;
+            cfg.overlap = overlap;
             // Trace exactly one run: the flagship NVRAR deployment at
             // the highest concurrency.
             let sink = trace
@@ -577,6 +586,62 @@ pub fn sweep_contention(gpus: usize) -> Table {
     t
 }
 
+/// `yalis sweep-overlap`: comm/compute overlap sensitivity — for each
+/// deployment shape × decode batch size, price one steady-state decode
+/// step at overlap fractions 0..1 and report step time plus the
+/// exposed/hidden split ([`crate::serving::ServeConfig::step_comm`]).
+/// Pure closed-form (no trace, no RNG): the `speedup` column is the
+/// step-time ratio against the serial (overlap 0) row, so the table is
+/// exactly the knob Fig 13 calibrates — how much of the paper's
+/// sync-hiding win survives at each fraction. Deterministic.
+pub fn sweep_overlap(gpus: usize) -> Table {
+    use crate::engine::batcher::StepBatch;
+    let machine = "perlmutter";
+    let topo = presets::perlmutter(1).with_gpus(gpus);
+    let mut t = Table::new(
+        &format!("sweep-overlap 70B decode steps on {machine} x{gpus} GPUs (NVRAR)"),
+        &["deployment", "rows", "overlap", "step ms", "exposed ms", "hidden ms", "speedup"],
+    );
+    let mut specs = vec![ParallelSpec::tp(gpus)];
+    if gpus % 2 == 0 {
+        specs.push(ParallelSpec::tp_pp(gpus / 2, 2));
+    }
+    if gpus % 4 == 0 {
+        specs.push(ParallelSpec::tp_pp(gpus / 4, 4));
+    }
+    for pspec in specs {
+        if pspec.validate(&topo).is_err() {
+            continue;
+        }
+        for rows in [32usize, 256] {
+            let step = StepBatch {
+                prefills: vec![],
+                decodes: (0..rows as u64).collect(),
+                decode_ctx: vec![1024; rows],
+            };
+            let base = fig9_config(pspec, AllReduceImpl::Nvrar, rows, machine, gpus);
+            let serial = base.step_timing_at(&step, 0.0).dur;
+            for f in [0.0f64, 0.25, 0.5, 0.75, 1.0] {
+                let cfg = base.clone().with_overlap(OverlapSpec::uniform(f));
+                let dur = cfg.step_timing_at(&step, 0.0).dur;
+                // step_comm always prices the split, fast path or not, so
+                // the overlap-0 row still shows its (all-exposed) comm.
+                let sc = cfg.step_comm(&step);
+                t.row(&[
+                    cfg.deployment_label(),
+                    rows.to_string(),
+                    format!("{f:.2}"),
+                    format!("{:.3}", dur * 1e3),
+                    format!("{:.3}", sc.exposed * 1e3),
+                    format!("{:.3}", sc.hidden * 1e3),
+                    fmt_speedup(serial / dur),
+                ]);
+            }
+        }
+    }
+    t
+}
+
 /// Figure 10: Qwen3-235B-A22B MoE deployments on 16 GPUs.
 pub fn fig10_moe() -> Table {
     let model = ModelConfig::qwen3_235b_a22b();
@@ -606,7 +671,12 @@ pub fn fig10_moe() -> Table {
 /// all-reduce implementation for a model/machine/GPU count, report
 /// throughput and mean TTFT, and mark the Pareto frontier (no other
 /// configuration is at least as good on both axes and better on one).
-pub fn sweep_parallel(model_name: &str, machine: &str, gpus: usize) -> Table {
+pub fn sweep_parallel(
+    model_name: &str,
+    machine: &str,
+    gpus: usize,
+    overlap: OverlapSpec,
+) -> Table {
     let model = ModelConfig::by_name(model_name).unwrap_or_else(|e| panic!("{e}"));
     let mut tspec = TraceSpec::burstgpt();
     tspec.num_prompts = 120;
@@ -620,6 +690,7 @@ pub fn sweep_parallel(model_name: &str, machine: &str, gpus: usize) -> Table {
         for ar in [AllReduceImpl::NcclAuto, AllReduceImpl::Nvrar] {
             let mut cfg = fig9_config(pspec, ar, 64, machine, gpus);
             cfg.model = model.clone();
+            cfg.overlap = overlap;
             let rep = serve(&cfg, &reqs);
             rows.push((cfg.deployment_label(), rep.output_throughput, rep.mean_ttft));
         }
@@ -645,13 +716,19 @@ pub fn sweep_parallel(model_name: &str, machine: &str, gpus: usize) -> Table {
 /// Fleet: multi-replica SLO-aware serving — routing policies × pool modes
 /// on a scaled BurstGPT trace with the chosen per-replica all-reduce.
 /// (Beyond the paper: its serving experiments stop at one replica.)
-pub fn fleet_experiment(ar: AllReduceImpl, chunk_tokens: usize, trace: Option<&str>) -> Table {
+pub fn fleet_experiment(
+    ar: AllReduceImpl,
+    chunk_tokens: usize,
+    trace: Option<&str>,
+    overlap: OverlapSpec,
+) -> Table {
     let mut spec = TraceSpec::burstgpt();
     spec.num_prompts = 800;
     spec.rate = 12.0;
     let reqs = spec.generate();
     let mut base = fig9_config(ParallelSpec::tp(16), ar, 64, "perlmutter", 16);
     base.chunk_tokens = chunk_tokens;
+    base.overlap = overlap;
     let mut t = Table::new(
         &format!("Fleet serving, 4x(70B {}) replicas, BurstGPT x{}", base.deployment_label(), reqs.len()),
         &[
@@ -1041,17 +1118,18 @@ pub fn all_experiments() -> Vec<Table> {
     out.push(fig7_e2e_speedup("70b", "perlmutter"));
     out.push(fig7_e2e_speedup("405b", "perlmutter"));
     out.push(fig8_phase_breakdown());
-    out.push(fig9_trace_serving(0, None));
+    out.push(fig9_trace_serving(0, None, OverlapSpec::none()));
     out.push(fig10_moe());
     out.push(fig13_sync_hiding());
     out.extend(fig14_fig15_nccl_variants());
     out.push(fig7_e2e_speedup("70b", "vista"));
     out.extend(fig17_fig18_traces());
-    out.push(sweep_parallel("70b", "perlmutter", 16));
+    out.push(sweep_parallel("70b", "perlmutter", 16, OverlapSpec::none()));
     out.push(sweep_chunk("70b", "perlmutter", 16, None));
     out.push(sweep_session("70b", "perlmutter", 16, None));
     out.push(sweep_contention(16));
-    out.push(fleet_experiment(AllReduceImpl::Nvrar, 0, None));
+    out.push(sweep_overlap(16));
+    out.push(fleet_experiment(AllReduceImpl::Nvrar, 0, None, OverlapSpec::none()));
     out.push(fleet_hetero_experiment(AllReduceImpl::Nvrar));
     out
 }
@@ -1104,7 +1182,7 @@ mod tests {
 
     #[test]
     fn sweep_parallel_marks_a_nonempty_pareto_frontier() {
-        let t = sweep_parallel("70b", "perlmutter", 8);
+        let t = sweep_parallel("70b", "perlmutter", 8, OverlapSpec::none());
         let rows = t.rows();
         assert!(rows.len() >= 4, "grid should cover several specs");
         assert!(rows.iter().any(|r| r[3] == "*"), "at least one Pareto-optimal config");
@@ -1194,6 +1272,28 @@ mod tests {
                 assert!(cells[3] > 1.005, "{machine} {msg}: {cells:?}");
                 assert!(cells[3] > cells[0], "{machine} {msg}: {cells:?}");
             }
+        }
+    }
+
+    #[test]
+    fn sweep_overlap_step_time_monotone_and_serial_baseline() {
+        let t = sweep_overlap(8);
+        let rows = t.rows();
+        // 3 shapes (tp8, tp4-pp2, tp2-pp4) x 2 batch sizes x 5 fractions.
+        assert_eq!(rows.len(), 3 * 2 * 5, "{rows:?}");
+        let ms = |r: &[String], c: usize| r[c].parse::<f64>().unwrap();
+        for chunk in rows.chunks(5) {
+            // Overlap-0 row: everything exposed, nothing hidden, 1.00x.
+            assert_eq!(chunk[0][2], "0.00");
+            assert_eq!(chunk[0][6], "1.00x");
+            assert_eq!(chunk[0][5], "0.000", "{:?}", chunk[0]);
+            // Step time never grows as the fraction rises, and full
+            // overlap hides a visible share of the comm.
+            for w in chunk.windows(2) {
+                assert!(ms(&w[1], 3) <= ms(&w[0], 3) + 1e-9, "{w:?}");
+            }
+            assert!(ms(&chunk[4], 5) > 0.0, "{:?}", chunk[4]);
+            assert!(ms(&chunk[4], 3) < ms(&chunk[0], 3), "{chunk:?}");
         }
     }
 

@@ -21,9 +21,9 @@ pub fn main() {
         "multi-node LLM inference study + NVRAR all-reduce (paper reproduction).\n\
          Subcommand = first positional arg: scaling | breakdown | gemm | nccl-vs-mpi |\n\
          micro | hyperparams | e2e | phase | serve | sweep-parallel | sweep-chunk |\n\
-         sweep-session | sweep-contention | fleet | fleet-hetero | soak | moe |\n\
-         sync | variants | traces | profile | bench-suite | bench-check | validate |\n\
-         fit | lint | all",
+         sweep-session | sweep-contention | sweep-overlap | fleet | fleet-hetero |\n\
+         soak | moe | sync | variants | traces | profile | bench-suite | bench-check |\n\
+         validate | fit | lint | all",
     );
     cli.opt(
         "machine",
@@ -37,6 +37,12 @@ pub fn main() {
     cli.opt("gpus", "16", "GPU count for the `sweep-*` subcommands");
     cli.opt("allreduce", "nvrar", "per-replica all-reduce for `fleet`/`fleet-hetero` (nccl|nccl-ring|nccl-tree|mpi|nvrar)");
     cli.opt("chunk-tokens", "0", "prefill chunk cap for serve/fleet (0 = budget-bounded)");
+    cli.opt(
+        "overlap",
+        "0",
+        "comm/compute overlap for serve/fleet/sweep-parallel: fraction 0..1, \
+         'fig13' (Fig 13-calibrated TP site), or per-site 'tp=F,pp=F,ep=F'",
+    );
     cli.opt("csv-dir", "", "write CSVs into this directory (empty = don't)");
     cli.opt(
         "trace-out",
@@ -170,6 +176,8 @@ pub fn main() {
     // an experiment driver.
     let bundle = args.get_with("machine", crate::calib::registry::resolve);
     let _ = args.get_with("model", crate::models::ModelConfig::by_name);
+    // Bad --overlap values exit 2 with by_name's message, like --machine.
+    let overlap = args.get_with("overlap", crate::parallel::OverlapSpec::by_name);
 
     let mut tables = match cmd {
         "scaling" => experiments::fig1_fig2_scaling(model),
@@ -180,9 +188,13 @@ pub fn main() {
         "hyperparams" => vec![experiments::table5_hyperparams()],
         "e2e" => vec![experiments::fig7_e2e_speedup(model, machine)],
         "phase" => vec![experiments::fig8_phase_breakdown()],
-        "serve" => vec![experiments::fig9_trace_serving(args.get_usize("chunk-tokens"), trace)],
+        "serve" => vec![experiments::fig9_trace_serving(
+            args.get_usize("chunk-tokens"),
+            trace,
+            overlap,
+        )],
         "sweep-parallel" => {
-            vec![experiments::sweep_parallel(model, machine, args.get_usize("gpus"))]
+            vec![experiments::sweep_parallel(model, machine, args.get_usize("gpus"), overlap)]
         }
         "sweep-chunk" => {
             vec![experiments::sweep_chunk(model, machine, args.get_usize("gpus"), trace)]
@@ -191,10 +203,16 @@ pub fn main() {
             vec![experiments::sweep_session(model, machine, args.get_usize("gpus"), trace)]
         }
         "sweep-contention" => vec![experiments::sweep_contention(args.get_usize("gpus"))],
+        "sweep-overlap" => vec![experiments::sweep_overlap(args.get_usize("gpus"))],
         "fleet" => {
             // Bad --allreduce values exit with a usable message, not a panic.
             let ar = args.get_with("allreduce", crate::collectives::AllReduceImpl::by_name);
-            vec![experiments::fleet_experiment(ar, args.get_usize("chunk-tokens"), trace)]
+            vec![experiments::fleet_experiment(
+                ar,
+                args.get_usize("chunk-tokens"),
+                trace,
+                overlap,
+            )]
         }
         "fleet-hetero" => {
             let ar = args.get_with("allreduce", crate::collectives::AllReduceImpl::by_name);

@@ -109,6 +109,9 @@ impl FleetMetrics {
             net_util_inter: 0.0,
             congestion: CongestionStats::default(),
             breakdowns: Vec::new(),
+            comm_exposed: 0.0,
+            comm_hidden: 0.0,
+            booked_gb: 0.0,
         }
     }
 }
@@ -196,6 +199,18 @@ pub struct FleetReport {
     /// idle-filled to the makespan (empty unless tracing was enabled via
     /// `FleetConfig::obs` — so tracing-off reports compare bit-for-bit).
     pub breakdowns: Vec<Breakdown>,
+    /// Exposed collective seconds summed over every step of every replica
+    /// (closed-form exposed comm plus unabsorbed fabric delay). Only
+    /// accumulated when overlap or tracing is on — 0.0 on the fast path,
+    /// like `breakdowns`.
+    pub comm_exposed: f64,
+    /// Hidden collective seconds summed over every step of every replica
+    /// (priced behind compute; their bytes still occupied the fabric).
+    /// 0.0 on the fast path.
+    pub comm_hidden: f64,
+    /// Collective gigabytes booked on the shared fabric — the *full*
+    /// volume, hidden bytes included (0.0 with contention disabled).
+    pub booked_gb: f64,
 }
 
 #[cfg(test)]

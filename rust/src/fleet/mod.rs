@@ -361,6 +361,12 @@ struct Sim<'a> {
     /// Analytic per-replica breakdown accumulators (tracing only; one per
     /// pushed replica, parallel to `replicas`).
     bd: Vec<Breakdown>,
+    /// Fleet-wide exposed/hidden collective seconds and booked fabric
+    /// bytes, accumulated from every step's [`crate::parallel::StepTiming`]
+    /// (the exposed/hidden legs are 0.0 on the fast path, like `bd`).
+    comm_exposed: f64,
+    comm_hidden: f64,
+    booked_bytes: f64,
     /// Routing scratch reused across placement decisions — the candidate
     /// views, per-candidate costs and prefix-hit estimates were three
     /// fresh `Vec`s per request in the old path, which at 10M requests ×
@@ -404,6 +410,9 @@ impl<'a> Sim<'a> {
                 None
             },
             bd: Vec::new(),
+            comm_exposed: 0.0,
+            comm_hidden: 0.0,
+            booked_bytes: 0.0,
             scratch_views: Vec::new(),
             scratch_costs: Vec::new(),
             scratch_hits: Vec::new(),
@@ -487,6 +496,9 @@ impl<'a> Sim<'a> {
             report.net_util_inter = net.utilization(LinkKind::Inter, self.last_done);
             report.congestion = net.stats().clone();
         }
+        report.comm_exposed = self.comm_exposed;
+        report.comm_hidden = self.comm_hidden;
+        report.booked_gb = self.booked_bytes / 1e9;
         let (hit, prompt) = self.replicas.iter().fold((0u64, 0u64), |(h, p), r| {
             let s = r.kv.stats();
             (h + s.hit_tokens, p + s.prompt_tokens)
@@ -1221,13 +1233,17 @@ impl<'a> Sim<'a> {
         }
         // Each replica prices the step with its own cost model; under
         // contention the booking inflates it when its links are busy.
-        let dur = rep.cfg.step_time_at(&step, now);
+        let timing = rep.cfg.step_timing_at(&step, now);
+        let dur = timing.dur;
+        self.comm_exposed += timing.comm_exposed;
+        self.comm_hidden += timing.comm_hidden;
+        self.booked_bytes += timing.booked_bytes;
+        let rep = &mut self.replicas[r];
         if let Some(sink) = &self.cfg.obs {
             // Same contract as the single-replica loop: the span carries
             // the buckets the analytic accumulator sums (fabric queueing
             // delay folded into Comm), so the event fold reconciles.
-            let base = rep.cfg.step_time(&step);
-            let delay = (dur - base).max(0.0);
+            let delay = (dur - timing.base).max(0.0);
             let mut b = rep.cfg.step_breakdown(&step);
             b.comm += delay;
             let mut rec = sink.lock().unwrap_or_else(|e| e.into_inner());
@@ -1256,6 +1272,8 @@ impl<'a> Sim<'a> {
                     ("idle", ArgV::F(b.idle)),
                     ("rows", ArgV::U(step.token_rows() as u64)),
                     ("seqs", ArgV::U(step.seqs() as u64)),
+                    ("hidden", ArgV::F(timing.comm_hidden)),
+                    ("booked", ArgV::F(timing.booked_bytes)),
                 ],
             );
             drop(rec);

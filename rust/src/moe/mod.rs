@@ -13,7 +13,7 @@ use crate::collectives::sim::{allreduce, CommConfig};
 use crate::collectives::AllReduceImpl;
 use crate::engine::batcher::StepBatch;
 use crate::metrics::Breakdown;
-use crate::parallel::{ParallelSpec, StepCost};
+use crate::parallel::{CommSplit, ParallelSpec, StepCost};
 use crate::perfmodel;
 use crate::serving::ServeConfig;
 
@@ -103,8 +103,14 @@ impl StepCost for MoeCost {
                 + perfmodel::gemm_time(&cfg.gpu, rows_e, d, moe.expert_ffn, dt));
         let a2a = 2.0 * all_to_all_time(&cfg.topo, &cfg.comm, rows, d, dt, s.ep);
 
+        // Overlap: the attention all-reduce pair ducks behind the
+        // attention compute; the a2a dispatch/combine pair interleaves
+        // with the expert GEMMs it feeds (each capped by that compute).
+        let attn_comp = lt_attn.total() / cfg.persona.compute_efficiency;
+        let hidden_ar = (cfg.overlap.tp_ar * (2.0 * ar_t)).min(attn_comp).max(0.0);
+        let hidden_a2a = (cfg.overlap.ep_a2a * a2a).min(expert_gemm).max(0.0);
         let mut per_layer =
-            lt_attn.total() / cfg.persona.compute_efficiency + 2.0 * ar_t + expert_gemm + a2a;
+            attn_comp + (2.0 * ar_t - hidden_ar) + expert_gemm + (a2a - hidden_a2a);
         // DP replicas batch independently but the EP all-to-all is a global
         // rendezvous across the whole EP group: every MoE layer the replicas
         // lock-step, and composition imbalance (plus vLLM's dummy-batch
@@ -157,7 +163,11 @@ impl StepCost for MoeCost {
         let a2a = 2.0 * all_to_all_time(&cfg.topo, &cfg.comm, rows, d, dt, s.ep);
 
         let eff = cfg.persona.compute_efficiency;
-        let per_layer_base = lt_attn.total() / eff + 2.0 * ar_t + expert_gemm + a2a;
+        let attn_comp = lt_attn.total() / eff;
+        let hidden_ar = (cfg.overlap.tp_ar * (2.0 * ar_t)).min(attn_comp).max(0.0);
+        let hidden_a2a = (cfg.overlap.ep_a2a * a2a).min(expert_gemm).max(0.0);
+        let per_layer_base =
+            attn_comp + (2.0 * ar_t - hidden_ar) + expert_gemm + (a2a - hidden_a2a);
         let straggle = if s.dp > 1 { 0.45 * (1.0 - 1.0 / s.dp as f64) * 2.0 } else { 0.0 };
         let p2p = if s.pp > 1 {
             s.stage_link(&cfg.topo).xfer_time((rows * d * dt) as u64) + cfg.persona.p2p_overhead
@@ -168,8 +178,62 @@ impl StepCost for MoeCost {
         Breakdown {
             matmul: layers * (lt_attn.matmul / eff + expert_gemm),
             other_comp: layers * (lt_attn.other / eff) + cfg.persona.step_overhead,
-            comm: layers * (2.0 * ar_t + a2a) + s.pp as f64 * p2p,
+            comm: layers * ((2.0 * ar_t - hidden_ar) + (a2a - hidden_a2a)) + s.pp as f64 * p2p,
             idle: layers * (straggle * per_layer_base),
+        }
+    }
+
+    // Same preamble as `step_breakdown`, so `exposed` is bit-for-bit the
+    // breakdown's Comm bucket.
+    fn step_comm(&self, cfg: &ServeConfig, step: &StepBatch) -> CommSplit {
+        let s = self.spec;
+        let model = &cfg.model;
+        let Some(moe) = model.moe else {
+            debug_assert!(false, "MoE model required");
+            return CommSplit::default();
+        };
+        let rows_total = step.token_rows().max(1);
+        let rows = rows_total.div_ceil(s.dp).max(1);
+        let d = model.d_model;
+        let dt = model.dtype_bytes;
+        let kv_len = step.mean_ctx();
+
+        let mut dense = model.clone();
+        dense.moe = None;
+        dense.ffn = 0;
+        let tp_topo = s.tp_topology(&cfg.topo);
+        let batch = step.seqs().div_ceil(s.dp).max(1);
+        let lt_attn = perfmodel::layer_times(&cfg.gpu, &dense, s.tp, rows, kv_len, batch);
+        let ar_msg = (rows * d * dt) as u64;
+        let ar_t = if s.tp > 1 {
+            allreduce(self.ar, &tp_topo, &cfg.comm, ar_msg, lt_attn.total() / 2.0).total
+        } else {
+            0.0
+        };
+
+        let experts_per_gpu = (moe.n_experts / s.ep).max(1);
+        let routed = (rows * moe.active_experts).div_ceil(s.ep).max(1);
+        let rows_e = routed.div_ceil(experts_per_gpu).max(1);
+        let expert_gemm = experts_per_gpu as f64
+            * (perfmodel::gemm_time(&cfg.gpu, rows_e, 2 * moe.expert_ffn, d, dt)
+                + perfmodel::gemm_time(&cfg.gpu, rows_e, d, moe.expert_ffn, dt));
+        let a2a = 2.0 * all_to_all_time(&cfg.topo, &cfg.comm, rows, d, dt, s.ep);
+
+        let attn_comp = lt_attn.total() / cfg.persona.compute_efficiency;
+        let hidden_ar = (cfg.overlap.tp_ar * (2.0 * ar_t)).min(attn_comp).max(0.0);
+        let hidden_a2a = (cfg.overlap.ep_a2a * a2a).min(expert_gemm).max(0.0);
+        let p2p = if s.pp > 1 {
+            s.stage_link(&cfg.topo).xfer_time((rows * d * dt) as u64) + cfg.persona.p2p_overhead
+        } else {
+            0.0
+        };
+        let layers = model.n_layers as f64;
+        let hidden = layers * (hidden_ar + hidden_a2a);
+        CommSplit {
+            exposed: layers * ((2.0 * ar_t - hidden_ar) + (a2a - hidden_a2a))
+                + s.pp as f64 * p2p,
+            hidden,
+            slack: (layers * (attn_comp + expert_gemm) - hidden).max(0.0),
         }
     }
 

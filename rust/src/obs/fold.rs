@@ -41,6 +41,58 @@ pub fn fold_breakdowns(rec: &Recorder) -> BTreeMap<usize, Breakdown> {
     out
 }
 
+/// Per-replica exposed/hidden collective seconds and booked fabric
+/// gigabytes, folded from the event stream ([`fold_comm`]). `exposed` is
+/// the step spans' Comm bucket (closed-form exposed comm plus any fabric
+/// queueing delay); `hidden` and `booked_gb` come from the spans'
+/// overlap-era `hidden`/`booked` args (0 for traces recorded with
+/// overlap off).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CommAgg {
+    pub exposed: f64,
+    pub hidden: f64,
+    pub booked_gb: f64,
+}
+
+/// Sum each replica track's exposed/hidden/booked collective accounting
+/// from its `step` spans — the event-stream view the serving loops'
+/// analytic accumulators ([`crate::serving::ServeReport::comm_exposed`]
+/// et al.) must reconcile with.
+pub fn fold_comm(rec: &Recorder) -> BTreeMap<usize, CommAgg> {
+    let mut out: BTreeMap<usize, CommAgg> = BTreeMap::new();
+    for sp in rec.spans() {
+        let Track::Replica(r) = sp.track else { continue };
+        if sp.name != "step" {
+            continue;
+        }
+        let c = out.entry(r).or_default();
+        c.exposed += arg_f64(&sp.args, "comm");
+        c.hidden += arg_f64(&sp.args, "hidden");
+        c.booked_gb += arg_f64(&sp.args, "booked") / 1e9;
+    }
+    out
+}
+
+/// Max absolute difference between analytic per-replica comm accounting
+/// (`analytic[r]` for replica `r`) and the event-derived one. A replica
+/// with no recorded steps folds to all-zero. Folded tracks the analytic
+/// side never produced are infinite drift, like [`reconcile`].
+pub fn reconcile_comm(analytic: &[CommAgg], folded: &BTreeMap<usize, CommAgg>) -> f64 {
+    let mut worst = 0.0f64;
+    for (r, a) in analytic.iter().enumerate() {
+        let f = folded.get(&r).copied().unwrap_or_default();
+        for d in [a.exposed - f.exposed, a.hidden - f.hidden, a.booked_gb - f.booked_gb] {
+            worst = worst.max(d.abs());
+        }
+    }
+    for r in folded.keys() {
+        if *r >= analytic.len() {
+            worst = f64::INFINITY;
+        }
+    }
+    worst
+}
+
 /// Max absolute per-bucket difference between the analytic breakdowns
 /// (`analytic[r]` for replica `r`) and the event-derived ones. A replica
 /// with no recorded steps folds to pure idle over the makespan.
@@ -118,6 +170,32 @@ mod tests {
         let folded = fold_breakdowns(&r);
         let analytic = vec![Breakdown { idle: 3.0, ..Default::default() }];
         assert!(reconcile(&analytic, &folded, 3.0) < 1e-12);
+    }
+
+    #[test]
+    fn fold_comm_sums_overlap_args_and_reconciles() {
+        let mut r = Recorder::new(RunMeta::default());
+        let mut args = step_args(0.4, 0.3, 0.3, 0.0);
+        args.push(("hidden", ArgV::F(0.2)));
+        args.push(("booked", ArgV::F(5.0e8)));
+        r.span(Track::Replica(0), "step", 0.0, 1.0, args.clone());
+        r.span(Track::Replica(0), "step", 2.0, 1.0, args);
+        r.set_makespan(4.0);
+        let folded = fold_comm(&r);
+        let c = folded[&0];
+        assert!((c.exposed - 0.6).abs() < 1e-12);
+        assert!((c.hidden - 0.4).abs() < 1e-12);
+        assert!((c.booked_gb - 1.0).abs() < 1e-12);
+        let analytic = vec![CommAgg { exposed: 0.6, hidden: 0.4, booked_gb: 1.0 }];
+        assert!(reconcile_comm(&analytic, &folded) < 1e-12);
+        let drifted = vec![CommAgg { exposed: 0.6, hidden: 0.5, booked_gb: 1.0 }];
+        assert!((reconcile_comm(&drifted, &folded) - 0.1).abs() < 1e-12);
+        // Pre-overlap traces (no hidden/booked args) fold to zero.
+        let mut r2 = Recorder::new(RunMeta::default());
+        r2.span(Track::Replica(0), "step", 0.0, 1.0, step_args(0.4, 0.3, 0.3, 0.0));
+        let c2 = fold_comm(&r2)[&0];
+        assert_eq!((c2.hidden, c2.booked_gb), (0.0, 0.0));
+        assert!(reconcile_comm(&[], &fold_comm(&r)).is_infinite());
     }
 
     #[test]

@@ -241,6 +241,154 @@ impl fmt::Display for ParallelSpec {
     }
 }
 
+/// Communication/computation overlap fractions, one per collective site
+/// (paper Fig 13 / Appendix B: the all-reduce of layer *l* hides behind
+/// the GEMMs of layer *l+1*). Each fraction is the share of that
+/// collective's closed-form time the runtime overlaps with compute; what
+/// actually hides is additionally capped by the compute available to hide
+/// behind, so `uniform(1.0)` never prices a step below pure compute.
+///
+/// The default ([`OverlapSpec::none`]) prices everything serially —
+/// bit-for-bit the pre-overlap numbers, because every hidden term is then
+/// exactly `0.0` and `x - 0.0 == x`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OverlapSpec {
+    /// Fraction of each layer's TP all-reduce pair hidden behind the next
+    /// layer's GEMMs.
+    pub tp_ar: f64,
+    /// Fraction of each PP stage-boundary transfer hidden behind the next
+    /// micro-batch's compute. Only effective with `micro_batches > 1` —
+    /// a single batch has no next slice to hide behind.
+    pub pp_p2p: f64,
+    /// Fraction of each MoE layer's all-to-all pair hidden behind the
+    /// expert GEMMs it interleaves with.
+    pub ep_a2a: f64,
+}
+
+impl Default for OverlapSpec {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+impl OverlapSpec {
+    /// Serial pricing (the legacy numbers, bit-for-bit).
+    pub fn none() -> Self {
+        OverlapSpec { tp_ar: 0.0, pp_p2p: 0.0, ep_a2a: 0.0 }
+    }
+
+    /// The same fraction at every collective site (clamped to [0, 1]).
+    pub fn uniform(f: f64) -> Self {
+        let f = f.clamp(0.0, 1.0);
+        OverlapSpec { tp_ar: f, pp_p2p: f, ep_a2a: f }
+    }
+
+    /// The Fig 13 calibration point: the hideable share of one NVRAR
+    /// all-reduce — its deferred-sync phase — at the paper's 128 KiB /
+    /// 16-GPU Perlmutter operating point, derived from the same
+    /// [`crate::collectives::sim::nvrar`] phase model `fig13_sync_hiding`
+    /// tabulates. Only the TP all-reduce site is calibrated by Fig 13;
+    /// the PP/EP sites stay serial.
+    pub fn fig13() -> Self {
+        let topo = crate::cluster::presets::perlmutter(4); // 16 GPUs
+        let c = crate::collectives::sim::CommConfig::perlmutter();
+        let nv = crate::collectives::sim::nvrar(&topo, &c, 128 * 1024, 0.0);
+        let frac = if nv.total > 0.0 {
+            (nv.phase_secs("sync") / nv.total).clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
+        OverlapSpec { tp_ar: frac, pp_p2p: 0.0, ep_a2a: 0.0 }
+    }
+
+    /// Parse a CLI `--overlap` value: `0.7` (uniform), `fig13` (the
+    /// calibrated preset), `none`/`off`/empty (serial), or per-site
+    /// `tp=0.7,pp=0.5,ep=0.3` (unnamed sites stay 0).
+    pub fn by_name(name: &str) -> anyhow::Result<Self> {
+        let s = name.trim().to_ascii_lowercase();
+        if s.is_empty() || s == "none" || s == "off" {
+            return Ok(Self::none());
+        }
+        if s == "fig13" {
+            return Ok(Self::fig13());
+        }
+        if let Ok(f) = s.parse::<f64>() {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&f),
+                "overlap fraction {f} outside [0, 1] in '{name}'"
+            );
+            return Ok(Self::uniform(f));
+        }
+        let mut out = Self::none();
+        for part in s.split(',') {
+            let Some((key, val)) = part.split_once('=') else {
+                anyhow::bail!(
+                    "bad overlap spec '{name}' (expected e.g. 0.7, fig13, tp=0.7,pp=0.5,ep=0.3)"
+                );
+            };
+            let f: f64 = val
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad overlap fraction '{val}' in '{name}'"))?;
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&f),
+                "overlap fraction {f} outside [0, 1] in '{name}'"
+            );
+            match key.trim() {
+                "tp" | "ar" => out.tp_ar = f,
+                "pp" | "p2p" => out.pp_p2p = f,
+                "ep" | "a2a" => out.ep_a2a = f,
+                other => anyhow::bail!("unknown overlap site '{other}' in '{name}' (tp|pp|ep)"),
+            }
+        }
+        Ok(out)
+    }
+
+    /// True when every site prices serially (the fast-path test: the cost
+    /// layer skips the exposed/hidden split entirely).
+    pub fn is_none(&self) -> bool {
+        self.tp_ar == 0.0 && self.pp_p2p == 0.0 && self.ep_a2a == 0.0
+    }
+}
+
+/// Exposed-vs-hidden decomposition of one step's closed-form collective
+/// time, plus the compute slack still available to absorb fabric delay.
+/// Invariant: `exposed` equals [`StepCost::step_breakdown`]'s Comm bucket
+/// (same arithmetic, bit-for-bit), and `exposed + hidden` is the serial
+/// collective time.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CommSplit {
+    /// Collective seconds extending the step (what Fig 3/Fig 8 charts).
+    pub exposed: f64,
+    /// Collective seconds priced behind compute — absent from the step
+    /// time, but their bytes still occupy the fabric.
+    pub hidden: f64,
+    /// Compute seconds not already hiding a collective — the budget that
+    /// can still absorb shared-fabric queueing delay before contention
+    /// un-hides communication.
+    pub slack: f64,
+}
+
+/// One step priced against the shared fabric: what
+/// [`StepCost::step_timing_at`] returns so callers can account exposed
+/// vs hidden communication without re-deriving the split.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StepTiming {
+    /// Step duration (s), fabric queueing delay included.
+    pub dur: f64,
+    /// Private-fabric closed-form [`StepCost::step_time`].
+    pub base: f64,
+    /// Exposed collective seconds, fabric delay included. Only computed
+    /// when overlap or tracing is on (0.0 on the fast path).
+    pub comm_exposed: f64,
+    /// Hidden collective seconds (closed-form hidden + absorbed delay).
+    /// Only computed when overlap or tracing is on (0.0 on the fast path).
+    pub comm_hidden: f64,
+    /// Collective bytes booked on the shared fabric — the *full* volume,
+    /// hidden bytes included (0.0 with no fabric configured).
+    pub booked_bytes: f64,
+}
+
 /// Per-engine-step cost model of one deployment. Implementations read the
 /// machine/model/persona context from the [`ServeConfig`] at call time, so
 /// one cost object serves any model the config carries.
@@ -281,22 +429,48 @@ pub trait StepCost: fmt::Debug + Send + Sync {
         (msg, 2.0 * cfg.model.n_layers as f64)
     }
 
-    /// Duration of one engine step *launched at fabric time `at`*: the
+    /// Exposed/hidden decomposition of this step's closed-form collective
+    /// time under `cfg.overlap` (see [`CommSplit`]). The default matches
+    /// the default breakdown: all comm exposed, nothing hidden, no slack.
+    /// Implementations mirror their own breakdown arithmetic so
+    /// `step_comm(..).exposed` equals `step_breakdown(..).comm` exactly.
+    fn step_comm(&self, cfg: &ServeConfig, step: &StepBatch) -> CommSplit {
+        CommSplit { exposed: self.step_breakdown(cfg, step).comm, hidden: 0.0, slack: 0.0 }
+    }
+
+    /// One engine step *launched at fabric time `at`*, priced against the
+    /// shared [`crate::simnet::Interconnect`] in [`ServeConfig::net`]: the
     /// private-fabric [`StepCost::step_time`] plus the queueing delay of
-    /// booking the step's collective bytes on the shared
-    /// [`crate::simnet::Interconnect`] in [`ServeConfig::net`]. With no
-    /// fabric configured — or an idle one — this is exactly `step_time`
+    /// booking the step's collective bytes. The *full* collective volume
+    /// is booked — hidden bytes still occupy NVLink/NIC links and contend
+    /// with KV handoffs and migrations — but the overlapped fraction of
+    /// the resulting delay can duck behind the step's remaining compute
+    /// slack; once the delay outgrows that slack the excess extends the
+    /// step, so contention un-hides communication under load. With no
+    /// fabric configured — or an idle one — `dur` is exactly `step_time`
     /// (closed-form parity).
-    fn step_time_at(&self, cfg: &ServeConfig, step: &StepBatch, at: f64) -> f64 {
+    fn step_timing_at(&self, cfg: &ServeConfig, step: &StepBatch, at: f64) -> StepTiming {
         let base = self.step_time(cfg, step);
-        let Some(net) = &cfg.net else { return base };
+        // The split costs a second breakdown-shaped pass; skip it on the
+        // hot path nobody reads it on (overlap off, tracing off) so the
+        // legacy contention pricing keeps its exact cost profile.
+        let split = if cfg.overlap.is_none() && cfg.obs.is_none() {
+            None
+        } else {
+            Some(self.step_comm(cfg, step))
+        };
+        let comm_exposed = split.map_or(0.0, |s| s.exposed);
+        let comm_hidden = split.map_or(0.0, |s| s.hidden);
+        let no_fabric =
+            StepTiming { dur: base, base, comm_exposed, comm_hidden, booked_bytes: 0.0 };
+        let Some(net) = &cfg.net else { return no_fabric };
         let spec = self.spec();
         if spec.tp <= 1 {
-            return base;
+            return no_fabric;
         }
         let (msg, count) = self.step_collective_bytes(cfg, step);
         if msg == 0 || count <= 0.0 {
-            return base;
+            return no_fabric;
         }
         let tp_topo = spec.tp_topology(&cfg.topo);
         // A step cannot occupy more link-seconds than its own duration:
@@ -312,9 +486,9 @@ pub trait StepCost: fmt::Debug + Send + Sync {
             count
         };
         if count <= 0.0 {
-            return base;
+            return no_fabric;
         }
-        let mut net = net.lock().expect("interconnect lock poisoned");
+        let mut net = net.lock().unwrap_or_else(|e| e.into_inner());
         // The engine's clock only moves forward: let the fabric prune
         // intervals that ended before this step (pre-booked background
         // traffic stays intact until the run reaches it).
@@ -329,7 +503,27 @@ pub trait StepCost: fmt::Debug + Send + Sync {
             &mut net,
             cfg.obs.as_ref(),
         );
-        base + flow.delay
+        // Only the overlapped fraction of the queueing delay can hide,
+        // and never more than the remaining compute slack. At
+        // OverlapSpec::none this is exactly 0.0 and `dur` reproduces the
+        // legacy `base + delay` bit-for-bit.
+        let absorbed = match &split {
+            Some(s) => (cfg.overlap.tp_ar * flow.delay).min(s.slack).max(0.0),
+            None => 0.0,
+        };
+        StepTiming {
+            dur: base + (flow.delay - absorbed),
+            base,
+            comm_exposed: comm_exposed + (flow.delay - absorbed),
+            comm_hidden: comm_hidden + absorbed,
+            booked_bytes: msg as f64 * count,
+        }
+    }
+
+    /// Duration-only view of [`StepCost::step_timing_at`] (the historical
+    /// entry point; serving/fleet hot loops use the full timing).
+    fn step_time_at(&self, cfg: &ServeConfig, step: &StepBatch, at: f64) -> f64 {
+        self.step_timing_at(cfg, step, at).dur
     }
 
     /// Canonical deployment string, e.g. `tp8-pp2/NVRAR` — the label every
@@ -388,13 +582,17 @@ impl StepCost for DenseTp {
         } else {
             0.0
         };
-        cfg.model.n_layers as f64 * (lt.total() / cfg.persona.compute_efficiency + 2.0 * ar_t)
-            + cfg.persona.step_overhead
+        let comp = lt.total() / cfg.persona.compute_efficiency;
+        // Overlap: layer l's all-reduce pair ducks behind layer l+1's
+        // GEMMs — at most the layer's own compute can hide it.
+        let hidden = (cfg.overlap.tp_ar * (2.0 * ar_t)).min(comp).max(0.0);
+        cfg.model.n_layers as f64 * (comp + (2.0 * ar_t - hidden)) + cfg.persona.step_overhead
     }
 
     // Mirrors `step_time` term by term (same inputs, same intermediate
     // values) so the buckets sum back to it; a pure-TP step has no
-    // intra-step idle.
+    // intra-step idle. The Comm bucket is *exposed* comm only — hidden
+    // collective time lives in `step_comm`.
     fn step_breakdown(&self, cfg: &ServeConfig, step: &StepBatch) -> Breakdown {
         let tp = self.spec.tp;
         let rows = step.token_rows().max(1);
@@ -410,11 +608,38 @@ impl StepCost for DenseTp {
         };
         let layers = cfg.model.n_layers as f64;
         let eff = cfg.persona.compute_efficiency;
+        let comp = lt.total() / eff;
+        let hidden = (cfg.overlap.tp_ar * (2.0 * ar_t)).min(comp).max(0.0);
         Breakdown {
             matmul: layers * (lt.matmul / eff),
             other_comp: layers * (lt.other / eff) + cfg.persona.step_overhead,
-            comm: layers * (2.0 * ar_t),
+            comm: layers * (2.0 * ar_t - hidden),
             idle: 0.0,
+        }
+    }
+
+    // Same preamble as `step_time`/`step_breakdown`, so `exposed` is
+    // bit-for-bit the breakdown's Comm bucket.
+    fn step_comm(&self, cfg: &ServeConfig, step: &StepBatch) -> CommSplit {
+        let tp = self.spec.tp;
+        let rows = step.token_rows().max(1);
+        let kv_len = step.mean_ctx();
+        let lt =
+            perfmodel::layer_times(&cfg.gpu, &cfg.model, tp, rows, kv_len, step.seqs().max(1));
+        let msg = (rows * cfg.model.d_model * cfg.model.dtype_bytes) as u64;
+        let ar_t = if tp > 1 {
+            let tp_topo = self.spec.tp_topology(&cfg.topo);
+            allreduce(self.ar, &tp_topo, &cfg.comm, msg, lt.total() / 2.0).total
+        } else {
+            0.0
+        };
+        let layers = cfg.model.n_layers as f64;
+        let comp = lt.total() / cfg.persona.compute_efficiency;
+        let hidden = (cfg.overlap.tp_ar * (2.0 * ar_t)).min(comp).max(0.0);
+        CommSplit {
+            exposed: layers * (2.0 * ar_t - hidden),
+            hidden: layers * hidden,
+            slack: (layers * (comp - hidden)).max(0.0),
         }
     }
 
@@ -482,9 +707,20 @@ impl StepCost for HybridTpPp {
         } else {
             0.0
         };
-        let stage_t = layers_per_stage as f64
-            * (lt.total() / cfg.persona.compute_efficiency + 2.0 * ar_t)
-            + p2p;
+        let lps = layers_per_stage as f64;
+        let comp_l = lt.total() / cfg.persona.compute_efficiency;
+        // Overlap: per-layer all-reduces duck behind the next layer's
+        // GEMMs; with micro-batches in flight (m > 1) a slice's stage
+        // boundary transfer ducks behind the next slice's compute —
+        // interleaving shrinks the pipeline bubble. The p2p hiding budget
+        // is the stage compute not already hiding all-reduces.
+        let hidden_ar = (cfg.overlap.tp_ar * (2.0 * ar_t)).min(comp_l).max(0.0);
+        let hidden_p2p = if m > 1 {
+            (cfg.overlap.pp_p2p * p2p).min((lps * (comp_l - hidden_ar)).max(0.0)).max(0.0)
+        } else {
+            0.0
+        };
+        let stage_t = lps * (comp_l + (2.0 * ar_t - hidden_ar)) + (p2p - hidden_p2p);
         (s.pp + m - 1) as f64 * stage_t + cfg.persona.step_overhead
     }
 
@@ -517,13 +753,61 @@ impl StepCost for HybridTpPp {
         };
         let eff = cfg.persona.compute_efficiency;
         let lps = layers_per_stage as f64;
-        let stage_t = lps * (lt.total() / eff + 2.0 * ar_t) + p2p;
+        let comp_l = lt.total() / eff;
+        let hidden_ar = (cfg.overlap.tp_ar * (2.0 * ar_t)).min(comp_l).max(0.0);
+        let hidden_p2p = if m > 1 {
+            (cfg.overlap.pp_p2p * p2p).min((lps * (comp_l - hidden_ar)).max(0.0)).max(0.0)
+        } else {
+            0.0
+        };
+        let stage_t = lps * (comp_l + (2.0 * ar_t - hidden_ar)) + (p2p - hidden_p2p);
         let mf = m as f64;
         Breakdown {
             matmul: mf * lps * (lt.matmul / eff),
             other_comp: mf * lps * (lt.other / eff) + cfg.persona.step_overhead,
-            comm: mf * (lps * (2.0 * ar_t) + p2p),
+            comm: mf * (lps * (2.0 * ar_t - hidden_ar) + (p2p - hidden_p2p)),
             idle: (s.pp - 1) as f64 * stage_t,
+        }
+    }
+
+    // Same preamble as `step_breakdown`, so `exposed` is bit-for-bit the
+    // breakdown's Comm bucket.
+    fn step_comm(&self, cfg: &ServeConfig, step: &StepBatch) -> CommSplit {
+        let s = self.spec;
+        let rows_total = step.token_rows().max(1);
+        let rows = rows_total.div_ceil(s.dp).max(1);
+        let m = self.micro_batches.clamp(1, rows);
+        let mb_rows = rows.div_ceil(m).max(1);
+        let kv_len = step.mean_ctx();
+        let batch = step.seqs().max(1).div_ceil(s.dp).max(1);
+        let lt = perfmodel::layer_times(&cfg.gpu, &cfg.model, s.tp, mb_rows, kv_len, batch);
+        let msg = (mb_rows * cfg.model.d_model * cfg.model.dtype_bytes) as u64;
+        let ar_t = if s.tp > 1 {
+            let tp_topo = s.tp_topology(&cfg.topo);
+            allreduce(self.ar, &tp_topo, &cfg.comm, msg, lt.total() / 2.0).total
+        } else {
+            0.0
+        };
+        let layers_per_stage = cfg.model.n_layers.div_ceil(s.pp).max(1);
+        let p2p = if s.pp > 1 {
+            s.stage_link(&cfg.topo).xfer_time(msg) + cfg.persona.p2p_overhead
+        } else {
+            0.0
+        };
+        let lps = layers_per_stage as f64;
+        let comp_l = lt.total() / cfg.persona.compute_efficiency;
+        let hidden_ar = (cfg.overlap.tp_ar * (2.0 * ar_t)).min(comp_l).max(0.0);
+        let hidden_p2p = if m > 1 {
+            (cfg.overlap.pp_p2p * p2p).min((lps * (comp_l - hidden_ar)).max(0.0)).max(0.0)
+        } else {
+            0.0
+        };
+        let mf = m as f64;
+        let hidden = mf * (lps * hidden_ar + hidden_p2p);
+        CommSplit {
+            exposed: mf * (lps * (2.0 * ar_t - hidden_ar) + (p2p - hidden_p2p)),
+            hidden,
+            slack: (mf * lps * comp_l - hidden).max(0.0),
         }
     }
 
@@ -675,6 +959,75 @@ mod tests {
                 // The pipeline bubble is the only intra-step idle source.
                 assert_eq!(bd.idle > 0.0, spec.pp > 1, "{}", cfg.deployment_label());
             }
+        }
+    }
+
+    #[test]
+    fn overlap_spec_by_name_parses_and_validates() {
+        assert_eq!(OverlapSpec::by_name("").unwrap(), OverlapSpec::none());
+        assert_eq!(OverlapSpec::by_name("off").unwrap(), OverlapSpec::none());
+        assert_eq!(OverlapSpec::by_name("none").unwrap(), OverlapSpec::none());
+        assert_eq!(OverlapSpec::by_name("0").unwrap(), OverlapSpec::none());
+        assert_eq!(OverlapSpec::by_name("0.5").unwrap(), OverlapSpec::uniform(0.5));
+        assert_eq!(
+            OverlapSpec::by_name("tp=0.7,pp=0.5,ep=0.25").unwrap(),
+            OverlapSpec { tp_ar: 0.7, pp_p2p: 0.5, ep_a2a: 0.25 }
+        );
+        // The Fig 13 preset hides a real, partial fraction of the
+        // all-reduce (its deferred-sync share) — never nothing, never all.
+        let fig13 = OverlapSpec::by_name("fig13").unwrap();
+        assert!(fig13.tp_ar > 0.0 && fig13.tp_ar < 1.0, "{fig13:?}");
+        assert_eq!((fig13.pp_p2p, fig13.ep_a2a), (0.0, 0.0));
+        assert!(!fig13.is_none());
+        assert!(OverlapSpec::none().is_none());
+        for bad in ["1.5", "-0.1", "tp=2", "zz=0.5", "tp0.5", "tp=,pp=0.1"] {
+            assert!(OverlapSpec::by_name(bad).is_err(), "{bad} should not parse");
+        }
+    }
+
+    #[test]
+    fn overlap_zero_is_bit_identical_and_overlap_on_still_sums() {
+        use crate::engine::batcher::StepBatch;
+        let step = StepBatch {
+            prefills: vec![],
+            decodes: (0..32u64).collect(),
+            decode_ctx: vec![2048; 32],
+        };
+        for spec in [
+            ParallelSpec::tp(16),
+            ParallelSpec::tp_pp(4, 4),
+            ParallelSpec { tp: 4, pp: 2, dp: 2, ep: 1 },
+        ] {
+            let cfg = crate::serving::fig9_config(spec, AllReduceImpl::Nvrar, 32, "perlmutter", 16);
+            let explicit = cfg.clone().with_overlap(OverlapSpec::none());
+            // Explicit overlap 0 reproduces the default bit-for-bit.
+            assert_eq!(
+                cfg.step_time(&step).to_bits(),
+                explicit.step_time(&step).to_bits(),
+                "{spec}"
+            );
+            let bd0 = cfg.step_breakdown(&step);
+            assert_eq!(bd0, explicit.step_breakdown(&step), "{spec}");
+
+            // Overlap on: buckets still sum to the (smaller) step time,
+            // exposed mirrors the Comm bucket, and exposed + hidden is
+            // the serial collective time.
+            let on = cfg.clone().with_overlap(OverlapSpec::uniform(0.6));
+            let t = on.step_time(&step);
+            let bd = on.step_breakdown(&step);
+            let sc = on.step_comm(&step);
+            assert!((bd.total() - t).abs() <= 1e-9 * t.max(1.0), "{spec}: {} vs {t}", bd.total());
+            assert_eq!(sc.exposed.to_bits(), bd.comm.to_bits(), "{spec}");
+            assert!(sc.hidden > 0.0, "{spec} hides nothing at 0.6");
+            assert!(sc.slack >= 0.0, "{spec}");
+            assert!(
+                (sc.exposed + sc.hidden - bd0.comm).abs() <= 1e-9 * bd0.comm.max(1.0),
+                "{spec}: exposed {} + hidden {} vs serial comm {}",
+                sc.exposed,
+                sc.hidden,
+                bd0.comm
+            );
+            assert!(t < cfg.step_time(&step), "{spec}: overlap must shrink the step");
         }
     }
 

@@ -21,7 +21,7 @@ use crate::engine::persona::Persona;
 use crate::metrics::Breakdown;
 use crate::models::ModelConfig;
 use crate::obs::ArgV;
-use crate::parallel::{cost_for, ParallelSpec, StepCost};
+use crate::parallel::{cost_for, CommSplit, OverlapSpec, ParallelSpec, StepCost, StepTiming};
 use crate::perfmodel::GpuSpec;
 use crate::simnet::{CongestionStats, EventQueue, Interconnect, LinkKind};
 use crate::util::stats::Summary;
@@ -71,6 +71,10 @@ pub struct ServeConfig {
     /// Link scope this deployment's nodes occupy on the fabric (a fleet
     /// assigns one scope per replica; standalone `serve` uses 0).
     pub net_scope: usize,
+    /// Communication/computation overlap fractions per collective site.
+    /// The default ([`OverlapSpec::none`]) prices everything serially —
+    /// bit-for-bit the pre-overlap numbers.
+    pub overlap: OverlapSpec,
     /// Event recorder ([`crate::obs`]) — `None` (the default) disables
     /// tracing entirely. Recording never feeds back into any simulated
     /// quantity: reports with tracing off are bit-for-bit identical.
@@ -93,6 +97,20 @@ impl ServeConfig {
         self.cost.step_time_at(self, step, at)
     }
 
+    /// Full timing view of [`ServeConfig::step_time_at`]: the duration
+    /// plus the exposed/hidden collective split and the bytes booked on
+    /// the fabric (see [`StepTiming`]). The serving/fleet hot loops use
+    /// this so exposed-vs-hidden accounting costs no extra pass.
+    pub fn step_timing_at(&self, step: &StepBatch, at: f64) -> StepTiming {
+        self.cost.step_timing_at(self, step, at)
+    }
+
+    /// Exposed/hidden decomposition of one step's closed-form collective
+    /// time under this config's [`OverlapSpec`] (see [`CommSplit`]).
+    pub fn step_comm(&self, step: &StepBatch) -> CommSplit {
+        self.cost.step_comm(self, step)
+    }
+
     /// Four-bucket decomposition of [`ServeConfig::step_time`] (same
     /// inputs, buckets summing back to it — see
     /// [`StepCost::step_breakdown`]).
@@ -107,6 +125,13 @@ impl ServeConfig {
     pub fn with_contention(mut self) -> Self {
         self.net = Some(fabric_for(0, &self.topo));
         self.net_scope = 0;
+        self
+    }
+
+    /// Set the communication/computation overlap fractions (builder
+    /// style; see [`OverlapSpec`]).
+    pub fn with_overlap(mut self, overlap: OverlapSpec) -> Self {
+        self.overlap = overlap;
         self
     }
 
@@ -173,6 +198,17 @@ pub struct ServeReport {
     /// Analytically accumulated Matmul/Other/Comm/Idle over the run
     /// (`Some` only when tracing was enabled; sums to the makespan).
     pub breakdown: Option<Breakdown>,
+    /// Exposed collective seconds summed over every step (closed-form
+    /// exposed comm plus unabsorbed fabric delay). Only accumulated when
+    /// overlap or tracing is on — 0.0 on the fast path, like `breakdown`.
+    pub comm_exposed: f64,
+    /// Hidden collective seconds summed over every step (priced behind
+    /// compute; their bytes still occupied the fabric). 0.0 on the fast
+    /// path.
+    pub comm_hidden: f64,
+    /// Collective gigabytes booked on the shared fabric over the run —
+    /// the *full* volume, hidden bytes included (0.0 with `net: None`).
+    pub booked_gb: f64,
 }
 
 enum Ev {
@@ -199,11 +235,14 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
     let mut ttft = Summary::new();
     let mut tpot = Summary::new();
     let mut last_done = 0.0f64;
+    let mut comm_exposed = 0.0f64;
+    let mut comm_hidden = 0.0f64;
+    let mut booked_bytes = 0.0f64;
     // Tracing state: the replica's event track and the analytically
     // accumulated breakdown the event fold is reconciled against.
     let track = crate::obs::Track::Replica(cfg.net_scope);
     if let Some(sink) = &cfg.obs {
-        let mut r = sink.lock().expect("obs lock poisoned");
+        let mut r = sink.lock().unwrap_or_else(|e| e.into_inner());
         if r.meta.label.is_empty() {
             r.meta.label = cfg.deployment_label();
         }
@@ -218,7 +257,7 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
             Ev::Arrival(i) => {
                 batcher.submit(reqs[i]);
                 if let Some(sink) = &cfg.obs {
-                    sink.lock().expect("obs lock poisoned").instant(
+                    sink.lock().unwrap_or_else(|e| e.into_inner()).instant(
                         track,
                         "arrival",
                         now,
@@ -232,7 +271,10 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
             }
             Ev::StepDone => {
                 stepping = false;
-                let step = current.take().expect("step in flight");
+                let Some(step) = current.take() else {
+                    debug_assert!(false, "StepDone with no step in flight");
+                    continue;
+                };
                 let outcome = batcher.complete_step(&step, &mut kv);
                 out_tokens += outcome.new_tokens as u64;
                 // TTFT at last-chunk completion — only the first time (a
@@ -244,7 +286,7 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
                         if first_token[i].is_none() {
                             first_token[i] = Some(now);
                             if let Some(sink) = &cfg.obs {
-                                sink.lock().expect("obs lock poisoned").instant(
+                                sink.lock().unwrap_or_else(|e| e.into_inner()).instant(
                                     track,
                                     "first_token",
                                     now,
@@ -264,7 +306,7 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
                     produced[*id as usize] -= 1;
                 }
                 if let Some(sink) = &cfg.obs {
-                    let mut r = sink.lock().expect("obs lock poisoned");
+                    let mut r = sink.lock().unwrap_or_else(|e| e.into_inner());
                     for id in &outcome.preempted {
                         r.instant(track, "preempt", now, vec![("req", ArgV::U(*id))]);
                     }
@@ -279,12 +321,15 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
                 }
                 for id in batcher.take_finished() {
                     let i = id as usize;
-                    let ft = first_token[i].expect("finished request has a first token");
+                    let Some(ft) = first_token[i] else {
+                        debug_assert!(false, "finished request has a first token");
+                        continue;
+                    };
                     ttft.add(ft - reqs[i].arrival);
                     let toks = produced[i].max(1);
                     tpot.add(if toks > 1 { (now - ft) / (toks - 1) as f64 } else { 0.0 });
                     if let Some(sink) = &cfg.obs {
-                        sink.lock().expect("obs lock poisoned").instant(
+                        sink.lock().unwrap_or_else(|e| e.into_inner()).instant(
                             track,
                             "finish",
                             now,
@@ -310,14 +355,18 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
             let rej = batcher.take_rejected();
             rejected += rej.len() as u64;
             if let Some(sink) = &cfg.obs {
-                let mut r = sink.lock().expect("obs lock poisoned");
+                let mut r = sink.lock().unwrap_or_else(|e| e.into_inner());
                 for id in &rej {
                     r.instant(track, "reject", now, vec![("req", ArgV::U(*id))]);
                 }
             }
             if !step.is_empty() {
-                let dur = cfg.step_time_at(&step, q.now());
+                let timing = cfg.step_timing_at(&step, q.now());
+                let dur = timing.dur;
                 steps += 1;
+                comm_exposed += timing.comm_exposed;
+                comm_hidden += timing.comm_hidden;
+                booked_bytes += timing.booked_bytes;
                 if step.prefills.is_empty() {
                     decode_only += 1;
                 }
@@ -327,12 +376,11 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
                     // Comm. The span carries the same buckets the analytic
                     // accumulator sums, so the event fold reconciles
                     // bit-for-bit on the busy buckets.
-                    let base = cfg.step_time(&step);
-                    let delay = (dur - base).max(0.0);
+                    let delay = (dur - timing.base).max(0.0);
                     let mut bd = cfg.step_breakdown(&step);
                     bd.comm += delay;
                     analytic.add(&bd);
-                    let mut r = sink.lock().expect("obs lock poisoned");
+                    let mut r = sink.lock().unwrap_or_else(|e| e.into_inner());
                     for c in &step.prefills {
                         r.instant(
                             track,
@@ -358,6 +406,8 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
                             ("idle", ArgV::F(bd.idle)),
                             ("rows", ArgV::U(step.token_rows() as u64)),
                             ("seqs", ArgV::U(step.seqs() as u64)),
+                            ("hidden", ArgV::F(timing.comm_hidden)),
+                            ("booked", ArgV::F(timing.booked_bytes)),
                         ],
                     );
                 }
@@ -374,7 +424,7 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
     let kvs = kv.stats();
     let (net_util_intra, net_util_inter, congestion) = match &cfg.net {
         Some(net) => {
-            let n = net.lock().expect("interconnect lock poisoned");
+            let n = net.lock().unwrap_or_else(|e| e.into_inner());
             (
                 n.utilization(LinkKind::Intra, last_done),
                 n.utilization(LinkKind::Inter, last_done),
@@ -384,7 +434,7 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
         None => (0.0, 0.0, CongestionStats::default()),
     };
     let breakdown = cfg.obs.as_ref().map(|sink| {
-        let mut r = sink.lock().expect("obs lock poisoned");
+        let mut r = sink.lock().unwrap_or_else(|e| e.into_inner());
         r.set_makespan(last_done);
         // Everything the steps did not cover is idle — the same gap the
         // event fold attributes from the recorded spans.
@@ -414,6 +464,9 @@ pub fn serve(cfg: &ServeConfig, reqs: &[Request]) -> ServeReport {
         net_util_inter,
         congestion,
         breakdown,
+        comm_exposed,
+        comm_hidden,
+        booked_gb: booked_bytes / 1e9,
     }
 }
 
@@ -428,8 +481,9 @@ pub fn fig9_config(
     machine: &str,
     gpus: usize,
 ) -> ServeConfig {
-    let bundle =
-        crate::calib::registry::resolve(machine).unwrap_or_else(|e| panic!("fig9_config: {e}"));
+    let bundle = crate::calib::registry::resolve(machine)
+        // lint: allow(P01) documented panic contract — CLI paths resolve first
+        .unwrap_or_else(|e| panic!("fig9_config: {e}"));
     fig9_config_bundle(spec, ar, concurrency, &bundle, gpus)
 }
 
@@ -444,6 +498,7 @@ pub fn fig9_config_bundle(
 ) -> ServeConfig {
     let topo = bundle.topo.topology(1).with_gpus(gpus);
     if let Err(e) = spec.validate(&topo) {
+        // lint: allow(P01) documented panic contract — CLI paths validate first
         panic!("fig9_config: {e}");
     }
     ServeConfig {
@@ -461,6 +516,7 @@ pub fn fig9_config_bundle(
         net: None,
         net_scope: 0,
         obs: None,
+        overlap: OverlapSpec::none(),
     }
 }
 

@@ -16,9 +16,12 @@ use yalis::cluster::presets;
 use yalis::collectives::flows::{allreduce_flow, FlowSpec};
 use yalis::collectives::sim::CommConfig;
 use yalis::collectives::{model, AllReduceImpl};
+use yalis::engine::batcher::StepBatch;
 use yalis::fleet::{run_fleet, FleetConfig};
-use yalis::parallel::ParallelSpec;
-use yalis::serving::{fig9_config, ServeConfig};
+use yalis::models::ModelConfig;
+use yalis::obs::{fold, Recorder, RunMeta};
+use yalis::parallel::{OverlapSpec, ParallelSpec};
+use yalis::serving::{fig9_config, serve, ServeConfig};
 use yalis::simnet::{Interconnect, LinkId, LinkKind};
 use yalis::trace::TraceSpec;
 use yalis::util::prop::{check, Gen};
@@ -213,6 +216,181 @@ fn fleet_handoff_traffic_inflates_decode_under_contention() {
     );
     let again = run_fleet(&build(true), &reqs);
     assert_eq!(on, again, "contention runs must be bit-deterministic");
+}
+
+// ---------------------------------------------------------------------
+// Sync hiding: the OverlapSpec knob's acceptance contract.
+// ---------------------------------------------------------------------
+
+/// FNV-1a 64 over the Debug rendering — "bit-for-bit" for reports.
+fn digest<T: std::fmt::Debug>(v: &T) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in format!("{v:?}").bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn decode_step(rows: usize) -> StepBatch {
+    StepBatch {
+        prefills: vec![],
+        decodes: (0..rows as u64).collect(),
+        decode_ctx: vec![1024; rows],
+    }
+}
+
+/// Acceptance: `--overlap 0` is the pre-overlap simulator bit for bit —
+/// an explicit zero spec serves identically to the default, on an idle
+/// config and on a contended shared fabric alike.
+#[test]
+fn overlap_zero_serves_bit_identical_reports() {
+    let mut spec = TraceSpec::burstgpt();
+    spec.num_prompts = 80;
+    let reqs = spec.generate();
+    let base = base_cfg(32);
+    let a = serve(&base, &reqs);
+    let b = serve(&base.clone().with_overlap(OverlapSpec::uniform(0.0)), &reqs);
+    assert_eq!(digest(&a), digest(&b), "explicit overlap 0 must match the default");
+    // Same claim under contention: identically pre-loaded fabrics.
+    let contended = |overlap: OverlapSpec| {
+        let cfg = base_cfg(32).with_contention().with_overlap(overlap);
+        if let Some(net) = &cfg.net {
+            let mut n = net.lock().unwrap();
+            for k in 0..8 {
+                n.book(nic0(), 0.1 * k as f64, 64.0 * 1024.0 * 1024.0);
+            }
+        }
+        serve(&cfg, &reqs)
+    };
+    let c = contended(OverlapSpec::none());
+    let d = contended(OverlapSpec::uniform(0.0));
+    assert_eq!(digest(&c), digest(&d));
+    assert!(c.congestion.bookings > 0, "collectives must book the shared fabric");
+    // And the run is deterministic, so the digests are meaningful.
+    assert_eq!(digest(&a), digest(&serve(&base, &reqs)));
+}
+
+/// Full overlap hides communication but never compute: the priced step
+/// stays within [serial − comm, serial], strictly below serial, and the
+/// exposed/hidden split always re-sums to the serial collective time.
+#[test]
+fn full_overlap_never_prices_below_pure_compute() {
+    for (pspec, rows) in [
+        (ParallelSpec::tp(16), 8usize),
+        (ParallelSpec::tp(16), 128),
+        (ParallelSpec::tp_pp(4, 4), 32),
+        (ParallelSpec::tp_pp(8, 2), 64),
+    ] {
+        let cfg = fig9_config(pspec, AllReduceImpl::Nvrar, 128, "perlmutter", 16);
+        let step = decode_step(rows);
+        let serial = cfg.step_time(&step);
+        let comm = cfg.step_breakdown(&step).comm;
+        let full = cfg.clone().with_overlap(OverlapSpec::uniform(1.0));
+        let t = full.step_time(&step);
+        assert!(
+            t >= serial - comm - 1e-12,
+            "{pspec:?} x{rows}: overlap cannot hide non-comm time ({t} vs {serial} - {comm})"
+        );
+        assert!(t < serial, "{pspec:?} x{rows}: full overlap must hide something");
+        let sc = full.step_comm(&step);
+        assert!(sc.hidden > 0.0, "{pspec:?} x{rows}: {sc:?}");
+        assert!(
+            (sc.exposed + sc.hidden - comm).abs() < 1e-9,
+            "{pspec:?} x{rows}: split must re-sum to serial comm ({sc:?} vs {comm})"
+        );
+        assert!((serial - t - sc.hidden).abs() < 1e-9, "{pspec:?} x{rows}");
+    }
+}
+
+/// Step time is monotone non-increasing in the overlap fraction, for the
+/// dense, hybrid and MoE cost models alike.
+#[test]
+fn step_time_is_monotone_in_overlap_fraction() {
+    let mut cfgs = vec![
+        base_cfg(64),
+        fig9_config(ParallelSpec::tp_pp(4, 4), AllReduceImpl::Nvrar, 64, "perlmutter", 16),
+    ];
+    for (pspec, ar) in yalis::moe::fig10_specs() {
+        let mut cfg = fig9_config(pspec, ar, 64, "perlmutter", 16);
+        cfg.model = ModelConfig::qwen3_235b_a22b();
+        cfgs.push(cfg);
+    }
+    for cfg in cfgs {
+        for rows in [16usize, 64] {
+            let step = decode_step(rows);
+            let mut last = f64::INFINITY;
+            for i in 0..=10 {
+                let f = i as f64 / 10.0;
+                let t = cfg.clone().with_overlap(OverlapSpec::uniform(f)).step_time(&step);
+                assert!(
+                    t <= last + 1e-12,
+                    "{} x{rows}: step time rose with overlap {f}: {t} > {last}",
+                    cfg.deployment_label()
+                );
+                last = t;
+            }
+        }
+    }
+}
+
+/// Contention un-hides communication: with full overlap, background
+/// traffic on the shared NIC extends the step and lands in the *exposed*
+/// bucket — the fabric still carries the full booked volume either way.
+#[test]
+fn contention_unhides_overlapped_comm() {
+    let step = decode_step(32);
+    let timed = |preload: bool| {
+        let cfg = base_cfg(32).with_contention().with_overlap(OverlapSpec::uniform(1.0));
+        if preload {
+            if let Some(net) = &cfg.net {
+                net.lock().unwrap().book(nic0(), 0.0, 512.0 * 1024.0 * 1024.0);
+            }
+        }
+        cfg.step_timing_at(&step, 0.0)
+    };
+    let idle = timed(false);
+    let busy = timed(true);
+    assert!(idle.booked_bytes > 0.0, "{idle:?}");
+    assert_eq!(idle.dur, idle.base, "idle fabric must reproduce the closed form");
+    assert!(busy.dur > idle.dur * 1.05, "contention must extend the step: {busy:?} vs {idle:?}");
+    assert!(
+        busy.comm_exposed > idle.comm_exposed,
+        "queueing delay must surface as exposed comm: {busy:?} vs {idle:?}"
+    );
+    assert_eq!(busy.booked_bytes, idle.booked_bytes, "booked volume is load-independent");
+    // A decode step at full overlap has no slack left (comm-bound), so
+    // the hidden share cannot grow under load.
+    assert!(busy.comm_hidden <= idle.comm_hidden + 1e-12, "{busy:?} vs {idle:?}");
+}
+
+/// Booked-vs-exposed accounting closes the loop: the trace fold's
+/// per-replica exposed/hidden/booked sums reconcile with the serve
+/// report's analytic accumulators within 1e-6, contention and overlap on.
+#[test]
+fn overlap_comm_accounting_reconciles_with_trace_fold() {
+    let mut spec = TraceSpec::burstgpt();
+    spec.num_prompts = 80;
+    let reqs = spec.generate();
+    let sink = Recorder::sink(RunMeta::default());
+    let mut cfg = base_cfg(32).with_contention().with_overlap(OverlapSpec::fig13());
+    if let Some(net) = &cfg.net {
+        net.lock().unwrap().book(nic0(), 0.0, 128.0 * 1024.0 * 1024.0);
+    }
+    cfg.obs = Some(sink.clone());
+    let rep = serve(&cfg, &reqs);
+    assert!(rep.comm_exposed > 0.0);
+    assert!(rep.comm_hidden > 0.0, "fig13 overlap must hide comm: {rep:?}");
+    assert!(rep.booked_gb > 0.0);
+    let rec = sink.lock().unwrap();
+    let folded = fold::fold_comm(&rec);
+    let analytic = [fold::CommAgg {
+        exposed: rep.comm_exposed,
+        hidden: rep.comm_hidden,
+        booked_gb: rep.booked_gb,
+    }];
+    let drift = fold::reconcile_comm(&analytic, &folded);
+    assert!(drift < 1e-6, "event fold must reconcile with the analytic accounting: {drift}");
 }
 
 /// Scripted drain migration under contention: the migration bytes ride
